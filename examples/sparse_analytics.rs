@@ -1,0 +1,90 @@
+//! Sparse spatio-temporal analytics over the Uber-pickups-like tensor —
+//! the paper's sparse scenario (§V.B) as an application: store the event
+//! tensor in each sparse format, compare their footprints, then answer
+//! day-level analytical queries via slice reads.
+//!
+//! ```bash
+//! cargo run --release --example sparse_analytics
+//! ```
+
+use delta_tensor::prelude::*;
+use delta_tensor::util::human_bytes;
+use delta_tensor::workload::{uber_like, UberParams};
+
+fn main() -> anyhow::Result<()> {
+    let p = UberParams { days: 28, hours: 24, grid_x: 96, grid_y: 128, events: 40_000, hotspots: 8 };
+    let tensor = uber_like(2024, p);
+    println!(
+        "events tensor {:?}: {} nnz, density {:.4}%",
+        p.shape(),
+        tensor.nnz(),
+        tensor.density() * 100.0
+    );
+
+    let store = ObjectStoreHandle::mem();
+    let table = DeltaTable::create(store, "uber")?;
+    let data: TensorData = tensor.clone().into();
+
+    // Store in every sparse format (+ pt-like baseline) and compare.
+    let formats: Vec<(&str, Box<dyn TensorStore>)> = vec![
+        ("pt", Box::new(BinaryFormat)),
+        ("coo", Box::new(CooFormat::default())),
+        ("csr", Box::new(CsrFormat::default())),
+        ("csf", Box::new(CsfFormat::default())),
+        ("bsgs", Box::new(BsgsFormat::with_edge(16))),
+    ];
+    println!("\nfootprints (same tensor, five formats):");
+    let mut pt_size = 0u64;
+    for (name, fmt) in &formats {
+        let id = format!("events-{name}");
+        fmt.write(&table, &id, &data)?;
+        let size = storage_bytes(&table, &id)?;
+        if *name == "pt" {
+            pt_size = size;
+        }
+        println!(
+            "  {name:<5} {:>10}   Cr = {:5.2}%",
+            human_bytes(size),
+            size as f64 / pt_size as f64 * 100.0
+        );
+    }
+
+    // Analytics: busiest day, per-day totals, morning-vs-evening split —
+    // each computed from one day slice (the paper's X[i,:,:,:] workload).
+    println!("\nper-day analytics via BSGS slice reads:");
+    let bsgs = BsgsFormat::with_edge(16);
+    let mut busiest = (0usize, 0.0f64);
+    for day in 0..p.days {
+        let slice = bsgs.read_slice(&table, "events-bsgs", &Slice::index(day))?.to_sparse()?;
+        let total: f64 = slice.values().iter().sum();
+        if total > busiest.1 {
+            busiest = (day, total);
+        }
+        if day < 7 {
+            // morning = hours 6..12, evening = 16..22
+            let morning: f64 = (0..slice.nnz())
+                .filter(|&r| (6..12).contains(&slice.coord(r)[1]))
+                .map(|r| slice.values()[r])
+                .sum();
+            let evening: f64 = (0..slice.nnz())
+                .filter(|&r| (16..22).contains(&slice.coord(r)[1]))
+                .map(|r| slice.values()[r])
+                .sum();
+            println!(
+                "  day {day}: {total:6.0} pickups (morning {morning:5.0}, evening {evening:5.0})"
+            );
+        }
+    }
+    println!("  busiest day: {} with {:.0} pickups", busiest.0, busiest.1);
+
+    // Consistency: a slice through any format agrees with the source.
+    let day = busiest.0;
+    let want = tensor.slice(&Slice::index(day))?.to_dense()?;
+    for (name, fmt) in &formats {
+        let id = format!("events-{name}");
+        let got = fmt.read_slice(&table, &id, &Slice::index(day))?.to_dense()?;
+        assert_eq!(got, want, "{name} slice mismatch");
+    }
+    println!("\nall five formats agree on day {day}. done.");
+    Ok(())
+}

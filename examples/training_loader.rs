@@ -1,0 +1,112 @@
+//! Training data loader over FTSF — the paper's motivating dense use case
+//! (§V.A): "fetching a slice of the tensor is a more common use case than
+//! retrieving the whole tensor ... we can efficiently fetch only the
+//! specific chunks that have a particular batch of the dataset".
+//!
+//! Stores an FFHQ-like image tensor, then drives a training loop's input
+//! pipeline: shuffled mini-batch slice reads, optionally preprocessed by
+//! the AOT-compiled XLA pipeline (u8 -> normalized f32), comparing against
+//! the Binary baseline that must fetch the whole tensor for any batch.
+//!
+//! ```bash
+//! cargo run --release --example training_loader
+//! ```
+
+use delta_tensor::prelude::*;
+use delta_tensor::util::{human_bytes, Pcg64, RunStats};
+use delta_tensor::workload::{ffhq_like, FfhqParams};
+
+fn main() -> anyhow::Result<()> {
+    // 256 images of 3x128x128 = ~12.6 MB: big enough that bandwidth (not
+    // just request latency) matters, as in the paper's 14.6 GB regime.
+    let p = FfhqParams { n: 256, channels: 3, height: 128, width: 128 };
+    let batch = 8usize;
+    let steps = 12usize;
+    println!(
+        "dataset: {:?} u8 = {} | batch {batch} | {steps} steps",
+        p.shape(),
+        human_bytes(p.bytes() as u64)
+    );
+    let dataset = ffhq_like(7, p);
+
+    // Simulated cloud store: 1 Gbps-class bandwidth with a scaled-down
+    // first-byte latency (the paper's testbed, compressed in time).
+    let cost = CostModel {
+        first_byte_latency: std::time::Duration::from_millis(3),
+        bandwidth_bytes_per_sec: 1e9 / 8.0,
+        list_latency: std::time::Duration::from_millis(1),
+    };
+    let store = ObjectStoreHandle::sim_mem(cost);
+    let table = DeltaTable::create(store.clone(), "train")?;
+    let ftsf = FtsfFormat::new(3);
+    ftsf.write(&table, "dataset", &dataset.clone().into())?;
+    println!(
+        "stored as FTSF: {} in {} files",
+        human_bytes(storage_bytes(&table, "dataset")?),
+        table.snapshot()?.files.len()
+    );
+
+    // The XLA preprocess pipeline (optional: needs `make artifacts`).
+    let runtime = delta_tensor::runtime::default_artifact_dir()
+        .and_then(delta_tensor::runtime::Runtime::open)
+        .ok();
+    println!("xla preprocess: {}", if runtime.is_some() { "enabled" } else { "artifacts missing, skipping" });
+
+    // Training loop: shuffled batch indices, slice reads, preprocess.
+    let mut rng = Pcg64::new(123);
+    let mut order: Vec<usize> = (0..p.n / batch).collect();
+    rng.shuffle(&mut order);
+    let mut fetch = RunStats::new();
+    let mut prep = RunStats::new();
+    store.stats().reset();
+    let mut checksum = 0f64;
+    for step in 0..steps {
+        let b = order[step % order.len()];
+        let slice = Slice::dim0(b * batch, (b + 1) * batch);
+        let chunk = fetch.time(|| ftsf.read_slice(&table, "dataset", &slice)).unwrap();
+        let images = chunk.to_dense()?;
+        // Preprocess u8 -> normalized f32. The exported artifact takes
+        // (8, 3, 64, 64) batches — exactly one mini-batch here.
+        let xla_fits = runtime
+            .as_ref()
+            .and_then(|rt| rt.spec("preprocess_chunks").ok())
+            .map(|s| s.inputs[0].0.iter().product::<usize>() == images.byte_len())
+            .unwrap_or(false);
+        let floats: Vec<f32> = if let (Some(rt), true) = (&runtime, xla_fits) {
+            prep.time(|| rt.preprocess_chunks(images.bytes()))?
+        } else {
+            prep.time(|| {
+                images
+                    .bytes()
+                    .iter()
+                    .map(|&b| (b as f32 / 255.0 - 0.5) / 0.25)
+                    .collect::<Vec<f32>>()
+            })
+        };
+        checksum += floats.iter().take(16).map(|&x| x as f64).sum::<f64>();
+    }
+    let (gets, _, _, bytes_read, _) = store.stats().snapshot();
+    println!(
+        "\nFTSF loader: fetch mean {:.1} ms | preprocess mean {:.1} ms | {} GETs, {} read",
+        fetch.mean() * 1e3,
+        prep.mean() * 1e3,
+        gets,
+        human_bytes(bytes_read)
+    );
+
+    // Baseline: Binary must fetch the whole object per epoch.
+    let table_b = DeltaTable::create(ObjectStoreHandle::sim_mem(cost), "b")?;
+    BinaryFormat.write(&table_b, "dataset", &dataset.into())?;
+    let mut baseline = RunStats::new();
+    let slice = Slice::dim0(0, batch);
+    for _ in 0..3 {
+        baseline.time(|| BinaryFormat.read_slice(&table_b, "dataset", &slice)).unwrap();
+    }
+    println!(
+        "Binary baseline: slice fetch mean {:.1} ms ({:.1}x slower than FTSF)",
+        baseline.mean() * 1e3,
+        baseline.mean() / fetch.mean()
+    );
+    println!("checksum {checksum:.3} (anti-DCE)");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+"""AOT export: lower the L2 entry points to HLO text + a manifest.
+
+HLO *text* is the interchange format (NOT ``lowered.compiler_ir("hlo")`` or
+serialized protos): jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids that the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes ``<name>.hlo.txt`` per entry point plus ``manifest.json`` describing
+the argument shapes/dtypes, which the rust runtime loads to validate inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Export table: name -> (fn, example args). Shapes here must match the rust
+# side's runtime::ArtifactSpec defaults (see rust/src/runtime/mod.rs).
+# ---------------------------------------------------------------------------
+
+# FTSF preprocess: a batch of 8 RGB 64x64 chunks (one VMEM tile each: 48 KiB).
+PREPROCESS_SHAPE = (8, 3, 64, 64)
+# COO decode: an Uber-like first-dim slice (24, 64, 64) with nnz capacity 8192.
+DECODE_SHAPE = (24, 64, 64)
+DECODE_NNZ = 8192
+# BSGS decode: a 16x16 grid of 16x16 blocks (256x256 plane), 512 block slots.
+BLOCK_GRID = (16, 16)
+BLOCK_SHAPE = (16, 16)
+BLOCK_CAP = 512
+
+
+def exports():
+    """The export table; evaluated lazily so jax imports stay cheap."""
+    f32, i32, u8 = jnp.float32, jnp.int32, jnp.uint8
+    spec = jax.ShapeDtypeStruct
+    return {
+        "preprocess_chunks": (
+            model.preprocess_chunks,
+            (spec(PREPROCESS_SHAPE, u8),),
+        ),
+        "decode_coo": (
+            functools.partial(model.decode_coo, shape=DECODE_SHAPE),
+            (spec((DECODE_NNZ, len(DECODE_SHAPE)), i32), spec((DECODE_NNZ,), f32)),
+        ),
+        "decode_coo_raw": (
+            functools.partial(model.decode_coo_raw, shape=DECODE_SHAPE),
+            (spec((DECODE_NNZ, len(DECODE_SHAPE)), i32), spec((DECODE_NNZ,), f32)),
+        ),
+        "decode_coo_fast": (
+            functools.partial(model.decode_coo_fast, shape=DECODE_SHAPE),
+            (spec((DECODE_NNZ, len(DECODE_SHAPE)), i32), spec((DECODE_NNZ,), f32)),
+        ),
+        "decode_blocks": (
+            functools.partial(model.decode_blocks, grid=BLOCK_GRID),
+            (
+                spec((BLOCK_CAP, 2), jnp.int32),
+                spec((BLOCK_CAP,) + BLOCK_SHAPE, f32),
+            ),
+        ),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), lowered
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="export a single entry point")
+    ap.add_argument(
+        "--dump-stats",
+        action="store_true",
+        help="print HLO op histogram per module (L2 fusion sanity check)",
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, args) in exports().items():
+        if ns.only and name != ns.only:
+            continue
+        text, _lowered = lower_entry(name, fn, args)
+        path = os.path.join(ns.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+        }
+        if ns.dump_stats:
+            ops = {}
+            for line in text.splitlines():
+                line = line.strip()
+                if "=" in line and line.split("=", 1)[1].strip():
+                    rhs = line.split("=", 1)[1].strip()
+                    op = rhs.split("(")[0].split()[-1] if "(" in rhs else ""
+                    if op:
+                        ops[op] = ops.get(op, 0) + 1
+            top = sorted(ops.items(), key=lambda kv: -kv[1])[:8]
+            print(f"[aot] {name}: {len(text)} chars, top ops: {top}")
+        print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    if not ns.only:
+        mpath = os.path.join(ns.out_dir, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

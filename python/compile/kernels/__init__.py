@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; never on the request path)."""
+
+from .coo_scatter import coo_scatter
+from .block_gather import block_gather
+from .normalize import normalize
+
+__all__ = ["coo_scatter", "block_gather", "normalize"]

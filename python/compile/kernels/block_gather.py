@@ -1,0 +1,53 @@
+"""Pallas kernel: BSGS dense-block gather -> dense plane.
+
+Each stored block is a dense (BH, BW) payload with a block-grid coordinate;
+the kernel accumulates every block into its slot of the output plane. On a
+real TPU the output plane tiles across VMEM in (8·k, 128·m) lanes and blocks
+stream from HBM; interpret=True executes the same schedule on CPU.
+
+Padding convention: surplus block slots carry coordinate (0, 0) and all-zero
+values, so accumulation is a no-op for them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(idx_ref, vals_ref, o_ref, *, bh, bw):
+    o_ref[...] = jnp.zeros_like(o_ref)
+    nb = vals_ref.shape[0]
+
+    def body(b, _):
+        r = idx_ref[b, 0] * bh
+        c = idx_ref[b, 1] * bw
+        cur = pl.load(o_ref, (pl.dslice(r, bh), pl.dslice(c, bw)))
+        pl.store(o_ref, (pl.dslice(r, bh), pl.dslice(c, bw)), cur + vals_ref[b])
+        return 0
+
+    jax.lax.fori_loop(0, nb, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("grid",))
+def block_gather(block_idx, block_vals, *, grid):
+    """Assemble dense blocks into a (GR*BH, GC*BW) plane.
+
+    Args:
+      block_idx: i32[NB, 2] block-grid coordinates ((0,0) for padding).
+      block_vals: f32[NB, BH, BW] block payloads (zeros for padding).
+      grid: static (GR, GC) block-grid shape.
+
+    Returns:
+      f32[GR*BH, GC*BW].
+    """
+    nb, bh, bw = block_vals.shape
+    gr, gc = grid
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, bh=bh, bw=bw),
+        out_shape=jax.ShapeDtypeStruct((gr * bh, gc * bw), block_vals.dtype),
+        interpret=True,
+    )(block_idx.astype(jnp.int32), block_vals)

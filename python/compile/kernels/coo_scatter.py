@@ -1,0 +1,67 @@
+"""Pallas kernel: padded-COO -> dense scatter (the sparse decode hot-spot).
+
+TPU-shaped even though we run interpret=True on CPU (see DESIGN.md
+§Hardware-Adaptation): the output tile lives in VMEM; the nnz stream is
+consumed in fixed-size index blocks from HBM. A CUDA implementation would
+assign nnz ranges to threadblocks and atomically add into global memory —
+on TPU we instead keep the output tile resident and serialize the scatter
+through a fori_loop, which the (single-core) interpret path executes
+identically.
+
+The kernel flattens coordinates with precomputed row-major strides and
+scatter-adds values, so padded rows (index 0, value 0) are harmless no-ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(idx_ref, val_ref, o_ref, *, strides, out_numel):
+    """Scatter one nnz block into the flat output tile (VMEM-resident)."""
+    o_ref[...] = jnp.zeros_like(o_ref)
+    n = val_ref.shape[0]
+    flat = jnp.zeros((n,), dtype=jnp.int32)
+    for d, s in enumerate(strides):
+        flat = flat + idx_ref[:, d] * s
+    flat = jnp.clip(flat, 0, out_numel - 1)
+
+    def body(i, _):
+        f = flat[i]
+        pl.store(o_ref, (f,), pl.load(o_ref, (f,)) + val_ref[i])
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def coo_scatter(indices, values, *, shape):
+    """Materialize padded COO entries as a dense f32 tensor of `shape`.
+
+    Args:
+      indices: i32[N, ndim]; padding rows point at cell 0 with value 0.
+      values: f32[N].
+      shape: static output shape.
+
+    Returns:
+      f32[shape]; duplicates accumulate.
+    """
+    ndim = len(shape)
+    assert indices.ndim == 2 and indices.shape[1] == ndim
+    out_numel = 1
+    for d in shape:
+        out_numel *= d
+    strides = [1] * ndim
+    for d in range(ndim - 2, -1, -1):
+        strides[d] = strides[d + 1] * shape[d + 1]
+
+    flat = pl.pallas_call(
+        functools.partial(_scatter_kernel, strides=tuple(strides), out_numel=out_numel),
+        out_shape=jax.ShapeDtypeStruct((out_numel,), values.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(indices.astype(jnp.int32), values)
+    return flat.reshape(shape)

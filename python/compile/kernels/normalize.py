@@ -1,0 +1,35 @@
+"""Pallas kernel: u8 image chunk -> normalized f32 training batch.
+
+The classic data-pipeline preprocessing step applied to FTSF chunks as they
+come off the object store. Tiled elementwise: the grid walks the batch
+dimension so each step normalizes one (C, H, W) chunk — a BlockSpec schedule
+that keeps each VMEM tile at C·H·W·4 bytes (≈3 MiB at 3×512×512 it would
+split further; the exported shapes keep tiles ≤2 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _normalize_kernel(x_ref, o_ref, *, mean, std):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (x * (1.0 / 255.0) - mean) * (1.0 / std)
+
+
+@functools.partial(jax.jit, static_argnames=("mean", "std"))
+def normalize(x, *, mean=0.5, std=0.25):
+    """Normalize a u8 batch [B, C, H, W] to f32 (x/255 - mean)/std."""
+    b, c, h, w = x.shape
+    return pl.pallas_call(
+        functools.partial(_normalize_kernel, mean=mean, std=std),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, w), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis in python/tests). They define the exact semantics of the decode
+hot path the rust read pipeline offloads to XLA:
+
+* ``coo_scatter_ref``   — padded-COO -> dense materialization.
+* ``block_gather_ref``  — BSGS dense-block collection -> dense plane.
+* ``normalize_ref``     — u8 image chunk -> normalized f32 training batch.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coo_scatter_ref(indices, values, shape):
+    """Scatter padded COO entries into a dense tensor.
+
+    Args:
+      indices: i32[N, ndim] coordinates; padded rows must point at a valid
+        cell (conventionally all-zero) and carry value 0.
+      values: f32[N] values, 0 for padding.
+      shape: static output shape.
+
+    Returns:
+      f32[shape] with duplicate coordinates accumulated (padding adds 0).
+    """
+    out = jnp.zeros(shape, dtype=values.dtype)
+    return out.at[tuple(indices[:, d] for d in range(len(shape)))].add(values)
+
+
+def block_gather_ref(block_idx, block_vals, grid):
+    """Assemble dense blocks into a dense plane.
+
+    Args:
+      block_idx: i32[NB, 2] block-grid (row, col) coordinates; padding blocks
+        must target block (0, 0) and carry all-zero values.
+      block_vals: f32[NB, BH, BW] dense block payloads.
+      grid: static (GR, GC) block-grid shape; output is (GR*BH, GC*BW).
+
+    Returns:
+      f32[GR*BH, GC*BW] with blocks accumulated at their grid slots.
+    """
+    nb, bh, bw = block_vals.shape
+    gr, gc = grid
+    out = jnp.zeros((gr, gc, bh, bw), dtype=block_vals.dtype)
+    out = out.at[block_idx[:, 0], block_idx[:, 1]].add(block_vals)
+    return out.transpose(0, 2, 1, 3).reshape(gr * bh, gc * bw)
+
+
+def normalize_ref(x, mean=0.5, std=0.25):
+    """u8 image chunk -> f32 normalized to (x/255 - mean) / std."""
+    return (x.astype(jnp.float32) / 255.0 - mean) / std
+
+
+def decode_pipeline_ref(indices, values, shape, mean=0.5, std=0.25):
+    """The fused L2 pipeline: sparse decode -> scale -> normalize.
+
+    Models "read sparse tensor from the lakehouse, materialize, and prep a
+    training batch" as one XLA computation.
+    """
+    dense = coo_scatter_ref(indices, values, shape)
+    return (dense / 255.0 - mean) / std

@@ -1,0 +1,58 @@
+"""Layer-2 JAX compute graphs — the pipelines AOT-exported for the rust
+read path.
+
+Each entry point composes the L1 Pallas kernels into the computation a
+training job runs on data read back from the Delta Tensor store. The rust
+runtime (rust/src/runtime) loads the lowered HLO and executes it via PJRT;
+python never runs at serving time.
+
+Entry points (shapes fixed per export, see EXPORTS in aot.py):
+
+* ``preprocess_chunks`` — FTSF read path: u8 chunk batch -> normalized f32.
+* ``decode_coo``        — COO/CSR/CSF read path: padded nnz -> dense slice,
+                          fused with normalization.
+* ``decode_blocks``     — BSGS read path: dense blocks -> plane.
+"""
+
+from __future__ import annotations
+
+from .kernels import block_gather, coo_scatter, normalize
+
+
+def preprocess_chunks(chunks_u8):
+    """u8[B, C, H, W] FTSF chunks -> normalized f32 batch."""
+    return (normalize(chunks_u8),)
+
+
+def decode_coo(indices, values, *, shape):
+    """Padded COO (i32[N, nd], f32[N]) -> dense f32[shape], normalized.
+
+    The fusion target: materialization and normalization lower into one XLA
+    module so the intermediate dense tensor never round-trips to HBM twice.
+    """
+    dense = coo_scatter(indices, values, shape=shape)
+    return ((dense * (1.0 / 255.0) - 0.5) * 4.0,)
+
+
+def decode_coo_raw(indices, values, *, shape):
+    """Padded COO -> dense f32[shape] (no normalization)."""
+    return (coo_scatter(indices, values, shape=shape),)
+
+
+def decode_coo_fast(indices, values, *, shape):
+    """Padded COO -> dense via XLA's native scatter-add (no Pallas).
+
+    The Pallas kernel (`decode_coo_raw`) is the TPU-shaped artifact; under
+    interpret=True its fori_loop scatter lowers to a sequential HLO while
+    loop, which the CPU backend executes orders of magnitude slower than
+    its native scatter op. The rust runtime prefers this entry point when
+    serving on CPU and keeps the Pallas artifact for TPU targets.
+    """
+    from .kernels.ref import coo_scatter_ref
+
+    return (coo_scatter_ref(indices, values, shape),)
+
+
+def decode_blocks(block_idx, block_vals, *, grid):
+    """BSGS blocks (i32[NB, 2], f32[NB, BH, BW]) -> dense plane."""
+    return (block_gather(block_idx, block_vals, grid=grid),)

@@ -1,0 +1,112 @@
+//! E1 — reproduce **Figure 12**: dense-tensor performance on the FFHQ-like
+//! workload, Binary baseline vs FTSF.
+//!
+//! Paper (5000×3×1024×1024 u8, S3 @1 Gbps):
+//!
+//! | method | storage | write | read tensor | read slice (100 imgs) |
+//! |--------|---------|-------|-------------|-----------------------|
+//! | Binary | 14.6 GB | 135.7s| 379.5s      | 494.3s                |
+//! | FTSF   | 13.3 GB | 251.8s| 474.5s      | 49.2s                 |
+//! | Δ      | −8.9 %  | +85.5%| +25.0%      | −90.0%                |
+//!
+//! We run a scaled tensor on the simulated link (`DT_SCALE` / `DT_NET`) and
+//! report the same rows; the expected *shape* is: FTSF comparable-or-smaller
+//! storage, slower writes/whole reads (more requests + commit protocol),
+//! and an order-of-magnitude faster slice read.
+
+use delta_tensor::benchkit::{self, fmt_pct, fmt_secs, print_table, Row, Scale};
+use delta_tensor::prelude::*;
+use delta_tensor::util::{human_bytes, RunStats, Stopwatch};
+use delta_tensor::workload::{ffhq_like, FfhqParams};
+
+fn fresh_table() -> DeltaTable {
+    DeltaTable::create(ObjectStoreHandle::sim_mem(benchkit::net()), "t").unwrap()
+}
+
+fn main() {
+    let scale = benchkit::scale();
+    let p = match scale {
+        Scale::Tiny => FfhqParams { n: 32, channels: 3, height: 64, width: 64 },
+        Scale::Small => FfhqParams { n: 128, channels: 3, height: 256, width: 256 },
+        Scale::Paper => FfhqParams { n: 512, channels: 3, height: 512, width: 512 },
+    };
+    let reps = benchkit::reps(3);
+    // Slice = "100 of 5000 images" scaled to 1/50 of the first dim, min 2.
+    let slice_n = (p.n / 50).max(2);
+    println!(
+        "fig12: FFHQ-like {:?} = {} | net={:?} | reps={reps} | slice=first {slice_n} images",
+        p.shape(),
+        human_bytes(p.bytes() as u64),
+        benchkit::net()
+    );
+    let data: TensorData = ffhq_like(42, p).into();
+
+    let mut rows = Vec::new();
+    let mut results: Vec<(f64, f64, f64, f64)> = Vec::new();
+    for layout in ["Binary", "FTSF"] {
+        let (size, write, read, slice) = run_one(layout, &data, slice_n, reps);
+        results.push((size, write, read, slice));
+        rows.push(Row {
+            label: layout.into(),
+            cells: vec![
+                human_bytes(size as u64),
+                fmt_secs(write),
+                fmt_secs(read),
+                fmt_secs(slice),
+            ],
+        });
+    }
+    let (bs, bw, br, bsl) = results[0];
+    let (fs, fw, fr, fsl) = results[1];
+    rows.push(Row {
+        label: "Δ (FTSF vs Binary)".into(),
+        cells: vec![
+            fmt_pct(fs / bs - 1.0),
+            fmt_pct(fw / bw - 1.0),
+            fmt_pct(fr / br - 1.0),
+            fmt_pct(fsl / bsl - 1.0),
+        ],
+    });
+    print_table(
+        "Figure 12 — dense tensor (Binary vs FTSF)",
+        &["method", "storage", "write", "read tensor", "read slice"],
+        &rows,
+    );
+    println!("\npaper Δ row: storage −8.90%  write +85.52%  read +25.02%  read-slice −90.04%");
+}
+
+fn run_one(layout: &str, data: &TensorData, slice_n: usize, reps: usize) -> (f64, f64, f64, f64) {
+    let make_fmt = || -> Box<dyn TensorStore> {
+        match layout {
+            "Binary" => Box::new(BinaryFormat),
+            _ => Box::new(FtsfFormat::new(3)), // chunk = one (C,H,W) image, Fig 2
+        }
+    };
+
+    // Write timing on fresh tables each rep.
+    let mut write = RunStats::new();
+    for _ in 0..reps {
+        let table = fresh_table();
+        let fmt = make_fmt();
+        let sw = Stopwatch::start();
+        fmt.write(&table, "x", data).unwrap();
+        write.push(sw.secs());
+    }
+
+    // One persistent table for reads + size.
+    let table = fresh_table();
+    let fmt = make_fmt();
+    fmt.write(&table, "x", data).unwrap();
+    let size = storage_bytes(&table, "x").unwrap() as f64;
+
+    let mut read = RunStats::new();
+    for _ in 0..reps {
+        read.time(|| std::hint::black_box(fmt.read(&table, "x").unwrap()));
+    }
+    let slice = Slice::dim0(0, slice_n);
+    let mut read_slice = RunStats::new();
+    for _ in 0..reps {
+        read_slice.time(|| std::hint::black_box(fmt.read_slice(&table, "x", &slice).unwrap()));
+    }
+    (size, write.mean(), read.mean(), read_slice.mean())
+}

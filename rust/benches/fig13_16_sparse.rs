@@ -1,0 +1,129 @@
+//! E2-E5 — reproduce **Figures 13-16**: sparse-tensor storage size, write
+//! time, whole-read time and slice-read time on the Uber-pickups-like
+//! tensor, PT baseline vs COO / CSR / CSF / BSGS.
+//!
+//! Paper headline shapes (Uber tensor (183,24,1140,1717), 3.3 M nnz):
+//!   Fig 13: every format ≤ 13.23 % of PT size; BSGS best at 4.83 %.
+//!   Fig 14: CSF fastest write (−26.68 % vs PT).
+//!   Fig 15: BSGS fastest whole read (−29.59 % vs PT).
+//!   Fig 16: COO/CSF/BSGS beat PT on X[i] slices; BSGS best (−55.34 %).
+//!
+//! CSC is skipped as in the paper ("interchangeable nature of CSR and CSC").
+
+use delta_tensor::benchkit::{self, fmt_pct, fmt_secs, print_table, Row, Scale};
+use delta_tensor::prelude::*;
+use delta_tensor::util::{human_bytes, Pcg64, RunStats, Stopwatch};
+use delta_tensor::workload::{uber_like, UberParams};
+
+type MakeFmt = Box<dyn Fn() -> Box<dyn TensorStore>>;
+
+fn formats() -> Vec<(&'static str, MakeFmt)> {
+    vec![
+        ("PT", Box::new(|| Box::new(BinaryFormat) as Box<dyn TensorStore>)),
+        ("COO", Box::new(|| Box::new(CooFormat::default()) as Box<dyn TensorStore>)),
+        ("CSR", Box::new(|| Box::new(CsrFormat::default()) as Box<dyn TensorStore>)),
+        ("CSF", Box::new(|| Box::new(CsfFormat::default()) as Box<dyn TensorStore>)),
+        // Block shape tuned for the spatio-temporal workload (paper §IV.F:
+        // block size is a workload input): full hour extent, 4x4 spatial.
+        ("BSGS", Box::new(|| {
+            Box::new(BsgsFormat::with_block_shape(&[1, 24, 4, 4])) as Box<dyn TensorStore>
+        })),
+    ]
+}
+
+fn fresh_table() -> DeltaTable {
+    DeltaTable::create(ObjectStoreHandle::sim_mem(benchkit::net()), "t").unwrap()
+}
+
+fn main() {
+    let p = match benchkit::scale() {
+        Scale::Tiny => UberParams::tiny(),
+        Scale::Small => UberParams::default_scale(),
+        Scale::Paper => UberParams::paper_scale(),
+    };
+    // The paper averages 100 repetitions; network-bound budget we scale
+    // down (override with DT_REPS).
+    let reps = benchkit::reps(5);
+    let tensor = uber_like(42, p);
+    println!(
+        "fig13-16: Uber-like {:?}, nnz={} (density {:.4}%) | net={:?} | reps={reps}",
+        p.shape(),
+        tensor.nnz(),
+        tensor.density() * 100.0,
+        benchkit::net()
+    );
+    let data: TensorData = tensor.clone().into();
+    let mut rng = Pcg64::new(7);
+
+    let mut size_rows = Vec::new();
+    let mut write_rows = Vec::new();
+    let mut read_rows = Vec::new();
+    let mut slice_rows = Vec::new();
+    let mut pt_base: Option<(f64, f64, f64, f64)> = None;
+
+    for (name, make) in formats() {
+        let mut write = RunStats::new();
+        for _ in 0..reps {
+            let table = fresh_table();
+            let fmt = make();
+            let sw = Stopwatch::start();
+            fmt.write(&table, "u", &data).unwrap();
+            write.push(sw.secs());
+        }
+        let table = fresh_table();
+        let fmt = make();
+        fmt.write(&table, "u", &data).unwrap();
+        let size = storage_bytes(&table, "u").unwrap() as f64;
+        let mut read = RunStats::new();
+        for _ in 0..reps {
+            read.time(|| std::hint::black_box(fmt.read(&table, "u").unwrap()));
+        }
+        let mut rslice = RunStats::new();
+        for _ in 0..reps {
+            let day = rng.below(p.days);
+            let slice = Slice::index(day);
+            rslice.time(|| std::hint::black_box(fmt.read_slice(&table, "u", &slice).unwrap()));
+        }
+
+        let (w, r, s) = (write.mean(), read.mean(), rslice.mean());
+        if name == "PT" {
+            pt_base = Some((size, w, r, s));
+        }
+        let (bs, bw, br, bsl) = pt_base.unwrap();
+        let rel = |x: f64, b: f64| {
+            if name == "PT" {
+                "—".to_string()
+            } else {
+                fmt_pct(x / b - 1.0)
+            }
+        };
+        size_rows.push(Row {
+            label: name.into(),
+            cells: vec![human_bytes(size as u64), format!("{:.2}%", size / bs * 100.0)],
+        });
+        write_rows.push(Row { label: name.into(), cells: vec![fmt_secs(w), rel(w, bw)] });
+        read_rows.push(Row { label: name.into(), cells: vec![fmt_secs(r), rel(r, br)] });
+        slice_rows.push(Row { label: name.into(), cells: vec![fmt_secs(s), rel(s, bsl)] });
+    }
+
+    print_table(
+        "Figure 13 — storage size (Cr = size/PT; paper: all ≤13.23%, BSGS 4.83%)",
+        &["method", "size", "Cr"],
+        &size_rows,
+    );
+    print_table(
+        "Figure 14 — write time (paper: CSF best, −26.68% vs PT)",
+        &["method", "t_write", "vs PT"],
+        &write_rows,
+    );
+    print_table(
+        "Figure 15 — read entire tensor (paper: BSGS best, −29.59% vs PT)",
+        &["method", "t_read", "vs PT"],
+        &read_rows,
+    );
+    print_table(
+        "Figure 16 — read slice X[i,:,:,:] (paper: BSGS best, −55.34% vs PT)",
+        &["method", "t_slice", "vs PT"],
+        &slice_rows,
+    );
+}

@@ -1,0 +1,265 @@
+//! P1 + ablations — microbenchmarks behind the design choices listed in
+//! DESIGN.md ("Key design choices"), plus the §Perf hot-path measurements:
+//!
+//! * `ftsf_dc`       — FTSF chunk rank Dc ∈ {2, 3} (paper Figs 2 vs 3)
+//! * `bsgs_edge`     — BSGS block edge ∈ {4, 8, 16, 32} (paper §IV.F tradeoff)
+//! * `rowgroup`      — COO rows-per-group sweep (pruning vs overhead)
+//! * `codec`         — page codec none / zstd / deflate (size vs time)
+//! * `coord_scaling` — coordinator worker count scaling
+//! * `decode`        — sparse decode: CPU scatter vs XLA artifact vs memcpy
+//!
+//! Select one section with `--section NAME` (or env `DT_SECTION`); default
+//! runs all. All sections run in-memory with no network simulation — these
+//! measure compute, not the modeled link.
+
+use delta_tensor::benchkit::{fmt_secs, print_table, Row};
+use delta_tensor::coordinator::{Coordinator, IngestJob};
+use delta_tensor::prelude::*;
+use delta_tensor::util::{human_bytes, RunStats, Stopwatch};
+use delta_tensor::workload;
+
+fn fresh_table() -> DeltaTable {
+    DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let section = args
+        .iter()
+        .position(|a| a == "--section")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var("DT_SECTION").ok())
+        .unwrap_or_else(|| "all".to_string());
+    let run = |name: &str| section == "all" || section == name;
+
+    if run("ftsf_dc") {
+        ftsf_dc();
+    }
+    if run("bsgs_edge") {
+        bsgs_edge();
+    }
+    if run("rowgroup") {
+        rowgroup();
+    }
+    if run("codec") {
+        codec();
+    }
+    if run("coord_scaling") {
+        coord_scaling();
+    }
+    if run("decode") {
+        decode();
+    }
+}
+
+/// Ablation 1: FTSF chunk rank.
+fn ftsf_dc() {
+    let p = workload::FfhqParams { n: 64, channels: 3, height: 128, width: 128 };
+    let data: TensorData = workload::ffhq_like(1, p).into();
+    let mut rows = Vec::new();
+    for dc in [2usize, 3] {
+        let table = fresh_table();
+        let fmt = FtsfFormat::new(dc);
+        let sw = Stopwatch::start();
+        fmt.write(&table, "x", &data).unwrap();
+        let w = sw.secs();
+        let size = storage_bytes(&table, "x").unwrap();
+        let mut slice = RunStats::new();
+        for i in 0..5 {
+            let s = Slice::index(i * 12);
+            slice.time(|| std::hint::black_box(fmt.read_slice(&table, "x", &s).unwrap()));
+        }
+        rows.push(Row {
+            label: format!("Dc={dc}"),
+            cells: vec![human_bytes(size), fmt_secs(w), fmt_secs(slice.mean())],
+        });
+    }
+    print_table("ablation: FTSF chunk rank (Fig 2 vs Fig 3)", &["Dc", "size", "write", "slice"], &rows);
+}
+
+/// Ablation 2: BSGS block edge.
+fn bsgs_edge() {
+    let p = workload::UberParams { days: 48, hours: 24, grid_x: 128, grid_y: 196, events: 60_000, hotspots: 12 };
+    let data: TensorData = workload::uber_like(2, p).into();
+    let mut rows = Vec::new();
+    for edge in [4usize, 8, 16, 32] {
+        let table = fresh_table();
+        let fmt = BsgsFormat::with_edge(edge);
+        let sw = Stopwatch::start();
+        fmt.write(&table, "u", &data).unwrap();
+        let w = sw.secs();
+        let size = storage_bytes(&table, "u").unwrap();
+        let mut slice = RunStats::new();
+        for i in 0..5 {
+            let s = Slice::index(i * 9);
+            slice.time(|| std::hint::black_box(fmt.read_slice(&table, "u", &s).unwrap()));
+        }
+        rows.push(Row {
+            label: format!("edge={edge}"),
+            cells: vec![human_bytes(size), fmt_secs(w), fmt_secs(slice.mean())],
+        });
+    }
+    print_table(
+        "ablation: BSGS block edge (too big wastes space, too small degenerates to COO)",
+        &["block", "size", "write", "slice"],
+        &rows,
+    );
+}
+
+/// Ablation 3: COO row-group size.
+fn rowgroup() {
+    let p = workload::UberParams { days: 96, hours: 24, grid_x: 96, grid_y: 128, events: 120_000, hotspots: 12 };
+    let data: TensorData = workload::uber_like(3, p).into();
+    let mut rows = Vec::new();
+    for rpg in [4 * 1024usize, 16 * 1024, 64 * 1024, 256 * 1024] {
+        let table = fresh_table();
+        let fmt = CooFormat { rows_per_group: rpg, ..Default::default() };
+        fmt.write(&table, "u", &data).unwrap();
+        let size = storage_bytes(&table, "u").unwrap();
+        let mut slice = RunStats::new();
+        for i in 0..5 {
+            let s = Slice::index(i * 19);
+            slice.time(|| std::hint::black_box(fmt.read_slice(&table, "u", &s).unwrap()));
+        }
+        let mut full = RunStats::new();
+        full.time(|| std::hint::black_box(fmt.read(&table, "u").unwrap()));
+        rows.push(Row {
+            label: format!("{}k", rpg / 1024),
+            cells: vec![human_bytes(size), fmt_secs(slice.mean()), fmt_secs(full.mean())],
+        });
+    }
+    print_table(
+        "ablation: COO rows per row group (pruning granularity vs per-group overhead)",
+        &["rows/group", "size", "slice", "full read"],
+        &rows,
+    );
+}
+
+/// Ablation 4: page codec.
+fn codec() {
+    use delta_tensor::columnar::Codec;
+    let p = workload::UberParams { days: 96, hours: 24, grid_x: 96, grid_y: 128, events: 120_000, hotspots: 12 };
+    let data: TensorData = workload::uber_like(4, p).into();
+    let mut rows = Vec::new();
+    for (name, codec) in [
+        ("none", Codec::None),
+        ("zstd-1", Codec::Zstd(1)),
+        ("zstd-3", Codec::Zstd(3)),
+        ("zstd-9", Codec::Zstd(9)),
+        ("deflate-6", Codec::Deflate(6)),
+    ] {
+        let table = fresh_table();
+        let fmt = CooFormat { codec, ..Default::default() };
+        let sw = Stopwatch::start();
+        fmt.write(&table, "u", &data).unwrap();
+        let w = sw.secs();
+        let size = storage_bytes(&table, "u").unwrap();
+        let mut read = RunStats::new();
+        read.time(|| std::hint::black_box(fmt.read(&table, "u").unwrap()));
+        rows.push(Row {
+            label: name.into(),
+            cells: vec![human_bytes(size), fmt_secs(w), fmt_secs(read.mean())],
+        });
+    }
+    print_table("ablation: page compression codec (COO table)", &["codec", "size", "write", "read"], &rows);
+}
+
+/// §Perf L3: coordinator worker scaling.
+fn coord_scaling() {
+    let tensors: Vec<TensorData> = (0..16)
+        .map(|i| {
+            workload::ffhq_like(
+                i,
+                workload::FfhqParams { n: 16, channels: 3, height: 128, width: 128 },
+            )
+            .into()
+        })
+        .collect();
+    let mut rows = Vec::new();
+    let mut base = None;
+    for workers in [1usize, 2, 4, 8] {
+        let table = fresh_table();
+        let c = Coordinator::new(table, workers, 32);
+        let sw = Stopwatch::start();
+        for (i, t) in tensors.iter().enumerate() {
+            c.submit(IngestJob { id: format!("t{i}"), layout: "FTSF".into(), data: t.clone() });
+        }
+        let errs = c.drain();
+        assert!(errs.is_empty(), "{errs:?}");
+        let secs = sw.secs();
+        let base_secs = *base.get_or_insert(secs);
+        rows.push(Row {
+            label: format!("{workers} workers"),
+            cells: vec![
+                fmt_secs(secs),
+                format!("{:.2}x", base_secs / secs),
+                format!("{:.0}%", base_secs / secs / workers as f64 * 100.0),
+            ],
+        });
+    }
+    print_table(
+        "perf: coordinator ingest scaling (16 tensors, FTSF, mem store)",
+        &["workers", "wall", "speedup", "efficiency"],
+        &rows,
+    );
+}
+
+/// §Perf L1/L2: sparse decode CPU vs XLA artifact vs memcpy roofline.
+fn decode() {
+    let slice = workload::generic_sparse(5, &[24, 64, 64], 0.02).unwrap();
+    let dense_bytes = 24 * 64 * 64 * 4;
+    let reps = 50;
+
+    // memcpy roofline: copying the dense output once.
+    let src = vec![0u8; dense_bytes];
+    let mut memcpy = RunStats::new();
+    for _ in 0..reps {
+        memcpy.time(|| std::hint::black_box(src.clone()));
+    }
+
+    // CPU scatter decode.
+    let mut cpu = RunStats::new();
+    for _ in 0..reps {
+        cpu.time(|| std::hint::black_box(slice.to_dense().unwrap()));
+    }
+
+    let mut rows = vec![
+        Row {
+            label: "memcpy roofline".into(),
+            cells: vec![fmt_secs(memcpy.mean()), gbps(dense_bytes, memcpy.mean())],
+        },
+        Row {
+            label: "CPU scatter".into(),
+            cells: vec![fmt_secs(cpu.mean()), gbps(dense_bytes, cpu.mean())],
+        },
+    ];
+
+    // XLA decode (only when artifacts exist).
+    if let Ok(dir) = delta_tensor::runtime::default_artifact_dir() {
+        if let Ok(rt) = delta_tensor::runtime::Runtime::open(dir) {
+            // warm up compile
+            let _ = delta_tensor::query::decode_slice_xla(&rt, &slice.clone().into()).unwrap();
+            let mut xla = RunStats::new();
+            for _ in 0..reps {
+                xla.time(|| {
+                    std::hint::black_box(
+                        delta_tensor::query::decode_slice_xla(&rt, &slice.clone().into()).unwrap(),
+                    )
+                });
+            }
+            rows.push(Row {
+                label: "XLA artifact".into(),
+                cells: vec![fmt_secs(xla.mean()), gbps(dense_bytes, xla.mean())],
+            });
+        }
+    }
+    print_table(
+        "perf: sparse slice decode (24,64,64), ~2% nnz",
+        &["path", "time", "throughput"],
+        &rows,
+    );
+}
+
+fn gbps(bytes: usize, secs: f64) -> String {
+    format!("{:.2} GB/s", bytes as f64 / secs / 1e9)
+}

@@ -1,0 +1,141 @@
+//! Support for the figure-reproduction benches (criterion is unavailable
+//! offline; `cargo bench` runs our own `harness = false` binaries).
+//!
+//! Environment knobs shared by all benches:
+//!
+//! * `DT_SCALE` — `tiny` (CI smoke), `small` (default; minutes), `paper`
+//!   (full paper-scale shapes; slow).
+//! * `DT_NET` — `free` (no network simulation), `fast` (default; scaled-down
+//!   cloud model), `paper` (1 Gbps + 30 ms, the paper's testbed).
+//! * `DT_REPS` — measurement repetitions (default depends on scale).
+
+use crate::objectstore::CostModel;
+use crate::util::RunStats;
+
+/// Benchmark scale selected by `DT_SCALE`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Smoke-test sizes (seconds).
+    Tiny,
+    /// Default: big enough for stable ratios (a few minutes).
+    Small,
+    /// Paper-scale shapes (tens of minutes on the simulated link).
+    Paper,
+}
+
+/// Read `DT_SCALE`.
+pub fn scale() -> Scale {
+    match std::env::var("DT_SCALE").as_deref() {
+        Ok("tiny") => Scale::Tiny,
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Small,
+    }
+}
+
+/// Read `DT_NET` into a cost model.
+pub fn net() -> CostModel {
+    match std::env::var("DT_NET").as_deref() {
+        Ok("free") => CostModel::free(),
+        Ok("paper") => CostModel::paper_1gbps(),
+        Ok("vpc") => CostModel::vpc_100gbps(),
+        _ => CostModel::fast_sim(),
+    }
+}
+
+/// Read `DT_REPS` with a scale-dependent default.
+pub fn reps(default_small: usize) -> usize {
+    std::env::var("DT_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(match scale() {
+            Scale::Tiny => 3,
+            Scale::Small => default_small,
+            Scale::Paper => default_small.max(10),
+        })
+}
+
+/// A row of a result table: label + per-column values.
+pub struct Row {
+    /// Row label (format name).
+    pub label: String,
+    /// Cell values, formatted.
+    pub cells: Vec<String>,
+}
+
+/// Print an aligned table with a title and column headers.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Row]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.cells.iter().enumerate() {
+            widths[i + 1] = widths[i + 1].max(c.len());
+        }
+        widths[0] = widths[0].max(r.label.len());
+    }
+    let head: Vec<String> =
+        headers.iter().enumerate().map(|(i, h)| format!("{h:<w$}", w = widths[i])).collect();
+    println!("{}", head.join("  "));
+    for r in rows {
+        let mut line = format!("{:<w$}", r.label, w = widths[0]);
+        for (i, c) in r.cells.iter().enumerate() {
+            line.push_str(&format!("  {c:<w$}", w = widths[i + 1]));
+        }
+        println!("{line}");
+    }
+}
+
+/// Measure `f` `n` times into stats, calling `reset()` between runs.
+pub fn measure<T>(n: usize, mut reset: impl FnMut(), mut f: impl FnMut() -> T) -> RunStats {
+    let mut stats = RunStats::new();
+    for _ in 0..n {
+        reset();
+        stats.time(|| {
+            std::hint::black_box(f());
+        });
+    }
+    stats
+}
+
+/// Format seconds with appropriate precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.001 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Format a ratio as a percentage.
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(0.0000005), "0.5us");
+        assert_eq!(fmt_secs(0.5), "500.00ms");
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_pct(0.0483), "4.83%");
+    }
+
+    #[test]
+    fn measure_collects_n_samples() {
+        let stats = measure(5, || {}, || 1 + 1);
+        assert_eq!(stats.count(), 5);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        print_table(
+            "demo",
+            &["format", "size", "time"],
+            &[Row { label: "COO".into(), cells: vec!["1.0 MiB".into(), "2.0s".into()] }],
+        );
+    }
+}

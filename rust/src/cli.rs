@@ -1,0 +1,368 @@
+//! Command-line interface (hand-rolled: clap is unavailable offline).
+//!
+//! ```text
+//! delta-tensor <command> [flags]
+//!
+//! Commands:
+//!   ingest     generate a workload and store it          (--workload, --layout, ...)
+//!   read       read a whole tensor                       (--id)
+//!   slice      read a first-dimension slice              (--id, --start, --end)
+//!   inspect    per-tensor stats and read plans
+//!   history    table commit history (time travel log)
+//!   optimize   compact a tensor's files                  (--id)
+//!   vacuum     delete unreferenced data objects
+//!   bench      run a paper experiment                    (--experiment fig12|fig13-16)
+//!   serve      run a simple request loop over stdin
+//! ```
+
+use crate::coordinator::{Coordinator, IngestJob};
+use crate::delta::DeltaTable;
+use crate::objectstore::{CostModel, ObjectStoreHandle};
+use crate::tensor::Slice;
+use crate::util::human_bytes;
+use crate::workload;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Subcommand name.
+    pub command: String,
+    /// `--key value` pairs.
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {a:?}"))?
+                .to_string();
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(), // boolean flag
+            };
+            flags.insert(key, value);
+        }
+        Ok(Args { command, flags })
+    }
+
+    /// Required string flag.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.flags.get(key).map(|s| s.as_str()).with_context(|| format!("missing --{key}"))
+    }
+
+    /// Optional string flag with default.
+    pub fn opt<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Optional usize flag with default.
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// Build the object store from flags (`--store mem|fs|sim-fs`, `--root`,
+/// `--net paper|fast|free`).
+pub fn store_from_args(args: &Args) -> Result<ObjectStoreHandle> {
+    let cost = match args.opt("net", "free") {
+        "paper" => CostModel::paper_1gbps(),
+        "vpc" => CostModel::vpc_100gbps(),
+        "fast" => CostModel::fast_sim(),
+        "free" => CostModel::free(),
+        other => bail!("unknown --net {other:?} (paper|vpc|fast|free)"),
+    };
+    let kind = args.opt("store", "fs");
+    let root = args.opt("root", "/tmp/delta-tensor-store").to_string();
+    Ok(match kind {
+        "mem" => ObjectStoreHandle::sim_mem(cost),
+        "fs" => ObjectStoreHandle::sim_fs(root, cost)?,
+        other => bail!("unknown --store {other:?} (mem|fs)"),
+    })
+}
+
+/// Execute a parsed command. Returns the text to print.
+pub fn run(args: &Args) -> Result<String> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => Ok(HELP.to_string()),
+        "ingest" => cmd_ingest(args),
+        "read" => cmd_read(args, false),
+        "slice" => cmd_read(args, true),
+        "inspect" => cmd_inspect(args),
+        "history" => cmd_history(args),
+        "optimize" => cmd_optimize(args),
+        "vacuum" => cmd_vacuum(args),
+        "metrics-demo" => cmd_metrics_demo(args),
+        other => bail!("unknown command {other:?}; try `delta-tensor help`"),
+    }
+}
+
+const HELP: &str = r#"delta-tensor — tensor storage on a Delta-Lake-style lakehouse
+
+USAGE: delta-tensor <command> [--flag value ...]
+
+COMMANDS
+  ingest    --workload ffhq|uber|generic --layout auto|Binary|FTSF|COO|CSR|CSC|CSF|BSGS
+            [--id NAME] [--seed N] [--scale tiny|default] [--workers N]
+  read      --id NAME            read a whole tensor, print a summary
+  slice     --id NAME --start A --end B    read X[A:B, ...]
+  inspect                        per-tensor stats and read plans
+  history                        commit log (version, operation, timestamp)
+  optimize  --id NAME            compact a tensor's part files
+  vacuum                         delete unreferenced data objects
+COMMON FLAGS
+  --table NAME                   table root (default: tensors)
+  --store mem|fs                 backend (default fs)   --root PATH
+  --net   free|fast|paper|vpc    simulated network cost model (default free)
+
+Benches for the paper's figures: `cargo bench` (see EXPERIMENTS.md).
+"#;
+
+fn open_table(args: &Args) -> Result<DeltaTable> {
+    let store = store_from_args(args)?;
+    DeltaTable::create_or_open(store, args.opt("table", "tensors"))
+}
+
+fn cmd_ingest(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let seed = args.opt_usize("seed", 42)? as u64;
+    let layout = args.opt("layout", "auto").to_string();
+    let scale = args.opt("scale", "tiny");
+    let data: crate::formats::TensorData = match args.req("workload")? {
+        "ffhq" => {
+            let p = if scale == "default" {
+                workload::FfhqParams::default_scale()
+            } else {
+                workload::FfhqParams::tiny()
+            };
+            workload::ffhq_like(seed, p).into()
+        }
+        "uber" => {
+            let p = if scale == "default" {
+                workload::UberParams::default_scale()
+            } else {
+                workload::UberParams::tiny()
+            };
+            workload::uber_like(seed, p).into()
+        }
+        "generic" => workload::generic_sparse(seed, &[64, 32, 32], 0.01)?.into(),
+        other => bail!("unknown --workload {other:?}"),
+    };
+    let id = args
+        .opt("id", "")
+        .to_string();
+    let id = if id.is_empty() {
+        crate::formats::new_tensor_id(&layout.to_lowercase(), data.shape().len())
+    } else {
+        id
+    };
+    let workers = args.opt_usize("workers", 4)?;
+    let c = Coordinator::new(table, workers, 8);
+    let shape = data.shape().to_vec();
+    c.submit(IngestJob { id: id.clone(), layout, data });
+    let errors = c.drain();
+    if !errors.is_empty() {
+        bail!("ingest failed: {errors:?}");
+    }
+    let bytes = crate::formats::storage_bytes(c.table(), &id)?;
+    Ok(format!(
+        "stored {id} shape {shape:?} as {} ({})\n{}",
+        crate::coordinator::discover_layout(c.table(), &id)?,
+        human_bytes(bytes),
+        c.metrics().report()
+    ))
+}
+
+fn cmd_read(args: &Args, sliced: bool) -> Result<String> {
+    let table = open_table(args)?;
+    let id = args.req("id")?;
+    let slice = if sliced {
+        let start = args.opt_usize("start", 0)?;
+        let end = args.opt_usize("end", start + 1)?;
+        Some(Slice::dim0(start, end))
+    } else {
+        None
+    };
+    let plan = crate::query::plan(&table, id, slice.as_ref())?;
+    let sw = crate::util::Stopwatch::start();
+    let data = crate::query::execute(&table, id, slice.as_ref())?;
+    let secs = sw.secs();
+    Ok(format!(
+        "tensor {id} layout={} shape={:?} density={:.4}\nplan: {}/{} files, {} selected\nread in {:.3}s",
+        plan.layout,
+        data.shape(),
+        data.density(),
+        plan.selected_files,
+        plan.total_files,
+        human_bytes(plan.selected_bytes),
+        secs
+    ))
+}
+
+fn cmd_inspect(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let stats = crate::query::table_stats(&table)?;
+    let snap = table.snapshot()?;
+    let mut out = format!(
+        "table {} @ v{} — {} files, {}\n",
+        table.root(),
+        snap.version,
+        snap.files.len(),
+        human_bytes(snap.total_bytes())
+    );
+    for t in stats {
+        out.push_str(&format!(
+            "  {:<28} {:<7} files={:<4} rows={:<8} {}\n",
+            t.id,
+            t.layout,
+            t.files,
+            t.rows,
+            human_bytes(t.bytes)
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_history(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let mut out = String::new();
+    for (v, op, ts) in table.history()? {
+        out.push_str(&format!("v{v:<6} {op:<16} ts={ts}\n"));
+    }
+    Ok(out)
+}
+
+fn cmd_optimize(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let id = args.req("id")?;
+    let c = Coordinator::new(table, 1, 1);
+    let before = crate::formats::storage_bytes(c.table(), id)?;
+    c.optimize(id)?;
+    let after = crate::formats::storage_bytes(c.table(), id)?;
+    Ok(format!("optimized {id}: {} -> {}", human_bytes(before), human_bytes(after)))
+}
+
+fn cmd_vacuum(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let n = table.vacuum()?;
+    Ok(format!("vacuum removed {n} objects"))
+}
+
+fn cmd_metrics_demo(args: &Args) -> Result<String> {
+    // Small end-to-end smoke used by `make test` docs: write + read + report.
+    let table = open_table(args)?;
+    let c = Coordinator::new(table, 2, 4);
+    let data = workload::generic_sparse(7, &[16, 8, 8], 0.05)?;
+    c.submit(IngestJob { id: "demo".into(), layout: "BSGS".into(), data: data.into() });
+    let errs = c.drain();
+    if !errs.is_empty() {
+        bail!("{errs:?}");
+    }
+    let _ = c.read_slice("demo", &Slice::index(3))?;
+    Ok(c.metrics().report())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = args(&["ingest", "--workload", "uber", "--layout", "CSF", "--dry-run"]);
+        assert_eq!(a.command, "ingest");
+        assert_eq!(a.req("workload").unwrap(), "uber");
+        assert_eq!(a.opt("layout", "auto"), "CSF");
+        assert!(a.has("dry-run"));
+        assert!(a.req("missing").is_err());
+        assert!(Args::parse(["x".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(run(&args(&["help"])).unwrap().contains("USAGE"));
+        assert!(run(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn end_to_end_ingest_read_inspect_mem() {
+        let common = ["--store", "mem", "--table", "t"];
+        // NOTE: mem stores don't persist between commands, so run the full
+        // flow against one table via the library path instead; here we only
+        // verify the ingest command text on a fresh in-memory store.
+        let mut v = vec!["ingest", "--workload", "generic", "--layout", "COO", "--id", "g1"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("stored g1"), "{out}");
+        assert!(out.contains("COO"), "{out}");
+    }
+
+    #[test]
+    fn fs_store_full_flow() {
+        let root = std::env::temp_dir().join(format!("dt-cli-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let rootflag = root.to_string_lossy().to_string();
+        let common = ["--store", "fs", "--root", &rootflag, "--table", "t"];
+
+        let mut v = vec!["ingest", "--workload", "uber", "--layout", "BSGS", "--id", "u1"];
+        v.extend_from_slice(&common);
+        run(&args(&v)).unwrap();
+
+        let mut v = vec!["read", "--id", "u1"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("layout=BSGS"), "{out}");
+
+        let mut v = vec!["slice", "--id", "u1", "--start", "2", "--end", "4"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("shape=[2, 24, 32, 48]"), "{out}");
+
+        let mut v = vec!["inspect"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("u1"), "{out}");
+
+        let mut v = vec!["history"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("CREATE TABLE"), "{out}");
+
+        let mut v = vec!["optimize", "--id", "u1"];
+        v.extend_from_slice(&common);
+        run(&args(&v)).unwrap();
+
+        let mut v = vec!["vacuum"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("vacuum removed"), "{out}");
+
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn store_flags_validated() {
+        assert!(store_from_args(&args(&["x", "--net", "warp"])).is_err());
+        assert!(store_from_args(&args(&["x", "--store", "s3"])).is_err());
+        assert!(store_from_args(&args(&["x", "--store", "mem", "--net", "fast"])).is_ok());
+    }
+}

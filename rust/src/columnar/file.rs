@@ -1,0 +1,529 @@
+//! DTPQ file writer/reader.
+//!
+//! Layout (all offsets absolute):
+//!
+//! ```text
+//! +--------+----------------------------------+-----------+----------+-------+
+//! | "DTPQ1" | chunk 0.0 | chunk 0.1 | ... | chunk N.M | footer JSON | u32 len | "DTPQ1" |
+//! +--------+----------------------------------+-----------+----------+-------+
+//! ```
+//!
+//! The reader fetches the tail (len + magic + footer) with one ranged GET,
+//! then issues ranged GETs per selected column chunk — this is what makes
+//! slice reads touch only the bytes they need, the mechanism behind the
+//! paper's read-slice wins.
+
+use super::encoding;
+use super::{Codec, ColStats, ColumnData, Field, PhysType, Schema};
+use crate::jsonx::{self, Json};
+use crate::objectstore::ObjectStore;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+const MAGIC: &[u8; 6] = b"DTPQ1\0";
+
+/// Options controlling how files are written.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteOptions {
+    /// Page compression codec.
+    pub codec: Codec,
+    /// Target rows per row group (callers may pass pre-split groups too).
+    pub row_group_rows: usize,
+}
+
+impl Default for WriteOptions {
+    fn default() -> Self {
+        Self { codec: Codec::Zstd(3), row_group_rows: 64 * 1024 }
+    }
+}
+
+/// Footer metadata for one column chunk.
+#[derive(Debug, Clone)]
+pub struct ColumnChunkMeta {
+    /// Absolute byte offset of the chunk.
+    pub offset: u64,
+    /// Compressed byte length.
+    pub len: u64,
+    /// Uncompressed (encoded) byte length.
+    pub raw_len: u64,
+    /// Codec used.
+    pub codec: Codec,
+    /// crc32 of the compressed bytes.
+    pub crc32: u32,
+    /// Min/max statistics.
+    pub stats: ColStats,
+}
+
+/// Footer metadata for one row group.
+#[derive(Debug, Clone)]
+pub struct RowGroupMeta {
+    /// Number of rows in this group.
+    pub rows: usize,
+    /// One chunk per schema field, in schema order.
+    pub columns: Vec<ColumnChunkMeta>,
+}
+
+/// Parsed file footer.
+#[derive(Debug, Clone)]
+pub struct Footer {
+    /// File schema.
+    pub schema: Schema,
+    /// Row group metadata in file order.
+    pub row_groups: Vec<RowGroupMeta>,
+}
+
+impl Footer {
+    /// Total number of rows across all groups.
+    pub fn total_rows(&self) -> usize {
+        self.row_groups.iter().map(|g| g.rows).sum()
+    }
+}
+
+/// Serialize row groups into a complete DTPQ file.
+///
+/// Each element of `groups` is one row group: a vector with one
+/// [`ColumnData`] per schema field (types must match, lengths must agree).
+pub fn write_file(schema: &Schema, groups: &[Vec<ColumnData>], opts: WriteOptions) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    let mut rg_meta = Vec::with_capacity(groups.len());
+    for (gi, group) in groups.iter().enumerate() {
+        ensure!(
+            group.len() == schema.len(),
+            "row group {gi}: {} columns, schema has {}",
+            group.len(),
+            schema.len()
+        );
+        let rows = group.first().map(|c| c.len()).unwrap_or(0);
+        let mut col_meta = Vec::with_capacity(group.len());
+        for (ci, (col, field)) in group.iter().zip(schema.fields()).enumerate() {
+            ensure!(
+                col.phys_type() == field.ty,
+                "row group {gi} column {ci} ({}): type mismatch",
+                field.name
+            );
+            ensure!(col.len() == rows, "row group {gi}: ragged column {}", field.name);
+            let encoded = encode_column(col);
+            let compressed = opts.codec.compress(&encoded)?;
+            // Keep the smaller representation; tiny chunks often inflate.
+            let (codec, body) = if compressed.len() < encoded.len() {
+                (opts.codec, compressed)
+            } else {
+                (Codec::None, encoded.clone())
+            };
+            let crc = crc32fast::hash(&body);
+            col_meta.push(ColumnChunkMeta {
+                offset: out.len() as u64,
+                len: body.len() as u64,
+                raw_len: encoded.len() as u64,
+                codec,
+                crc32: crc,
+                stats: ColStats::compute(col),
+            });
+            out.extend_from_slice(&body);
+        }
+        rg_meta.push(RowGroupMeta { rows, columns: col_meta });
+    }
+    let footer = footer_to_json(schema, &rg_meta).dump();
+    let fb = footer.as_bytes();
+    out.extend_from_slice(fb);
+    out.extend_from_slice(&(fb.len() as u32).to_le_bytes());
+    out.extend_from_slice(MAGIC);
+    Ok(out)
+}
+
+fn encode_column(col: &ColumnData) -> Vec<u8> {
+    match col {
+        ColumnData::Int(v) => encoding::encode_i64s(v),
+        ColumnData::Float(v) => encoding::encode_f64s(v),
+        ColumnData::Float32(v) => encoding::encode_f32s(v),
+        ColumnData::Bytes(v) => encoding::encode_byte_col(v),
+        ColumnData::Str(v) => encoding::encode_str_col(v),
+        ColumnData::IntList(v) => encoding::encode_intlist_col(v),
+    }
+}
+
+fn decode_column(ty: PhysType, buf: &[u8], rows: usize) -> Result<ColumnData> {
+    Ok(match ty {
+        PhysType::Int => ColumnData::Int(encoding::decode_i64s(buf, rows)?),
+        PhysType::Float => ColumnData::Float(encoding::decode_f64s(buf, rows)?),
+        PhysType::Float32 => ColumnData::Float32(encoding::decode_f32s(buf, rows)?),
+        PhysType::Bytes => ColumnData::Bytes(encoding::decode_byte_col(buf, rows)?),
+        PhysType::Str => ColumnData::Str(encoding::decode_str_col(buf, rows)?),
+        PhysType::IntList => ColumnData::IntList(encoding::decode_intlist_col(buf, rows)?),
+    })
+}
+
+fn footer_to_json(schema: &Schema, groups: &[RowGroupMeta]) -> Json {
+    let fields: Vec<Json> = schema
+        .fields()
+        .iter()
+        .map(|f| Json::obj([("name", Json::from(f.name.as_str())), ("type", Json::from(f.ty.name()))]))
+        .collect();
+    // Column chunks are encoded as compact positional arrays
+    // [off, len, raw, codec, crc] or [off, len, raw, codec, crc, min, max]
+    // — footers are fetched on every read, so their size is hot.
+    let groups: Vec<Json> = groups
+        .iter()
+        .map(|g| {
+            let cols: Vec<Json> = g
+                .columns
+                .iter()
+                .map(|c| {
+                    let mut a = vec![
+                        Json::from(c.offset),
+                        Json::from(c.len),
+                        Json::from(c.raw_len),
+                        Json::from(c.codec.id()),
+                        Json::from(c.crc32 as u64),
+                    ];
+                    if let (Some(min), Some(max)) = (c.stats.min, c.stats.max) {
+                        a.push(Json::Int(min));
+                        a.push(Json::Int(max));
+                    }
+                    Json::Arr(a)
+                })
+                .collect();
+            Json::obj([("rows", Json::from(g.rows)), ("cols", Json::Arr(cols))])
+        })
+        .collect();
+    Json::obj([
+        ("version", Json::Int(1)),
+        ("fields", Json::Arr(fields)),
+        ("groups", Json::Arr(groups)),
+    ])
+}
+
+fn footer_from_json(j: &Json) -> Result<Footer> {
+    ensure!(j.get("version").and_then(Json::as_i64) == Some(1), "bad footer version");
+    let mut fields = Vec::new();
+    for f in j.get("fields").and_then(Json::as_arr).context("fields missing")? {
+        fields.push(Field::new(
+            f.get("name").and_then(Json::as_str).context("field name")?,
+            PhysType::parse(f.get("type").and_then(Json::as_str).context("field type")?)?,
+        ));
+    }
+    let schema = Schema::new(fields)?;
+    let mut row_groups = Vec::new();
+    for g in j.get("groups").and_then(Json::as_arr).context("groups missing")? {
+        let rows = g.get("rows").and_then(Json::as_u64).context("rows")? as usize;
+        let mut columns = Vec::new();
+        for c in g.get("cols").and_then(Json::as_arr).context("cols")? {
+            let a = c.as_arr().context("col meta must be array")?;
+            ensure!(a.len() == 5 || a.len() == 7, "col meta arity {}", a.len());
+            columns.push(ColumnChunkMeta {
+                offset: a[0].as_u64().context("off")?,
+                len: a[1].as_u64().context("len")?,
+                raw_len: a[2].as_u64().context("raw")?,
+                codec: Codec::parse(a[3].as_str().context("codec")?)?,
+                crc32: a[4].as_u64().context("crc")? as u32,
+                stats: ColStats {
+                    min: a.get(5).and_then(Json::as_i64),
+                    max: a.get(6).and_then(Json::as_i64),
+                },
+            });
+        }
+        ensure!(columns.len() == schema.len(), "column count mismatch in footer");
+        row_groups.push(RowGroupMeta { rows, columns });
+    }
+    Ok(Footer { schema, row_groups })
+}
+
+/// Reader over a DTPQ file stored in an object store. Fetches the footer on
+/// open; column chunks are fetched lazily with ranged GETs.
+pub struct FileReader<'a> {
+    store: &'a dyn ObjectStore,
+    key: String,
+    footer: Footer,
+}
+
+impl<'a> FileReader<'a> {
+    /// Open a file: one suffix-range GET for the footer tail (a second GET
+    /// only when the footer exceeds the initial tail window).
+    pub fn open(store: &'a dyn ObjectStore, key: &str) -> Result<Self> {
+        let tail = store.get_tail(key, 4 * 1024)?;
+        let t = tail.len();
+        ensure!(t >= MAGIC.len() * 2 + 4, "file too small");
+        ensure!(&tail[t - 6..] == MAGIC, "bad trailing magic");
+        let flen = u32::from_le_bytes(tail[t - 10..t - 6].try_into().unwrap()) as usize;
+        let footer_bytes: Vec<u8> = if flen + 10 <= t {
+            tail[t - 10 - flen..t - 10].to_vec()
+        } else {
+            let full = store.get_tail(key, (flen + 10) as u64)?;
+            full[..flen].to_vec()
+        };
+        let j = jsonx::parse(std::str::from_utf8(&footer_bytes).context("footer not utf8")?)?;
+        let footer = footer_from_json(&j)?;
+        Ok(Self { store, key: key.to_string(), footer })
+    }
+
+    /// Parsed footer.
+    pub fn footer(&self) -> &Footer {
+        &self.footer
+    }
+
+    /// File schema.
+    pub fn schema(&self) -> &Schema {
+        &self.footer.schema
+    }
+
+    /// Read one column of one row group (ranged GET + checksum + decode).
+    pub fn read_column(&self, group: usize, col: usize) -> Result<ColumnData> {
+        let g = self.footer.row_groups.get(group).context("row group out of range")?;
+        let c = g.columns.get(col).context("column out of range")?;
+        let body = self.store.get_range(&self.key, c.offset, c.len)?;
+        ensure!(body.len() as u64 == c.len, "short read");
+        ensure!(crc32fast::hash(&body) == c.crc32, "crc mismatch in {}[{group}.{col}]", self.key);
+        let raw = c.codec.decompress(&body, c.raw_len as usize)?;
+        decode_column(self.footer.schema.fields()[col].ty, &raw, g.rows)
+    }
+
+    /// Read several columns of one row group with a **single coalesced
+    /// ranged GET** spanning from the first to the last selected chunk
+    /// (§Perf L3: the read paths were round-trip-bound at one GET per
+    /// column; cloud reads pay ~30 ms per request). Interleaved unselected
+    /// chunk bytes inside the span are fetched and skipped — with hot
+    /// columns adjacent in schema order the overfetch is near zero.
+    pub fn read_columns(&self, group: usize, cols: &[usize]) -> Result<Vec<ColumnData>> {
+        let g = self.footer.row_groups.get(group).context("row group out of range")?;
+        if cols.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut lo = u64::MAX;
+        let mut hi = 0u64;
+        for &c in cols {
+            let m = g.columns.get(c).context("column out of range")?;
+            lo = lo.min(m.offset);
+            hi = hi.max(m.offset + m.len);
+        }
+        let span = self.store.get_range(&self.key, lo, hi - lo)?;
+        ensure!(span.len() as u64 == hi - lo, "short coalesced read");
+        let mut out = Vec::with_capacity(cols.len());
+        for &c in cols {
+            let m = &g.columns[c];
+            let a = (m.offset - lo) as usize;
+            let body = &span[a..a + m.len as usize];
+            ensure!(
+                crc32fast::hash(body) == m.crc32,
+                "crc mismatch in {}[{group}.{c}]",
+                self.key
+            );
+            let raw = m.codec.decompress(body, m.raw_len as usize)?;
+            out.push(decode_column(self.footer.schema.fields()[c].ty, &raw, g.rows)?);
+        }
+        Ok(out)
+    }
+
+    /// Read the same columns across several row groups with **one** ranged
+    /// GET spanning all selected chunks (whole-file reads collapse from
+    /// groups × columns requests to a single request). Returns, per group
+    /// in input order, the columns in `cols` order.
+    pub fn read_columns_groups(
+        &self,
+        groups: &[usize],
+        cols: &[usize],
+    ) -> Result<Vec<Vec<ColumnData>>> {
+        if groups.is_empty() || cols.is_empty() {
+            return Ok(groups.iter().map(|_| Vec::new()).collect());
+        }
+        let mut lo = u64::MAX;
+        let mut hi = 0u64;
+        for &g in groups {
+            let gm = self.footer.row_groups.get(g).context("row group out of range")?;
+            for &c in cols {
+                let m = gm.columns.get(c).context("column out of range")?;
+                lo = lo.min(m.offset);
+                hi = hi.max(m.offset + m.len);
+            }
+        }
+        let span = self.store.get_range(&self.key, lo, hi - lo)?;
+        ensure!(span.len() as u64 == hi - lo, "short coalesced read");
+        let mut out = Vec::with_capacity(groups.len());
+        for &g in groups {
+            let gm = &self.footer.row_groups[g];
+            let mut row = Vec::with_capacity(cols.len());
+            for &c in cols {
+                let m = &gm.columns[c];
+                let a = (m.offset - lo) as usize;
+                let body = &span[a..a + m.len as usize];
+                ensure!(crc32fast::hash(body) == m.crc32, "crc mismatch in {}[{g}.{c}]", self.key);
+                let raw = m.codec.decompress(body, m.raw_len as usize)?;
+                row.push(decode_column(self.footer.schema.fields()[c].ty, &raw, gm.rows)?);
+            }
+            out.push(row);
+        }
+        Ok(out)
+    }
+
+    /// Read one column by name across the given row groups, concatenated.
+    pub fn read_column_named(&self, groups: &[usize], name: &str) -> Result<Vec<ColumnData>> {
+        let col = self.footer.schema.index_of(name)?;
+        groups.iter().map(|&g| self.read_column(g, col)).collect()
+    }
+
+    /// Row-group indices whose `col` stats may contain a value in [lo, hi].
+    pub fn prune_groups(&self, col: usize, lo: i64, hi: i64) -> Vec<usize> {
+        self.footer
+            .row_groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.columns[col].stats.may_overlap(lo, hi))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::MemStore;
+
+    fn sample_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("id", PhysType::Str),
+            Field::new("chunk_idx", PhysType::Int),
+            Field::new("payload", PhysType::Bytes),
+            Field::new("coords", PhysType::IntList),
+            Field::new("value", PhysType::Float),
+            Field::new("value32", PhysType::Float32),
+        ])
+        .unwrap()
+    }
+
+    fn sample_group(n: usize, base: i64) -> Vec<ColumnData> {
+        vec![
+            ColumnData::Str((0..n).map(|_| "tensor-1".to_string()).collect()),
+            ColumnData::Int((0..n).map(|i| base + i as i64).collect()),
+            ColumnData::Bytes((0..n).map(|i| vec![i as u8; 16]).collect()),
+            ColumnData::IntList((0..n).map(|i| vec![base + i as i64, 0, 3]).collect()),
+            ColumnData::Float((0..n).map(|i| i as f64 * 0.5).collect()),
+            ColumnData::Float32((0..n).map(|i| i as f32 * 0.25).collect()),
+        ]
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let schema = sample_schema();
+        let groups = vec![sample_group(100, 0), sample_group(50, 100)];
+        let bytes = write_file(&schema, &groups, WriteOptions::default()).unwrap();
+        let store = MemStore::new();
+        store.put("t/part-0.dtpq", &bytes).unwrap();
+        let r = FileReader::open(&store, "t/part-0.dtpq").unwrap();
+        assert_eq!(r.footer().total_rows(), 150);
+        assert_eq!(r.schema(), &schema);
+        for (gi, g) in groups.iter().enumerate() {
+            for ci in 0..schema.len() {
+                assert_eq!(&r.read_column(gi, ci).unwrap(), &g[ci], "group {gi} col {ci}");
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_by_stats() {
+        let schema = sample_schema();
+        let groups = vec![sample_group(100, 0), sample_group(100, 100), sample_group(100, 200)];
+        let bytes = write_file(&schema, &groups, WriteOptions::default()).unwrap();
+        let store = MemStore::new();
+        store.put("f", &bytes).unwrap();
+        let r = FileReader::open(&store, "f").unwrap();
+        let ci = schema.index_of("chunk_idx").unwrap();
+        assert_eq!(r.prune_groups(ci, 150, 160), vec![1]);
+        assert_eq!(r.prune_groups(ci, 90, 110), vec![0, 1]);
+        assert_eq!(r.prune_groups(ci, 500, 600), Vec::<usize>::new());
+        // IntList stats prune on first element.
+        let cc = schema.index_of("coords").unwrap();
+        assert_eq!(r.prune_groups(cc, 250, 260), vec![2]);
+    }
+
+    #[test]
+    fn corrupted_chunk_detected() {
+        let schema = Schema::new(vec![Field::new("x", PhysType::Int)]).unwrap();
+        let groups = vec![vec![ColumnData::Int((0..1000).collect())]];
+        let mut bytes = write_file(&schema, &groups, WriteOptions::default()).unwrap();
+        bytes[10] ^= 0xFF; // flip a byte inside the first chunk
+        let store = MemStore::new();
+        store.put("f", &bytes).unwrap();
+        let r = FileReader::open(&store, "f").unwrap();
+        let err = r.read_column(0, 0).unwrap_err().to_string();
+        assert!(err.contains("crc"), "got: {err}");
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let store = MemStore::new();
+        store.put("f", b"DTPQ1\0xx").unwrap();
+        assert!(FileReader::open(&store, "f").is_err());
+        store.put("g", b"short").unwrap();
+        assert!(FileReader::open(&store, "g").is_err());
+    }
+
+    #[test]
+    fn empty_groups_and_columns() {
+        let schema = Schema::new(vec![Field::new("x", PhysType::Int)]).unwrap();
+        let bytes = write_file(&schema, &[vec![ColumnData::Int(vec![])]], WriteOptions::default())
+            .unwrap();
+        let store = MemStore::new();
+        store.put("f", &bytes).unwrap();
+        let r = FileReader::open(&store, "f").unwrap();
+        assert_eq!(r.footer().total_rows(), 0);
+        assert_eq!(r.read_column(0, 0).unwrap(), ColumnData::Int(vec![]));
+    }
+
+    #[test]
+    fn ragged_group_rejected() {
+        let schema =
+            Schema::new(vec![Field::new("a", PhysType::Int), Field::new("b", PhysType::Int)])
+                .unwrap();
+        let bad = vec![vec![ColumnData::Int(vec![1, 2]), ColumnData::Int(vec![1])]];
+        assert!(write_file(&schema, &bad, WriteOptions::default()).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let schema = Schema::new(vec![Field::new("a", PhysType::Int)]).unwrap();
+        let bad = vec![vec![ColumnData::Str(vec!["x".into()])]];
+        assert!(write_file(&schema, &bad, WriteOptions::default()).is_err());
+    }
+
+    #[test]
+    fn incompressible_chunks_fall_back_to_none() {
+        use crate::util::prng::Pcg64;
+        let mut rng = Pcg64::new(1);
+        let schema = Schema::new(vec![Field::new("b", PhysType::Bytes)]).unwrap();
+        let payload: Vec<Vec<u8>> =
+            (0..4).map(|_| (0..4096).map(|_| rng.next_u64() as u8).collect()).collect();
+        let bytes = write_file(
+            &schema,
+            &[vec![ColumnData::Bytes(payload.clone())]],
+            WriteOptions { codec: Codec::Zstd(3), ..Default::default() },
+        )
+        .unwrap();
+        let store = MemStore::new();
+        store.put("f", &bytes).unwrap();
+        let r = FileReader::open(&store, "f").unwrap();
+        assert_eq!(r.footer().row_groups[0].columns[0].codec, Codec::None);
+        assert_eq!(r.read_column(0, 0).unwrap(), ColumnData::Bytes(payload));
+    }
+
+    #[test]
+    fn dictionary_compression_of_repeated_metadata() {
+        // The paper's observation: identical metadata across rows compresses
+        // to almost nothing under dictionary encoding.
+        let schema = Schema::new(vec![
+            Field::new("dims", PhysType::IntList),
+            Field::new("layout", PhysType::Str),
+        ])
+        .unwrap();
+        let n = 10_000;
+        let groups = vec![vec![
+            ColumnData::IntList(vec![vec![24, 3, 1024, 1024]; n]),
+            ColumnData::Str(vec!["FTSF".to_string(); n]),
+        ]];
+        let bytes = write_file(&schema, &groups, WriteOptions::default()).unwrap();
+        assert!(
+            bytes.len() < 4096,
+            "10k rows of repeated metadata should compress to <4KiB, got {}",
+            bytes.len()
+        );
+    }
+}

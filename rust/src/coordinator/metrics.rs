@@ -1,0 +1,184 @@
+//! Lightweight metrics registry: counters and latency histograms shared by
+//! the coordinator's workers and surfaced by the CLI / benches.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Fixed log-scale latency buckets (seconds).
+const BUCKETS: [f64; 12] = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0,
+];
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A log-bucketed latency histogram.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    counts: [AtomicU64; 13],
+    sum_micros: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Histogram {
+    /// Record a latency in seconds.
+    pub fn observe(&self, secs: f64) {
+        let idx = BUCKETS.iter().position(|&b| secs <= b).unwrap_or(BUCKETS.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q * n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i < BUCKETS.len() { BUCKETS[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// A named registry of counters and histograms.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    inner: Arc<MetricsInner>,
+}
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render a plain-text report (sorted, stable).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name} count={} mean={:.6}s p50={:.6}s p99={:.6}s\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let m = Metrics::new();
+        m.counter("writes").add(2);
+        m.counter("writes").add(3);
+        assert_eq!(m.counter("writes").get(), 5);
+        assert_eq!(m.counter("other").get(), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.observe(0.002);
+        }
+        h.observe(0.5);
+        assert_eq!(h.count(), 101);
+        assert!(h.mean() > 0.002 && h.mean() < 0.01);
+        assert!(h.quantile(0.5) <= 0.003);
+        assert!(h.quantile(0.999) >= 0.5);
+    }
+
+    #[test]
+    fn report_is_stable_and_complete() {
+        let m = Metrics::new();
+        m.counter("b").add(1);
+        m.counter("a").add(1);
+        m.histogram("lat").observe(0.01);
+        let r = m.report();
+        assert!(r.contains("a 1") && r.contains("b 1") && r.contains("lat count=1"));
+        let a_pos = r.find("a 1").unwrap();
+        let b_pos = r.find("b 1").unwrap();
+        assert!(a_pos < b_pos, "sorted output");
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m.counter("x").add(1);
+        m2.counter("x").add(1);
+        assert_eq!(m.counter("x").get(), 2);
+    }
+}

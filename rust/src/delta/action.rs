@@ -1,0 +1,262 @@
+//! Delta log actions — the JSON records that make up each commit, mirroring
+//! the open-source Delta Lake protocol (`protocol`, `metaData`, `add`,
+//! `remove`, `commitInfo`), reduced to the fields this system uses.
+
+use crate::jsonx::Json;
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// A data file referenced by the table, with pruning statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AddFile {
+    /// Object-store key relative to the table root.
+    pub path: String,
+    /// File size in bytes.
+    pub size: u64,
+    /// Number of logical rows.
+    pub rows: u64,
+    /// Tensor id this file belongs to ("" when mixed).
+    pub tensor_id: String,
+    /// Min value of the leading pruning key (e.g. first-dim index / chunk idx).
+    pub min_key: Option<i64>,
+    /// Max value of the leading pruning key.
+    pub max_key: Option<i64>,
+    /// Commit timestamp (ms since epoch).
+    pub timestamp: i64,
+    /// Optional format metadata (JSON: dense shape, dtype, ...) so readers
+    /// can reconstruct empty tensors without any data rows.
+    pub meta: Option<String>,
+}
+
+/// Table metadata (the `metaData` action).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metadata {
+    /// Stable table id.
+    pub id: String,
+    /// Human-readable name.
+    pub name: String,
+    /// Free-form schema descriptor (the tensor formats document their
+    /// column layout here; schema evolution appends keys).
+    pub schema: Json,
+    /// Creation timestamp (ms since epoch).
+    pub created: i64,
+}
+
+/// One action in a commit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Protocol version marker.
+    Protocol {
+        /// Minimum reader version.
+        min_reader: i64,
+        /// Minimum writer version.
+        min_writer: i64,
+    },
+    /// Table metadata (re-emitted on schema evolution).
+    Metadata(Metadata),
+    /// Add a data file.
+    Add(AddFile),
+    /// Remove a data file (tombstone).
+    Remove {
+        /// Path of the removed file.
+        path: String,
+        /// Deletion timestamp (ms since epoch).
+        timestamp: i64,
+    },
+    /// Informational commit provenance.
+    CommitInfo {
+        /// Operation name ("WRITE", "OPTIMIZE", ...).
+        operation: String,
+        /// Timestamp (ms since epoch).
+        timestamp: i64,
+    },
+}
+
+impl Action {
+    /// Serialize to the single-line JSON object used in the log.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Action::Protocol { min_reader, min_writer } => Json::obj([(
+                "protocol",
+                Json::obj([
+                    ("minReaderVersion", Json::Int(*min_reader)),
+                    ("minWriterVersion", Json::Int(*min_writer)),
+                ]),
+            )]),
+            Action::Metadata(m) => Json::obj([(
+                "metaData",
+                Json::obj([
+                    ("id", Json::from(m.id.as_str())),
+                    ("name", Json::from(m.name.as_str())),
+                    ("schema", m.schema.clone()),
+                    ("createdTime", Json::Int(m.created)),
+                ]),
+            )]),
+            Action::Add(a) => {
+                let mut fields = vec![
+                    ("path", Json::from(a.path.as_str())),
+                    ("size", Json::from(a.size)),
+                    ("rows", Json::from(a.rows)),
+                    ("tensorId", Json::from(a.tensor_id.as_str())),
+                    ("modificationTime", Json::Int(a.timestamp)),
+                ];
+                if let (Some(lo), Some(hi)) = (a.min_key, a.max_key) {
+                    fields.push(("minKey", Json::Int(lo)));
+                    fields.push(("maxKey", Json::Int(hi)));
+                }
+                if let Some(m) = &a.meta {
+                    fields.push(("meta", Json::from(m.as_str())));
+                }
+                Json::obj([("add", Json::obj(fields))])
+            }
+            Action::Remove { path, timestamp } => Json::obj([(
+                "remove",
+                Json::obj([
+                    ("path", Json::from(path.as_str())),
+                    ("deletionTimestamp", Json::Int(*timestamp)),
+                ]),
+            )]),
+            Action::CommitInfo { operation, timestamp } => Json::obj([(
+                "commitInfo",
+                Json::obj([
+                    ("operation", Json::from(operation.as_str())),
+                    ("timestamp", Json::Int(*timestamp)),
+                ]),
+            )]),
+        }
+    }
+
+    /// Parse a single action object.
+    pub fn from_json(j: &Json) -> Result<Action> {
+        if let Some(p) = j.get("protocol") {
+            return Ok(Action::Protocol {
+                min_reader: p.get("minReaderVersion").and_then(Json::as_i64).unwrap_or(1),
+                min_writer: p.get("minWriterVersion").and_then(Json::as_i64).unwrap_or(1),
+            });
+        }
+        if let Some(m) = j.get("metaData") {
+            return Ok(Action::Metadata(Metadata {
+                id: m.get("id").and_then(Json::as_str).context("metaData.id")?.to_string(),
+                name: m.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                schema: m.get("schema").cloned().unwrap_or(Json::Null),
+                created: m.get("createdTime").and_then(Json::as_i64).unwrap_or(0),
+            }));
+        }
+        if let Some(a) = j.get("add") {
+            return Ok(Action::Add(AddFile {
+                path: a.get("path").and_then(Json::as_str).context("add.path")?.to_string(),
+                size: a.get("size").and_then(Json::as_u64).unwrap_or(0),
+                rows: a.get("rows").and_then(Json::as_u64).unwrap_or(0),
+                tensor_id: a.get("tensorId").and_then(Json::as_str).unwrap_or("").to_string(),
+                min_key: a.get("minKey").and_then(Json::as_i64),
+                max_key: a.get("maxKey").and_then(Json::as_i64),
+                timestamp: a.get("modificationTime").and_then(Json::as_i64).unwrap_or(0),
+                meta: a.get("meta").and_then(Json::as_str).map(str::to_string),
+            }));
+        }
+        if let Some(r) = j.get("remove") {
+            return Ok(Action::Remove {
+                path: r.get("path").and_then(Json::as_str).context("remove.path")?.to_string(),
+                timestamp: r.get("deletionTimestamp").and_then(Json::as_i64).unwrap_or(0),
+            });
+        }
+        if let Some(c) = j.get("commitInfo") {
+            return Ok(Action::CommitInfo {
+                operation: c.get("operation").and_then(Json::as_str).unwrap_or("").to_string(),
+                timestamp: c.get("timestamp").and_then(Json::as_i64).unwrap_or(0),
+            });
+        }
+        bail!("unrecognized action: {}", j.dump())
+    }
+}
+
+/// Serialize a commit (one action per line, newline-terminated).
+pub fn commit_to_ndjson(actions: &[Action]) -> String {
+    let mut out = String::new();
+    for a in actions {
+        out.push_str(&a.to_json().dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a commit file.
+pub fn commit_from_ndjson(text: &str) -> Result<Vec<Action>> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Action::from_json(&crate::jsonx::parse(l)?))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_actions() -> Vec<Action> {
+        vec![
+            Action::Protocol { min_reader: 1, min_writer: 2 },
+            Action::Metadata(Metadata {
+                id: "tbl-1".into(),
+                name: "tensors".into(),
+                schema: Json::obj([("format", Json::from("ftsf"))]),
+                created: 1700000000000,
+            }),
+            Action::Add(AddFile {
+                path: "data/part-0.dtpq".into(),
+                size: 4096,
+                rows: 24,
+                tensor_id: "6e368".into(),
+                min_key: Some(0),
+                max_key: Some(23),
+                timestamp: 1700000000001,
+                meta: Some(r#"{"shape":[24,3,1024,1024]}"#.into()),
+            }),
+            Action::Remove { path: "data/old.dtpq".into(), timestamp: 1700000000002 },
+            Action::CommitInfo { operation: "WRITE".into(), timestamp: 1700000000003 },
+        ]
+    }
+
+    #[test]
+    fn action_json_roundtrip() {
+        for a in sample_actions() {
+            let j = a.to_json();
+            let back = Action::from_json(&j).unwrap();
+            assert_eq!(back, a, "{}", j.dump());
+        }
+    }
+
+    #[test]
+    fn ndjson_roundtrip() {
+        let actions = sample_actions();
+        let text = commit_to_ndjson(&actions);
+        assert_eq!(text.lines().count(), actions.len());
+        assert_eq!(commit_from_ndjson(&text).unwrap(), actions);
+    }
+
+    #[test]
+    fn add_without_stats_roundtrips() {
+        let a = Action::Add(AddFile {
+            path: "p".into(),
+            size: 1,
+            rows: 1,
+            tensor_id: "".into(),
+            min_key: None,
+            max_key: None,
+            timestamp: 0,
+            meta: None,
+        });
+        assert_eq!(Action::from_json(&a.to_json()).unwrap(), a);
+    }
+
+    #[test]
+    fn unknown_action_rejected() {
+        let j = crate::jsonx::parse(r#"{"txn":{"appId":"x"}}"#).unwrap();
+        assert!(Action::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn blank_lines_ignored() {
+        let text = "\n{\"commitInfo\":{\"operation\":\"W\",\"timestamp\":1}}\n\n";
+        assert_eq!(commit_from_ndjson(text).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,571 @@
+//! Delta-Lake-style ACID table layer over an object store.
+//!
+//! A table is a directory containing data files (DTPQ, written by the
+//! formats layer) and a `_delta_log/` of numbered JSON commits:
+//!
+//! ```text
+//! <root>/_delta_log/00000000000000000000.json   (protocol + metaData)
+//! <root>/_delta_log/00000000000000000001.json   (add / remove / commitInfo)
+//! <root>/_delta_log/00000000000000000010.checkpoint.json
+//! <root>/_delta_log/_last_checkpoint
+//! <root>/data/part-...dtpq
+//! ```
+//!
+//! Commits are atomic via the object store's put-if-absent primitive:
+//! whoever creates `N.json` first wins version N; losers re-read the log
+//! and retry (optimistic concurrency, as in Delta Lake on S3 with a
+//! coordinating commit service). Snapshots replay the log (from the latest
+//! checkpoint) to a version, giving time travel for free.
+
+mod action;
+
+pub use action::{commit_from_ndjson, commit_to_ndjson, Action, AddFile, Metadata};
+
+use crate::jsonx::{self, Json};
+use crate::objectstore::{ObjectStore, ObjectStoreHandle};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::collections::BTreeMap;
+
+/// Write a checkpoint every this many commits.
+const CHECKPOINT_INTERVAL: u64 = 10;
+/// Give up after this many optimistic-concurrency retries.
+const MAX_COMMIT_RETRIES: usize = 32;
+
+/// Milliseconds since the Unix epoch.
+pub fn now_ms() -> i64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as i64)
+        .unwrap_or(0)
+}
+
+/// A materialized view of the table at one version.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Version this snapshot reflects.
+    pub version: u64,
+    /// Table metadata (latest metaData action at or before `version`).
+    pub metadata: Metadata,
+    /// Live data files by path.
+    pub files: BTreeMap<String, AddFile>,
+}
+
+impl Snapshot {
+    /// Live files, sorted by path.
+    pub fn files(&self) -> impl Iterator<Item = &AddFile> {
+        self.files.values()
+    }
+
+    /// Live files belonging to a tensor id.
+    pub fn files_for_tensor(&self, tensor_id: &str) -> Vec<&AddFile> {
+        self.files.values().filter(|f| f.tensor_id == tensor_id).collect()
+    }
+
+    /// Total data bytes referenced by the snapshot.
+    pub fn total_bytes(&self) -> u64 {
+        self.files.values().map(|f| f.size).sum()
+    }
+
+    /// Total logical rows referenced by the snapshot.
+    pub fn total_rows(&self) -> u64 {
+        self.files.values().map(|f| f.rows).sum()
+    }
+}
+
+/// A Delta-style table handle.
+#[derive(Clone)]
+pub struct DeltaTable {
+    store: ObjectStoreHandle,
+    root: String,
+}
+
+impl std::fmt::Debug for DeltaTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeltaTable").field("root", &self.root).finish()
+    }
+}
+
+impl DeltaTable {
+    /// Create a new table at `root` (commit 0: protocol + metadata).
+    pub fn create(store: ObjectStoreHandle, root: &str) -> Result<Self> {
+        let t = Self { store, root: root.trim_matches('/').to_string() };
+        let meta = Metadata {
+            id: format!("tbl-{:016x}", crate::util::SplitMix64::new(now_ms() as u64).next_u64()),
+            name: t.root.clone(),
+            schema: Json::Null,
+            created: now_ms(),
+        };
+        let actions = vec![
+            Action::Protocol { min_reader: 1, min_writer: 1 },
+            Action::Metadata(meta),
+            Action::CommitInfo { operation: "CREATE TABLE".into(), timestamp: now_ms() },
+        ];
+        let body = commit_to_ndjson(&actions);
+        let ok = t.store.put_if_absent(&t.commit_key(0), body.as_bytes())?;
+        ensure!(ok, "table already exists at {root}");
+        Ok(t)
+    }
+
+    /// Open an existing table.
+    pub fn open(store: ObjectStoreHandle, root: &str) -> Result<Self> {
+        let t = Self { store, root: root.trim_matches('/').to_string() };
+        ensure!(
+            t.store.head(&t.commit_key(0))?.is_some(),
+            "no delta table at {root} (missing commit 0)"
+        );
+        Ok(t)
+    }
+
+    /// Create if absent, else open.
+    pub fn create_or_open(store: ObjectStoreHandle, root: &str) -> Result<Self> {
+        let t = Self { store: store.clone(), root: root.trim_matches('/').to_string() };
+        if t.store.head(&t.commit_key(0))?.is_some() {
+            Self::open(store, root)
+        } else {
+            Self::create(store, root)
+        }
+    }
+
+    /// Table root prefix.
+    pub fn root(&self) -> &str {
+        &self.root
+    }
+
+    /// Underlying object store handle.
+    pub fn store(&self) -> &ObjectStoreHandle {
+        &self.store
+    }
+
+    /// Key for a data object under this table.
+    pub fn data_key(&self, rel: &str) -> String {
+        format!("{}/{}", self.root, rel)
+    }
+
+    fn log_prefix(&self) -> String {
+        format!("{}/_delta_log/", self.root)
+    }
+
+    fn commit_key(&self, version: u64) -> String {
+        format!("{}{:020}.json", self.log_prefix(), version)
+    }
+
+    fn checkpoint_key(&self, version: u64) -> String {
+        format!("{}{:020}.checkpoint.json", self.log_prefix(), version)
+    }
+
+    fn last_checkpoint_key(&self) -> String {
+        format!("{}_last_checkpoint", self.log_prefix())
+    }
+
+    /// Latest committed version.
+    pub fn latest_version(&self) -> Result<u64> {
+        // Start listing from the last checkpoint hint to avoid scanning the
+        // whole log prefix on long-lived tables.
+        let keys = self.store.list(&self.log_prefix())?;
+        let mut latest = None;
+        for k in keys {
+            if let Some(v) = parse_commit_version(&k) {
+                latest = Some(latest.map_or(v, |l: u64| l.max(v)));
+            }
+        }
+        latest.with_context(|| format!("no commits found under {}", self.log_prefix()))
+    }
+
+    /// Commit `actions` with optimistic concurrency. Returns the version.
+    ///
+    /// Append-only commits (adds + commitInfo) rebase automatically on
+    /// conflict. Commits containing `remove` actions re-validate that their
+    /// removed files still exist in the new snapshot and fail otherwise
+    /// (the caller must re-plan, as Delta does for conflicting OPTIMIZE).
+    pub fn commit(&self, actions: Vec<Action>) -> Result<u64> {
+        let removes: Vec<String> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Remove { path, .. } => Some(path.clone()),
+                _ => None,
+            })
+            .collect();
+        // Validate removes against the current snapshot up front: removing a
+        // file that is not live means the caller planned against a stale view.
+        if !removes.is_empty() {
+            let snap = self.snapshot()?;
+            for r in &removes {
+                ensure!(snap.files.contains_key(r), "cannot remove {r}: not live in snapshot");
+            }
+        }
+        let body = commit_to_ndjson(&actions);
+        let mut version = self.latest_version()? + 1;
+        for _ in 0..MAX_COMMIT_RETRIES {
+            if self.store.put_if_absent(&self.commit_key(version), body.as_bytes())? {
+                if version % CHECKPOINT_INTERVAL == 0 {
+                    // Best-effort checkpoint; failure must not fail the commit.
+                    let _ = self.write_checkpoint(version);
+                }
+                return Ok(version);
+            }
+            // Conflict: someone won this version.
+            if !removes.is_empty() {
+                let snap = self.snapshot()?;
+                for r in &removes {
+                    if !snap.files.contains_key(r) {
+                        bail!("commit conflict: {r} was removed concurrently");
+                    }
+                }
+            }
+            version += 1;
+        }
+        bail!("giving up after {MAX_COMMIT_RETRIES} commit conflicts")
+    }
+
+    /// Snapshot at the latest version.
+    pub fn snapshot(&self) -> Result<Snapshot> {
+        let v = self.latest_version()?;
+        self.snapshot_at(v)
+    }
+
+    /// Snapshot at a specific version (time travel).
+    pub fn snapshot_at(&self, version: u64) -> Result<Snapshot> {
+        ensure!(
+            self.store.head(&self.commit_key(version))?.is_some(),
+            "version {version} does not exist"
+        );
+        // Find the newest checkpoint at or before `version`.
+        let mut start = 0u64;
+        let mut files: BTreeMap<String, AddFile> = BTreeMap::new();
+        let mut metadata: Option<Metadata> = None;
+        if let Some((cv, snap_files, snap_meta)) = self.read_checkpoint_before(version)? {
+            start = cv + 1;
+            files = snap_files;
+            metadata = Some(snap_meta);
+        }
+        for v in start..=version {
+            let body = self.store.get(&self.commit_key(v))?;
+            let text = String::from_utf8(body).context("commit not utf8")?;
+            for action in commit_from_ndjson(&text)? {
+                apply_action(&mut files, &mut metadata, action);
+            }
+        }
+        Ok(Snapshot {
+            version,
+            metadata: metadata.context("no metaData action found in log")?,
+            files,
+        })
+    }
+
+    /// Version history: (version, operation, timestamp) tuples, newest last.
+    pub fn history(&self) -> Result<Vec<(u64, String, i64)>> {
+        let latest = self.latest_version()?;
+        let mut out = Vec::new();
+        for v in 0..=latest {
+            if self.store.head(&self.commit_key(v))?.is_none() {
+                continue;
+            }
+            let text = String::from_utf8(self.store.get(&self.commit_key(v))?)?;
+            let mut op = String::new();
+            let mut ts = 0i64;
+            for action in commit_from_ndjson(&text)? {
+                if let Action::CommitInfo { operation, timestamp } = action {
+                    op = operation;
+                    ts = timestamp;
+                }
+            }
+            out.push((v, op, ts));
+        }
+        Ok(out)
+    }
+
+    fn write_checkpoint(&self, version: u64) -> Result<()> {
+        let snap = self.snapshot_at(version)?;
+        let files: Vec<Json> = snap
+            .files
+            .values()
+            .map(|f| Action::Add(f.clone()).to_json())
+            .collect();
+        let j = Json::obj([
+            ("version", Json::from(version)),
+            ("metaData", Action::Metadata(snap.metadata.clone()).to_json()),
+            ("files", Json::Arr(files)),
+        ]);
+        self.store.put(&self.checkpoint_key(version), j.dump().as_bytes())?;
+        let hint = Json::obj([("version", Json::from(version))]);
+        self.store.put(&self.last_checkpoint_key(), hint.dump().as_bytes())?;
+        Ok(())
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn read_checkpoint_before(
+        &self,
+        version: u64,
+    ) -> Result<Option<(u64, BTreeMap<String, AddFile>, Metadata)>> {
+        // Use the _last_checkpoint hint, falling back to a list scan.
+        let mut candidate: Option<u64> = None;
+        if let Some(len) = self.store.head(&self.last_checkpoint_key())? {
+            let _ = len;
+            let body = self.store.get(&self.last_checkpoint_key())?;
+            if let Ok(j) = jsonx::parse(std::str::from_utf8(&body).unwrap_or("")) {
+                if let Some(v) = j.get("version").and_then(Json::as_u64) {
+                    if v <= version {
+                        candidate = Some(v);
+                    }
+                }
+            }
+        }
+        if candidate.is_none() {
+            for k in self.store.list(&self.log_prefix())? {
+                if let Some(v) = parse_checkpoint_version(&k) {
+                    if v <= version {
+                        candidate = Some(candidate.map_or(v, |c: u64| c.max(v)));
+                    }
+                }
+            }
+        }
+        let Some(cv) = candidate else { return Ok(None) };
+        let body = match self.store.get(&self.checkpoint_key(cv)) {
+            Ok(b) => b,
+            Err(_) => return Ok(None), // stale hint; replay full log
+        };
+        let j = jsonx::parse(std::str::from_utf8(&body).context("checkpoint not utf8")?)?;
+        let mut files = BTreeMap::new();
+        let mut metadata = None;
+        if let Some(m) = j.get("metaData") {
+            if let Action::Metadata(md) = Action::from_json(m)? {
+                metadata = Some(md);
+            }
+        }
+        for f in j.get("files").and_then(Json::as_arr).unwrap_or(&[]) {
+            if let Action::Add(a) = Action::from_json(f)? {
+                files.insert(a.path.clone(), a);
+            }
+        }
+        let metadata = metadata.context("checkpoint missing metaData")?;
+        Ok(Some((cv, files, metadata)))
+    }
+
+    /// Delete data files removed before the snapshot and no longer
+    /// referenced ("VACUUM"): returns number of objects deleted.
+    pub fn vacuum(&self) -> Result<usize> {
+        let snap = self.snapshot()?;
+        let live: std::collections::HashSet<&str> =
+            snap.files.keys().map(|s| s.as_str()).collect();
+        let mut deleted = 0usize;
+        for key in self.store.list(&format!("{}/data/", self.root))? {
+            let rel = key.strip_prefix(&format!("{}/", self.root)).unwrap_or(&key);
+            if !live.contains(rel) {
+                self.store.delete(&key)?;
+                deleted += 1;
+            }
+        }
+        Ok(deleted)
+    }
+}
+
+fn apply_action(
+    files: &mut BTreeMap<String, AddFile>,
+    metadata: &mut Option<Metadata>,
+    action: Action,
+) {
+    match action {
+        Action::Add(a) => {
+            files.insert(a.path.clone(), a);
+        }
+        Action::Remove { path, .. } => {
+            files.remove(&path);
+        }
+        Action::Metadata(m) => *metadata = Some(m),
+        Action::Protocol { .. } | Action::CommitInfo { .. } => {}
+    }
+}
+
+fn parse_commit_version(key: &str) -> Option<u64> {
+    let name = key.rsplit('/').next()?;
+    let digits = name.strip_suffix(".json")?;
+    if digits.len() == 20 && digits.bytes().all(|b| b.is_ascii_digit()) {
+        digits.parse().ok()
+    } else {
+        None
+    }
+}
+
+fn parse_checkpoint_version(key: &str) -> Option<u64> {
+    let name = key.rsplit('/').next()?;
+    let digits = name.strip_suffix(".checkpoint.json")?;
+    if digits.len() == 20 && digits.bytes().all(|b| b.is_ascii_digit()) {
+        digits.parse().ok()
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add(path: &str, tensor: &str, lo: i64, hi: i64) -> Action {
+        Action::Add(AddFile {
+            path: path.into(),
+            size: 100,
+            rows: 10,
+            tensor_id: tensor.into(),
+            min_key: Some(lo),
+            max_key: Some(hi),
+            timestamp: now_ms(),
+            meta: None,
+        })
+    }
+
+    fn info(op: &str) -> Action {
+        Action::CommitInfo { operation: op.into(), timestamp: now_ms() }
+    }
+
+    #[test]
+    fn create_open_and_commit() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store.clone(), "tbl").unwrap();
+        assert_eq!(t.latest_version().unwrap(), 0);
+        let v = t.commit(vec![add("data/a.dtpq", "t1", 0, 9), info("WRITE")]).unwrap();
+        assert_eq!(v, 1);
+        let t2 = DeltaTable::open(store, "tbl").unwrap();
+        let snap = t2.snapshot().unwrap();
+        assert_eq!(snap.version, 1);
+        assert_eq!(snap.files.len(), 1);
+        assert_eq!(snap.files_for_tensor("t1").len(), 1);
+        assert_eq!(snap.total_rows(), 10);
+    }
+
+    #[test]
+    fn double_create_fails() {
+        let store = ObjectStoreHandle::mem();
+        DeltaTable::create(store.clone(), "tbl").unwrap();
+        assert!(DeltaTable::create(store, "tbl").is_err());
+    }
+
+    #[test]
+    fn open_missing_fails() {
+        assert!(DeltaTable::open(ObjectStoreHandle::mem(), "nope").is_err());
+    }
+
+    #[test]
+    fn remove_drops_file() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        t.commit(vec![add("data/a", "t1", 0, 9)]).unwrap();
+        t.commit(vec![Action::Remove { path: "data/a".into(), timestamp: now_ms() }]).unwrap();
+        assert!(t.snapshot().unwrap().files.is_empty());
+    }
+
+    #[test]
+    fn time_travel_sees_old_files() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        let v1 = t.commit(vec![add("data/a", "t1", 0, 9)]).unwrap();
+        let v2 = t
+            .commit(vec![
+                Action::Remove { path: "data/a".into(), timestamp: now_ms() },
+                add("data/b", "t1", 0, 9),
+            ])
+            .unwrap();
+        let s1 = t.snapshot_at(v1).unwrap();
+        assert!(s1.files.contains_key("data/a"));
+        let s2 = t.snapshot_at(v2).unwrap();
+        assert!(!s2.files.contains_key("data/a"));
+        assert!(s2.files.contains_key("data/b"));
+        assert!(t.snapshot_at(99).is_err());
+    }
+
+    #[test]
+    fn concurrent_commits_all_land() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                t.commit(vec![add(&format!("data/f{i}"), "t1", 0, 9), info("WRITE")]).unwrap()
+            }));
+        }
+        let mut versions: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        versions.sort_unstable();
+        versions.dedup();
+        assert_eq!(versions.len(), 8, "every commit must get a distinct version");
+        assert_eq!(t.snapshot().unwrap().files.len(), 8);
+    }
+
+    #[test]
+    fn conflicting_remove_fails() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        t.commit(vec![add("data/a", "t1", 0, 9)]).unwrap();
+        // Simulate a concurrent winner removing data/a between our read and commit:
+        // we take the version, then another commit removes the file, then we try.
+        let other = t.clone();
+        other
+            .commit(vec![Action::Remove { path: "data/a".into(), timestamp: now_ms() }])
+            .unwrap();
+        // Now our commit that also removes data/a must observe the conflict.
+        // First put_if_absent attempt will succeed at a fresh version, so force
+        // a conflict by pre-claiming the next version.
+        let v = t.latest_version().unwrap();
+        t.store.put(&t.commit_key(v + 1), b"{\"commitInfo\":{\"operation\":\"X\",\"timestamp\":0}}\n")
+            .unwrap();
+        let res = t.commit(vec![Action::Remove { path: "data/a".into(), timestamp: now_ms() }]);
+        assert!(res.is_err(), "double remove after conflict must fail");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_stale_hint() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        for i in 0..25 {
+            t.commit(vec![add(&format!("data/f{i}"), "t1", i, i), info("WRITE")]).unwrap();
+        }
+        // Versions 10 and 20 should have checkpoints.
+        assert!(t.store.head(&t.checkpoint_key(10)).unwrap().is_some());
+        assert!(t.store.head(&t.checkpoint_key(20)).unwrap().is_some());
+        let snap = t.snapshot().unwrap();
+        assert_eq!(snap.files.len(), 25);
+        // Time travel to before the first checkpoint still works.
+        let s5 = t.snapshot_at(5).unwrap();
+        assert_eq!(s5.files.len(), 5);
+        // And to a mid-checkpoint version.
+        let s15 = t.snapshot_at(15).unwrap();
+        assert_eq!(s15.files.len(), 15);
+    }
+
+    #[test]
+    fn history_lists_operations() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        t.commit(vec![add("data/a", "t", 0, 0), info("WRITE")]).unwrap();
+        t.commit(vec![info("OPTIMIZE")]).unwrap();
+        let h = t.history().unwrap();
+        assert_eq!(h.len(), 3);
+        assert_eq!(h[0].1, "CREATE TABLE");
+        assert_eq!(h[1].1, "WRITE");
+        assert_eq!(h[2].1, "OPTIMIZE");
+    }
+
+    #[test]
+    fn vacuum_deletes_unreferenced_objects() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store.clone(), "tbl").unwrap();
+        store.put("tbl/data/live.dtpq", b"x").unwrap();
+        store.put("tbl/data/dead.dtpq", b"x").unwrap();
+        t.commit(vec![add("data/live.dtpq", "t", 0, 0)]).unwrap();
+        let n = t.vacuum().unwrap();
+        assert_eq!(n, 1);
+        assert!(store.head("tbl/data/live.dtpq").unwrap().is_some());
+        assert!(store.head("tbl/data/dead.dtpq").unwrap().is_none());
+    }
+
+    #[test]
+    fn version_key_parsing() {
+        assert_eq!(parse_commit_version("tbl/_delta_log/00000000000000000042.json"), Some(42));
+        assert_eq!(parse_commit_version("tbl/_delta_log/_last_checkpoint"), None);
+        assert_eq!(
+            parse_checkpoint_version("tbl/_delta_log/00000000000000000010.checkpoint.json"),
+            Some(10)
+        );
+        assert_eq!(parse_checkpoint_version("tbl/_delta_log/00000000000000000010.json"), None);
+    }
+}

@@ -1,0 +1,288 @@
+//! Binary serialization baseline — the paper's comparison point.
+//!
+//! Dense tensors are serialized the way `numpy.save` would (header +
+//! contiguous bytes, "npy-like"); sparse tensors the way `torch.save` of a
+//! `sparse_coo_tensor` would ("pt-like": i64 coordinate matrix + values).
+//! Either way the tensor is **one opaque object**: a slice read must fetch
+//! and deserialize everything — exactly the cost the paper's formats avoid.
+
+use super::{TensorData, TensorStore};
+use crate::delta::DeltaTable;
+use crate::objectstore::ObjectStore;
+use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
+use crate::util::bytes::{get_u32, get_u64, put_u32, put_u64};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+const DENSE_MAGIC: u32 = 0x44_54_4E_50; // "DTNP"
+const SPARSE_MAGIC: u32 = 0x44_54_50_54; // "DTPT"
+
+/// Whole-object binary serialization (the `Binary` / `PT` baseline rows in
+/// the paper's Figures 12-16).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BinaryFormat;
+
+impl BinaryFormat {
+    /// Serialize dense: magic, dtype, shape, raw bytes.
+    pub fn serialize_dense(t: &DenseTensor) -> Vec<u8> {
+        let mut out = Vec::with_capacity(t.byte_len() + 64);
+        put_u32(&mut out, DENSE_MAGIC);
+        out.push(dtype_code(t.dtype()));
+        put_u32(&mut out, t.ndim() as u32);
+        for &d in t.shape() {
+            put_u64(&mut out, d as u64);
+        }
+        out.extend_from_slice(t.bytes());
+        out
+    }
+
+    /// Serialize sparse pt-like: magic, dtype, shape, nnz, i64 indices
+    /// (nnz × ndim, the torch layout), values in the tensor dtype.
+    pub fn serialize_sparse(s: &SparseCoo) -> Vec<u8> {
+        let ndim = s.ndim();
+        let mut out = Vec::with_capacity(s.nnz() * (8 * ndim + 8) + 64);
+        put_u32(&mut out, SPARSE_MAGIC);
+        out.push(dtype_code(s.dtype()));
+        put_u32(&mut out, ndim as u32);
+        for &d in s.shape() {
+            put_u64(&mut out, d as u64);
+        }
+        put_u64(&mut out, s.nnz() as u64);
+        for &ix in s.indices() {
+            out.extend_from_slice(&(ix as i64).to_le_bytes());
+        }
+        for &v in s.values() {
+            match s.dtype() {
+                DType::F64 => out.extend_from_slice(&v.to_le_bytes()),
+                DType::F32 => out.extend_from_slice(&(v as f32).to_le_bytes()),
+                DType::I64 => out.extend_from_slice(&(v as i64).to_le_bytes()),
+                DType::I32 => out.extend_from_slice(&(v as i32).to_le_bytes()),
+                DType::U8 => out.push(v as u8),
+            }
+        }
+        out
+    }
+
+    /// Parse either serialized form.
+    pub fn deserialize(buf: &[u8]) -> Result<TensorData> {
+        let mut pos = 0usize;
+        let magic = get_u32(buf, &mut pos).context("truncated header")?;
+        let dtype = dtype_from_code(*buf.get(pos).context("missing dtype")?)?;
+        pos += 1;
+        let ndim = get_u32(buf, &mut pos).context("missing ndim")? as usize;
+        ensure!(ndim <= 64, "implausible rank {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(get_u64(buf, &mut pos).context("missing dim")? as usize);
+        }
+        match magic {
+            DENSE_MAGIC => {
+                let need = crate::tensor::numel(&shape) * dtype.size();
+                ensure!(buf.len() == pos + need, "dense payload length mismatch");
+                Ok(TensorData::Dense(DenseTensor::from_bytes(dtype, &shape, buf[pos..].to_vec())?))
+            }
+            SPARSE_MAGIC => {
+                let nnz = get_u64(buf, &mut pos).context("missing nnz")? as usize;
+                let mut indices = Vec::with_capacity(nnz * ndim);
+                for _ in 0..nnz * ndim {
+                    let b = buf.get(pos..pos + 8).context("indices truncated")?;
+                    pos += 8;
+                    indices.push(i64::from_le_bytes(b.try_into().unwrap()) as u32);
+                }
+                let mut values = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    let v = match dtype {
+                        DType::F64 => {
+                            let b = buf.get(pos..pos + 8).context("values truncated")?;
+                            pos += 8;
+                            f64::from_le_bytes(b.try_into().unwrap())
+                        }
+                        DType::F32 => {
+                            let b = buf.get(pos..pos + 4).context("values truncated")?;
+                            pos += 4;
+                            f32::from_le_bytes(b.try_into().unwrap()) as f64
+                        }
+                        DType::I64 => {
+                            let b = buf.get(pos..pos + 8).context("values truncated")?;
+                            pos += 8;
+                            i64::from_le_bytes(b.try_into().unwrap()) as f64
+                        }
+                        DType::I32 => {
+                            let b = buf.get(pos..pos + 4).context("values truncated")?;
+                            pos += 4;
+                            i32::from_le_bytes(b.try_into().unwrap()) as f64
+                        }
+                        DType::U8 => {
+                            let v = *buf.get(pos).context("values truncated")?;
+                            pos += 1;
+                            v as f64
+                        }
+                    };
+                    values.push(v);
+                }
+                ensure!(pos == buf.len(), "trailing bytes in sparse payload");
+                Ok(TensorData::Sparse(SparseCoo::new(dtype, &shape, indices, values)?))
+            }
+            other => bail!("unknown binary magic {other:#x}"),
+        }
+    }
+
+    fn object_rel(&self, id: &str) -> String {
+        format!("data/{id}/binary.bin")
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::U8 => 0,
+        DType::I32 => 1,
+        DType::I64 => 2,
+        DType::F32 => 3,
+        DType::F64 => 4,
+    }
+}
+
+fn dtype_from_code(c: u8) -> Result<DType> {
+    Ok(match c {
+        0 => DType::U8,
+        1 => DType::I32,
+        2 => DType::I64,
+        3 => DType::F32,
+        4 => DType::F64,
+        other => bail!("bad dtype code {other}"),
+    })
+}
+
+impl TensorStore for BinaryFormat {
+    fn layout(&self) -> &'static str {
+        "Binary"
+    }
+
+    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+        let bytes = match data {
+            TensorData::Dense(t) => Self::serialize_dense(t),
+            TensorData::Sparse(s) => Self::serialize_sparse(s),
+        };
+        let rel = self.object_rel(id);
+        table.store().put(&table.data_key(&rel), &bytes)?;
+        let ts = crate::delta::now_ms();
+        table.commit(vec![
+            crate::delta::Action::Add(crate::delta::AddFile {
+                path: rel,
+                size: bytes.len() as u64,
+                rows: 1,
+                tensor_id: id.to_string(),
+                min_key: None,
+                max_key: None,
+                timestamp: ts,
+                meta: None,
+            }),
+            crate::delta::Action::CommitInfo { operation: "WRITE BINARY".into(), timestamp: ts },
+        ])?;
+        Ok(())
+    }
+
+    fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {
+        let rel = self.object_rel(id);
+        let snap = table.snapshot()?;
+        ensure!(snap.files.contains_key(&rel), "tensor {id:?} not found (binary)");
+        let bytes = table.store().get(&table.data_key(&rel))?;
+        Self::deserialize(&bytes)
+    }
+
+    fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData> {
+        // The baseline has no sub-object structure: fetch everything, then cut.
+        let full = self.read(table, id)?;
+        Ok(match full {
+            TensorData::Dense(t) => TensorData::Dense(t.slice(slice)?),
+            TensorData::Sparse(s) => TensorData::Sparse(s.slice(slice)?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::ObjectStoreHandle;
+
+    #[test]
+    fn dense_roundtrip_via_table() {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        let t = DenseTensor::from_f32(&[2, 3, 4], &(0..24).map(|x| x as f32).collect::<Vec<_>>())
+            .unwrap();
+        let fmt = BinaryFormat;
+        fmt.write(&table, "x", &t.clone().into()).unwrap();
+        let back = fmt.read(&table, "x").unwrap().to_dense().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn sparse_roundtrip_via_table() {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        let s = SparseCoo::new(
+            DType::F32,
+            &[3, 3, 3],
+            vec![0, 0, 1, 1, 0, 0, 2, 2, 2],
+            vec![1.0, 2.0, 3.0],
+        )
+        .unwrap();
+        let fmt = BinaryFormat;
+        fmt.write(&table, "s", &s.clone().into()).unwrap();
+        match fmt.read(&table, "s").unwrap() {
+            TensorData::Sparse(back) => assert_eq!(back, s),
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn slice_equals_dense_slice() {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        let vals: Vec<f32> = (0..60).map(|x| x as f32).collect();
+        let t = DenseTensor::from_f32(&[5, 4, 3], &vals).unwrap();
+        let fmt = BinaryFormat;
+        fmt.write(&table, "x", &t.clone().into()).unwrap();
+        let slice = Slice::dim0(1, 3);
+        let got = fmt.read_slice(&table, "x", &slice).unwrap().to_dense().unwrap();
+        assert_eq!(got, t.slice(&slice).unwrap());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        assert!(BinaryFormat.read(&table, "nope").is_err());
+    }
+
+    #[test]
+    fn pt_size_matches_formula() {
+        // nnz * (ndim * 8 + value bytes) + header
+        let s = SparseCoo::new(DType::F32, &[10, 10], vec![1, 1, 2, 2], vec![1.0, 2.0]).unwrap();
+        let bytes = BinaryFormat::serialize_sparse(&s);
+        let expected = 4 + 1 + 4 + 16 + 8 + 2 * (2 * 8) + 2 * 4;
+        assert_eq!(bytes.len(), expected);
+    }
+
+    #[test]
+    fn corrupt_payload_rejected() {
+        let t = DenseTensor::zeros(DType::F32, &[4]);
+        let mut bytes = BinaryFormat::serialize_dense(&t);
+        bytes.truncate(bytes.len() - 1);
+        assert!(BinaryFormat::deserialize(&bytes).is_err());
+        assert!(BinaryFormat::deserialize(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn all_dtypes_roundtrip() {
+        for dtype in [DType::U8, DType::I32, DType::I64, DType::F32, DType::F64] {
+            let mut t = DenseTensor::zeros(dtype, &[3]);
+            t.set_from_f64(&[1], 7.0).unwrap();
+            let b = BinaryFormat::serialize_dense(&t);
+            assert_eq!(BinaryFormat::deserialize(&b).unwrap().to_dense().unwrap(), t);
+            let s = SparseCoo::from_dense(&t).unwrap();
+            let b = BinaryFormat::serialize_sparse(&s);
+            match BinaryFormat::deserialize(&b).unwrap() {
+                TensorData::Sparse(back) => assert_eq!(back, s),
+                _ => panic!(),
+            }
+        }
+    }
+}

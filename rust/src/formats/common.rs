@@ -1,0 +1,247 @@
+//! Shared plumbing for the format implementations: writing row groups to
+//! DTPQ part files under a table, committing Add actions with pruning
+//! stats, and locating/opening a tensor's part files from a snapshot.
+
+use crate::columnar::{ColumnData, FileReader, Schema, WriteOptions};
+use crate::delta::{Action, AddFile, DeltaTable};
+use crate::objectstore::ObjectStore;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+/// A part file staged for commit.
+pub struct StagedPart {
+    /// Path relative to the table root.
+    pub rel_path: String,
+    /// Serialized DTPQ bytes.
+    pub bytes: Vec<u8>,
+    /// Row count.
+    pub rows: u64,
+    /// Min pruning key across the file (leading-dim coordinate/chunk index).
+    pub min_key: Option<i64>,
+    /// Max pruning key across the file.
+    pub max_key: Option<i64>,
+    /// Optional tensor metadata JSON carried on the Add action (shape,
+    /// dtype) so empty tensors remain readable.
+    pub meta: Option<String>,
+}
+
+/// Serialize row groups into a staged part file for `id`.
+///
+/// `part_no` distinguishes multiple files of one write; the pruning key
+/// range is supplied by the caller (it knows which column is the key).
+pub fn stage_part(
+    layout: &str,
+    id: &str,
+    part_no: usize,
+    schema: &Schema,
+    groups: &[Vec<ColumnData>],
+    opts: WriteOptions,
+    key_range: Option<(i64, i64)>,
+) -> Result<StagedPart> {
+    let bytes = crate::columnar::write_file(schema, groups, opts)?;
+    let rows: usize = groups.iter().map(|g| g.first().map_or(0, |c| c.len())).sum();
+    Ok(StagedPart {
+        rel_path: format!("data/{id}/{}-part-{part_no:05}.dtpq", layout.to_lowercase()),
+        bytes,
+        rows: rows as u64,
+        min_key: key_range.map(|r| r.0),
+        max_key: key_range.map(|r| r.1),
+        meta: None,
+    })
+}
+
+/// Upload staged parts and commit them atomically as one table version.
+pub fn commit_parts(
+    table: &DeltaTable,
+    id: &str,
+    operation: &str,
+    parts: Vec<StagedPart>,
+) -> Result<u64> {
+    let ts = crate::delta::now_ms();
+    let mut actions = Vec::with_capacity(parts.len() + 1);
+    for p in parts {
+        table.store().put(&table.data_key(&p.rel_path), &p.bytes)?;
+        actions.push(Action::Add(AddFile {
+            path: p.rel_path,
+            size: p.bytes.len() as u64,
+            rows: p.rows,
+            tensor_id: id.to_string(),
+            min_key: p.min_key,
+            max_key: p.max_key,
+            timestamp: ts,
+            meta: p.meta,
+        }));
+    }
+    actions.push(Action::CommitInfo { operation: operation.to_string(), timestamp: ts });
+    table.commit(actions)
+}
+
+/// The live part files of a tensor, ordered by path (== part number order).
+pub fn tensor_parts(table: &DeltaTable, id: &str, layout: &str) -> Result<Vec<AddFile>> {
+    let snap = table.snapshot()?;
+    let prefix = format!("data/{id}/{}-part-", layout.to_lowercase());
+    let mut parts: Vec<AddFile> = snap
+        .files_for_tensor(id)
+        .into_iter()
+        .filter(|f| f.path.starts_with(&prefix))
+        .cloned()
+        .collect();
+    ensure!(!parts.is_empty(), "tensor {id:?} not found in table {} (layout {layout})", table.root());
+    parts.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(parts)
+}
+
+/// Subset of `parts` whose key range may overlap `[lo, hi]`.
+pub fn prune_parts(parts: &[AddFile], lo: i64, hi: i64) -> Vec<AddFile> {
+    parts
+        .iter()
+        .filter(|p| match (p.min_key, p.max_key) {
+            (Some(min), Some(max)) => !(hi < min || lo > max),
+            _ => true,
+        })
+        .cloned()
+        .collect()
+}
+
+/// Open a part file for reading.
+pub fn open_part<'a>(table: &'a DeltaTable, part: &AddFile) -> Result<FileReader<'a>> {
+    FileReader::open(table.store(), &table.data_key(&part.path))
+}
+
+/// Read a metadata (single-valued) string column from the first row of the
+/// first group of a reader.
+pub fn first_str(reader: &FileReader, group: usize, name: &str) -> Result<String> {
+    let col = reader.schema().index_of(name)?;
+    let data = reader.read_column(group, col)?.into_strs()?;
+    data.into_iter().next().with_context(|| format!("column {name} empty"))
+}
+
+/// Read the first value of an intlist column.
+pub fn first_intlist(reader: &FileReader, group: usize, name: &str) -> Result<Vec<i64>> {
+    let col = reader.schema().index_of(name)?;
+    let data = reader.read_column(group, col)?.into_intlists()?;
+    data.into_iter().next().with_context(|| format!("column {name} empty"))
+}
+
+/// Encode tensor metadata carried on Add actions.
+pub fn meta_json(shape: &[usize], dtype: crate::tensor::DType) -> String {
+    crate::jsonx::Json::obj([
+        ("shape", crate::jsonx::Json::ints(shape.iter().map(|&d| d as i64))),
+        ("dtype", crate::jsonx::Json::from(dtype.name())),
+    ])
+    .dump()
+}
+
+/// Decode tensor metadata from the first part that carries it.
+pub fn meta_from_parts(parts: &[AddFile]) -> Option<(Vec<usize>, crate::tensor::DType)> {
+    for p in parts {
+        let Some(m) = &p.meta else { continue };
+        let Ok(j) = crate::jsonx::parse(m) else { continue };
+        let shape: Option<Vec<usize>> = j
+            .get("shape")
+            .and_then(crate::jsonx::Json::to_int_vec)
+            .map(|v| v.into_iter().map(|d| d as usize).collect());
+        let dtype = j
+            .get("dtype")
+            .and_then(crate::jsonx::Json::as_str)
+            .and_then(|s| crate::tensor::DType::parse(s).ok());
+        if let (Some(shape), Some(dtype)) = (shape, dtype) {
+            return Some((shape, dtype));
+        }
+    }
+    None
+}
+
+/// Convert an i64 list to usize shape, validating non-negativity.
+pub fn shape_from_i64(xs: &[i64]) -> Result<Vec<usize>> {
+    xs.iter()
+        .map(|&x| usize::try_from(x).map_err(|_| anyhow::anyhow!("negative dim {x}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::columnar::{Field, PhysType};
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            Field::new("id", PhysType::Str),
+            Field::new("k", PhysType::Int),
+        ])
+        .unwrap()
+    }
+
+    fn group(id: &str, keys: &[i64]) -> Vec<ColumnData> {
+        vec![
+            ColumnData::Str(vec![id.to_string(); keys.len()]),
+            ColumnData::Int(keys.to_vec()),
+        ]
+    }
+
+    #[test]
+    fn stage_commit_locate_roundtrip() {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        let p0 = stage_part(
+            "COO",
+            "x1",
+            0,
+            &schema(),
+            &[group("x1", &[0, 1, 2])],
+            WriteOptions::default(),
+            Some((0, 2)),
+        )
+        .unwrap();
+        let p1 = stage_part(
+            "COO",
+            "x1",
+            1,
+            &schema(),
+            &[group("x1", &[3, 4])],
+            WriteOptions::default(),
+            Some((3, 4)),
+        )
+        .unwrap();
+        commit_parts(&table, "x1", "WRITE", vec![p0, p1]).unwrap();
+
+        let parts = tensor_parts(&table, "x1", "COO").unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].rows, 3);
+        assert_eq!((parts[1].min_key, parts[1].max_key), (Some(3), Some(4)));
+
+        // Pruning by key range.
+        assert_eq!(prune_parts(&parts, 4, 10).len(), 1);
+        assert_eq!(prune_parts(&parts, 0, 0).len(), 1);
+        assert_eq!(prune_parts(&parts, 10, 20).len(), 0);
+        assert_eq!(prune_parts(&parts, 2, 3).len(), 2);
+
+        // Read back through a part reader.
+        let r = open_part(&table, &parts[1]).unwrap();
+        assert_eq!(r.read_column(0, 1).unwrap().into_ints().unwrap(), vec![3, 4]);
+        assert_eq!(first_str(&r, 0, "id").unwrap(), "x1");
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        assert!(tensor_parts(&table, "nope", "COO").is_err());
+    }
+
+    #[test]
+    fn layouts_do_not_collide() {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        let p = stage_part("COO", "x", 0, &schema(), &[group("x", &[1])], WriteOptions::default(), None).unwrap();
+        commit_parts(&table, "x", "W", vec![p]).unwrap();
+        let p = stage_part("CSF", "x", 0, &schema(), &[group("x", &[1])], WriteOptions::default(), None).unwrap();
+        commit_parts(&table, "x", "W", vec![p]).unwrap();
+        assert_eq!(tensor_parts(&table, "x", "COO").unwrap().len(), 1);
+        assert_eq!(tensor_parts(&table, "x", "CSF").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn shape_conversion() {
+        assert_eq!(shape_from_i64(&[2, 3]).unwrap(), vec![2, 3]);
+        assert!(shape_from_i64(&[-1]).is_err());
+    }
+}

@@ -1,0 +1,355 @@
+//! Coordinate storage format (paper §IV.C, Figure 5): one table row per
+//! non-zero element —
+//!
+//! ```text
+//! | id | layout | dense_shape | indices | value | dtype |
+//! ```
+//!
+//! Rows are written in canonical coordinate order so the `indices` column
+//! delta-compresses and the first coordinate's min/max statistics prune row
+//! groups and part files on first-dimension slices.
+
+use super::common::{self, shape_from_i64};
+use super::{TensorData, TensorStore};
+use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
+use crate::delta::DeltaTable;
+use crate::tensor::{DType, Slice, SparseCoo};
+use crate::Result;
+use anyhow::{ensure, Context};
+use once_cell::sync::Lazy;
+
+static SCHEMA: Lazy<Schema> = Lazy::new(|| {
+    Schema::new(vec![
+        Field::new("id", PhysType::Str),
+        Field::new("layout", PhysType::Str),
+        Field::new("dense_shape", PhysType::IntList),
+        Field::new("indices", PhysType::IntList),
+        Field::new("value", PhysType::Float),
+        Field::new("dtype", PhysType::Str),
+    ])
+    .unwrap()
+});
+
+/// COO storage: one row per non-zero.
+#[derive(Debug, Clone, Copy)]
+pub struct CooFormat {
+    /// Non-zeros per row group.
+    pub rows_per_group: usize,
+    /// Non-zeros per part file.
+    pub rows_per_file: usize,
+    /// Page compression.
+    pub codec: crate::columnar::Codec,
+}
+
+impl Default for CooFormat {
+    fn default() -> Self {
+        Self {
+            rows_per_group: 64 * 1024,
+            rows_per_file: 1024 * 1024,
+            codec: crate::columnar::Codec::Zstd(3),
+        }
+    }
+}
+
+impl CooFormat {
+    fn groups_for(
+        &self,
+        id: &str,
+        s: &SparseCoo,
+        lo_row: usize,
+        hi_row: usize,
+    ) -> Vec<ColumnData> {
+        let ndim = s.ndim();
+        let rows = hi_row - lo_row;
+        let shape_i64: Vec<i64> = s.shape().iter().map(|&d| d as i64).collect();
+        let mut indices = Vec::with_capacity(rows);
+        let mut values = Vec::with_capacity(rows);
+        for r in lo_row..hi_row {
+            indices.push(s.coord(r).iter().map(|&i| i as i64).collect::<Vec<i64>>());
+            values.push(s.values()[r]);
+        }
+        let _ = ndim;
+        vec![
+            ColumnData::Str(vec![id.to_string(); rows]),
+            ColumnData::Str(vec!["COO".to_string(); rows]),
+            ColumnData::IntList(vec![shape_i64; rows]),
+            ColumnData::IntList(indices),
+            ColumnData::Float(values),
+            ColumnData::Str(vec![s.dtype().name().to_string(); rows]),
+        ]
+    }
+}
+
+impl TensorStore for CooFormat {
+    fn layout(&self) -> &'static str {
+        "COO"
+    }
+
+    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+        let mut s = data.to_sparse()?;
+        if !s.is_sorted() {
+            s.sort_canonical();
+        }
+        let nnz = s.nnz();
+        let mut parts = Vec::new();
+        let mut part_no = 0usize;
+        let mut fstart = 0usize;
+        while fstart < nnz.max(1) {
+            let fend = (fstart + self.rows_per_file).min(nnz);
+            let mut groups = Vec::new();
+            let mut g = fstart;
+            while g < fend {
+                let ge = (g + self.rows_per_group).min(fend);
+                groups.push(self.groups_for(id, &s, g, ge));
+                g = ge;
+            }
+            if groups.is_empty() {
+                // Empty tensor: still write one empty part so metadata exists.
+                groups.push(self.groups_for(id, &s, 0, 0));
+            }
+            let key_range = if fend > fstart {
+                Some((s.coord(fstart)[0] as i64, s.coord(fend - 1)[0] as i64))
+            } else {
+                None
+            };
+            let mut part = common::stage_part(
+                self.layout(),
+                id,
+                part_no,
+                &SCHEMA,
+                &groups,
+                WriteOptions { codec: self.codec, row_group_rows: self.rows_per_group },
+                key_range,
+            )?;
+            if part_no == 0 {
+                part.meta = Some(common::meta_json(s.shape(), s.dtype()));
+            }
+            parts.push(part);
+            part_no += 1;
+            if fend == nnz {
+                break;
+            }
+            fstart = fend;
+        }
+        common::commit_parts(table, id, "WRITE COO", parts)?;
+        Ok(())
+    }
+
+    fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let mut shape: Option<Vec<usize>> = None;
+        let mut dtype = DType::F64;
+        if let Some((s, d)) = common::meta_from_parts(&parts) {
+            shape = Some(s);
+            dtype = d;
+        }
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        for part in &parts {
+            let r = common::open_part(table, part)?;
+            let idx_col = r.schema().index_of("indices")?;
+            let val_col = r.schema().index_of("value")?;
+            let groups: Vec<usize> = (0..r.footer().row_groups.len()).collect();
+            if shape.is_none() {
+                if let Some(g) = groups.iter().find(|&&g| r.footer().row_groups[g].rows > 0) {
+                    shape = Some(shape_from_i64(&common::first_intlist(&r, *g, "dense_shape")?)?);
+                    dtype = DType::parse(&common::first_str(&r, *g, "dtype")?)?;
+                }
+            }
+            // indices+value are adjacent in schema order; all groups of the
+            // part coalesce into one ranged GET.
+            for mut cols in r.read_columns_groups(&groups, &[idx_col, val_col])? {
+                let vals = cols.pop().unwrap().into_floats()?;
+                for row in cols.pop().unwrap().into_intlists()? {
+                    indices.extend(row.iter().map(|&i| i as u32));
+                }
+                values.extend(vals);
+            }
+        }
+        let shape = shape.context("tensor has no rows and no metadata")?;
+        Ok(TensorData::Sparse(SparseCoo::new(dtype, &shape, indices, values)?))
+    }
+
+    fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        // Need metadata first (shape to resolve the slice): prefer the Add
+        // action's meta (no extra GETs), else the first non-empty row group.
+        let (shape, dtype) = match common::meta_from_parts(&parts) {
+            Some(m) => m,
+            None => {
+                let r0 = common::open_part(table, &parts[0])?;
+                let g0 = (0..r0.footer().row_groups.len())
+                    .find(|&g| r0.footer().row_groups[g].rows > 0)
+                    .context("empty tensor has no metadata")?;
+                (
+                    shape_from_i64(&common::first_intlist(&r0, g0, "dense_shape")?)?,
+                    DType::parse(&common::first_str(&r0, g0, "dtype")?)?,
+                )
+            }
+        };
+        let ranges = slice.resolve(&shape)?;
+        let out_shape: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+        let (lo, hi) = (ranges[0].start as i64, ranges[0].end as i64 - 1);
+        if hi < lo {
+            return Ok(TensorData::Sparse(SparseCoo::new(dtype, &out_shape, vec![], vec![])?));
+        }
+
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        for part in common::prune_parts(&parts, lo, hi) {
+            let r = common::open_part(table, &part)?;
+            let idx_col = r.schema().index_of("indices")?;
+            let val_col = r.schema().index_of("value")?;
+            let groups = r.prune_groups(idx_col, lo, hi);
+            for mut cols in r.read_columns_groups(&groups, &[idx_col, val_col])? {
+                let vals = cols.pop().unwrap().into_floats()?;
+                let rows = cols.pop().unwrap().into_intlists()?;
+                'rows: for (row, v) in rows.iter().zip(vals) {
+                    ensure!(row.len() == shape.len(), "corrupt index row");
+                    for (d, range) in ranges.iter().enumerate() {
+                        let ix = row[d] as usize;
+                        if ix < range.start || ix >= range.end {
+                            continue 'rows;
+                        }
+                    }
+                    for (d, range) in ranges.iter().enumerate() {
+                        indices.push((row[d] as usize - range.start) as u32);
+                    }
+                    values.push(v);
+                }
+            }
+        }
+        Ok(TensorData::Sparse(SparseCoo::new(dtype, &out_shape, indices, values)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::ObjectStoreHandle;
+    use crate::util::prng::Pcg64;
+
+    fn random_sparse(seed: u64, shape: &[usize], nnz: usize) -> SparseCoo {
+        let mut rng = Pcg64::new(seed);
+        let mut set = std::collections::BTreeSet::new();
+        while set.len() < nnz {
+            let c: Vec<u32> = shape.iter().map(|&d| rng.below(d) as u32).collect();
+            set.insert(c);
+        }
+        let (mut idx, mut vals) = (Vec::new(), Vec::new());
+        for c in set {
+            idx.extend_from_slice(&c);
+            vals.push(((rng.next_f64() * 10.0) + 1.0) as f32 as f64);
+        }
+        SparseCoo::new(DType::F32, shape, idx, vals).unwrap()
+    }
+
+    fn table() -> DeltaTable {
+        DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = random_sparse(1, &[20, 10, 8], 100);
+        let tbl = table();
+        let fmt = CooFormat::default();
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        match fmt.read(&tbl, "s").unwrap() {
+            TensorData::Sparse(back) => assert_eq!(back, s),
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_many_files_and_groups() {
+        let s = random_sparse(2, &[50, 6, 6], 400);
+        let tbl = table();
+        let fmt = CooFormat { rows_per_group: 32, rows_per_file: 128, ..Default::default() };
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        let parts = common::tensor_parts(&tbl, "s", "COO").unwrap();
+        assert!(parts.len() >= 3, "got {} parts", parts.len());
+        assert_eq!(fmt.read(&tbl, "s").unwrap().to_sparse().unwrap(), s);
+    }
+
+    #[test]
+    fn slice_matches_reference() {
+        let s = random_sparse(3, &[30, 8, 8], 250);
+        let tbl = table();
+        let fmt = CooFormat { rows_per_group: 64, rows_per_file: 128, ..Default::default() };
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        for slice in [
+            Slice::index(7),
+            Slice::dim0(0, 10),
+            Slice::ranges(&[(5, 25), (2, 6)]),
+            Slice::all(3),
+            Slice::dim0(29, 30),
+        ] {
+            let got = fmt.read_slice(&tbl, "s", &slice).unwrap().to_dense().unwrap();
+            let want = s.slice(&slice).unwrap().to_dense().unwrap();
+            assert_eq!(got, want, "{slice:?}");
+        }
+    }
+
+    #[test]
+    fn dim0_slice_prunes_io() {
+        let s = random_sparse(4, &[100, 8, 8], 2000);
+        let store = ObjectStoreHandle::mem();
+        let tbl = DeltaTable::create(store.clone(), "t").unwrap();
+        let fmt = CooFormat { rows_per_group: 128, rows_per_file: 512, ..Default::default() };
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+
+        store.stats().reset();
+        let _ = fmt.read(&tbl, "s").unwrap();
+        let full = store.stats().snapshot().3;
+        store.stats().reset();
+        let _ = fmt.read_slice(&tbl, "s", &Slice::index(50)).unwrap();
+        let sliced = store.stats().snapshot().3;
+        assert!(sliced * 2 < full, "slice should read <50% of bytes: {sliced} vs {full}");
+    }
+
+    #[test]
+    fn dense_input_accepted() {
+        let d = crate::tensor::DenseTensor::from_f32(&[4, 4], &{
+            let mut v = vec![0.0f32; 16];
+            v[5] = 2.0;
+            v[9] = 3.0;
+            v
+        })
+        .unwrap();
+        let tbl = table();
+        let fmt = CooFormat::default();
+        fmt.write(&tbl, "d", &d.clone().into()).unwrap();
+        assert_eq!(fmt.read(&tbl, "d").unwrap().to_dense().unwrap(), d);
+    }
+
+    #[test]
+    fn empty_tensor_roundtrip() {
+        let s = SparseCoo::new(DType::F32, &[5, 5], vec![], vec![]).unwrap();
+        let tbl = table();
+        let fmt = CooFormat::default();
+        fmt.write(&tbl, "e", &s.clone().into()).unwrap();
+        // Shape/dtype travel on the Add action's meta, so even an all-zero
+        // tensor reads back exactly.
+        assert_eq!(fmt.read(&tbl, "e").unwrap().to_sparse().unwrap(), s);
+        let sl = fmt.read_slice(&tbl, "e", &Slice::index(2)).unwrap().to_sparse().unwrap();
+        assert_eq!(sl.shape(), &[1, 5]);
+        assert_eq!(sl.nnz(), 0);
+    }
+
+    #[test]
+    fn unsorted_input_is_canonicalized() {
+        let s = SparseCoo::new(
+            DType::F64,
+            &[4, 4],
+            vec![3, 3, 0, 0, 2, 1],
+            vec![33.0, 0.5, 21.0],
+        )
+        .unwrap();
+        let tbl = table();
+        let fmt = CooFormat::default();
+        fmt.write(&tbl, "u", &s.clone().into()).unwrap();
+        let back = fmt.read(&tbl, "u").unwrap().to_sparse().unwrap();
+        assert!(back.is_sorted());
+        assert_eq!(back.to_dense().unwrap(), s.to_dense().unwrap());
+    }
+}

@@ -1,0 +1,596 @@
+//! Compressed Sparse Fiber storage (paper §IV.E).
+//!
+//! The fiber tree built by [`super::encoders::coo_to_csf`] is packed into
+//! arrays per level (`fids`, `fptrs`) plus a leaf `values` array. Following
+//! the paper's layout:
+//!
+//! * fiber pointers/indices for the **first two levels** are stored
+//!   non-chunked (single rows) in a header part file, together with the
+//!   tensor metadata;
+//! * indices/pointers for **deeper levels** and the **values** array are
+//!   chunked, each chunk a row with its own sequence number, one stream per
+//!   part file so a slice fetches only the chunks its pointer ranges touch.
+//!
+//! Because the tree is in canonical order, the descendants of a contiguous
+//! root range form contiguous ranges at every level — so a first-dimension
+//! slice resolves to one `[lo, hi)` window per level, computed from the
+//! parent level's pointers, and only the covering chunks are fetched.
+
+use super::common::{self, shape_from_i64};
+use super::encoders::{coo_to_csf, csf_slice_dim0, csf_to_coo, CsfTensor};
+use super::{TensorData, TensorStore};
+use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
+use crate::delta::DeltaTable;
+use crate::tensor::{DType, Slice};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use once_cell::sync::Lazy;
+
+static SCHEMA: Lazy<Schema> = Lazy::new(|| {
+    Schema::new(vec![
+        Field::new("id", PhysType::Str),
+        Field::new("layout", PhysType::Str),
+        Field::new("dense_shape", PhysType::IntList),
+        Field::new("dtype", PhysType::Str),
+        Field::new("kind", PhysType::Str),
+        Field::new("level", PhysType::Int),
+        Field::new("seq", PhysType::Int),
+        Field::new("ints", PhysType::IntList),
+        Field::new("payload", PhysType::Bytes),
+    ])
+    .unwrap()
+});
+
+/// CSF storage with non-chunked first two levels and chunked deep levels.
+#[derive(Debug, Clone, Copy)]
+pub struct CsfFormat {
+    /// Entries per chunk for deep-level arrays and values.
+    pub chunk_len: usize,
+    /// Page compression.
+    pub codec: crate::columnar::Codec,
+}
+
+impl Default for CsfFormat {
+    fn default() -> Self {
+        Self { chunk_len: 64 * 1024, codec: crate::columnar::Codec::Zstd(3) }
+    }
+}
+
+/// Stream plan: which part file holds which array, fixed given the rank.
+/// Part 0 is the header; reader and writer recompute the same mapping.
+fn stream_parts(ndim: usize) -> Vec<(String, usize)> {
+    // (stream name, part_no); streams: fid_L (L>=2), fptr_L (2<=L<ndim-1), vals
+    let mut out = Vec::new();
+    let mut part = 1usize;
+    for l in 2..ndim {
+        out.push((format!("fid{l}"), part));
+        part += 1;
+    }
+    for l in 2..ndim.saturating_sub(1) {
+        out.push((format!("fptr{l}"), part));
+        part += 1;
+    }
+    out.push(("vals".to_string(), part));
+    out
+}
+
+fn part_for(ndim: usize, stream: &str) -> Result<usize> {
+    stream_parts(ndim)
+        .into_iter()
+        .find(|(s, _)| s == stream)
+        .map(|(_, p)| p)
+        .with_context(|| format!("no stream {stream} for rank {ndim}"))
+}
+
+fn vals_to_bytes(vals: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_vals(b: &[u8]) -> Result<Vec<f64>> {
+    ensure!(b.len() % 8 == 0, "payload not f64-aligned");
+    Ok(b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+impl CsfFormat {
+    fn header_row(
+        &self,
+        id: &str,
+        shape: &[i64],
+        dtype: &str,
+        kind: &str,
+        level: i64,
+        seq: i64,
+        ints: Vec<i64>,
+        payload: Vec<u8>,
+    ) -> Vec<ColumnData> {
+        vec![
+            ColumnData::Str(vec![id.to_string()]),
+            ColumnData::Str(vec!["CSF".to_string()]),
+            ColumnData::IntList(vec![shape.to_vec()]),
+            ColumnData::Str(vec![dtype.to_string()]),
+            ColumnData::Str(vec![kind.to_string()]),
+            ColumnData::Int(vec![level]),
+            ColumnData::Int(vec![seq]),
+            ColumnData::IntList(vec![ints]),
+            ColumnData::Bytes(vec![payload]),
+        ]
+    }
+
+    /// Read an entry range `[lo, hi)` of a chunked int stream.
+    fn fetch_ints(
+        &self,
+        table: &DeltaTable,
+        part: &crate::delta::AddFile,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<i64>> {
+        if hi <= lo {
+            return Ok(Vec::new());
+        }
+        let r = common::open_part(table, part)?;
+        let seq_col = r.schema().index_of("seq")?;
+        let ints_col = r.schema().index_of("ints")?;
+        let (c0, c1) = (lo / self.chunk_len, (hi - 1) / self.chunk_len);
+        let mut out = Vec::with_capacity(hi - lo);
+        let groups = r.prune_groups(seq_col, c0 as i64, c1 as i64);
+        for mut cs in r.read_columns_groups(&groups, &[seq_col, ints_col])? {
+            let intss = cs.pop().unwrap().into_intlists()?;
+            let seqs = cs.pop().unwrap().into_ints()?;
+            for (s, ints) in seqs.iter().zip(intss) {
+                let s = *s as usize;
+                if s < c0 || s > c1 {
+                    continue;
+                }
+                let base = s * self.chunk_len;
+                let a = lo.max(base) - base;
+                let b = (hi.min(base + ints.len())).saturating_sub(base);
+                if b > a {
+                    out.push((base + a, ints[a..b].to_vec()));
+                }
+            }
+        }
+        out.sort_by_key(|(off, _)| *off);
+        let mut flat = Vec::with_capacity(hi - lo);
+        for (_, v) in out {
+            flat.extend(v);
+        }
+        ensure!(flat.len() == hi - lo, "stream gap fetching [{lo},{hi})");
+        Ok(flat)
+    }
+
+    /// Read an entry range of the chunked values stream.
+    fn fetch_vals(
+        &self,
+        table: &DeltaTable,
+        part: &crate::delta::AddFile,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        if hi <= lo {
+            return Ok(Vec::new());
+        }
+        let r = common::open_part(table, part)?;
+        let seq_col = r.schema().index_of("seq")?;
+        let pay_col = r.schema().index_of("payload")?;
+        let (c0, c1) = (lo / self.chunk_len, (hi - 1) / self.chunk_len);
+        let mut pieces = Vec::new();
+        let groups = r.prune_groups(seq_col, c0 as i64, c1 as i64);
+        for mut cs in r.read_columns_groups(&groups, &[seq_col, pay_col])? {
+            let pays = cs.pop().unwrap().into_bytes()?;
+            let seqs = cs.pop().unwrap().into_ints()?;
+            for (s, pay) in seqs.iter().zip(pays) {
+                let s = *s as usize;
+                if s < c0 || s > c1 {
+                    continue;
+                }
+                let vals = bytes_to_vals(&pay)?;
+                let base = s * self.chunk_len;
+                let a = lo.max(base) - base;
+                let b = (hi.min(base + vals.len())).saturating_sub(base);
+                if b > a {
+                    pieces.push((base + a, vals[a..b].to_vec()));
+                }
+            }
+        }
+        pieces.sort_by_key(|(off, _)| *off);
+        let mut flat = Vec::with_capacity(hi - lo);
+        for (_, v) in pieces {
+            flat.extend(v);
+        }
+        ensure!(flat.len() == hi - lo, "values gap fetching [{lo},{hi})");
+        Ok(flat)
+    }
+
+    /// Load the header: metadata + level-0/1 arrays.
+    #[allow(clippy::type_complexity)]
+    fn load_header(
+        &self,
+        table: &DeltaTable,
+        parts: &[crate::delta::AddFile],
+    ) -> Result<(Vec<usize>, DType, usize, Vec<Vec<i64>>, Vec<Vec<i64>>)> {
+        let header = &parts[0];
+        let r = common::open_part(table, header)?;
+        let kind_col = r.schema().index_of("kind")?;
+        let level_col = r.schema().index_of("level")?;
+        let ints_col = r.schema().index_of("ints")?;
+        let mut shape = None;
+        let mut dtype = DType::F64;
+        let mut nnz = 0usize;
+        let mut fids: Vec<Vec<i64>> = vec![Vec::new(); 2];
+        let mut fptrs: Vec<Vec<i64>> = vec![Vec::new(); 2];
+        let groups: Vec<usize> = (0..r.footer().row_groups.len()).collect();
+        let all = r.read_columns_groups(&groups, &[kind_col, level_col, ints_col])?;
+        for (g, mut cs) in groups.iter().copied().zip(all) {
+            let intss = cs.pop().unwrap().into_intlists()?;
+            let levels = cs.pop().unwrap().into_ints()?;
+            let kinds = cs.pop().unwrap().into_strs()?;
+            for i in 0..kinds.len() {
+                match kinds[i].as_str() {
+                    "meta" => {
+                        shape = Some(shape_from_i64(&common::first_intlist(&r, g, "dense_shape")?)?);
+                        dtype = DType::parse(&common::first_str(&r, g, "dtype")?)?;
+                        nnz = intss[i].first().copied().unwrap_or(0) as usize;
+                    }
+                    "fid" => {
+                        let l = levels[i] as usize;
+                        ensure!(l < 2, "non-chunked fid level {l} in header");
+                        fids[l] = intss[i].clone();
+                    }
+                    "fptr" => {
+                        let l = levels[i] as usize;
+                        ensure!(l < 2, "non-chunked fptr level {l} in header");
+                        fptrs[l] = intss[i].clone();
+                    }
+                    other => bail!("unknown header row kind {other:?}"),
+                }
+            }
+        }
+        let shape = shape.context("csf header missing meta row")?;
+        Ok((shape, dtype, nnz, fids, fptrs))
+    }
+}
+
+impl TensorStore for CsfFormat {
+    fn layout(&self) -> &'static str {
+        "CSF"
+    }
+
+    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+        let mut s = data.to_sparse()?;
+        if !s.is_sorted() {
+            s.sort_canonical();
+        }
+        let t = coo_to_csf(&s)?;
+        let ndim = t.shape.len();
+        let shape_i64: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        let dtype = s.dtype().name().to_string();
+        let opts = WriteOptions { codec: self.codec, row_group_rows: 1 };
+
+        // Header part: meta + non-chunked levels 0 and 1.
+        let mut header_groups = Vec::new();
+        header_groups.push(self.header_row(
+            id,
+            &shape_i64,
+            &dtype,
+            "meta",
+            -1,
+            0,
+            vec![s.nnz() as i64, ndim as i64],
+            vec![],
+        ));
+        for l in 0..2.min(ndim) {
+            header_groups.push(self.header_row(id, &shape_i64, &dtype, "fid", l as i64, 0, t.fids[l].clone(), vec![]));
+            if l < t.fptrs.len() {
+                header_groups.push(self.header_row(id, &shape_i64, &dtype, "fptr", l as i64, 0, t.fptrs[l].clone(), vec![]));
+            }
+        }
+        let mut parts = vec![common::stage_part(self.layout(), id, 0, &SCHEMA, &header_groups, opts, None)?];
+
+        // Chunked streams.
+        let mut stage_stream = |_name: &str, part_no: usize, rows: Vec<Vec<ColumnData>>, maxseq: i64| -> Result<()> {
+            parts.push(common::stage_part(
+                self.layout(),
+                id,
+                part_no,
+                &SCHEMA,
+                &rows,
+                opts,
+                Some((0, maxseq)),
+            )?);
+            Ok(())
+        };
+        for l in 2..ndim {
+            let pn = part_for(ndim, &format!("fid{l}"))?;
+            let mut rows = Vec::new();
+            let src = &t.fids[l];
+            let nchunks = src.len().div_ceil(self.chunk_len).max(1);
+            for k in 0..nchunks {
+                let a = k * self.chunk_len;
+                let b = (a + self.chunk_len).min(src.len());
+                rows.push(self.header_row(id, &shape_i64, &dtype, "fid", l as i64, k as i64, src[a..b].to_vec(), vec![]));
+            }
+            stage_stream(&format!("fid{l}"), pn, rows, nchunks as i64 - 1)?;
+        }
+        for l in 2..ndim.saturating_sub(1) {
+            let pn = part_for(ndim, &format!("fptr{l}"))?;
+            let mut rows = Vec::new();
+            let src = &t.fptrs[l];
+            let nchunks = src.len().div_ceil(self.chunk_len).max(1);
+            for k in 0..nchunks {
+                let a = k * self.chunk_len;
+                let b = (a + self.chunk_len).min(src.len());
+                rows.push(self.header_row(id, &shape_i64, &dtype, "fptr", l as i64, k as i64, src[a..b].to_vec(), vec![]));
+            }
+            stage_stream(&format!("fptr{l}"), pn, rows, nchunks as i64 - 1)?;
+        }
+        {
+            let pn = part_for(ndim, "vals")?;
+            let mut rows = Vec::new();
+            let nchunks = t.values.len().div_ceil(self.chunk_len).max(1);
+            for k in 0..nchunks {
+                let a = k * self.chunk_len;
+                let b = (a + self.chunk_len).min(t.values.len());
+                rows.push(self.header_row(id, &shape_i64, &dtype, "vals", -1, k as i64, vec![], vals_to_bytes(&t.values[a..b])));
+            }
+            stage_stream("vals", pn, rows, nchunks as i64 - 1)?;
+        }
+        common::commit_parts(table, id, "WRITE CSF", parts)?;
+        Ok(())
+    }
+
+    fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let (shape, dtype, nnz, mut fids2, fptrs2) = self.load_header(table, &parts)?;
+        let ndim = shape.len();
+        let mut fids: Vec<Vec<i64>> = Vec::with_capacity(ndim);
+        let mut fptrs: Vec<Vec<i64>> = Vec::with_capacity(ndim.saturating_sub(1));
+        fids.push(std::mem::take(&mut fids2[0]));
+        if ndim >= 2 {
+            fids.push(std::mem::take(&mut fids2[1]));
+            fptrs.push(fptrs2[0].clone());
+            if ndim >= 3 {
+                fptrs.push(fptrs2[1].clone());
+            }
+        }
+        // Deep levels: count of entries at level l = last fptr of level l-1.
+        for l in 2..ndim {
+            let count = *fptrs[l - 1].last().unwrap_or(&0) as usize;
+            let part = &parts[part_for(ndim, &format!("fid{l}"))?];
+            fids.push(self.fetch_ints(table, part, 0, count)?);
+            if l < ndim - 1 {
+                let part = &parts[part_for(ndim, &format!("fptr{l}"))?];
+                fptrs.push(self.fetch_ints(table, part, 0, count + 1)?);
+            }
+        }
+        // For rank-1 tensors there are no fptrs at all.
+        if ndim == 1 {
+            fptrs.clear();
+        }
+        let vals_part = &parts[part_for(ndim, "vals")?];
+        let values = self.fetch_vals(table, vals_part, 0, nnz)?;
+        let t = CsfTensor { shape, fids, fptrs, values };
+        Ok(TensorData::Sparse(csf_to_coo(&t, dtype)?))
+    }
+
+    fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let (shape, dtype, nnz, fids01, fptrs01) = self.load_header(table, &parts)?;
+        let ndim = shape.len();
+        let ranges = slice.resolve(&shape)?;
+        let (lo, hi) = (ranges[0].start, ranges[0].end);
+
+        // Root window: positions of fids[0] entries within [lo, hi).
+        let f0 = &fids01[0];
+        let a0 = f0.partition_point(|&x| (x as usize) < lo);
+        let b0 = f0.partition_point(|&x| (x as usize) < hi);
+
+        // Assemble a partial CSF tree containing only the selected window at
+        // each level, with pointers re-based to the window start.
+        let mut fids: Vec<Vec<i64>> = vec![f0[a0..b0].to_vec()];
+        let mut fptrs: Vec<Vec<i64>> = Vec::new();
+        let (mut wa, mut wb) = (a0, b0); // current window at this level
+        for l in 0..ndim.saturating_sub(1) {
+            // pointer window for nodes [wa, wb): entries wa..=wb of fptrs[l]
+            let ptr_window: Vec<i64> = if l < 2 {
+                if wb + 1 > fptrs01[l].len() {
+                    bail!("corrupt fptr level {l}");
+                }
+                fptrs01[l][wa..=wb].to_vec()
+            } else {
+                let part = &parts[part_for(ndim, &format!("fptr{l}"))?];
+                self.fetch_ints(table, part, wa, wb + 1)?
+            };
+            let child_a = *ptr_window.first().unwrap_or(&0) as usize;
+            let child_b = *ptr_window.last().unwrap_or(&0) as usize;
+            fptrs.push(ptr_window.iter().map(|&p| p - child_a as i64).collect());
+            // Child fids for the next level.
+            let next_fids: Vec<i64> = if l + 1 < 2 {
+                fids01[l + 1][child_a..child_b].to_vec()
+            } else {
+                let part = &parts[part_for(ndim, &format!("fid{}", l + 1))?];
+                self.fetch_ints(table, part, child_a, child_b)?
+            };
+            fids.push(next_fids);
+            wa = child_a;
+            wb = child_b;
+        }
+        // Leaf window == values range.
+        let (va, vb) = if ndim == 1 { (wa, wb) } else { (wa, wb) };
+        ensure!(vb <= nnz, "leaf window exceeds nnz");
+        let vals_part = &parts[part_for(ndim, "vals")?];
+        let values = self.fetch_vals(table, vals_part, va, vb)?;
+
+        let mut sub_shape = shape.clone();
+        // The partial tree still uses absolute coordinates; build it with the
+        // full shape, then re-base dim 0 via csf_slice_dim0 (cheap: the tree
+        // already contains only the selected roots).
+        let t = CsfTensor { shape: sub_shape.clone(), fids, fptrs, values };
+        let sliced = csf_slice_dim0(&t, lo, hi, dtype)?;
+        sub_shape[0] = hi - lo;
+        // Apply trailing-dim restrictions if any.
+        let trailing_full =
+            ranges[1..].iter().zip(&shape[1..]).all(|(r, &d)| r.start == 0 && r.end == d);
+        let out = if trailing_full {
+            sliced
+        } else {
+            let mut spec: Vec<(usize, usize)> = vec![(0, hi - lo)];
+            spec.extend(ranges[1..].iter().map(|r| (r.start, r.end)));
+            sliced.slice(&Slice::ranges(&spec))?
+        };
+        Ok(TensorData::Sparse(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::ObjectStoreHandle;
+    use crate::tensor::SparseCoo;
+    use crate::util::prng::Pcg64;
+
+    fn random_sparse(seed: u64, shape: &[usize], nnz: usize) -> SparseCoo {
+        let mut rng = Pcg64::new(seed);
+        let mut set = std::collections::BTreeSet::new();
+        while set.len() < nnz {
+            set.insert(shape.iter().map(|&d| rng.below(d) as u32).collect::<Vec<u32>>());
+        }
+        let (mut idx, mut vals) = (Vec::new(), Vec::new());
+        for c in set {
+            idx.extend_from_slice(&c);
+            vals.push((rng.next_f64() * 9.0 + 1.0) as f32 as f64);
+        }
+        SparseCoo::new(DType::F32, shape, idx, vals).unwrap()
+    }
+
+    fn table() -> DeltaTable {
+        DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap()
+    }
+
+    #[test]
+    fn stream_plan_is_deterministic() {
+        assert_eq!(stream_parts(2), vec![("vals".to_string(), 1)]);
+        assert_eq!(
+            stream_parts(4),
+            vec![
+                ("fid2".to_string(), 1),
+                ("fid3".to_string(), 2),
+                ("fptr2".to_string(), 3),
+                ("vals".to_string(), 4)
+            ]
+        );
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let s = random_sparse(1, &[20, 15], 80);
+        let tbl = table();
+        let fmt = CsfFormat::default();
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        assert_eq!(fmt.read(&tbl, "s").unwrap().to_sparse().unwrap(), s);
+    }
+
+    #[test]
+    fn roundtrip_4d_chunked() {
+        let s = random_sparse(2, &[12, 8, 9, 7], 300);
+        let tbl = table();
+        let fmt = CsfFormat { chunk_len: 64, ..Default::default() };
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        let parts = common::tensor_parts(&tbl, "s", "CSF").unwrap();
+        assert_eq!(parts.len(), 5, "header + fid2 + fid3 + fptr2 + vals");
+        assert_eq!(fmt.read(&tbl, "s").unwrap().to_sparse().unwrap(), s);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let s = random_sparse(3, &[100], 12);
+        let tbl = table();
+        let fmt = CsfFormat::default();
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        assert_eq!(fmt.read(&tbl, "s").unwrap().to_sparse().unwrap(), s);
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let s = random_sparse(4, &[10, 10, 10], 120);
+        let tbl = table();
+        let fmt = CsfFormat { chunk_len: 32, ..Default::default() };
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        assert_eq!(fmt.read(&tbl, "s").unwrap().to_sparse().unwrap(), s);
+    }
+
+    #[test]
+    fn slice_matches_reference() {
+        let s = random_sparse(5, &[24, 6, 5, 4], 260);
+        let tbl = table();
+        let fmt = CsfFormat { chunk_len: 32, ..Default::default() };
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        for slice in [
+            Slice::index(11),
+            Slice::dim0(0, 8),
+            Slice::dim0(20, 24),
+            Slice::ranges(&[(4, 16), (1, 4)]),
+            Slice::all(4),
+        ] {
+            let got = fmt.read_slice(&tbl, "s", &slice).unwrap().to_dense().unwrap();
+            let want = s.slice(&slice).unwrap().to_dense().unwrap();
+            assert_eq!(got, want, "{slice:?}");
+        }
+    }
+
+    #[test]
+    fn slice_empty_window() {
+        // A dim-0 index with no nnz yields an empty sparse tensor.
+        let s = SparseCoo::new(DType::F32, &[10, 4], vec![2, 1, 7, 3], vec![1.0, 2.0]).unwrap();
+        let tbl = table();
+        let fmt = CsfFormat::default();
+        fmt.write(&tbl, "s", &s.into()).unwrap();
+        let got = fmt.read_slice(&tbl, "s", &Slice::index(5)).unwrap().to_sparse().unwrap();
+        assert_eq!(got.nnz(), 0);
+        assert_eq!(got.shape(), &[1, 4]);
+    }
+
+    #[test]
+    fn slice_prunes_io() {
+        let s = random_sparse(6, &[64, 48, 48], 24_000);
+        let store = ObjectStoreHandle::mem();
+        let tbl = DeltaTable::create(store.clone(), "t").unwrap();
+        let fmt = CsfFormat { chunk_len: 512, ..Default::default() };
+        fmt.write(&tbl, "s", &s.clone().into()).unwrap();
+        store.stats().reset();
+        let _ = fmt.read(&tbl, "s").unwrap();
+        let full = store.stats().snapshot().3;
+        store.stats().reset();
+        let _ = fmt.read_slice(&tbl, "s", &Slice::index(30)).unwrap();
+        let sliced = store.stats().snapshot().3;
+        assert!(sliced * 2 < full, "csf slice {sliced} vs full {full}");
+    }
+
+    #[test]
+    fn prefix_compression_pays_off_vs_coo_baseline() {
+        // Many shared prefixes: CSF storage should be much smaller than the
+        // pt-like dense coordinate matrix.
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for a in 0..4u32 {
+            for b in 0..4u32 {
+                for c in 0..50u32 {
+                    idx.extend_from_slice(&[a, b, c]);
+                    vals.push(1.0 + (a + b + c) as f64);
+                }
+            }
+        }
+        let s = SparseCoo::new(DType::F32, &[4, 4, 64], idx, vals).unwrap();
+        let tbl = table();
+        CsfFormat::default().write(&tbl, "s", &s.clone().into()).unwrap();
+        let csf_size = crate::formats::storage_bytes(&tbl, "s").unwrap();
+        let pt_size = crate::formats::BinaryFormat::serialize_sparse(&s).len() as u64;
+        assert!(
+            csf_size * 2 < pt_size,
+            "csf {csf_size} should be well under half of pt {pt_size}"
+        );
+    }
+}

@@ -1,0 +1,419 @@
+//! Flattened Tensor Storage Format (paper §IV.A) — the method for *general*
+//! (dense) tensors.
+//!
+//! The tensor is chunked into rank-`Dc` fibers: the trailing `Dc` dimensions
+//! form one chunk, and the leading `N - Dc` dimensions enumerate chunks.
+//! One table row per chunk:
+//!
+//! ```text
+//! | id | chunk_idx | chunk (BINARY) | dim_count | dimensions | chunk_dim_count | dtype |
+//! ```
+//!
+//! Matching the paper's Figures 1-3: identical metadata across rows
+//! dictionary-compresses away, and slice reads fetch only the chunk rows
+//! whose `chunk_idx` the slice touches (row-group pruning + file pruning on
+//! the min/max chunk index).
+
+use super::common::{self, shape_from_i64};
+use super::{TensorData, TensorStore};
+use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
+use crate::delta::DeltaTable;
+use crate::tensor::{numel, strides_for, DType, DenseTensor, Slice};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use once_cell::sync::Lazy;
+
+static SCHEMA: Lazy<Schema> = Lazy::new(|| {
+    Schema::new(vec![
+        Field::new("id", PhysType::Str),
+        Field::new("chunk_idx", PhysType::Int),
+        Field::new("chunk", PhysType::Bytes),
+        Field::new("dim_count", PhysType::Int),
+        Field::new("dimensions", PhysType::IntList),
+        Field::new("chunk_dim_count", PhysType::Int),
+        Field::new("dtype", PhysType::Str),
+    ])
+    .unwrap()
+});
+
+/// FTSF storage: dense tensors chunked into trailing-dimension fibers.
+#[derive(Debug, Clone, Copy)]
+pub struct FtsfFormat {
+    /// Rank of each chunk (`Dc`): the number of trailing dims merged into
+    /// one binary chunk. Figure 2 uses 3 (one chunk per video frame);
+    /// Figure 3 uses 2 (one chunk per image channel plane).
+    pub chunk_dims: usize,
+    /// Rows (chunks) per row group: the pruning granularity inside a file.
+    pub rows_per_group: usize,
+    /// Rows (chunks) per part file: the file-level pruning granularity.
+    pub rows_per_file: usize,
+    /// Page compression.
+    pub codec: crate::columnar::Codec,
+}
+
+impl Default for FtsfFormat {
+    fn default() -> Self {
+        Self::new(3)
+    }
+}
+
+impl FtsfFormat {
+    /// FTSF with chunk rank `Dc` and default file geometry.
+    pub fn new(chunk_dims: usize) -> Self {
+        Self {
+            chunk_dims,
+            rows_per_group: 8,
+            rows_per_file: 128,
+            codec: crate::columnar::Codec::Zstd(1),
+        }
+    }
+
+    /// Shape of the leading (chunk-enumerating) dims for a tensor shape.
+    fn lead_shape<'a>(&self, shape: &'a [usize]) -> Result<&'a [usize]> {
+        ensure!(
+            self.chunk_dims >= 1 && self.chunk_dims < shape.len(),
+            "chunk_dims {} must be in [1, rank) for shape {:?}",
+            self.chunk_dims,
+            shape
+        );
+        Ok(&shape[..shape.len() - self.chunk_dims])
+    }
+}
+
+impl TensorStore for FtsfFormat {
+    fn layout(&self) -> &'static str {
+        "FTSF"
+    }
+
+    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+        let t = match data {
+            TensorData::Dense(t) => t,
+            TensorData::Sparse(_) => bail!("FTSF stores general (dense) tensors"),
+        };
+        let shape = t.shape().to_vec();
+        let lead = self.lead_shape(&shape)?.to_vec();
+        let chunk_shape = shape[lead.len()..].to_vec();
+        let n_chunks = numel(&lead);
+        let chunk_bytes = numel(&chunk_shape) * t.dtype().size();
+        let dims_i64: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+
+        let mut parts = Vec::new();
+        let mut part_no = 0usize;
+        let mut file_groups: Vec<Vec<ColumnData>> = Vec::new();
+        let mut file_min = i64::MAX;
+        let mut file_max = i64::MIN;
+        let mut c = 0usize;
+        while c < n_chunks {
+            let g_end = (c + self.rows_per_group).min(n_chunks);
+            let rows = g_end - c;
+            let mut ids = Vec::with_capacity(rows);
+            let mut idxs = Vec::with_capacity(rows);
+            let mut blobs = Vec::with_capacity(rows);
+            for ci in c..g_end {
+                ids.push(id.to_string());
+                idxs.push(ci as i64);
+                let start = ci * chunk_bytes;
+                blobs.push(t.bytes()[start..start + chunk_bytes].to_vec());
+            }
+            file_min = file_min.min(c as i64);
+            file_max = file_max.max((g_end - 1) as i64);
+            file_groups.push(vec![
+                ColumnData::Str(ids),
+                ColumnData::Int(idxs),
+                ColumnData::Bytes(blobs),
+                ColumnData::Int(vec![shape.len() as i64; rows]),
+                ColumnData::IntList(vec![dims_i64.clone(); rows]),
+                ColumnData::Int(vec![self.chunk_dims as i64; rows]),
+                ColumnData::Str(vec![t.dtype().name().to_string(); rows]),
+            ]);
+            c = g_end;
+            let file_rows: usize = file_groups.iter().map(|g| g[0].len()).sum();
+            if file_rows >= self.rows_per_file || c == n_chunks {
+                let mut part = common::stage_part(
+                    self.layout(),
+                    id,
+                    part_no,
+                    &SCHEMA,
+                    &file_groups,
+                    WriteOptions { codec: self.codec, row_group_rows: self.rows_per_group },
+                    Some((file_min, file_max)),
+                )?;
+                if part_no == 0 {
+                    // shape/dtype/chunk-rank on the Add action: slice reads
+                    // resolve geometry with zero metadata GETs.
+                    part.meta = Some(
+                        crate::jsonx::Json::obj([
+                            ("shape", crate::jsonx::Json::ints(shape.iter().map(|&d| d as i64))),
+                            ("dtype", crate::jsonx::Json::from(t.dtype().name())),
+                            ("cdims", crate::jsonx::Json::from(self.chunk_dims)),
+                        ])
+                        .dump(),
+                    );
+                }
+                parts.push(part);
+                part_no += 1;
+                file_groups = Vec::new();
+                file_min = i64::MAX;
+                file_max = i64::MIN;
+            }
+        }
+        common::commit_parts(table, id, "WRITE FTSF", parts)?;
+        Ok(())
+    }
+
+    fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {
+        self.read_slice(table, id, &Slice::all(0))
+    }
+
+    fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+
+        // Geometry from the Add action's meta (zero GETs), else from the
+        // first row group of the first part.
+        let from_meta = parts.iter().find_map(|p| {
+            let j = crate::jsonx::parse(p.meta.as_deref()?).ok()?;
+            let dims: Vec<usize> =
+                j.get("shape")?.to_int_vec()?.into_iter().map(|d| d as usize).collect();
+            let dtype = DType::parse(j.get("dtype")?.as_str()?).ok()?;
+            let cd = j.get("cdims")?.as_u64()? as usize;
+            Some((dims, dtype, cd))
+        });
+        let (dims, dtype, cd) = match from_meta {
+            Some(m) => m,
+            None => {
+                let r0 = common::open_part(table, &parts[0])?;
+                let dims = shape_from_i64(&common::first_intlist(&r0, 0, "dimensions")?)?;
+                let dtype = DType::parse(&common::first_str(&r0, 0, "dtype")?)?;
+                let col = r0.schema().index_of("chunk_dim_count")?;
+                let v = r0.read_column(0, col)?.into_ints()?;
+                let cd = *v.first().context("chunk_dim_count empty")? as usize;
+                (dims, dtype, cd)
+            }
+        };
+        ensure!(cd >= 1 && cd < dims.len(), "corrupt chunk_dim_count {cd}");
+        let lead = &dims[..dims.len() - cd];
+        let chunk_shape = &dims[dims.len() - cd..];
+
+        // Which chunk indices does the slice need?
+        let ranges = slice.resolve(&dims)?;
+        let lead_ranges = &ranges[..lead.len()];
+        let chunk_ranges = &ranges[lead.len()..];
+        let out_shape: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+        let chunk_slice = Slice::ranges(
+            &chunk_ranges.iter().map(|r| (r.start, r.end)).collect::<Vec<_>>(),
+        );
+        let full_chunk = chunk_ranges.iter().zip(chunk_shape).all(|(r, &d)| r.start == 0 && r.end == d);
+
+        // Enumerate needed chunk ids (cartesian product of lead ranges).
+        let lead_strides = strides_for(lead);
+        let mut needed: Vec<i64> = Vec::new();
+        if lead_ranges.iter().all(|r| r.end > r.start) {
+            let mut cursor: Vec<usize> = lead_ranges.iter().map(|r| r.start).collect();
+            'odometer: loop {
+                let flat: usize = cursor.iter().zip(&lead_strides).map(|(i, s)| i * s).sum();
+                needed.push(flat as i64);
+                let mut d = cursor.len();
+                while d > 0 {
+                    d -= 1;
+                    cursor[d] += 1;
+                    if cursor[d] < lead_ranges[d].end {
+                        continue 'odometer;
+                    }
+                    cursor[d] = lead_ranges[d].start;
+                }
+                break;
+            }
+        }
+        let needed_set: std::collections::HashSet<i64> = needed.iter().copied().collect();
+        let (lo, hi) = match (needed.iter().min(), needed.iter().max()) {
+            (Some(&lo), Some(&hi)) => (lo, hi),
+            _ => {
+                // Empty slice.
+                return Ok(TensorData::Dense(DenseTensor::zeros(dtype, &out_shape)));
+            }
+        };
+
+        // Fetch needed chunks: prune files by key range, then row groups by
+        // chunk_idx stats, then filter rows.
+        let esize = dtype.size();
+        let out_numel: usize = out_shape.iter().product();
+        let mut out = vec![0u8; out_numel * esize];
+        let out_strides = strides_for(&out_shape);
+        let sliced_chunk_numel: usize = chunk_ranges.iter().map(|r| r.end - r.start).product();
+
+        for part in common::prune_parts(&parts, lo, hi) {
+            let reader = common::open_part(table, &part)?;
+            let idx_col = reader.schema().index_of("chunk_idx")?;
+            let blob_col = reader.schema().index_of("chunk")?;
+            // Dim-0 slices select contiguous chunk ranges, so the pruned
+            // groups are contiguous and a single (idx, blob) span per part
+            // is right-sized: one ranged GET instead of idx-pass + blob-pass
+            // (which each spanned ~the whole file for full reads).
+            let groups = reader.prune_groups(idx_col, lo, hi);
+            for mut cs in reader.read_columns_groups(&groups, &[idx_col, blob_col])? {
+                let blobs = cs.pop().unwrap().into_bytes()?;
+                let idxs = cs.pop().unwrap().into_ints()?;
+                for (ci, blob) in idxs.iter().zip(blobs) {
+                    if !needed_set.contains(ci) {
+                        continue;
+                    }
+                    // Cut the chunk if the slice restricts trailing dims.
+                    let chunk = DenseTensor::from_bytes(dtype, chunk_shape, blob)?;
+                    let cut = if full_chunk { chunk } else { chunk.slice(&chunk_slice)? };
+                    debug_assert_eq!(cut.numel(), sliced_chunk_numel);
+                    // Destination offset: delinearize chunk id into lead
+                    // coords, re-base into the output tensor.
+                    let lead_idx = crate::tensor::delinearize(*ci as usize, lead);
+                    let mut dst_off = 0usize;
+                    for (d, &ix) in lead_idx.iter().enumerate() {
+                        dst_off += (ix - lead_ranges[d].start) * out_strides[d];
+                    }
+                    let dst_start = dst_off * esize;
+                    out[dst_start..dst_start + cut.byte_len()].copy_from_slice(cut.bytes());
+                }
+            }
+        }
+        Ok(TensorData::Dense(DenseTensor::from_bytes(dtype, &out_shape, out)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::ObjectStoreHandle;
+    use crate::util::prng::Pcg64;
+
+    fn random_dense(seed: u64, shape: &[usize]) -> DenseTensor {
+        let mut rng = Pcg64::new(seed);
+        let vals: Vec<f32> = (0..numel(shape)).map(|_| rng.next_f32()).collect();
+        DenseTensor::from_f32(shape, &vals).unwrap()
+    }
+
+    fn table() -> DeltaTable {
+        DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap()
+    }
+
+    #[test]
+    fn roundtrip_4d_video_like() {
+        // Paper Figure 2: (24, 3, H, W) chunked as 3-D fibers.
+        let t = random_dense(1, &[24, 3, 8, 8]);
+        let tbl = table();
+        let fmt = FtsfFormat::new(3);
+        fmt.write(&tbl, "vid", &t.clone().into()).unwrap();
+        assert_eq!(fmt.read(&tbl, "vid").unwrap().to_dense().unwrap(), t);
+    }
+
+    #[test]
+    fn roundtrip_2d_chunks() {
+        // Paper Figure 3: same tensor flattened as 2-D chunks.
+        let t = random_dense(2, &[6, 3, 8, 8]);
+        let tbl = table();
+        let fmt = FtsfFormat::new(2);
+        fmt.write(&tbl, "x", &t.clone().into()).unwrap();
+        assert_eq!(fmt.read(&tbl, "x").unwrap().to_dense().unwrap(), t);
+    }
+
+    #[test]
+    fn slice_prefix_matches_dense() {
+        // The paper's read-slice workload: X[0:k, :, :, :].
+        let t = random_dense(3, &[20, 3, 4, 4]);
+        let tbl = table();
+        let fmt = FtsfFormat { rows_per_group: 4, rows_per_file: 16, ..FtsfFormat::new(3) };
+        fmt.write(&tbl, "x", &t.clone().into()).unwrap();
+        for (lo, hi) in [(0, 5), (7, 13), (19, 20), (0, 20)] {
+            let slice = Slice::dim0(lo, hi);
+            let got = fmt.read_slice(&tbl, "x", &slice).unwrap().to_dense().unwrap();
+            assert_eq!(got, t.slice(&slice).unwrap(), "[{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn slice_into_chunk_interior() {
+        // Slicing trailing dims cuts inside chunks.
+        let t = random_dense(4, &[6, 4, 10, 10]);
+        let tbl = table();
+        let fmt = FtsfFormat::new(2); // chunks are (10, 10) planes
+        fmt.write(&tbl, "x", &t.clone().into()).unwrap();
+        let slice = Slice::ranges(&[(1, 3), (0, 2), (2, 7), (5, 10)]);
+        let got = fmt.read_slice(&tbl, "x", &slice).unwrap().to_dense().unwrap();
+        assert_eq!(got, t.slice(&slice).unwrap());
+    }
+
+    #[test]
+    fn slice_reads_fetch_fewer_bytes_than_full_read() {
+        let t = random_dense(5, &[32, 2, 16, 16]);
+        let store = ObjectStoreHandle::mem();
+        let tbl = DeltaTable::create(store.clone(), "t").unwrap();
+        let fmt = FtsfFormat { rows_per_group: 2, rows_per_file: 8, ..FtsfFormat::new(3) };
+        fmt.write(&tbl, "x", &t.clone().into()).unwrap();
+
+        store.stats().reset();
+        let _ = fmt.read(&tbl, "x").unwrap();
+        let (_, _, _, full_bytes, _) = store.stats().snapshot();
+
+        store.stats().reset();
+        let _ = fmt.read_slice(&tbl, "x", &Slice::index(5)).unwrap();
+        let (_, _, _, slice_bytes, _) = store.stats().snapshot();
+
+        assert!(
+            slice_bytes * 4 < full_bytes,
+            "slice read should fetch <25% of full-read bytes: {slice_bytes} vs {full_bytes}"
+        );
+    }
+
+    #[test]
+    fn multiple_part_files_created_and_pruned() {
+        let t = random_dense(6, &[40, 2, 4, 4]);
+        let tbl = table();
+        let fmt = FtsfFormat { rows_per_group: 4, rows_per_file: 8, ..FtsfFormat::new(3) };
+        fmt.write(&tbl, "x", &t.clone().into()).unwrap();
+        let parts = common::tensor_parts(&tbl, "x", "FTSF").unwrap();
+        assert!(parts.len() >= 5, "expected >=5 part files, got {}", parts.len());
+        assert_eq!(common::prune_parts(&parts, 0, 0).len(), 1);
+        // Roundtrip still exact across files.
+        assert_eq!(fmt.read(&tbl, "x").unwrap().to_dense().unwrap(), t);
+    }
+
+    #[test]
+    fn sparse_input_rejected() {
+        let tbl = table();
+        let s = crate::tensor::SparseCoo::new(DType::F32, &[4, 4], vec![0, 0], vec![1.0]).unwrap();
+        assert!(FtsfFormat::new(1).write(&tbl, "s", &s.into()).is_err());
+    }
+
+    #[test]
+    fn invalid_chunk_dims_rejected() {
+        let tbl = table();
+        let t = random_dense(7, &[4, 4]);
+        assert!(FtsfFormat::new(2).write(&tbl, "x", &t.clone().into()).is_err());
+        assert!(FtsfFormat::new(0).write(&tbl, "x", &t.into()).is_err());
+    }
+
+    #[test]
+    fn u8_image_tensor_roundtrip() {
+        let mut rng = Pcg64::new(8);
+        let shape = [10, 3, 6, 6];
+        let vals: Vec<u8> = (0..numel(&shape)).map(|_| rng.next_u64() as u8).collect();
+        let t = DenseTensor::from_u8(&shape, vals).unwrap();
+        let tbl = table();
+        let fmt = FtsfFormat::new(3);
+        fmt.write(&tbl, "img", &t.clone().into()).unwrap();
+        assert_eq!(fmt.read(&tbl, "img").unwrap().to_dense().unwrap(), t);
+        let s = Slice::dim0(2, 5);
+        assert_eq!(
+            fmt.read_slice(&tbl, "img", &s).unwrap().to_dense().unwrap(),
+            t.slice(&s).unwrap()
+        );
+    }
+
+    #[test]
+    fn empty_slice_returns_empty_tensor() {
+        let t = random_dense(9, &[4, 2, 3, 3]);
+        let tbl = table();
+        let fmt = FtsfFormat::new(3);
+        fmt.write(&tbl, "x", &t.into()).unwrap();
+        let got = fmt.read_slice(&tbl, "x", &Slice::dim0(2, 2)).unwrap().to_dense().unwrap();
+        assert_eq!(got.shape(), &[0, 2, 3, 3]);
+        assert_eq!(got.numel(), 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal JSON, from scratch.
+//!
+//! The Delta Lake transaction log is newline-delimited JSON; `serde_json`
+//! is unavailable in the offline build environment, and the log format is a
+//! substrate the paper depends on — so we implement exactly the JSON we
+//! need: a [`Json`] value model, a strict recursive-descent [`parse`]r and a
+//! compact [`Json::dump`] writer. Numbers are stored as `f64` with an `i64`
+//! fast path preserved through round-trips for integral values.
+
+mod parser;
+mod writer;
+
+pub use parser::{parse, ParseError};
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Objects use [`BTreeMap`] so output ordering (and therefore
+/// log bytes) is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Integral number (round-trips exactly).
+    Int(i64),
+    /// Non-integral number.
+    Float(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object with deterministic key order.
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Build an object from key/value pairs.
+    pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Get a field of an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// As i64 (accepts Int and integral Float).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(v) => Some(*v),
+            Json::Float(f) if f.fract() == 0.0 && f.abs() < 9.2e18 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// As u64 (non-negative integers only).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|v| u64::try_from(v).ok())
+    }
+
+    /// As f64 (accepts Int and Float).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Int(v) => Some(*v as f64),
+            Json::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// As string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array slice.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// As object map.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Build an array of i64s.
+    pub fn ints(xs: impl IntoIterator<Item = i64>) -> Json {
+        Json::Arr(xs.into_iter().map(Json::Int).collect())
+    }
+
+    /// Extract a Vec<i64> from an array of numbers.
+    pub fn to_int_vec(&self) -> Option<Vec<i64>> {
+        self.as_arr()?.iter().map(|j| j.as_i64()).collect()
+    }
+
+    /// Serialize compactly (no whitespace). See [`writer`].
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        writer::write(self, &mut s);
+        s
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Int(v)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Int(v as i64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Int(v as i64)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        if v.fract() == 0.0 && v.abs() < 9.2e18 {
+            Json::Int(v as i64)
+        } else {
+            Json::Float(v)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for src in ["null", "true", "false", "0", "-42", "3.5", "\"hi\""] {
+            let v = parse(src).unwrap();
+            let d = v.dump();
+            assert_eq!(parse(&d).unwrap(), v, "src={src}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a":[1,2,{"b":null,"c":[true,false]}],"d":"x\ny","e":-1.25}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(parse(&v.dump()).unwrap(), v);
+        assert_eq!(v.get("e").unwrap().as_f64(), Some(-1.25));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::obj([
+            ("i", Json::Int(7)),
+            ("f", Json::Float(1.5)),
+            ("s", Json::from("x")),
+            ("b", Json::Bool(true)),
+            ("a", Json::ints([1, 2, 3])),
+        ]);
+        assert_eq!(v.get("i").unwrap().as_i64(), Some(7));
+        assert_eq!(v.get("i").unwrap().as_f64(), Some(7.0));
+        assert_eq!(v.get("f").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("f").unwrap().as_i64(), None);
+        assert_eq!(v.get("s").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("a").unwrap().to_int_vec(), Some(vec![1, 2, 3]));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn deterministic_object_order() {
+        let a = parse(r#"{"z":1,"a":2}"#).unwrap();
+        let b = parse(r#"{"a":2,"z":1}"#).unwrap();
+        assert_eq!(a.dump(), b.dump());
+        assert_eq!(a.dump(), r#"{"a":2,"z":1}"#);
+    }
+}

@@ -1,0 +1,111 @@
+//! Compact JSON writer with deterministic output (object keys are already
+//! sorted by the BTreeMap) — byte-identical logs across runs make the delta
+//! log testable by content hash.
+
+use super::Json;
+
+/// Append the compact serialization of `v` to `out`.
+pub fn write(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Int(n) => out.push_str(&n.to_string()),
+        Json::Float(f) => write_f64(*f, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_f64(f: f64, out: &mut String) {
+    if f.is_finite() {
+        // Shortest representation that round-trips; Rust's Display for f64
+        // already guarantees this (Ryū).
+        let s = format!("{f}");
+        out.push_str(&s);
+        // Ensure it still parses as a float (e.g. "1" from 1.0 would flip
+        // type on re-parse; our From<f64> stores integral values as Int, so
+        // Float here is always non-integral — but be defensive).
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            out.push_str(".0");
+        }
+    } else {
+        // JSON has no NaN/Inf; encode as null like most writers in lax mode.
+        out.push_str("null");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Json};
+
+    #[test]
+    fn escapes_control_chars() {
+        let v = Json::Str("a\"b\\c\nd\u{0001}e".into());
+        let s = v.dump();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001e\"");
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn float_roundtrip_precision() {
+        for f in [0.1, 1e-10, 1.7976931348623157e308, -2.2250738585072014e-308, 0.3333333333333333]
+        {
+            let v = Json::Float(f);
+            assert_eq!(parse(&v.dump()).unwrap().as_f64(), Some(f));
+        }
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(Json::Float(f64::NAN).dump(), "null");
+        assert_eq!(Json::Float(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Json::Str("héllo 😀".into());
+        assert_eq!(parse(&v.dump()).unwrap(), v);
+    }
+}

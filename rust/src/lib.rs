@@ -1,0 +1,56 @@
+//! # Delta Tensor
+//!
+//! Efficient vector and tensor storage on a Delta-Lake-style lakehouse over
+//! (simulated) cloud object storage — a from-scratch reproduction of
+//! *"Delta Tensor: Efficient Vector and Tensor Storage in Delta Lake"*
+//! (Bao et al., 2024).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`util`] — PRNG, varint/zigzag, timing, byte formatting.
+//! * [`jsonx`] — minimal JSON (the Delta transaction-log interchange).
+//! * [`objectstore`] — S3-like object store with a cloud cost model.
+//! * [`columnar`] — Parquet-like columnar file format (row groups, pages,
+//!   dictionary/RLE/delta encodings, zstd compression, stats).
+//! * [`delta`] — ACID table layer: action log, snapshots, time travel,
+//!   optimistic concurrency, checkpoints, compaction.
+//! * [`tensor`] — dense/sparse tensor types and slicing.
+//! * [`formats`] — the paper's five storage methods (FTSF, COO, CSR/CSC,
+//!   CSF, BSGS) plus the binary baselines, behind one [`formats::TensorStore`]
+//!   API.
+//! * [`query`] — read planning: stats-based row-group pruning.
+//! * [`runtime`] — PJRT/XLA execution of AOT-compiled decode artifacts.
+//! * [`coordinator`] — streaming ingestion orchestrator: worker pool,
+//!   backpressure, commit coordination, metrics.
+//! * [`workload`] — synthetic FFHQ-like and Uber-pickups-like generators.
+
+pub mod util;
+pub mod jsonx;
+pub mod objectstore;
+pub mod columnar;
+pub mod delta;
+pub mod tensor;
+pub mod formats;
+pub mod query;
+pub mod runtime;
+pub mod coordinator;
+pub mod workload;
+pub mod testing;
+pub mod benchkit;
+pub mod cli;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::delta::DeltaTable;
+    pub use crate::formats::{
+        storage_bytes, BinaryFormat, BsgsFormat, CooFormat, CsfFormat, CsrFormat, FtsfFormat,
+        SliceSpec, TensorData, TensorStore,
+    };
+    pub use crate::objectstore::{CostModel, ObjectStore, ObjectStoreHandle};
+    pub use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
+}
+
+/// Crate-wide error type.
+pub type Error = anyhow::Error;
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

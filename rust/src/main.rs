@@ -1,0 +1,19 @@
+//! `delta-tensor` — leader entrypoint for the Delta Tensor coordinator.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match delta_tensor::cli::Args::parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    match delta_tensor::cli::run(&parsed) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

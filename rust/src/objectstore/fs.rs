@@ -1,0 +1,221 @@
+//! Filesystem-backed object store: each key maps to a file under a root
+//! directory. PUTs are atomic (temp file + rename) and conditional PUTs use
+//! `O_EXCL` hard links so concurrent committers race safely, mirroring the
+//! single-winner semantics Delta Lake needs from S3.
+
+use super::ObjectStore;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Object store rooted at a directory. Keys may contain `/`; directories
+/// are created on demand. Key components `.` and `..` are rejected.
+#[derive(Debug)]
+pub struct FsStore {
+    root: PathBuf,
+    tmp_counter: AtomicU64,
+}
+
+impl FsStore {
+    /// Create (or open) a store rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root).with_context(|| format!("creating {}", root.display()))?;
+        Ok(Self { root, tmp_counter: AtomicU64::new(0) })
+    }
+
+    fn path_for(&self, key: &str) -> Result<PathBuf> {
+        if key.is_empty() {
+            bail!("empty key");
+        }
+        for comp in key.split('/') {
+            if comp.is_empty() || comp == "." || comp == ".." {
+                bail!("invalid key component in {key:?}");
+            }
+        }
+        Ok(self.root.join(key))
+    }
+
+    fn write_temp(&self, data: &[u8]) -> Result<PathBuf> {
+        let n = self.tmp_counter.fetch_add(1, Ordering::Relaxed);
+        let tmp = self.root.join(format!(".tmp.{}.{n}", std::process::id()));
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(data)?;
+        f.sync_all()?;
+        Ok(tmp)
+    }
+
+    fn collect(dir: &Path, root: &Path, prefix: &str, out: &mut Vec<String>) -> Result<()> {
+        if !dir.exists() {
+            return Ok(());
+        }
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with(".tmp.") {
+                continue;
+            }
+            if path.is_dir() {
+                Self::collect(&path, root, prefix, out)?;
+            } else {
+                let rel = path.strip_prefix(root).unwrap();
+                let key = rel.to_string_lossy().replace('\\', "/");
+                if key.starts_with(prefix) {
+                    out.push(key);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ObjectStore for FsStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let path = self.path_for(key)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let tmp = self.write_temp(data)?;
+        fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    fn put_if_absent(&self, key: &str, data: &[u8]) -> Result<bool> {
+        let path = self.path_for(key)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let tmp = self.write_temp(data)?;
+        // hard_link fails with EEXIST if the destination exists — atomic
+        // single-winner semantics even across processes.
+        let res = fs::hard_link(&tmp, &path);
+        let _ = fs::remove_file(&tmp);
+        match res {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let path = self.path_for(key)?;
+        fs::read(&path).with_context(|| format!("object not found: {key}"))
+    }
+
+    fn get_range(&self, key: &str, off: u64, len: u64) -> Result<Vec<u8>> {
+        use std::io::{Read, Seek, SeekFrom};
+        let path = self.path_for(key)?;
+        let mut f = fs::File::open(&path).with_context(|| format!("object not found: {key}"))?;
+        let size = f.metadata()?.len();
+        let start = off.min(size);
+        let end = off.saturating_add(len).min(size);
+        f.seek(SeekFrom::Start(start))?;
+        let mut buf = vec![0u8; (end - start) as usize];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn head(&self, key: &str) -> Result<Option<u64>> {
+        let path = self.path_for(key)?;
+        match fs::metadata(&path) {
+            Ok(m) if m.is_file() => Ok(Some(m.len())),
+            Ok(_) => Ok(None),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        // Start the walk at the deepest directory implied by the prefix to
+        // avoid scanning the whole tree.
+        let dir_part = match prefix.rfind('/') {
+            Some(i) => &prefix[..i],
+            None => "",
+        };
+        let start = if dir_part.is_empty() { self.root.clone() } else { self.root.join(dir_part) };
+        let mut out = Vec::new();
+        Self::collect(&start, &self.root, prefix, &mut out)?;
+        out.sort();
+        Ok(out)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let path = self.path_for(key)?;
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dt-fsstore-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn conformance() {
+        let dir = tmpdir("conf");
+        super::super::conformance::run(&FsStore::new(&dir).unwrap());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_path_traversal() {
+        let dir = tmpdir("trav");
+        let s = FsStore::new(&dir).unwrap();
+        assert!(s.put("../evil", b"x").is_err());
+        assert!(s.put("a/../../evil", b"x").is_err());
+        assert!(s.put("", b"x").is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_put_if_absent_single_winner() {
+        let dir = tmpdir("race");
+        let s = std::sync::Arc::new(FsStore::new(&dir).unwrap());
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                s.put_if_absent("commit/0001.json", format!("{i}").as_bytes()).unwrap()
+            }));
+        }
+        let winners: usize = handles.into_iter().map(|h| h.join().unwrap() as usize).sum();
+        assert_eq!(winners, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persists_across_reopen() {
+        let dir = tmpdir("persist");
+        {
+            let s = FsStore::new(&dir).unwrap();
+            s.put("a/b", b"data").unwrap();
+        }
+        let s2 = FsStore::new(&dir).unwrap();
+        assert_eq!(s2.get("a/b").unwrap(), b"data");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn temp_files_not_listed() {
+        let dir = tmpdir("tmpskip");
+        let s = FsStore::new(&dir).unwrap();
+        s.put("k", b"v").unwrap();
+        fs::write(dir.join(".tmp.999.0"), b"junk").unwrap();
+        assert_eq!(s.list("").unwrap(), vec!["k".to_string()]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

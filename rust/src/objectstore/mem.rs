@@ -1,0 +1,126 @@
+//! In-memory object store backend — the default substrate for unit tests,
+//! property tests and zero-I/O microbenchmarks.
+
+use super::ObjectStore;
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// Thread-safe in-memory key→bytes map. Objects are stored behind `Arc` so
+/// GETs don't clone under the lock.
+#[derive(Debug, Default)]
+pub struct MemStore {
+    map: RwLock<BTreeMap<String, Arc<Vec<u8>>>>,
+}
+
+impl MemStore {
+    /// New empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of objects held.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    /// True if no objects are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.map.write().unwrap().insert(key.to_string(), Arc::new(data.to_vec()));
+        Ok(())
+    }
+
+    fn put_if_absent(&self, key: &str, data: &[u8]) -> Result<bool> {
+        let mut map = self.map.write().unwrap();
+        if map.contains_key(key) {
+            return Ok(false);
+        }
+        map.insert(key.to_string(), Arc::new(data.to_vec()));
+        Ok(true)
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let obj = self.map.read().unwrap().get(key).cloned();
+        match obj {
+            Some(v) => Ok(v.as_ref().clone()),
+            None => bail!("object not found: {key}"),
+        }
+    }
+
+    fn get_range(&self, key: &str, off: u64, len: u64) -> Result<Vec<u8>> {
+        let obj = self.map.read().unwrap().get(key).cloned();
+        match obj {
+            Some(v) => {
+                let start = (off as usize).min(v.len());
+                let end = (off.saturating_add(len) as usize).min(v.len());
+                Ok(v[start..end].to_vec())
+            }
+            None => bail!("object not found: {key}"),
+        }
+    }
+
+    fn head(&self, key: &str) -> Result<Option<u64>> {
+        Ok(self.map.read().unwrap().get(key).map(|v| v.len() as u64))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let map = self.map.read().unwrap();
+        Ok(map.range(prefix.to_string()..).take_while(|(k, _)| k.starts_with(prefix)).map(|(k, _)| k.clone()).collect())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.map.write().unwrap().remove(key);
+        Ok(())
+    }
+
+    fn get_tail(&self, key: &str, n: u64) -> Result<Vec<u8>> {
+        let obj = self.map.read().unwrap().get(key).cloned();
+        match obj {
+            Some(v) => {
+                let start = v.len().saturating_sub(n as usize);
+                Ok(v[start..].to_vec())
+            }
+            None => bail!("object not found: {key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conformance() {
+        super::super::conformance::run(&MemStore::new());
+    }
+
+    #[test]
+    fn concurrent_put_if_absent_single_winner() {
+        let store = Arc::new(MemStore::new());
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let s = store.clone();
+            handles.push(std::thread::spawn(move || {
+                s.put_if_absent("contested", format!("writer-{i}").as_bytes()).unwrap()
+            }));
+        }
+        let winners: usize = handles.into_iter().map(|h| h.join().unwrap() as usize).sum();
+        assert_eq!(winners, 1, "exactly one conditional put must win");
+    }
+
+    #[test]
+    fn list_range_does_not_scan_everything() {
+        let s = MemStore::new();
+        for i in 0..100 {
+            s.put(&format!("p{:02}/x", i), b"v").unwrap();
+        }
+        assert_eq!(s.list("p50/").unwrap(), vec!["p50/x".to_string()]);
+    }
+}

@@ -1,0 +1,296 @@
+//! Cloud object storage substrate.
+//!
+//! The paper stores Delta tables in Amazon S3 behind a 1 Gbps link; every
+//! reported time is dominated by object-store round trips. This module
+//! provides the same abstraction locally:
+//!
+//! * [`ObjectStore`] — the S3-like API surface we rely on: whole-object
+//!   PUT/GET, range GET, HEAD, prefix LIST, DELETE, and **conditional PUT**
+//!   (put-if-absent), which is what gives the Delta log its atomic commits.
+//! * [`MemStore`] — in-memory backend for tests and microbenches.
+//! * [`FsStore`] — filesystem backend (durable across runs).
+//! * [`SimStore`] — a wrapper that charges a cloud **cost model** (first-byte
+//!   latency + shared-link bandwidth) against wall-clock time, reproducing
+//!   the paper's network-bound regime.
+//! * [`ObjectStoreHandle`] — cheap-to-clone handle that counts operations
+//!   and bytes for the metrics/bench layers.
+
+mod fs;
+mod mem;
+mod sim;
+
+pub use fs::FsStore;
+pub use mem::MemStore;
+pub use sim::{CostModel, SimStore};
+
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The S3-like object store interface.
+///
+/// Keys are `/`-separated UTF-8 paths. Stores are flat key-value maps; the
+/// hierarchy is purely a naming convention (as in S3).
+pub trait ObjectStore: Send + Sync {
+    /// Store an object, overwriting any existing value.
+    fn put(&self, key: &str, data: &[u8]) -> Result<()>;
+
+    /// Store an object only if `key` does not exist.
+    ///
+    /// Returns `true` on success, `false` if the key already existed. This
+    /// is the primitive that makes Delta commits atomic (compare S3
+    /// `If-None-Match: *`).
+    fn put_if_absent(&self, key: &str, data: &[u8]) -> Result<bool>;
+
+    /// Fetch a whole object. Errors if the key does not exist.
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+
+    /// Fetch `len` bytes starting at `off` (clamped to the object size).
+    fn get_range(&self, key: &str, off: u64, len: u64) -> Result<Vec<u8>>;
+
+    /// Object size in bytes, or `None` if absent.
+    fn head(&self, key: &str) -> Result<Option<u64>>;
+
+    /// All keys with the given prefix, sorted ascending.
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Remove an object (no-op if absent).
+    fn delete(&self, key: &str) -> Result<()>;
+
+    /// Fetch the last `n` bytes of an object (S3 suffix range). The default
+    /// implementation pays a HEAD + ranged GET; backends override with a
+    /// single request. Returns fewer bytes when the object is smaller.
+    fn get_tail(&self, key: &str, n: u64) -> Result<Vec<u8>> {
+        let size = self
+            .head(key)?
+            .ok_or_else(|| anyhow::anyhow!("object not found: {key}"))?;
+        let start = size.saturating_sub(n);
+        self.get_range(key, start, size - start)
+    }
+}
+
+/// Operation/byte counters shared by all clones of a handle.
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    /// Number of GET (and range-GET) requests.
+    pub get_ops: AtomicU64,
+    /// Number of PUT (and conditional-PUT) requests.
+    pub put_ops: AtomicU64,
+    /// Number of LIST requests.
+    pub list_ops: AtomicU64,
+    /// Bytes downloaded by GETs.
+    pub bytes_read: AtomicU64,
+    /// Bytes uploaded by PUTs.
+    pub bytes_written: AtomicU64,
+}
+
+impl StoreStats {
+    /// Snapshot (get_ops, put_ops, list_ops, bytes_read, bytes_written).
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.get_ops.load(Ordering::Relaxed),
+            self.put_ops.load(Ordering::Relaxed),
+            self.list_ops.load(Ordering::Relaxed),
+            self.bytes_read.load(Ordering::Relaxed),
+            self.bytes_written.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Reset all counters to zero.
+    pub fn reset(&self) {
+        self.get_ops.store(0, Ordering::Relaxed);
+        self.put_ops.store(0, Ordering::Relaxed);
+        self.list_ops.store(0, Ordering::Relaxed);
+        self.bytes_read.store(0, Ordering::Relaxed);
+        self.bytes_written.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A cheap-to-clone, metrics-counting handle to an object store.
+#[derive(Clone)]
+pub struct ObjectStoreHandle {
+    inner: Arc<dyn ObjectStore>,
+    stats: Arc<StoreStats>,
+}
+
+impl std::fmt::Debug for ObjectStoreHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObjectStoreHandle").finish_non_exhaustive()
+    }
+}
+
+impl ObjectStoreHandle {
+    /// Wrap any backend.
+    pub fn new(inner: Arc<dyn ObjectStore>) -> Self {
+        Self { inner, stats: Arc::new(StoreStats::default()) }
+    }
+
+    /// New in-memory store.
+    pub fn mem() -> Self {
+        Self::new(Arc::new(MemStore::new()))
+    }
+
+    /// New filesystem store rooted at `root`.
+    pub fn fs(root: impl Into<std::path::PathBuf>) -> Result<Self> {
+        Ok(Self::new(Arc::new(FsStore::new(root)?)))
+    }
+
+    /// New in-memory store behind the given cloud cost model.
+    pub fn sim_mem(cost: CostModel) -> Self {
+        Self::new(Arc::new(SimStore::new(Arc::new(MemStore::new()), cost)))
+    }
+
+    /// New filesystem store behind the given cloud cost model.
+    pub fn sim_fs(root: impl Into<std::path::PathBuf>, cost: CostModel) -> Result<Self> {
+        Ok(Self::new(Arc::new(SimStore::new(Arc::new(FsStore::new(root)?), cost))))
+    }
+
+    /// Shared operation counters.
+    pub fn stats(&self) -> &StoreStats {
+        &self.stats
+    }
+
+    /// Total bytes currently stored under a prefix (sum of object sizes).
+    pub fn usage(&self, prefix: &str) -> Result<u64> {
+        let keys = self.inner.list(prefix)?;
+        let mut total = 0u64;
+        for k in keys {
+            total += self.inner.head(&k)?.unwrap_or(0);
+        }
+        Ok(total)
+    }
+}
+
+impl ObjectStore for ObjectStoreHandle {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.stats.put_ops.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.inner.put(key, data)
+    }
+
+    fn put_if_absent(&self, key: &str, data: &[u8]) -> Result<bool> {
+        self.stats.put_ops.fetch_add(1, Ordering::Relaxed);
+        let ok = self.inner.put_if_absent(key, data)?;
+        if ok {
+            self.stats.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
+        }
+        Ok(ok)
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.stats.get_ops.fetch_add(1, Ordering::Relaxed);
+        let data = self.inner.get(key)?;
+        self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn get_range(&self, key: &str, off: u64, len: u64) -> Result<Vec<u8>> {
+        self.stats.get_ops.fetch_add(1, Ordering::Relaxed);
+        let data = self.inner.get_range(key, off, len)?;
+        self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+
+    fn head(&self, key: &str) -> Result<Option<u64>> {
+        self.inner.head(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.stats.list_ops.fetch_add(1, Ordering::Relaxed);
+        self.inner.list(prefix)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.inner.delete(key)
+    }
+
+    fn get_tail(&self, key: &str, n: u64) -> Result<Vec<u8>> {
+        self.stats.get_ops.fetch_add(1, Ordering::Relaxed);
+        let data = self.inner.get_tail(key, n)?;
+        self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(data)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod conformance {
+    //! A conformance suite every backend must pass; called from each
+    //! backend's tests so Mem/Fs/Sim behave identically.
+    use super::*;
+
+    pub fn run(store: &dyn ObjectStore) {
+        // put/get roundtrip
+        store.put("a/b/1", b"hello").unwrap();
+        assert_eq!(store.get("a/b/1").unwrap(), b"hello");
+        // overwrite
+        store.put("a/b/1", b"world!").unwrap();
+        assert_eq!(store.get("a/b/1").unwrap(), b"world!");
+        // head
+        assert_eq!(store.head("a/b/1").unwrap(), Some(6));
+        assert_eq!(store.head("missing").unwrap(), None);
+        // get missing errors
+        assert!(store.get("missing").is_err());
+        // range get with clamping
+        assert_eq!(store.get_range("a/b/1", 1, 3).unwrap(), b"orl");
+        assert_eq!(store.get_range("a/b/1", 4, 100).unwrap(), b"d!");
+        assert_eq!(store.get_range("a/b/1", 100, 5).unwrap(), b"");
+        // put_if_absent
+        assert!(!store.put_if_absent("a/b/1", b"x").unwrap());
+        assert!(store.put_if_absent("a/b/2", b"x").unwrap());
+        assert_eq!(store.get("a/b/2").unwrap(), b"x");
+        // list is sorted and prefix-filtered
+        store.put("a/c", b"y").unwrap();
+        store.put("z", b"y").unwrap();
+        let keys = store.list("a/").unwrap();
+        assert_eq!(keys, vec!["a/b/1".to_string(), "a/b/2".to_string(), "a/c".to_string()]);
+        assert_eq!(store.list("").unwrap().len(), 4);
+        // delete idempotent
+        store.delete("a/b/2").unwrap();
+        store.delete("a/b/2").unwrap();
+        assert_eq!(store.head("a/b/2").unwrap(), None);
+        // empty object
+        store.put("empty", b"").unwrap();
+        assert_eq!(store.get("empty").unwrap(), b"");
+        assert_eq!(store.head("empty").unwrap(), Some(0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_counts_ops() {
+        let h = ObjectStoreHandle::mem();
+        h.put("k", &[0u8; 100]).unwrap();
+        let _ = h.get("k").unwrap();
+        let _ = h.get_range("k", 0, 10).unwrap();
+        let _ = h.list("").unwrap();
+        let (g, p, l, br, bw) = h.stats().snapshot();
+        assert_eq!((g, p, l), (2, 1, 1));
+        assert_eq!(br, 110);
+        assert_eq!(bw, 100);
+        h.stats().reset();
+        assert_eq!(h.stats().snapshot(), (0, 0, 0, 0, 0));
+    }
+
+    #[test]
+    fn usage_sums_sizes() {
+        let h = ObjectStoreHandle::mem();
+        h.put("t/a", &[0u8; 10]).unwrap();
+        h.put("t/b", &[0u8; 20]).unwrap();
+        h.put("u/c", &[0u8; 40]).unwrap();
+        assert_eq!(h.usage("t/").unwrap(), 30);
+        assert_eq!(h.usage("").unwrap(), 70);
+    }
+
+    #[test]
+    fn conditional_put_counts_bytes_only_on_success() {
+        let h = ObjectStoreHandle::mem();
+        assert!(h.put_if_absent("k", &[0u8; 50]).unwrap());
+        assert!(!h.put_if_absent("k", &[0u8; 50]).unwrap());
+        let (_, p, _, _, bw) = h.stats().snapshot();
+        assert_eq!(p, 2);
+        assert_eq!(bw, 50);
+    }
+}

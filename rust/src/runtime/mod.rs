@@ -1,0 +1,340 @@
+//! PJRT runtime: load and execute the AOT-compiled decode pipelines.
+//!
+//! `make artifacts` runs python once, producing `artifacts/<name>.hlo.txt`
+//! plus `manifest.json`; this module loads the HLO **text** (the xla crate's
+//! xla_extension 0.5.1 rejects jax's 64-bit-id serialized protos — the text
+//! parser reassigns ids), compiles each module on the PJRT CPU client, and
+//! exposes typed entry points the read path calls. Python never runs here.
+//!
+//! Executables are compiled lazily on first use and cached; the client is
+//! per-runtime. All entry points validate argument shapes against the
+//! manifest before dispatch.
+
+use crate::jsonx::{self, Json};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Input spec for one artifact, parsed from `manifest.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// HLO text filename relative to the artifact dir.
+    pub file: String,
+    /// Parameter shapes and dtype names, in call order.
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+/// Lazily compiled PJRT runtime over an artifact directory.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: HashMap<String, ArtifactSpec>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("entry_points", &self.manifest.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, creates the CPU
+    /// PJRT client; compilation is deferred).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("missing {} — run `make artifacts`", mpath.display()))?;
+        let j = jsonx::parse(&text)?;
+        let mut manifest = HashMap::new();
+        for (name, meta) in j.as_obj().context("manifest must be an object")? {
+            let file =
+                meta.get("file").and_then(Json::as_str).context("manifest entry missing file")?;
+            let mut inputs = Vec::new();
+            for input in meta.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape = input
+                    .get("shape")
+                    .and_then(Json::to_int_vec)
+                    .context("input missing shape")?
+                    .into_iter()
+                    .map(|d| d as usize)
+                    .collect();
+                let dtype =
+                    input.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+                inputs.push((shape, dtype));
+            }
+            manifest.insert(name.clone(), ArtifactSpec { file: file.to_string(), inputs });
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+        Ok(Self { dir, client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Entry-point names available in this runtime.
+    pub fn entry_points(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
+        names.sort();
+        names
+    }
+
+    /// Input spec for an entry point.
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name).with_context(|| format!("unknown entry point {name:?}"))
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.spec(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry point on raw literals; returns the tuple elements.
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.spec(name)?;
+        ensure!(
+            args.len() == spec.inputs.len(),
+            "{name} expects {} args, got {}",
+            spec.inputs.len(),
+            args.len()
+        );
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
+    }
+
+    // ----------------------------------------------------------- typed APIs
+
+    /// XLA-accelerated sparse decode: padded COO -> dense f32.
+    ///
+    /// `indices` is row-major `[cap, ndim]`, `values` is `[cap]`; both padded
+    /// to the capacity in the manifest (`decode_coo_raw`). Returns the dense
+    /// tensor flattened row-major.
+    pub fn decode_coo(&self, indices: &[i32], values: &[f32]) -> Result<Vec<f32>> {
+        // Prefer the XLA-native scatter artifact on CPU; the Pallas scatter
+        // (decode_coo_raw) is the TPU-lowered path and interpret-mode HLO
+        // executes its scatter loop sequentially (see EXPERIMENTS.md §Perf).
+        let entry = if self.manifest.contains_key("decode_coo_fast") {
+            "decode_coo_fast"
+        } else {
+            "decode_coo_raw"
+        };
+        let spec = self.spec(entry)?;
+        let (idx_shape, _) = &spec.inputs[0];
+        let (val_shape, _) = &spec.inputs[1];
+        ensure!(
+            indices.len() == idx_shape[0] * idx_shape[1],
+            "indices must be padded to {idx_shape:?}"
+        );
+        ensure!(values.len() == val_shape[0], "values must be padded to {val_shape:?}");
+        let idx = xla::Literal::vec1(indices)
+            .reshape(&idx_shape.iter().map(|&d| d as i64).collect::<Vec<_>>())
+            .map_err(|e| anyhow::anyhow!("reshape idx: {e:?}"))?;
+        let val = xla::Literal::vec1(values);
+        let out = self.execute(entry, &[idx, val])?;
+        ensure!(out.len() == 1, "{entry} returns one output");
+        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Capacity (max padded nnz), rank, and output shape of the COO decode
+    /// artifact. The output shape mirrors python/compile/aot.py.
+    pub fn decode_coo_capacity(&self) -> Result<(usize, usize, Vec<usize>)> {
+        let spec = self.spec("decode_coo_raw")?;
+        let cap = spec.inputs[0].0[0];
+        let ndim = spec.inputs[0].0[1];
+        Ok((cap, ndim, vec![24, 64, 64]))
+    }
+
+    /// XLA-accelerated FTSF preprocess: u8 chunk batch -> normalized f32.
+    pub fn preprocess_chunks(&self, chunks: &[u8]) -> Result<Vec<f32>> {
+        let spec = self.spec("preprocess_chunks")?;
+        let (shape, _) = &spec.inputs[0];
+        let numel: usize = shape.iter().product();
+        ensure!(chunks.len() == numel, "chunk batch must be {shape:?} = {numel} bytes");
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            shape,
+            chunks,
+        )
+        .map_err(|e| anyhow::anyhow!("u8 literal: {e:?}"))?;
+        let out = self.execute("preprocess_chunks", &[lit])?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// XLA-accelerated BSGS block gather -> dense plane (row-major f32).
+    pub fn decode_blocks(&self, block_idx: &[i32], block_vals: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.spec("decode_blocks")?;
+        let (idx_shape, _) = &spec.inputs[0];
+        let (val_shape, _) = &spec.inputs[1];
+        ensure!(
+            block_idx.len() == idx_shape.iter().product::<usize>(),
+            "block_idx padded shape {idx_shape:?}"
+        );
+        ensure!(
+            block_vals.len() == val_shape.iter().product::<usize>(),
+            "block_vals padded shape {val_shape:?}"
+        );
+        let idx = xla::Literal::vec1(block_idx)
+            .reshape(&idx_shape.iter().map(|&d| d as i64).collect::<Vec<_>>())
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let val = xla::Literal::vec1(block_vals)
+            .reshape(&val_shape.iter().map(|&d| d as i64).collect::<Vec<_>>())
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let out = self.execute("decode_blocks", &[idx, val])?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Pad a COO tensor slice into the artifact's fixed capacity, erroring
+    /// if it does not fit. Returns (indices, values) ready for
+    /// [`Runtime::decode_coo`].
+    pub fn pad_coo(
+        &self,
+        coords: &[u32],
+        values: &[f64],
+        ndim: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let spec = self.spec("decode_coo_raw")?;
+        let cap = spec.inputs[0].0[0];
+        let art_ndim = spec.inputs[0].0[1];
+        ensure!(ndim == art_ndim, "artifact decodes rank-{art_ndim}, tensor is rank-{ndim}");
+        let nnz = values.len();
+        ensure!(nnz <= cap, "{nnz} nnz exceeds artifact capacity {cap}");
+        let mut idx = vec![0i32; cap * ndim];
+        let mut val = vec![0f32; cap];
+        for r in 0..nnz {
+            for d in 0..ndim {
+                idx[r * ndim + d] = coords[r * ndim + d] as i32;
+            }
+            val[r] = values[r] as f32;
+        }
+        Ok((idx, val))
+    }
+}
+
+/// Locate the artifacts directory: `$DELTA_TENSOR_ARTIFACTS` or
+/// `<repo>/artifacts` relative to the current dir, walking up.
+pub fn default_artifact_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("DELTA_TENSOR_ARTIFACTS") {
+        return Ok(PathBuf::from(dir));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!("no artifacts/manifest.json found — run `make artifacts`");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // These tests need `make artifacts` to have run; skip gracefully in
+        // environments without the artifact dir (make test runs them).
+        let dir = default_artifact_dir().ok()?;
+        Runtime::open(dir).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_entry_points() {
+        let Some(rt) = runtime() else { return };
+        let names = rt.entry_points();
+        for expected in ["decode_coo", "decode_coo_raw", "decode_blocks", "preprocess_chunks"] {
+            assert!(names.contains(&expected), "missing {expected} in {names:?}");
+        }
+        assert_eq!(rt.spec("decode_coo_raw").unwrap().inputs.len(), 2);
+        assert!(rt.spec("nope").is_err());
+    }
+
+    #[test]
+    fn decode_coo_roundtrip_against_cpu_reference() {
+        let Some(rt) = runtime() else { return };
+        let (cap, ndim, out_shape) = rt.decode_coo_capacity().unwrap();
+        assert_eq!(ndim, 3);
+        let mut indices = vec![0i32; cap * ndim];
+        let mut values = vec![0f32; cap];
+        let entries = [([1usize, 2, 3], 7.5f32), ([0, 0, 0], 1.0), ([23, 63, 63], -2.0)];
+        for (r, (c, v)) in entries.iter().enumerate() {
+            for d in 0..3 {
+                indices[r * 3 + d] = c[d] as i32;
+            }
+            values[r] = *v;
+        }
+        let dense = rt.decode_coo(&indices, &values).unwrap();
+        let numel: usize = out_shape.iter().product();
+        assert_eq!(dense.len(), numel);
+        let at = |c: &[usize]| dense[(c[0] * out_shape[1] + c[1]) * out_shape[2] + c[2]];
+        assert_eq!(at(&[1, 2, 3]), 7.5);
+        assert_eq!(at(&[0, 0, 0]), 1.0);
+        assert_eq!(at(&[23, 63, 63]), -2.0);
+        assert_eq!(dense.iter().filter(|&&x| x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn preprocess_chunks_normalizes() {
+        let Some(rt) = runtime() else { return };
+        let spec = rt.spec("preprocess_chunks").unwrap();
+        let numel: usize = spec.inputs[0].0.iter().product();
+        let chunks = vec![255u8; numel];
+        let out = rt.preprocess_chunks(&chunks).unwrap();
+        assert_eq!(out.len(), numel);
+        assert!(out.iter().all(|&x| (x - 2.0).abs() < 1e-6), "255 -> (1-0.5)/0.25 = 2");
+    }
+
+    #[test]
+    fn decode_blocks_places_blocks() {
+        let Some(rt) = runtime() else { return };
+        let spec = rt.spec("decode_blocks").unwrap();
+        let (cap, bh, bw) = (spec.inputs[1].0[0], spec.inputs[1].0[1], spec.inputs[1].0[2]);
+        let mut idx = vec![0i32; cap * 2];
+        let mut vals = vec![0f32; cap * bh * bw];
+        idx[0] = 1; // block 0 at grid (1, 2), all 3.0
+        idx[1] = 2;
+        for v in vals[..bh * bw].iter_mut() {
+            *v = 3.0;
+        }
+        let plane = rt.decode_blocks(&idx, &vals).unwrap();
+        let width = 16 * bw;
+        assert_eq!(plane[bh * width + 2 * bw], 3.0);
+        assert_eq!(plane[0], 0.0);
+        assert_eq!(plane.iter().filter(|&&x| x != 0.0).count(), bh * bw);
+    }
+
+    #[test]
+    fn pad_coo_validates_capacity() {
+        let Some(rt) = runtime() else { return };
+        let coords = vec![0u32, 1, 2];
+        let vals = vec![5.0f64];
+        let (idx, val) = rt.pad_coo(&coords, &vals, 3).unwrap();
+        let spec = rt.spec("decode_coo_raw").unwrap();
+        assert_eq!(idx.len(), spec.inputs[0].0[0] * 3);
+        assert_eq!(val[0], 5.0);
+        assert!(rt.pad_coo(&coords, &vals, 2).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! Dense n-dimensional tensors stored as contiguous row-major bytes —
+//! the in-memory equivalent of `numpy.ndarray` in the paper's pipeline.
+
+use super::{linearize, numel, DType, Slice};
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// A contiguous row-major dense tensor.
+///
+/// Data is held as raw little-endian bytes plus a dtype, which makes
+/// (de)serialization to the storage formats zero-copy where possible and
+/// keeps one concrete type across all dtypes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseTensor {
+    dtype: DType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl DenseTensor {
+    /// Build a tensor from raw little-endian bytes.
+    pub fn from_bytes(dtype: DType, shape: &[usize], data: Vec<u8>) -> Result<Self> {
+        ensure!(
+            data.len() == numel(shape) * dtype.size(),
+            "byte length {} does not match shape {:?} of dtype {}",
+            data.len(),
+            shape,
+            dtype.name()
+        );
+        Ok(Self { dtype, shape: shape.to_vec(), data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        Self { dtype, shape: shape.to_vec(), data: vec![0u8; numel(shape) * dtype.size()] }
+    }
+
+    /// Build an f32 tensor from values.
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Result<Self> {
+        ensure!(values.len() == numel(shape), "value count mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::from_bytes(DType::F32, shape, data)
+    }
+
+    /// Build an f64 tensor from values.
+    pub fn from_f64(shape: &[usize], values: &[f64]) -> Result<Self> {
+        ensure!(values.len() == numel(shape), "value count mismatch");
+        let mut data = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::from_bytes(DType::F64, shape, data)
+    }
+
+    /// Build a u8 tensor from values.
+    pub fn from_u8(shape: &[usize], values: Vec<u8>) -> Result<Self> {
+        ensure!(values.len() == numel(shape), "value count mismatch");
+        Self::from_bytes(DType::U8, shape, values)
+    }
+
+    /// Element type.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Shape (sizes per dimension).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of dimensions.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    /// Raw little-endian bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Consume into raw bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// Total byte size of the payload.
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// View as f32 values (dtype must be F32).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        ensure!(self.dtype == DType::F32, "dtype is {}", self.dtype.name());
+        Ok(self.data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// View as f64 values (dtype must be F64).
+    pub fn as_f64(&self) -> Result<Vec<f64>> {
+        ensure!(self.dtype == DType::F64, "dtype is {}", self.dtype.name());
+        Ok(self.data.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Element at a multi-index as f64 (any dtype).
+    pub fn get_as_f64(&self, index: &[usize]) -> Result<f64> {
+        ensure!(index.len() == self.shape.len(), "rank mismatch");
+        for (i, (&ix, &d)) in index.iter().zip(&self.shape).enumerate() {
+            ensure!(ix < d, "index {ix} out of bounds for dim {i} (size {d})");
+        }
+        let off = linearize(index, &self.shape) * self.dtype.size();
+        Ok(match self.dtype {
+            DType::U8 => self.data[off] as f64,
+            DType::I32 => {
+                i32::from_le_bytes(self.data[off..off + 4].try_into().unwrap()) as f64
+            }
+            DType::I64 => {
+                i64::from_le_bytes(self.data[off..off + 8].try_into().unwrap()) as f64
+            }
+            DType::F32 => {
+                f32::from_le_bytes(self.data[off..off + 4].try_into().unwrap()) as f64
+            }
+            DType::F64 => f64::from_le_bytes(self.data[off..off + 8].try_into().unwrap()),
+        })
+    }
+
+    /// Set the element at a multi-index from an f64 (any dtype; lossy for
+    /// integer dtypes via truncation toward zero).
+    pub fn set_from_f64(&mut self, index: &[usize], v: f64) -> Result<()> {
+        ensure!(index.len() == self.shape.len(), "rank mismatch");
+        let off = linearize(index, &self.shape) * self.dtype.size();
+        match self.dtype {
+            DType::U8 => self.data[off] = v as u8,
+            DType::I32 => self.data[off..off + 4].copy_from_slice(&(v as i32).to_le_bytes()),
+            DType::I64 => self.data[off..off + 8].copy_from_slice(&(v as i64).to_le_bytes()),
+            DType::F32 => self.data[off..off + 4].copy_from_slice(&(v as f32).to_le_bytes()),
+            DType::F64 => self.data[off..off + 8].copy_from_slice(&v.to_le_bytes()),
+        }
+        Ok(())
+    }
+
+    /// Reshape in place (same number of elements).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        ensure!(numel(shape) == self.numel(), "reshape changes element count");
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Extract a contiguous sub-tensor described by `slice` (one range per
+    /// dimension). Copies row-fragments with memcpy-sized moves.
+    pub fn slice(&self, slice: &Slice) -> Result<DenseTensor> {
+        let ranges = slice.resolve(&self.shape)?;
+        let out_shape: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+        let esize = self.dtype.size();
+        let mut out = Vec::with_capacity(numel(&out_shape) * esize);
+
+        // The innermost dimension range is contiguous in memory: iterate the
+        // outer dims' cartesian product and memcpy inner runs.
+        if self.shape.is_empty() {
+            return DenseTensor::from_bytes(self.dtype, &[], self.data.clone());
+        }
+        if out_shape.iter().any(|&d| d == 0) {
+            // Empty selection in some dimension: no bytes to copy.
+            return Ok(DenseTensor::zeros(self.dtype, &out_shape));
+        }
+        let inner = ranges.last().unwrap().clone();
+        let inner_bytes = (inner.end - inner.start) * esize;
+        let outer_ranges = &ranges[..ranges.len() - 1];
+        let mut idx: Vec<usize> = outer_ranges.iter().map(|r| r.start).collect();
+        let strides = super::strides_for(&self.shape);
+        loop {
+            // offset of (idx..., inner.start)
+            let mut off = inner.start;
+            for (i, &ix) in idx.iter().enumerate() {
+                off += ix * strides[i];
+            }
+            let start = off * esize;
+            out.extend_from_slice(&self.data[start..start + inner_bytes]);
+            // increment the outer multi-index
+            let mut dim = idx.len();
+            loop {
+                if dim == 0 {
+                    return DenseTensor::from_bytes(self.dtype, &out_shape, out);
+                }
+                dim -= 1;
+                idx[dim] += 1;
+                if idx[dim] < outer_ranges[dim].end {
+                    break;
+                }
+                idx[dim] = outer_ranges[dim].start;
+            }
+        }
+    }
+
+    /// Count of non-zero elements (used to decide sparse vs dense routing).
+    pub fn count_nonzero(&self) -> usize {
+        let esize = self.dtype.size();
+        self.data.chunks_exact(esize).filter(|c| c.iter().any(|&b| b != 0)).count()
+    }
+
+    /// Fraction of non-zero elements in [0, 1].
+    pub fn density(&self) -> f64 {
+        if self.numel() == 0 {
+            return 0.0;
+        }
+        self.count_nonzero() as f64 / self.numel() as f64
+    }
+}
+
+impl DenseTensor {
+    /// Validate internal invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.data.len() != self.numel() * self.dtype.size() {
+            bail!("data length inconsistent with shape");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = DenseTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.ndim(), 2);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.get_as_f64(&[1, 2]).unwrap(), 6.0);
+        assert_eq!(t.as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(DenseTensor::from_f32(&[2, 3], &[1., 2.]).is_err());
+        assert!(DenseTensor::from_bytes(DType::F32, &[2], vec![0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn get_set_all_dtypes() {
+        for dtype in [DType::U8, DType::I32, DType::I64, DType::F32, DType::F64] {
+            let mut t = DenseTensor::zeros(dtype, &[3, 3]);
+            t.set_from_f64(&[1, 1], 42.0).unwrap();
+            assert_eq!(t.get_as_f64(&[1, 1]).unwrap(), 42.0, "{}", dtype.name());
+            assert_eq!(t.get_as_f64(&[0, 0]).unwrap(), 0.0);
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_get_rejected() {
+        let t = DenseTensor::zeros(DType::F32, &[2, 2]);
+        assert!(t.get_as_f64(&[2, 0]).is_err());
+        assert!(t.get_as_f64(&[0]).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = DenseTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        let r = t.clone().reshape(&[3, 2]).unwrap();
+        assert_eq!(r.as_f32().unwrap(), t.as_f32().unwrap());
+        assert!(t.clone().reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn slice_middle_block() {
+        // 4x4 matrix, slice rows 1..3, cols 2..4.
+        let vals: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let t = DenseTensor::from_f32(&[4, 4], &vals).unwrap();
+        let s = t.slice(&Slice::ranges(&[(1, 3), (2, 4)])).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.as_f32().unwrap(), vec![6., 7., 10., 11.]);
+    }
+
+    #[test]
+    fn slice_full_is_identity() {
+        let vals: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let t = DenseTensor::from_f32(&[2, 3, 4], &vals).unwrap();
+        let s = t.slice(&Slice::all(3)).unwrap();
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn slice_first_dim_prefix() {
+        let vals: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let t = DenseTensor::from_f32(&[4, 3, 2], &vals).unwrap();
+        let s = t.slice(&Slice::prefix(0, 2, 3)).unwrap();
+        assert_eq!(s.shape(), &[2, 3, 2]);
+        assert_eq!(s.as_f32().unwrap(), (0..12).map(|x| x as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn density_and_nonzero() {
+        let t = DenseTensor::from_f32(&[2, 2], &[0., 1., 0., 2.]).unwrap();
+        assert_eq!(t.count_nonzero(), 2);
+        assert!((t.density() - 0.5).abs() < 1e-12);
+        let z = DenseTensor::zeros(DType::U8, &[10]);
+        assert_eq!(z.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn slice_1d() {
+        let t = DenseTensor::from_f32(&[5], &[0., 1., 2., 3., 4.]).unwrap();
+        let s = t.slice(&Slice::ranges(&[(1, 4)])).unwrap();
+        assert_eq!(s.as_f32().unwrap(), vec![1., 2., 3.]);
+    }
+}

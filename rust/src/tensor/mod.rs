@@ -1,0 +1,137 @@
+//! Tensor data model: dtypes, dense tensors, sparse COO tensors and slice
+//! specifications — the in-memory representations that the storage formats
+//! in [`crate::formats`] encode and decode.
+
+mod dense;
+mod slice;
+mod sparse;
+
+pub use dense::DenseTensor;
+pub use slice::{Dim, Slice};
+pub use sparse::SparseCoo;
+
+use anyhow::bail;
+
+/// Element type of a tensor. Matches the numpy/PyTorch dtypes the paper's
+/// datasets use (u8 images, f32/f64 values, i64 indices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// Unsigned 8-bit (images).
+    U8,
+    /// Signed 32-bit integer.
+    I32,
+    /// Signed 64-bit integer (indices, counts).
+    I64,
+    /// IEEE-754 single precision.
+    F32,
+    /// IEEE-754 double precision.
+    F64,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::I32 | DType::F32 => 4,
+            DType::I64 | DType::F64 => 8,
+        }
+    }
+
+    /// Stable name used in table metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::U8 => "u8",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    /// Parse a [`DType::name`].
+    pub fn parse(s: &str) -> crate::Result<DType> {
+        Ok(match s {
+            "u8" => DType::U8,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// Number of elements implied by a shape (product of dims).
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Row-major (C-order) strides for a shape, in elements.
+pub fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+/// Linearize a multi-index into a row-major offset.
+#[inline]
+pub fn linearize(index: &[usize], shape: &[usize]) -> usize {
+    debug_assert_eq!(index.len(), shape.len());
+    let mut off = 0usize;
+    for (i, (&ix, &d)) in index.iter().zip(shape).enumerate() {
+        debug_assert!(ix < d, "index {ix} out of bounds for dim {i} of size {d}");
+        off = off * d + ix;
+    }
+    off
+}
+
+/// Inverse of [`linearize`]: decompose a flat offset into a multi-index.
+pub fn delinearize(mut off: usize, shape: &[usize]) -> Vec<usize> {
+    let mut idx = vec![0usize; shape.len()];
+    for i in (0..shape.len()).rev() {
+        idx[i] = off % shape[i];
+        off /= shape[i];
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [DType::U8, DType::I32, DType::I64, DType::F32, DType::F64] {
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DType::parse("f16").is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_for(&[5]), vec![1]);
+        assert_eq!(strides_for(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn linearize_delinearize_inverse() {
+        let shape = [3, 4, 5];
+        for off in 0..numel(&shape) {
+            let idx = delinearize(off, &shape);
+            assert_eq!(linearize(&idx, &shape), off);
+        }
+    }
+
+    #[test]
+    fn linearize_matches_strides() {
+        let shape = [2, 3, 4];
+        let strides = strides_for(&shape);
+        let idx = [1, 2, 3];
+        let manual: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        assert_eq!(linearize(&idx, &shape), manual);
+    }
+}

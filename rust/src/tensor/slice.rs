@@ -1,0 +1,138 @@
+//! Slice specifications — the paper's §III notation `X_S` (fix a prefix of
+//! indices / take ranges per dimension), e.g. `X[0:100, :, :, :]`.
+
+use crate::Result;
+use anyhow::ensure;
+use std::ops::Range;
+
+/// Per-dimension selection: either a half-open range or the full dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Dim {
+    /// The whole dimension (`:`).
+    All,
+    /// A half-open range `[start, end)`.
+    Range(usize, usize),
+}
+
+/// A slice over an n-dimensional tensor: one [`Dim`] per dimension.
+///
+/// `Slice::ranges(&[(0,100)])` on a rank-4 tensor means `X[0:100,:,:,:]` —
+/// unspecified trailing dimensions default to `All`, matching the paper's
+/// convention of omitting full dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Slice {
+    dims: Vec<Dim>,
+}
+
+impl Slice {
+    /// Select everything in a rank-`ndim` tensor.
+    pub fn all(ndim: usize) -> Self {
+        Self { dims: vec![Dim::All; ndim] }
+    }
+
+    /// Build from explicit (start, end) pairs; trailing dims default to All
+    /// when resolved against a higher-rank shape.
+    pub fn ranges(ranges: &[(usize, usize)]) -> Self {
+        Self { dims: ranges.iter().map(|&(s, e)| Dim::Range(s, e)).collect() }
+    }
+
+    /// A single index in dimension 0 (the paper's `X[i,:,:,:]` read-slice
+    /// workload): `index(3)` is `X[3:4, ...]`.
+    pub fn index(i: usize) -> Self {
+        Self { dims: vec![Dim::Range(i, i + 1)] }
+    }
+
+    /// Range `[start, end)` in dimension `dim`, everything elsewhere, for a
+    /// rank-`ndim` tensor.
+    pub fn prefix(dim: usize, end: usize, ndim: usize) -> Self {
+        let mut dims = vec![Dim::All; ndim];
+        dims[dim] = Dim::Range(0, end);
+        Self { dims }
+    }
+
+    /// Range in dimension 0: `X[start:end, ...]`.
+    pub fn dim0(start: usize, end: usize) -> Self {
+        Self { dims: vec![Dim::Range(start, end)] }
+    }
+
+    /// The per-dimension selections provided so far.
+    pub fn dims(&self) -> &[Dim] {
+        &self.dims
+    }
+
+    /// Resolve against a concrete shape into per-dimension ranges,
+    /// validating bounds. Missing trailing dims become full ranges.
+    pub fn resolve(&self, shape: &[usize]) -> Result<Vec<Range<usize>>> {
+        ensure!(
+            self.dims.len() <= shape.len(),
+            "slice rank {} exceeds tensor rank {}",
+            self.dims.len(),
+            shape.len()
+        );
+        let mut out = Vec::with_capacity(shape.len());
+        for (i, &d) in shape.iter().enumerate() {
+            let r = match self.dims.get(i) {
+                None | Some(Dim::All) => 0..d,
+                Some(&Dim::Range(s, e)) => {
+                    ensure!(s <= e, "slice dim {i}: start {s} > end {e}");
+                    ensure!(e <= d, "slice dim {i}: end {e} out of bounds (size {d})");
+                    s..e
+                }
+            };
+            out.push(r);
+        }
+        Ok(out)
+    }
+
+    /// The range selected in dimension 0 once resolved (convenience for
+    /// formats that prune on the leading dimension).
+    pub fn dim0_range(&self, shape: &[usize]) -> Result<Range<usize>> {
+        Ok(self.resolve(shape)?.remove(0))
+    }
+
+    /// Whether this slice selects the entire tensor of the given shape.
+    pub fn is_full(&self, shape: &[usize]) -> bool {
+        match self.resolve(shape) {
+            Ok(rs) => rs.iter().zip(shape).all(|(r, &d)| r.start == 0 && r.end == d),
+            Err(_) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_defaults_trailing_to_all() {
+        let s = Slice::ranges(&[(0, 2)]);
+        let rs = s.resolve(&[5, 6, 7]).unwrap();
+        assert_eq!(rs, vec![0..2, 0..6, 0..7]);
+    }
+
+    #[test]
+    fn index_slice() {
+        let s = Slice::index(3);
+        assert_eq!(s.resolve(&[10, 4]).unwrap(), vec![3..4, 0..4]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        assert!(Slice::ranges(&[(0, 11)]).resolve(&[10]).is_err());
+        assert!(Slice::ranges(&[(5, 3)]).resolve(&[10]).is_err());
+        assert!(Slice::ranges(&[(0, 1), (0, 1)]).resolve(&[10]).is_err());
+    }
+
+    #[test]
+    fn empty_range_allowed() {
+        let s = Slice::ranges(&[(3, 3)]);
+        assert_eq!(s.resolve(&[10]).unwrap(), vec![3..3]);
+    }
+
+    #[test]
+    fn is_full_detection() {
+        assert!(Slice::all(3).is_full(&[2, 3, 4]));
+        assert!(Slice::ranges(&[(0, 2)]).is_full(&[2, 3]));
+        assert!(!Slice::ranges(&[(0, 1)]).is_full(&[2, 3]));
+    }
+}

@@ -1,0 +1,270 @@
+//! Sparse COO tensors — the in-memory representation of the paper's sparse
+//! workloads (`torch.sparse_coo_tensor` equivalent): nnz coordinates plus
+//! values, with the dense shape carried alongside for exact reconstruction.
+
+use super::{numel, DType, DenseTensor, Slice};
+use crate::Result;
+use anyhow::ensure;
+
+/// A sparse tensor in coordinate (COO) format.
+///
+/// `indices` is nnz rows × ndim columns, flattened row-major (the paper's
+/// Figure 5 layout: one coordinate tuple per non-zero). Values are f64
+/// internally; the original dtype is preserved for round-trips.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseCoo {
+    dtype: DType,
+    shape: Vec<usize>,
+    /// nnz × ndim coordinate matrix, row-major.
+    indices: Vec<u32>,
+    /// nnz values.
+    values: Vec<f64>,
+}
+
+impl SparseCoo {
+    /// Build from parallel coordinate/value arrays.
+    pub fn new(
+        dtype: DType,
+        shape: &[usize],
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Result<Self> {
+        let ndim = shape.len();
+        ensure!(ndim > 0, "sparse tensor must have rank >= 1");
+        ensure!(
+            indices.len() == values.len() * ndim,
+            "indices length {} != nnz {} * ndim {}",
+            indices.len(),
+            values.len(),
+            ndim
+        );
+        for (r, row) in indices.chunks_exact(ndim).enumerate() {
+            for (d, (&ix, &size)) in row.iter().zip(shape).enumerate() {
+                ensure!(
+                    (ix as usize) < size,
+                    "nnz {r}: index {ix} out of bounds in dim {d} (size {size})"
+                );
+            }
+        }
+        Ok(Self { dtype, shape: shape.to_vec(), indices, values })
+    }
+
+    /// Element dtype of the equivalent dense tensor.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Dense shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Rank.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// nnz × ndim coordinates, row-major.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Values parallel to [`Self::indices`].
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Coordinate row `r`.
+    pub fn coord(&self, r: usize) -> &[u32] {
+        &self.indices[r * self.ndim()..(r + 1) * self.ndim()]
+    }
+
+    /// Fraction of non-zero elements.
+    pub fn density(&self) -> f64 {
+        let n = numel(&self.shape);
+        if n == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / n as f64
+        }
+    }
+
+    /// Sort entries lexicographically by coordinate (canonical order used by
+    /// the encoders; CSF construction requires it). Stable for duplicate
+    /// detection downstream.
+    pub fn sort_canonical(&mut self) {
+        let ndim = self.ndim();
+        let nnz = self.nnz();
+        let mut order: Vec<usize> = (0..nnz).collect();
+        let idx = &self.indices;
+        order.sort_by(|&a, &b| idx[a * ndim..(a + 1) * ndim].cmp(&idx[b * ndim..(b + 1) * ndim]));
+        let mut new_idx = Vec::with_capacity(self.indices.len());
+        let mut new_val = Vec::with_capacity(nnz);
+        for &r in &order {
+            new_idx.extend_from_slice(&self.indices[r * ndim..(r + 1) * ndim]);
+            new_val.push(self.values[r]);
+        }
+        self.indices = new_idx;
+        self.values = new_val;
+    }
+
+    /// True if entries are in canonical (lexicographic) coordinate order.
+    pub fn is_sorted(&self) -> bool {
+        let ndim = self.ndim();
+        (1..self.nnz()).all(|r| {
+            self.indices[(r - 1) * ndim..r * ndim] <= self.indices[r * ndim..(r + 1) * ndim]
+        })
+    }
+
+    /// Materialize to a dense tensor.
+    pub fn to_dense(&self) -> Result<DenseTensor> {
+        let mut out = DenseTensor::zeros(self.dtype, &self.shape);
+        let ndim = self.ndim();
+        let mut idx = vec![0usize; ndim];
+        for r in 0..self.nnz() {
+            for d in 0..ndim {
+                idx[d] = self.indices[r * ndim + d] as usize;
+            }
+            out.set_from_f64(&idx, self.values[r])?;
+        }
+        Ok(out)
+    }
+
+    /// Build from a dense tensor by scanning non-zeros (canonical order).
+    pub fn from_dense(t: &DenseTensor) -> Result<Self> {
+        let shape = t.shape().to_vec();
+        let ndim = shape.len();
+        ensure!(ndim > 0, "rank-0 tensors not supported");
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut idx = vec![0usize; ndim];
+        for flat in 0..t.numel() {
+            let mut off = flat;
+            for d in (0..ndim).rev() {
+                idx[d] = off % shape[d];
+                off /= shape[d];
+            }
+            let v = t.get_as_f64(&idx)?;
+            if v != 0.0 {
+                indices.extend(idx.iter().map(|&i| i as u32));
+                values.push(v);
+            }
+        }
+        Self::new(t.dtype(), &shape, indices, values)
+    }
+
+    /// Restrict to a slice, producing a sparse tensor of the sliced shape
+    /// with re-based coordinates.
+    pub fn slice(&self, slice: &Slice) -> Result<SparseCoo> {
+        let ranges = slice.resolve(&self.shape)?;
+        let out_shape: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+        let ndim = self.ndim();
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        'rows: for r in 0..self.nnz() {
+            let row = self.coord(r);
+            for (d, range) in ranges.iter().enumerate() {
+                let ix = row[d] as usize;
+                if ix < range.start || ix >= range.end {
+                    continue 'rows;
+                }
+            }
+            for (d, range) in ranges.iter().enumerate() {
+                indices.push(row[d] - range.start as u32);
+            }
+            let _ = ndim;
+            values.push(self.values[r]);
+        }
+        SparseCoo::new(self.dtype, &out_shape, indices, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SparseCoo {
+        // Paper Figure 5: shape [3,3,3] with 4 nnz.
+        SparseCoo::new(
+            DType::F32,
+            &[3, 3, 3],
+            vec![0, 0, 1, 1, 0, 0, 1, 1, 2, 2, 2, 2],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        assert!(SparseCoo::new(DType::F32, &[2, 2], vec![0, 0, 1], vec![1.0]).is_err());
+        assert!(SparseCoo::new(DType::F32, &[2, 2], vec![0, 2], vec![1.0]).is_err());
+        assert!(SparseCoo::new(DType::F32, &[], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let s = sample();
+        let d = s.to_dense().unwrap();
+        assert_eq!(d.get_as_f64(&[0, 0, 1]).unwrap(), 1.0);
+        assert_eq!(d.get_as_f64(&[2, 2, 2]).unwrap(), 4.0);
+        assert_eq!(d.count_nonzero(), 4);
+        let s2 = SparseCoo::from_dense(&d).unwrap();
+        assert_eq!(s2.nnz(), 4);
+        assert_eq!(s2.to_dense().unwrap(), d);
+    }
+
+    #[test]
+    fn density() {
+        let s = sample();
+        assert!((s.density() - 4.0 / 27.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_canonical_orders_rows() {
+        let mut s = SparseCoo::new(
+            DType::F64,
+            &[4, 4],
+            vec![3, 1, 0, 2, 1, 1],
+            vec![30.0, 2.0, 11.0],
+        )
+        .unwrap();
+        assert!(!s.is_sorted());
+        s.sort_canonical();
+        assert!(s.is_sorted());
+        assert_eq!(s.coord(0), &[0, 2]);
+        assert_eq!(s.values(), &[2.0, 11.0, 30.0]);
+    }
+
+    #[test]
+    fn slice_rebases_coordinates() {
+        let s = sample();
+        let sl = s.slice(&Slice::index(1)).unwrap();
+        assert_eq!(sl.shape(), &[1, 3, 3]);
+        assert_eq!(sl.nnz(), 2);
+        let d = sl.to_dense().unwrap();
+        assert_eq!(d.get_as_f64(&[0, 0, 0]).unwrap(), 2.0);
+        assert_eq!(d.get_as_f64(&[0, 1, 2]).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn slice_equivalence_with_dense() {
+        let s = sample();
+        let slice = Slice::ranges(&[(0, 2), (0, 2)]);
+        let via_sparse = s.slice(&slice).unwrap().to_dense().unwrap();
+        let via_dense = s.to_dense().unwrap().slice(&slice).unwrap();
+        assert_eq!(via_sparse, via_dense);
+    }
+
+    #[test]
+    fn from_dense_empty() {
+        let d = DenseTensor::zeros(DType::F32, &[3, 3]);
+        let s = SparseCoo::from_dense(&d).unwrap();
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.to_dense().unwrap(), d);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` generated cases from a deterministic
+//! [`Pcg64`] stream and, on failure, reports the failing case index and the
+//! seed needed to reproduce it. Generators are plain functions of the RNG,
+//! composed in the tests themselves.
+
+use crate::tensor::{DType, DenseTensor, SparseCoo};
+use crate::util::prng::Pcg64;
+
+/// Run `prop` over `n` cases generated from `gen`, panicking with the case
+/// seed on failure. Each case gets its own child RNG so failures reproduce
+/// independently of the case count.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    n: usize,
+    seed: u64,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut seeder = Pcg64::new(seed);
+    for case in 0..n {
+        let case_seed = seeder.next_u64();
+        let mut rng = Pcg64::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name} failed at case {case}/{n} (case_seed={case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generate a random shape with `rank` in the given range and each dim in
+/// `[1, max_dim]`.
+pub fn gen_shape(rng: &mut Pcg64, rank_lo: usize, rank_hi: usize, max_dim: usize) -> Vec<usize> {
+    let rank = rank_lo + rng.below(rank_hi - rank_lo + 1);
+    (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+}
+
+/// Generate a random dtype.
+pub fn gen_dtype(rng: &mut Pcg64) -> DType {
+    [DType::U8, DType::I32, DType::I64, DType::F32, DType::F64][rng.below(5)]
+}
+
+/// Generate a random sparse tensor with up to `max_nnz` distinct non-zeros.
+pub fn gen_sparse(rng: &mut Pcg64, shape: &[usize], max_nnz: usize) -> SparseCoo {
+    let total: usize = shape.iter().product();
+    let target = rng.below(max_nnz.min(total).max(1) + 1);
+    let mut set = std::collections::BTreeSet::new();
+    let mut attempts = 0;
+    while set.len() < target && attempts < target * 20 {
+        set.insert(shape.iter().map(|&d| rng.below(d) as u32).collect::<Vec<u32>>());
+        attempts += 1;
+    }
+    let mut idx = Vec::new();
+    let mut vals = Vec::new();
+    for c in set {
+        idx.extend_from_slice(&c);
+        // Integer-valued so every dtype represents them exactly.
+        vals.push(1.0 + rng.below(120) as f64);
+    }
+    SparseCoo::new(DType::F64, shape, idx, vals).unwrap()
+}
+
+/// Generate a random dense f32 tensor.
+pub fn gen_dense_f32(rng: &mut Pcg64, shape: &[usize]) -> DenseTensor {
+    let n: usize = shape.iter().product();
+    let vals: Vec<f32> = (0..n).map(|_| (rng.next_f32() * 100.0).round()).collect();
+    DenseTensor::from_f32(shape, &vals).unwrap()
+}
+
+/// Generate a random valid slice spec for a shape: each dim independently
+/// full or a random sub-range (possibly empty).
+pub fn gen_slice(rng: &mut Pcg64, shape: &[usize]) -> crate::tensor::Slice {
+    let specs: Vec<(usize, usize)> = shape
+        .iter()
+        .map(|&d| {
+            if rng.below(3) == 0 {
+                (0, d)
+            } else {
+                let a = rng.below(d + 1);
+                let b = a + rng.below(d - a + 1);
+                (a, b)
+            }
+        })
+        .collect();
+    crate::tensor::Slice::ranges(&specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("sum-commutes", 50, 1, |r| (r.next_u64() % 100, r.next_u64() % 100), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn check_reports_failures() {
+        check("always-fails", 5, 2, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_produce_valid_values() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let shape = gen_shape(&mut rng, 1, 4, 8);
+            assert!(!shape.is_empty() && shape.len() <= 4);
+            assert!(shape.iter().all(|&d| (1..=8).contains(&d)));
+            let s = gen_sparse(&mut rng, &shape, 20);
+            assert!(s.is_sorted());
+            let sl = gen_slice(&mut rng, &shape);
+            assert!(sl.resolve(&shape).is_ok());
+            let d = gen_dense_f32(&mut rng, &shape);
+            d.check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Fixed-width bit packing, the core of the columnar format's RLE/bit-packed
+//! hybrid encoding (the same scheme Parquet uses for levels and dictionary
+//! indices).
+
+/// Number of bits needed to represent `v` (0 → 0 bits).
+#[inline]
+pub fn bit_width(v: u64) -> u32 {
+    64 - v.leading_zeros()
+}
+
+/// Pack `values` at `width` bits each (LSB-first within bytes), appending to
+/// `out`. `width == 0` writes nothing (all values must be 0).
+pub fn pack(values: &[u64], width: u32, out: &mut Vec<u8>) {
+    debug_assert!(width <= 64);
+    if width == 0 {
+        debug_assert!(values.iter().all(|&v| v == 0));
+        return;
+    }
+    let mut acc: u128 = 0;
+    let mut nbits: u32 = 0;
+    for &v in values {
+        debug_assert!(width == 64 || v < (1u64 << width), "value {v} exceeds width {width}");
+        acc |= (v as u128) << nbits;
+        nbits += width;
+        while nbits >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push(acc as u8);
+    }
+}
+
+/// Unpack `count` values at `width` bits each from `buf` starting at `pos`,
+/// advancing `pos` past the consumed bytes. Returns `None` on truncation.
+pub fn unpack(buf: &[u8], pos: &mut usize, count: usize, width: u32) -> Option<Vec<u64>> {
+    if width == 0 {
+        return Some(vec![0u64; count]);
+    }
+    let total_bits = count as u64 * width as u64;
+    let nbytes = total_bits.div_ceil(8) as usize;
+    if *pos + nbytes > buf.len() {
+        return None;
+    }
+    let src = &buf[*pos..*pos + nbytes];
+    *pos += nbytes;
+    let mut values = Vec::with_capacity(count);
+    let mut acc: u128 = 0;
+    let mut nbits: u32 = 0;
+    let mut i = 0usize;
+    let mask: u128 = if width == 64 { u64::MAX as u128 } else { (1u128 << width) - 1 };
+    for _ in 0..count {
+        while nbits < width {
+            acc |= (src[i] as u128) << nbits;
+            nbits += 8;
+            i += 1;
+        }
+        values.push((acc & mask) as u64);
+        acc >>= width;
+        nbits -= width;
+    }
+    Some(values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn bit_width_basics() {
+        assert_eq!(bit_width(0), 0);
+        assert_eq!(bit_width(1), 1);
+        assert_eq!(bit_width(2), 2);
+        assert_eq!(bit_width(255), 8);
+        assert_eq!(bit_width(256), 9);
+        assert_eq!(bit_width(u64::MAX), 64);
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Pcg64::new(77);
+        for width in 0..=64u32 {
+            let n = 100;
+            let values: Vec<u64> = (0..n)
+                .map(|_| {
+                    if width == 0 {
+                        0
+                    } else if width == 64 {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & ((1u64 << width) - 1)
+                    }
+                })
+                .collect();
+            let mut buf = Vec::new();
+            pack(&values, width, &mut buf);
+            let mut pos = 0;
+            let back = unpack(&buf, &mut pos, n, width).unwrap();
+            assert_eq!(values, back, "width {width}");
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn packed_size_is_tight() {
+        let values = vec![3u64; 100];
+        let mut buf = Vec::new();
+        pack(&values, 2, &mut buf);
+        assert_eq!(buf.len(), 25); // 100 * 2 bits = 200 bits = 25 bytes
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let values = vec![1u64; 64];
+        let mut buf = Vec::new();
+        pack(&values, 7, &mut buf);
+        let mut pos = 0;
+        assert!(unpack(&buf[..buf.len() - 1], &mut pos, 64, 7).is_none());
+    }
+}

@@ -1,0 +1,94 @@
+//! Byte-size formatting and little-endian scalar (de)serialization helpers
+//! shared by the columnar format and the binary tensor formats.
+
+/// Format a byte count with binary units ("14.6 GiB").
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{:.2} {}", v, UNITS[u])
+}
+
+/// Write a little-endian u32.
+#[inline]
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Write a little-endian u64.
+#[inline]
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read a little-endian u32 at `pos`, advancing it.
+#[inline]
+pub fn get_u32(buf: &[u8], pos: &mut usize) -> Option<u32> {
+    let b = buf.get(*pos..*pos + 4)?;
+    *pos += 4;
+    Some(u32::from_le_bytes(b.try_into().ok()?))
+}
+
+/// Read a little-endian u64 at `pos`, advancing it.
+#[inline]
+pub fn get_u64(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let b = buf.get(*pos..*pos + 8)?;
+    *pos += 8;
+    Some(u64::from_le_bytes(b.try_into().ok()?))
+}
+
+/// Reinterpret a `&[f32]` as little-endian bytes (copies; portable).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_bytes`]; `None` if length is not a multiple of 4.
+pub fn bytes_to_f32s(b: &[u8]) -> Option<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return None;
+    }
+    Some(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1024), "1.00 KiB");
+        assert_eq!(human_bytes(14_600_000_000), "13.60 GiB");
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEADBEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        let mut pos = 0;
+        assert_eq!(get_u32(&buf, &mut pos), Some(0xDEADBEEF));
+        assert_eq!(get_u64(&buf, &mut pos), Some(u64::MAX - 1));
+        assert_eq!(get_u32(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![0.0f32, -1.5, f32::MAX, f32::MIN_POSITIVE, 3.14159];
+        let b = f32s_to_bytes(&xs);
+        assert_eq!(bytes_to_f32s(&b).unwrap(), xs);
+        assert!(bytes_to_f32s(&b[..5]).is_none());
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities shared by every layer: deterministic
+//! PRNGs, varint/zigzag coding, bit-packing, wall-clock timing statistics
+//! and human-readable byte formatting.
+//!
+//! Everything here is dependency-free on purpose: the offline build
+//! environment ships no `rand`, `serde` or `criterion`, so the substrate
+//! equivalents live in this module.
+
+pub mod bits;
+pub mod bytes;
+pub mod prng;
+pub mod timing;
+pub mod varint;
+
+pub use bytes::human_bytes;
+pub use prng::{Pcg64, SplitMix64};
+pub use timing::{RunStats, Stopwatch};

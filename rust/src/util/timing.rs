@@ -1,0 +1,158 @@
+//! Timing helpers for the bench harness (criterion is unavailable offline,
+//! so the repo carries its own minimal measurement machinery).
+
+use std::time::{Duration, Instant};
+
+/// A simple wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart, returning the lap time.
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+/// Accumulated statistics over repeated measurements (seconds).
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    samples: Vec<f64>,
+}
+
+impl RunStats {
+    /// Create an empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample (seconds).
+    pub fn push(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    /// Time `f` once and record it; returns the function's output.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.push(sw.secs());
+        out
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Arithmetic mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (0 if <2 samples).
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Minimum sample (0 if empty).
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// p-th percentile (nearest-rank; p in [0,100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    /// Median.
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_stddev() {
+        let mut s = RunStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.count(), 5);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = RunStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert_eq!(s.median(), 0.0);
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let mut s = RunStats::new();
+        for x in (0..100).rev() {
+            s.push(x as f64);
+        }
+        assert!(s.percentile(0.0) <= s.percentile(50.0));
+        assert!(s.percentile(50.0) <= s.percentile(99.0));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(sw.secs() > 0.0);
+    }
+
+    #[test]
+    fn time_records_sample() {
+        let mut s = RunStats::new();
+        let v = s.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(s.count(), 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! LEB128 varint and zigzag coding, used by the columnar format's
+//! DELTA_BINARY_PACKED-style integer encoding and by binary metadata
+//! records. Matches the wire format used by Parquet/protobuf so the
+//! compression characteristics carry over.
+
+/// Append `v` as an unsigned LEB128 varint.
+#[inline]
+pub fn write_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7F) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Read an unsigned LEB128 varint from `buf` at `pos`, advancing `pos`.
+#[inline]
+pub fn read_uvarint(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos)?;
+        *pos += 1;
+        if shift >= 64 {
+            return None; // overlong encoding
+        }
+        v |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+/// ZigZag-encode a signed value so small magnitudes become small varints.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append a signed value as zigzag varint.
+#[inline]
+pub fn write_ivarint(out: &mut Vec<u8>, v: i64) {
+    write_uvarint(out, zigzag(v));
+}
+
+/// Read a signed zigzag varint.
+#[inline]
+pub fn read_ivarint(buf: &[u8], pos: &mut usize) -> Option<i64> {
+    read_uvarint(buf, pos).map(unzigzag)
+}
+
+/// Append a length-prefixed byte string.
+pub fn write_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    write_uvarint(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+/// Read a length-prefixed byte string.
+pub fn read_bytes<'a>(buf: &'a [u8], pos: &mut usize) -> Option<&'a [u8]> {
+    let len = read_uvarint(buf, pos)? as usize;
+    let end = pos.checked_add(len)?;
+    if end > buf.len() {
+        return None;
+    }
+    let s = &buf[*pos..end];
+    *pos = end;
+    Some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uvarint_roundtrip_edges() {
+        let cases = [
+            0u64,
+            1,
+            127,
+            128,
+            300,
+            16_383,
+            16_384,
+            u32::MAX as u64,
+            u64::MAX,
+        ];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            write_uvarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_uvarint(&buf, &mut pos), Some(v));
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn ivarint_roundtrip_edges() {
+        let cases = [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN, 1 << 40, -(1 << 40)];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            write_ivarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_ivarint(&buf, &mut pos), Some(v));
+        }
+    }
+
+    #[test]
+    fn zigzag_small_magnitudes_are_small() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+        for v in -1000..1000 {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn truncated_input_is_none() {
+        let mut buf = Vec::new();
+        write_uvarint(&mut buf, u64::MAX);
+        let mut pos = 0;
+        assert_eq!(read_uvarint(&buf[..buf.len() - 1], &mut pos), None);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut buf = Vec::new();
+        write_bytes(&mut buf, b"hello");
+        write_bytes(&mut buf, b"");
+        write_bytes(&mut buf, &[0u8; 1000]);
+        let mut pos = 0;
+        assert_eq!(read_bytes(&buf, &mut pos), Some(&b"hello"[..]));
+        assert_eq!(read_bytes(&buf, &mut pos), Some(&b""[..]));
+        assert_eq!(read_bytes(&buf, &mut pos).map(|s| s.len()), Some(1000));
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn bytes_truncated_is_none() {
+        let mut buf = Vec::new();
+        write_bytes(&mut buf, b"hello");
+        let mut pos = 0;
+        assert_eq!(read_bytes(&buf[..3], &mut pos), None);
+    }
+}

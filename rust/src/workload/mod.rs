@@ -1,0 +1,294 @@
+//! Synthetic workload generators standing in for the paper's datasets
+//! (substitutions documented in DESIGN.md):
+//!
+//! * [`ffhq_like`] — the dense scenario: N×C×H×W u8 "natural images"
+//!   (separably smoothed noise), replacing the FFHQ subset.
+//! * [`uber_like`] — the sparse scenario: a (days, hours, grid_x, grid_y)
+//!   spatio-temporal event-count tensor with Gaussian hotspots and a
+//!   rush-hour intensity profile, replacing the Uber pickups tensor
+//!   (183, 24, 1140, 1717) at ~0.04 % density.
+//! * [`generic_sparse`] — FROSTT-style uniform sparse tensors for density
+//!   sweeps and property tests.
+//!
+//! All generators are deterministic in their seed.
+
+use crate::tensor::{DType, DenseTensor, SparseCoo};
+use crate::util::prng::Pcg64;
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// Parameters for the FFHQ-like dense image tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct FfhqParams {
+    /// Number of images.
+    pub n: usize,
+    /// Channels (3 for RGB).
+    pub channels: usize,
+    /// Image height.
+    pub height: usize,
+    /// Image width.
+    pub width: usize,
+}
+
+impl FfhqParams {
+    /// The default experiment scale (≈402 MB at 512×3×512×512).
+    pub fn default_scale() -> Self {
+        Self { n: 512, channels: 3, height: 512, width: 512 }
+    }
+
+    /// A small scale for tests/CI (≈1.2 MB).
+    pub fn tiny() -> Self {
+        Self { n: 16, channels: 3, height: 64, width: 64 }
+    }
+
+    /// Total tensor shape.
+    pub fn shape(&self) -> [usize; 4] {
+        [self.n, self.channels, self.height, self.width]
+    }
+
+    /// Total bytes (u8).
+    pub fn bytes(&self) -> usize {
+        self.n * self.channels * self.height * self.width
+    }
+}
+
+/// Generate an FFHQ-like u8 image tensor: per-image smooth random fields.
+///
+/// Each channel is bilinear-upsampled 8× from a coarse noise grid, plus
+/// fine-grained noise — image-like local correlation (so FTSF chunks
+/// compress a little, like PNG-decoded faces) without being constant.
+pub fn ffhq_like(seed: u64, p: FfhqParams) -> DenseTensor {
+    let [n, c, h, w] = p.shape();
+    let mut data = vec![0u8; n * c * h * w];
+    let coarse_h = (h / 8).max(1);
+    let coarse_w = (w / 8).max(1);
+    let mut rng = Pcg64::new(seed);
+    for img in 0..n {
+        for ch in 0..c {
+            // coarse grid in [0, 255]
+            let coarse: Vec<f32> = (0..(coarse_h + 1) * (coarse_w + 1))
+                .map(|_| rng.next_f32() * 255.0)
+                .collect();
+            let base = (img * c + ch) * h * w;
+            for y in 0..h {
+                let fy = y as f32 * coarse_h as f32 / h as f32;
+                let y0 = fy as usize;
+                let ty = fy - y0 as f32;
+                for x in 0..w {
+                    let fx = x as f32 * coarse_w as f32 / w as f32;
+                    let x0 = fx as usize;
+                    let tx = fx - x0 as f32;
+                    let g = |yy: usize, xx: usize| coarse[yy * (coarse_w + 1) + xx];
+                    let v = g(y0, x0) * (1.0 - ty) * (1.0 - tx)
+                        + g(y0, x0 + 1) * (1.0 - ty) * tx
+                        + g(y0 + 1, x0) * ty * (1.0 - tx)
+                        + g(y0 + 1, x0 + 1) * ty * tx;
+                    // fine noise keeps entropy image-like (not PNG-flat)
+                    let noise = (rng.next_u64() & 0x0F) as f32 - 8.0;
+                    data[base + y * w + x] = (v + noise).clamp(0.0, 255.0) as u8;
+                }
+            }
+        }
+    }
+    DenseTensor::from_u8(&p.shape(), data).expect("shape math")
+}
+
+/// Parameters for the Uber-pickups-like sparse tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct UberParams {
+    /// Days (paper: 183).
+    pub days: usize,
+    /// Hours per day (paper: 24).
+    pub hours: usize,
+    /// Latitude grid cells (paper: 1140).
+    pub grid_x: usize,
+    /// Longitude grid cells (paper: 1717).
+    pub grid_y: usize,
+    /// Number of pickup events to sample (nnz will be slightly lower after
+    /// deduplication into counts).
+    pub events: usize,
+    /// Number of spatial hotspots (Manhattan, airports, ...).
+    pub hotspots: usize,
+}
+
+impl UberParams {
+    /// Scaled default: same 4-D structure and ~0.04 % density as the paper,
+    /// at 1/16 the spatial resolution (285×430 grid) for tractable runs.
+    pub fn default_scale() -> Self {
+        Self { days: 183, hours: 24, grid_x: 285, grid_y: 430, events: 220_000, hotspots: 24 }
+    }
+
+    /// Full paper-scale shape (183, 24, 1140, 1717) with 3.3 M events.
+    pub fn paper_scale() -> Self {
+        Self { days: 183, hours: 24, grid_x: 1140, grid_y: 1717, events: 3_309_490, hotspots: 24 }
+    }
+
+    /// A tiny configuration for tests.
+    pub fn tiny() -> Self {
+        Self { days: 12, hours: 24, grid_x: 32, grid_y: 48, events: 3000, hotspots: 4 }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> [usize; 4] {
+        [self.days, self.hours, self.grid_x, self.grid_y]
+    }
+}
+
+/// Generate the Uber-like sparse event-count tensor (f32 counts, COO).
+///
+/// Events are drawn from a mixture of spatial Gaussians (hotspots, giving
+/// BSGS its clustered blocks) modulated by a rush-hour profile over the
+/// hour dimension and a weekly cycle over days — the structure that makes
+/// the paper's slice workload (`X[day]`) realistic.
+pub fn uber_like(seed: u64, p: UberParams) -> SparseCoo {
+    let mut rng = Pcg64::new(seed);
+    let [days, hours, gx, gy] = p.shape();
+    // Hotspots: position, spread, weight.
+    // Tight hotspots: real pickup data concentrates on a small set of
+    // street corners that stay active hour after hour — that persistent
+    // spatial locality is what gives BSGS its dense blocks.
+    let spots: Vec<(f64, f64, f64, f64)> = (0..p.hotspots)
+        .map(|_| {
+            (
+                rng.next_f64() * gx as f64,
+                rng.next_f64() * gy as f64,
+                1.0 + rng.next_f64() * (gx.min(gy) as f64 / 96.0).max(1.5),
+                0.2 + rng.next_f64(),
+            )
+        })
+        .collect();
+    let weights: Vec<f64> = spots.iter().map(|s| s.3).collect();
+    // Rush-hour profile: morning + evening peaks, overnight trough.
+    let hour_weight = |h: usize| -> f64 {
+        let h = h as f64;
+        let morning = (-(h - 8.5) * (h - 8.5) / 8.0).exp();
+        let evening = (-(h - 18.0) * (h - 18.0) / 10.0).exp();
+        0.15 + morning + 1.3 * evening
+    };
+    let hour_weights: Vec<f64> = (0..hours).map(hour_weight).collect();
+    let day_weight = |d: usize| -> f64 {
+        // weekly cycle: Fri/Sat heavier
+        match d % 7 {
+            4 | 5 => 1.5,
+            6 => 1.1,
+            _ => 1.0,
+        }
+    };
+    let day_weights: Vec<f64> = (0..days).map(day_weight).collect();
+
+    let mut counts: BTreeMap<(u32, u32, u32, u32), f64> = BTreeMap::new();
+    for _ in 0..p.events {
+        let d = rng.weighted_index(&day_weights) as u32;
+        let h = rng.weighted_index(&hour_weights) as u32;
+        let s = rng.weighted_index(&weights);
+        let (cx, cy, sigma, _) = spots[s];
+        let x = (cx + rng.next_gaussian() * sigma).clamp(0.0, gx as f64 - 1.0) as u32;
+        let y = (cy + rng.next_gaussian() * sigma * 1.4).clamp(0.0, gy as f64 - 1.0) as u32;
+        *counts.entry((d, h, x, y)).or_insert(0.0) += 1.0;
+    }
+    let mut indices = Vec::with_capacity(counts.len() * 4);
+    let mut values = Vec::with_capacity(counts.len());
+    for ((d, h, x, y), v) in counts {
+        indices.extend_from_slice(&[d, h, x, y]);
+        values.push(v);
+    }
+    SparseCoo::new(DType::F32, &p.shape(), indices, values).expect("valid coords")
+}
+
+/// Uniform random sparse tensor at a target density (FROSTT-style).
+pub fn generic_sparse(seed: u64, shape: &[usize], density: f64) -> Result<SparseCoo> {
+    let total: usize = shape.iter().product();
+    let target = ((total as f64 * density) as usize).min(total);
+    let mut rng = Pcg64::new(seed);
+    let mut cells = std::collections::BTreeSet::new();
+    let mut attempts = 0usize;
+    while cells.len() < target && attempts < target * 30 + 100 {
+        cells.insert(shape.iter().map(|&d| rng.below(d) as u32).collect::<Vec<u32>>());
+        attempts += 1;
+    }
+    let mut indices = Vec::with_capacity(cells.len() * shape.len());
+    let mut values = Vec::with_capacity(cells.len());
+    for c in cells {
+        indices.extend_from_slice(&c);
+        values.push(1.0 + rng.below(200) as f64);
+    }
+    SparseCoo::new(DType::F32, shape, indices, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffhq_deterministic_and_image_like() {
+        let p = FfhqParams::tiny();
+        let a = ffhq_like(7, p);
+        let b = ffhq_like(7, p);
+        assert_eq!(a, b, "same seed -> same tensor");
+        let c = ffhq_like(8, p);
+        assert_ne!(a, c, "different seed -> different tensor");
+        assert_eq!(a.shape(), &[16, 3, 64, 64]);
+        assert_eq!(a.dtype(), DType::U8);
+        // Mostly non-zero (dense scenario) ...
+        assert!(a.density() > 0.9, "density {}", a.density());
+        // ... and locally correlated: neighbor deltas much smaller than range.
+        let mut total_delta = 0f64;
+        let mut count = 0usize;
+        for x in 1..64usize {
+            let a0 = a.get_as_f64(&[0, 0, 32, x - 1]).unwrap();
+            let a1 = a.get_as_f64(&[0, 0, 32, x]).unwrap();
+            total_delta += (a1 - a0).abs();
+            count += 1;
+        }
+        assert!((total_delta / count as f64) < 40.0, "images should be smooth-ish");
+    }
+
+    #[test]
+    fn uber_structure() {
+        let p = UberParams::tiny();
+        let s = uber_like(11, p);
+        assert_eq!(s, uber_like(11, p), "deterministic");
+        assert_eq!(s.shape(), &[12, 24, 32, 48]);
+        assert!(s.is_sorted());
+        assert!(s.nnz() > 500, "nnz {}", s.nnz());
+        assert!(s.density() < 0.1, "sparse scenario, density {}", s.density());
+        // counts are positive integers
+        assert!(s.values().iter().all(|&v| v >= 1.0 && v.fract() == 0.0));
+        // rush-hour structure: evening hours should out-weigh 3am.
+        let hour_mass = |h: u32| -> f64 {
+            (0..s.nnz())
+                .filter(|&r| s.coord(r)[1] == h)
+                .map(|r| s.values()[r])
+                .sum()
+        };
+        assert!(
+            hour_mass(18) > hour_mass(3) * 2.0,
+            "evening {} vs 3am {}",
+            hour_mass(18),
+            hour_mass(3)
+        );
+    }
+
+    #[test]
+    fn uber_default_scale_density_matches_paper_family() {
+        // Quick structural check on a reduced event count (same generator).
+        let p = UberParams { events: 30_000, ..UberParams::default_scale() };
+        let s = uber_like(3, p);
+        let density = s.density();
+        assert!(density < 0.01, "paper regime is <<1%: {density}");
+    }
+
+    #[test]
+    fn generic_sparse_density() {
+        let s = generic_sparse(5, &[50, 50], 0.05).unwrap();
+        let got = s.density();
+        assert!((got - 0.05).abs() < 0.02, "density {got}");
+        assert!(s.is_sorted());
+    }
+
+    #[test]
+    fn ffhq_params_bytes() {
+        assert_eq!(FfhqParams::default_scale().bytes(), 512 * 3 * 512 * 512);
+        assert_eq!(FfhqParams::tiny().bytes(), 16 * 3 * 64 * 64);
+    }
+}

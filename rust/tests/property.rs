@@ -1,0 +1,328 @@
+//! Property-based tests over the whole storage stack (in-repo mini-proptest;
+//! see `delta_tensor::testing`). Invariants:
+//!
+//! 1. **Round-trip**: for every format F and random tensor X,
+//!    `F.read(F.write(X)) == X`.
+//! 2. **Slice equivalence**: `F.read_slice(X, S) == slice(X, S)` for random
+//!    valid slices S — reading a slice through the pruned path must equal
+//!    slicing the decoded whole tensor (paper eq. (2)/(10) semantics).
+//! 3. **Encoder duality**: `F⁻¹(F(X)) == X` at the array level for CSR,
+//!    CSF and the block format (paper eq. (5)/(6)).
+//! 4. **Columnar**: arbitrary column data round-trips through DTPQ files.
+//! 5. **Delta log**: snapshots equal replaying actions in commit order.
+
+use delta_tensor::formats::{encoders, TensorData};
+use delta_tensor::prelude::*;
+use delta_tensor::testing::{check, gen_dense_f32, gen_shape, gen_slice, gen_sparse};
+
+const CASES: usize = 40;
+
+fn mem_table() -> DeltaTable {
+    DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap()
+}
+
+fn fmt_roundtrip_prop(name: &str, make: impl Fn() -> Box<dyn TensorStore>, seed: u64) {
+    check(
+        &format!("{name}-roundtrip"),
+        CASES,
+        seed,
+        |rng| {
+            let shape = gen_shape(rng, 1, 4, 10);
+            let s = gen_sparse(rng, &shape, 60);
+            let slice = gen_slice(rng, &shape);
+            (s, slice)
+        },
+        |(s, slice)| {
+            let table = mem_table();
+            let fmt = make();
+            fmt.write(&table, "x", &s.clone().into()).map_err(|e| format!("write: {e:#}"))?;
+            // (1) whole round-trip
+            let got =
+                fmt.read(&table, "x").map_err(|e| format!("read: {e:#}"))?.to_dense().unwrap();
+            let want = s.to_dense().unwrap();
+            if got != want {
+                return Err("whole-tensor mismatch".into());
+            }
+            // (2) slice equivalence
+            let got = fmt
+                .read_slice(&table, "x", slice)
+                .map_err(|e| format!("read_slice {slice:?}: {e:#}"))?
+                .to_dense()
+                .unwrap();
+            let want = want.slice(slice).unwrap();
+            if got != want {
+                return Err(format!("slice mismatch for {slice:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coo_roundtrip_and_slices() {
+    fmt_roundtrip_prop("COO", || Box::new(CooFormat::default()), 101);
+}
+
+#[test]
+fn prop_csr_roundtrip_and_slices() {
+    fmt_roundtrip_prop(
+        "CSR",
+        || Box::new(CsrFormat { nnz_per_part: 32, parts_per_file: 2, ..Default::default() }),
+        102,
+    );
+}
+
+#[test]
+fn prop_csc_roundtrip_and_slices() {
+    fmt_roundtrip_prop("CSC", || Box::new(CsrFormat::csc()), 103);
+}
+
+#[test]
+fn prop_csf_roundtrip_and_slices() {
+    fmt_roundtrip_prop("CSF", || Box::new(CsfFormat { chunk_len: 16, ..Default::default() }), 104);
+}
+
+#[test]
+fn prop_bsgs_roundtrip_and_slices() {
+    fmt_roundtrip_prop("BSGS", || Box::new(BsgsFormat::with_edge(3)), 105);
+}
+
+#[test]
+fn prop_binary_roundtrip_and_slices() {
+    fmt_roundtrip_prop("Binary", || Box::new(BinaryFormat), 106);
+}
+
+#[test]
+fn prop_ftsf_roundtrip_and_slices_dense() {
+    check(
+        "FTSF-roundtrip",
+        CASES,
+        107,
+        |rng| {
+            // rank >= 2 so a chunk rank of rank-1 exists
+            let shape = gen_shape(rng, 2, 4, 8);
+            let dc = 1 + rng.below(shape.len() - 1);
+            let t = gen_dense_f32(rng, &shape);
+            let slice = gen_slice(rng, &shape);
+            (t, dc, slice)
+        },
+        |(t, dc, slice)| {
+            let table = mem_table();
+            let fmt = FtsfFormat { rows_per_group: 3, rows_per_file: 7, ..FtsfFormat::new(*dc) };
+            fmt.write(&table, "x", &t.clone().into()).map_err(|e| format!("write: {e:#}"))?;
+            let got = fmt.read(&table, "x").map_err(|e| format!("{e:#}"))?.to_dense().unwrap();
+            if &got != t {
+                return Err("whole mismatch".into());
+            }
+            let got = fmt
+                .read_slice(&table, "x", slice)
+                .map_err(|e| format!("slice {slice:?}: {e:#}"))?
+                .to_dense()
+                .unwrap();
+            if got != t.slice(slice).unwrap() {
+                return Err(format!("slice mismatch {slice:?} dc={dc}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_encoder_duality() {
+    check(
+        "encoder-duality",
+        60,
+        108,
+        |rng| {
+            let shape = gen_shape(rng, 1, 5, 9);
+            gen_sparse(rng, &shape, 80)
+        },
+        |s| {
+            // CSR
+            let m = encoders::coo_to_csr(s).map_err(|e| format!("csr enc: {e:#}"))?;
+            let back = encoders::csr_to_coo(&m, s.shape(), s.dtype())
+                .map_err(|e| format!("csr dec: {e:#}"))?;
+            if &back != s {
+                return Err("csr duality".into());
+            }
+            // CSF
+            let t = encoders::coo_to_csf(s).map_err(|e| format!("csf enc: {e:#}"))?;
+            let back =
+                encoders::csf_to_coo(&t, s.dtype()).map_err(|e| format!("csf dec: {e:#}"))?;
+            if &back != s {
+                return Err("csf duality".into());
+            }
+            // blocks
+            let bs = encoders::default_block_shape(s.shape(), 3);
+            let b = encoders::coo_to_blocks(s, &bs).map_err(|e| format!("blk enc: {e:#}"))?;
+            let back =
+                encoders::blocks_to_coo(&b, s.dtype()).map_err(|e| format!("blk dec: {e:#}"))?;
+            if &back != s {
+                return Err("block duality".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_csf_dim0_slice_equivalence() {
+    check(
+        "csf-slice-dim0",
+        60,
+        109,
+        |rng| {
+            let shape = gen_shape(rng, 1, 4, 8);
+            let s = gen_sparse(rng, &shape, 60);
+            let d0 = shape[0];
+            let a = rng.below(d0 + 1);
+            let b = a + rng.below(d0 - a + 1);
+            (s, a, b)
+        },
+        |(s, a, b)| {
+            let t = encoders::coo_to_csf(s).map_err(|e| format!("{e:#}"))?;
+            let direct =
+                encoders::csf_slice_dim0(&t, *a, *b, s.dtype()).map_err(|e| format!("{e:#}"))?;
+            let expected = s.slice(&Slice::dim0(*a, *b)).unwrap();
+            if direct.to_dense().unwrap() != expected.to_dense().unwrap() {
+                return Err(format!("csf dim0 slice [{a},{b})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_columnar_roundtrip() {
+    use delta_tensor::columnar::{
+        write_file, Codec, ColumnData, Field, FileReader, PhysType, Schema, WriteOptions,
+    };
+    use delta_tensor::objectstore::{MemStore, ObjectStore};
+    check(
+        "columnar-roundtrip",
+        50,
+        110,
+        |rng| {
+            let rows = rng.below(200);
+            let ints: Vec<i64> = (0..rows).map(|_| rng.next_u64() as i64 >> rng.below(48)).collect();
+            let floats: Vec<f64> = (0..rows).map(|_| rng.next_f64() * 1e6 - 5e5).collect();
+            let strs: Vec<String> = (0..rows).map(|_| format!("s{}", rng.below(5))).collect();
+            let bytes: Vec<Vec<u8>> =
+                (0..rows).map(|_| (0..rng.below(40)).map(|_| rng.next_u64() as u8).collect()).collect();
+            let lists: Vec<Vec<i64>> =
+                (0..rows).map(|_| (0..rng.below(6)).map(|_| rng.below(1000) as i64).collect()).collect();
+            let codec = match rng.below(3) {
+                0 => Codec::None,
+                1 => Codec::Zstd(1),
+                _ => Codec::Deflate(4),
+            };
+            (ints, floats, strs, bytes, lists, codec)
+        },
+        |(ints, floats, strs, bytes, lists, codec)| {
+            let schema = Schema::new(vec![
+                Field::new("i", PhysType::Int),
+                Field::new("f", PhysType::Float),
+                Field::new("s", PhysType::Str),
+                Field::new("b", PhysType::Bytes),
+                Field::new("l", PhysType::IntList),
+            ])
+            .unwrap();
+            let group = vec![
+                ColumnData::Int(ints.clone()),
+                ColumnData::Float(floats.clone()),
+                ColumnData::Str(strs.clone()),
+                ColumnData::Bytes(bytes.clone()),
+                ColumnData::IntList(lists.clone()),
+            ];
+            let file = write_file(
+                &schema,
+                &[group.clone()],
+                WriteOptions { codec: *codec, row_group_rows: 64 },
+            )
+            .map_err(|e| format!("write: {e:#}"))?;
+            let store = MemStore::new();
+            store.put("f", &file).unwrap();
+            let r = FileReader::open(&store, "f").map_err(|e| format!("open: {e:#}"))?;
+            for (ci, want) in group.iter().enumerate() {
+                let got = r.read_column(0, ci).map_err(|e| format!("col {ci}: {e:#}"))?;
+                if &got != want {
+                    return Err(format!("column {ci} mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_delta_snapshot_equals_replay() {
+    use delta_tensor::delta::{Action, AddFile};
+    check(
+        "delta-replay",
+        40,
+        111,
+        |rng| {
+            // A random interleaving of adds and removes over a small path set.
+            let ops: Vec<(bool, usize)> =
+                (0..rng.below(40)).map(|_| (rng.below(3) > 0, rng.below(8))).collect();
+            ops
+        },
+        |ops| {
+            let table = mem_table();
+            let mut live: std::collections::BTreeSet<String> = Default::default();
+            for (i, (is_add, slot)) in ops.iter().enumerate() {
+                let path = format!("data/f{slot}");
+                if *is_add {
+                    table
+                        .commit(vec![Action::Add(AddFile {
+                            path: path.clone(),
+                            size: i as u64,
+                            rows: 1,
+                            tensor_id: "t".into(),
+                            min_key: None,
+                            max_key: None,
+                            timestamp: i as i64,
+                            meta: None,
+                        })])
+                        .map_err(|e| format!("commit add: {e:#}"))?;
+                    live.insert(path);
+                } else if live.contains(&path) {
+                    table
+                        .commit(vec![Action::Remove { path: path.clone(), timestamp: i as i64 }])
+                        .map_err(|e| format!("commit rm: {e:#}"))?;
+                    live.remove(&path);
+                }
+            }
+            let snap = table.snapshot().map_err(|e| format!("snapshot: {e:#}"))?;
+            let got: std::collections::BTreeSet<String> = snap.files.keys().cloned().collect();
+            if got != live.clone() {
+                return Err(format!("live set mismatch: {got:?} vs {live:?}"));
+            }
+            // And time travel to half-way equals replaying half the ops.
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tensor_data_density_routing_consistent() {
+    check(
+        "auto-routing",
+        40,
+        112,
+        |rng| {
+            let shape = gen_shape(rng, 1, 3, 8);
+            gen_sparse(rng, &shape, 50)
+        },
+        |s| {
+            let td: TensorData = s.clone().into();
+            let fmt = delta_tensor::formats::auto_format(&td);
+            let expected =
+                if s.density() < delta_tensor::formats::SPARSITY_THRESHOLD { "BSGS" } else { "FTSF" };
+            if fmt.layout() != expected {
+                return Err(format!("density {} routed to {}", s.density(), fmt.layout()));
+            }
+            Ok(())
+        },
+    );
+}
