@@ -185,7 +185,7 @@ fn cmd_ingest(args: &Args) -> Result<String> {
         "stored {id} shape {shape:?} as {} ({})\n{}",
         crate::coordinator::discover_layout(c.table(), &id)?,
         human_bytes(bytes),
-        c.metrics().report()
+        c.report()
     ))
 }
 
@@ -275,7 +275,7 @@ fn cmd_metrics_demo(args: &Args) -> Result<String> {
         bail!("{errs:?}");
     }
     let _ = c.read_slice("demo", &Slice::index(3))?;
-    Ok(c.metrics().report())
+    Ok(c.report())
 }
 
 #[cfg(test)]

@@ -77,6 +77,120 @@ impl Footer {
     pub fn total_rows(&self) -> usize {
         self.row_groups.iter().map(|g| g.rows).sum()
     }
+
+    /// Decode one column chunk from its already-fetched body bytes
+    /// (checksum, decompression, decode). `body` must be exactly the
+    /// chunk's `len` compressed bytes; `key` is only used in errors.
+    ///
+    /// This is the I/O-free half of a chunk read: the read engine fetches
+    /// coalesced byte spans itself and hands each chunk's slice here.
+    pub fn decode_chunk(
+        &self,
+        group: usize,
+        col: usize,
+        body: &[u8],
+        key: &str,
+    ) -> Result<ColumnData> {
+        let g = self.row_groups.get(group).context("row group out of range")?;
+        let c = g.columns.get(col).context("column out of range")?;
+        ensure!(body.len() as u64 == c.len, "short chunk body in {key}[{group}.{col}]");
+        ensure!(crc32fast::hash(body) == c.crc32, "crc mismatch in {key}[{group}.{col}]");
+        let raw = c.codec.decompress(body, c.raw_len as usize)?;
+        decode_column(self.schema.fields()[col].ty, &raw, g.rows)
+    }
+}
+
+/// Fetch and parse just the footer of a DTPQ file: one suffix-range GET,
+/// plus a second only when the footer exceeds the initial tail window.
+pub fn read_footer(store: &dyn ObjectStore, key: &str) -> Result<Footer> {
+    let tail = store.get_tail(key, 4 * 1024)?;
+    let t = tail.len();
+    ensure!(t >= MAGIC.len() * 2 + 4, "file too small");
+    ensure!(&tail[t - 6..] == MAGIC, "bad trailing magic");
+    let flen = u32::from_le_bytes(tail[t - 10..t - 6].try_into().unwrap()) as usize;
+    let footer_bytes: Vec<u8> = if flen + 10 <= t {
+        tail[t - 10 - flen..t - 10].to_vec()
+    } else {
+        let full = store.get_tail(key, (flen + 10) as u64)?;
+        // A corrupt length field can claim more bytes than the object has.
+        ensure!(full.len() >= flen + 10, "footer length {flen} exceeds file size");
+        full[..flen].to_vec()
+    };
+    let j = jsonx::parse(std::str::from_utf8(&footer_bytes).context("footer not utf8")?)?;
+    footer_from_json(&j)
+}
+
+/// Cache of parsed footers keyed by `(store instance, key, size, stamp)`.
+///
+/// Part files are immutable under a given Add action; OPTIMIZE may rewrite
+/// the same path, but the rewritten Add carries a new size/timestamp, so
+/// stale entries simply stop being addressed. Repeated slice reads of the
+/// same table version skip the footer GET entirely.
+pub struct FooterCache {
+    #[allow(clippy::type_complexity)]
+    map: std::sync::Mutex<
+        std::collections::HashMap<(u64, String, u64, i64), std::sync::Arc<Footer>>,
+    >,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl Default for FooterCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FooterCache {
+    /// Maximum cached footers before the map is cleared (simple bound; the
+    /// working set of hot tables is far below this).
+    const CAPACITY: usize = 8192;
+
+    /// New empty cache.
+    pub fn new() -> Self {
+        Self {
+            map: std::sync::Mutex::new(std::collections::HashMap::new()),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// The footer for `key`, fetched through `store` on miss. `instance`
+    /// identifies the store; `size`/`stamp` pin the file version (take them
+    /// from the Add action).
+    pub fn get(
+        &self,
+        store: &dyn ObjectStore,
+        instance: u64,
+        key: &str,
+        size: u64,
+        stamp: i64,
+    ) -> Result<std::sync::Arc<Footer>> {
+        use std::sync::atomic::Ordering;
+        let k = (instance, key.to_string(), size, stamp);
+        if let Some(f) = self.map.lock().unwrap().get(&k) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(f.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let f = std::sync::Arc::new(read_footer(store, key)?);
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= Self::CAPACITY {
+            map.clear();
+        }
+        map.insert(k, f.clone());
+        Ok(f)
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Cache misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
 }
 
 /// Serialize row groups into a complete DTPQ file.
@@ -234,27 +348,21 @@ fn footer_from_json(j: &Json) -> Result<Footer> {
 pub struct FileReader<'a> {
     store: &'a dyn ObjectStore,
     key: String,
-    footer: Footer,
+    footer: std::sync::Arc<Footer>,
 }
 
 impl<'a> FileReader<'a> {
     /// Open a file: one suffix-range GET for the footer tail (a second GET
     /// only when the footer exceeds the initial tail window).
     pub fn open(store: &'a dyn ObjectStore, key: &str) -> Result<Self> {
-        let tail = store.get_tail(key, 4 * 1024)?;
-        let t = tail.len();
-        ensure!(t >= MAGIC.len() * 2 + 4, "file too small");
-        ensure!(&tail[t - 6..] == MAGIC, "bad trailing magic");
-        let flen = u32::from_le_bytes(tail[t - 10..t - 6].try_into().unwrap()) as usize;
-        let footer_bytes: Vec<u8> = if flen + 10 <= t {
-            tail[t - 10 - flen..t - 10].to_vec()
-        } else {
-            let full = store.get_tail(key, (flen + 10) as u64)?;
-            full[..flen].to_vec()
-        };
-        let j = jsonx::parse(std::str::from_utf8(&footer_bytes).context("footer not utf8")?)?;
-        let footer = footer_from_json(&j)?;
+        let footer = std::sync::Arc::new(read_footer(store, key)?);
         Ok(Self { store, key: key.to_string(), footer })
+    }
+
+    /// Build a reader around an already-parsed (e.g. cached) footer,
+    /// skipping the footer GET entirely.
+    pub fn with_footer(store: &'a dyn ObjectStore, key: &str, footer: std::sync::Arc<Footer>) -> Self {
+        Self { store, key: key.to_string(), footer }
     }
 
     /// Parsed footer.
@@ -272,10 +380,7 @@ impl<'a> FileReader<'a> {
         let g = self.footer.row_groups.get(group).context("row group out of range")?;
         let c = g.columns.get(col).context("column out of range")?;
         let body = self.store.get_range(&self.key, c.offset, c.len)?;
-        ensure!(body.len() as u64 == c.len, "short read");
-        ensure!(crc32fast::hash(&body) == c.crc32, "crc mismatch in {}[{group}.{col}]", self.key);
-        let raw = c.codec.decompress(&body, c.raw_len as usize)?;
-        decode_column(self.footer.schema.fields()[col].ty, &raw, g.rows)
+        self.footer.decode_chunk(group, col, &body, &self.key)
     }
 
     /// Read several columns of one row group with a **single coalesced
@@ -303,13 +408,7 @@ impl<'a> FileReader<'a> {
             let m = &g.columns[c];
             let a = (m.offset - lo) as usize;
             let body = &span[a..a + m.len as usize];
-            ensure!(
-                crc32fast::hash(body) == m.crc32,
-                "crc mismatch in {}[{group}.{c}]",
-                self.key
-            );
-            let raw = m.codec.decompress(body, m.raw_len as usize)?;
-            out.push(decode_column(self.footer.schema.fields()[c].ty, &raw, g.rows)?);
+            out.push(self.footer.decode_chunk(group, c, body, &self.key)?);
         }
         Ok(out)
     }
@@ -346,9 +445,7 @@ impl<'a> FileReader<'a> {
                 let m = &gm.columns[c];
                 let a = (m.offset - lo) as usize;
                 let body = &span[a..a + m.len as usize];
-                ensure!(crc32fast::hash(body) == m.crc32, "crc mismatch in {}[{g}.{c}]", self.key);
-                let raw = m.codec.decompress(body, m.raw_len as usize)?;
-                row.push(decode_column(self.footer.schema.fields()[c].ty, &raw, gm.rows)?);
+                row.push(self.footer.decode_chunk(g, c, body, &self.key)?);
             }
             out.push(row);
         }
@@ -419,6 +516,30 @@ mod tests {
     }
 
     #[test]
+    fn footer_cache_hits_skip_the_tail_get() {
+        let schema = Schema::new(vec![Field::new("x", PhysType::Int)]).unwrap();
+        let bytes =
+            write_file(&schema, &[vec![ColumnData::Int((0..64).collect())]], WriteOptions::default())
+                .unwrap();
+        let store = MemStore::new();
+        store.put("f", &bytes).unwrap();
+        let cache = FooterCache::new();
+        let f1 = cache.get(&store, 1, "f", bytes.len() as u64, 7).unwrap();
+        let f2 = cache.get(&store, 1, "f", bytes.len() as u64, 7).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(f1.total_rows(), f2.total_rows());
+        // A different stamp (rewritten file) is a distinct entry.
+        let _ = cache.get(&store, 1, "f", bytes.len() as u64, 8).unwrap();
+        assert_eq!(cache.misses(), 2);
+        // Cached footers decode chunks from externally fetched bytes.
+        let m = &f1.row_groups[0].columns[0];
+        let body = store.get_range("f", m.offset, m.len).unwrap();
+        let col = f1.decode_chunk(0, 0, &body, "f").unwrap();
+        assert_eq!(col, ColumnData::Int((0..64).collect()));
+        assert!(f1.decode_chunk(0, 0, &body[1..], "f").is_err(), "short body rejected");
+    }
+
+    #[test]
     fn pruning_by_stats() {
         let schema = sample_schema();
         let groups = vec![sample_group(100, 0), sample_group(100, 100), sample_group(100, 200)];
@@ -455,6 +576,22 @@ mod tests {
         assert!(FileReader::open(&store, "f").is_err());
         store.put("g", b"short").unwrap();
         assert!(FileReader::open(&store, "g").is_err());
+    }
+
+    #[test]
+    fn oversized_footer_length_rejected_not_panicking() {
+        // Trailing magic intact but the length field claims more bytes than
+        // the file holds: must be an error, never a slice panic.
+        let schema = Schema::new(vec![Field::new("x", PhysType::Int)]).unwrap();
+        let mut bytes =
+            write_file(&schema, &[vec![ColumnData::Int(vec![1, 2, 3])]], WriteOptions::default())
+                .unwrap();
+        let n = bytes.len();
+        bytes[n - 10..n - 6].copy_from_slice(&u32::MAX.to_le_bytes());
+        let store = MemStore::new();
+        store.put("f", &bytes).unwrap();
+        let err = FileReader::open(&store, "f").unwrap_err().to_string();
+        assert!(err.contains("footer length"), "{err}");
     }
 
     #[test]

@@ -19,7 +19,10 @@
 pub mod encoding;
 mod file;
 
-pub use file::{write_file, ColumnChunkMeta, FileReader, Footer, RowGroupMeta, WriteOptions};
+pub use file::{
+    read_footer, write_file, ColumnChunkMeta, FileReader, Footer, FooterCache, RowGroupMeta,
+    WriteOptions,
+};
 
 use crate::Result;
 use anyhow::{bail, ensure};

@@ -5,11 +5,15 @@
 //!   through a bounded queue (backpressure propagates to the source);
 //!   commits serialize through the Delta log's optimistic concurrency.
 //! * **Serving**: read/slice requests route by tensor id; the router
-//!   discovers each tensor's layout from the snapshot and dispatches to
-//!   the right format; snapshots are cached per table version.
+//!   discovers each tensor's layout from the (engine-cached) snapshot and
+//!   dispatches to the right format, whose read path executes through
+//!   [`crate::query::engine`] — coalesced batched GETs, parallel part
+//!   fetches, footer/snapshot caches.
 //! * **Maintenance**: OPTIMIZE-style rewrite of a tensor into fresh,
-//!   well-sized part files; VACUUM delegation.
-//! * **Metrics**: counters + latency histograms for every stage.
+//!   well-sized part files (its read side also runs through the engine);
+//!   VACUUM delegation.
+//! * **Metrics**: counters + latency histograms for every stage, plus the
+//!   engine's counters via [`Coordinator::report`].
 
 mod metrics;
 mod pool;
@@ -41,19 +45,23 @@ pub fn format_by_name(layout: &str) -> Result<Box<dyn TensorStore + Send + Sync>
     })
 }
 
+/// Layout encoded in a part file's path (`data/<id>/<layout>-part-...` or
+/// `data/<id>/binary.bin`), or `None` for paths outside that convention.
+pub fn layout_from_path(path: &str, tensor_id: &str) -> Option<String> {
+    let rest = path.strip_prefix(&format!("data/{tensor_id}/"))?;
+    if rest == "binary.bin" {
+        return Some("Binary".to_string());
+    }
+    rest.split("-part-").next().map(|layout| layout.to_ascii_uppercase())
+}
+
 /// Discover the layout a tensor was stored with by inspecting its file
-/// paths in the snapshot (`data/<id>/<layout>-part-...` / `binary.bin`).
+/// paths in the (cached) snapshot.
 pub fn discover_layout(table: &DeltaTable, id: &str) -> Result<String> {
-    let snap = table.snapshot()?;
-    let prefix = format!("data/{id}/");
+    let snap = crate::query::engine::snapshot(table)?;
     for f in snap.files_for_tensor(id) {
-        if let Some(rest) = f.path.strip_prefix(&prefix) {
-            if rest == "binary.bin" {
-                return Ok("Binary".to_string());
-            }
-            if let Some(layout) = rest.split("-part-").next() {
-                return Ok(layout.to_ascii_uppercase());
-            }
+        if let Some(layout) = layout_from_path(&f.path, id) {
+            return Ok(layout);
         }
     }
     bail!("tensor {id:?} not found in table {}", table.root())
@@ -99,6 +107,12 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// Full metrics report: coordinator counters/histograms plus the read
+    /// engine's counters (ranges coalesced, files pruned, cache hits).
+    pub fn report(&self) -> String {
+        format!("{}{}", self.metrics.report(), crate::query::engine::report())
+    }
+
     /// Submit an ingestion job (blocks when the queue is full).
     pub fn submit(&self, job: IngestJob) {
         let table = self.table.clone();
@@ -107,13 +121,19 @@ impl Coordinator {
         self.metrics.counter("ingest.submitted").add(1);
         self.pool.submit(move || {
             let sw = Stopwatch::start();
-            let fmt: Result<Box<dyn TensorStore + Send + Sync>> =
-                if job.layout.eq_ignore_ascii_case("auto") {
-                    Ok(crate::formats::auto_format(&job.data))
-                } else {
-                    format_by_name(&job.layout)
-                };
-            let outcome = fmt.and_then(|f| f.write(&table, &job.id, &job.data));
+            // A panicking encoder must surface in drain() like any other
+            // failure — the pool keeps its worker alive but discards the
+            // panic, so catch it here where the error sink lives.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let fmt: Result<Box<dyn TensorStore + Send + Sync>> =
+                    if job.layout.eq_ignore_ascii_case("auto") {
+                        Ok(crate::formats::auto_format(&job.data))
+                    } else {
+                        format_by_name(&job.layout)
+                    };
+                fmt.and_then(|f| f.write(&table, &job.id, &job.data))
+            }))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("ingest job panicked")));
             match outcome {
                 Ok(()) => {
                     metrics.counter("ingest.ok").add(1);
@@ -176,7 +196,7 @@ impl Coordinator {
 
     /// All tensor ids present in the table.
     pub fn list_tensors(&self) -> Result<Vec<String>> {
-        let snap = self.table.snapshot()?;
+        let snap = crate::query::engine::snapshot(&self.table)?;
         let mut ids: Vec<String> = snap
             .files()
             .map(|f| f.tensor_id.clone())
@@ -301,6 +321,19 @@ mod tests {
         assert!(report.contains("ingest.ok 1"), "{report}");
         assert!(report.contains("read.tensor 1"), "{report}");
         assert!(report.contains("ingest.write_secs"), "{report}");
+        // The full report additionally exposes the read engine's counters.
+        let full = c.report();
+        assert!(full.contains("ingest.ok 1"), "{full}");
+        assert!(full.contains("engine.part_fetches"), "{full}");
+        assert!(full.contains("engine.ranges_coalesced"), "{full}");
+        assert!(full.contains("engine.snapshot_cache_hits"), "{full}");
+    }
+
+    #[test]
+    fn layout_from_path_parses_conventions() {
+        assert_eq!(layout_from_path("data/x/coo-part-00000.dtpq", "x").as_deref(), Some("COO"));
+        assert_eq!(layout_from_path("data/x/binary.bin", "x").as_deref(), Some("Binary"));
+        assert_eq!(layout_from_path("data/other/coo-part-0.dtpq", "x"), None);
     }
 
     #[test]

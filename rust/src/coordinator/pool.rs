@@ -62,7 +62,13 @@ impl WorkerPool {
                     };
                     match job {
                         Some(job) => {
-                            job();
+                            // A panicking job must not kill the worker: the
+                            // pool is shared (ingestion, the read engine's
+                            // fan-out) and a shrinking pool eventually
+                            // deadlocks every multi-part read. Panics are
+                            // contained here; the job's consumer observes
+                            // the missing result instead.
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                             let mut state = q.jobs.lock().unwrap();
                             state.in_flight -= 1;
                             let idle = state.deque.is_empty() && state.in_flight == 0;
@@ -195,6 +201,20 @@ mod tests {
         h.join().unwrap();
         assert_eq!(submitted.load(Ordering::SeqCst), 1);
         p.wait_idle();
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1, 8);
+        pool.submit(|| panic!("boom"));
+        // The single worker must survive to run the next job.
+        let n = Arc::new(AtomicUsize::new(0));
+        let n2 = n.clone();
+        pool.submit(move || {
+            n2.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        assert_eq!(n.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -26,18 +26,29 @@ use crate::objectstore::{ObjectStore, ObjectStoreHandle};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Write a checkpoint every this many commits.
 const CHECKPOINT_INTERVAL: u64 = 10;
 /// Give up after this many optimistic-concurrency retries.
 const MAX_COMMIT_RETRIES: usize = 32;
 
-/// Milliseconds since the Unix epoch.
+/// Milliseconds since the Unix epoch, **strictly monotonic within the
+/// process**: two calls never return the same value even inside one
+/// millisecond. Commit/Add timestamps therefore uniquely distinguish
+/// successive rewrites of the same part path, which the read engine's
+/// footer cache keys on (path, size, timestamp) — without monotonicity, a
+/// same-millisecond same-size rewrite could be served a stale footer.
 pub fn now_ms() -> i64 {
-    std::time::SystemTime::now()
+    use std::sync::atomic::{AtomicI64, Ordering};
+    static LAST: AtomicI64 = AtomicI64::new(0);
+    let wall = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_millis() as i64)
-        .unwrap_or(0)
+        .unwrap_or(0);
+    LAST.fetch_max(wall, Ordering::Relaxed);
+    // Claim a unique tick at or after the wall clock.
+    LAST.fetch_add(1, Ordering::Relaxed)
 }
 
 /// A materialized view of the table at one version.
@@ -360,6 +371,99 @@ impl DeltaTable {
     }
 }
 
+/// Cache of materialized [`Snapshot`]s keyed by `(store instance, table
+/// root)`, always serving the table's **latest** version.
+///
+/// A hit costs one LIST (the version probe) instead of replaying the whole
+/// log; when the table has advanced, only the commits past the cached
+/// version are replayed on top of the cached state (incremental refresh).
+/// This is the read engine's answer to every read path calling
+/// `table.snapshot()` — often twice — per request.
+pub struct SnapshotCache {
+    map: std::sync::Mutex<std::collections::HashMap<(u64, String), Arc<Snapshot>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl Default for SnapshotCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotCache {
+    /// Maximum cached tables before the map is cleared (one entry per
+    /// `(store, root)` pair; hot deployments hold a handful).
+    const CAPACITY: usize = 1024;
+
+    /// New empty cache.
+    pub fn new() -> Self {
+        Self {
+            map: std::sync::Mutex::new(std::collections::HashMap::new()),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// The latest snapshot of `table`, from cache when still current.
+    pub fn get(&self, table: &DeltaTable) -> Result<Arc<Snapshot>> {
+        use std::sync::atomic::Ordering;
+        let latest = table.latest_version()?;
+        let key = (table.store().instance_id(), table.root().to_string());
+        let cached = self.map.lock().unwrap().get(&key).cloned();
+        if let Some(snap) = cached {
+            if snap.version == latest {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(snap);
+            }
+            if snap.version < latest {
+                // Incremental refresh: replay only the new commits.
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                let mut files = snap.files.clone();
+                let mut metadata = Some(snap.metadata.clone());
+                for v in snap.version + 1..=latest {
+                    let body = table.store().get(&table.commit_key(v))?;
+                    let text = String::from_utf8(body).context("commit not utf8")?;
+                    for action in commit_from_ndjson(&text)? {
+                        apply_action(&mut files, &mut metadata, action);
+                    }
+                }
+                let fresh = Arc::new(Snapshot {
+                    version: latest,
+                    metadata: metadata.context("no metaData action found in log")?,
+                    files,
+                });
+                self.insert(key, fresh.clone());
+                return Ok(fresh);
+            }
+            // cached version ahead of `latest` can only mean the key was
+            // reused for a different table — fall through and rebuild.
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(table.snapshot_at(latest)?);
+        self.insert(key, fresh.clone());
+        Ok(fresh)
+    }
+
+    fn insert(&self, key: (u64, String), snap: Arc<Snapshot>) {
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= Self::CAPACITY {
+            map.clear();
+        }
+        map.insert(key, snap);
+    }
+
+    /// Cache hits so far (including incremental refreshes).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Full-replay misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
 fn apply_action(
     files: &mut BTreeMap<String, AddFile>,
     metadata: &mut Option<Metadata>,
@@ -556,6 +660,41 @@ mod tests {
         assert_eq!(n, 1);
         assert!(store.head("tbl/data/live.dtpq").unwrap().is_some());
         assert!(store.head("tbl/data/dead.dtpq").unwrap().is_none());
+    }
+
+    #[test]
+    fn now_ms_is_strictly_monotonic() {
+        let a = now_ms();
+        let b = now_ms();
+        let c = now_ms();
+        assert!(a < b && b < c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn snapshot_cache_serves_and_refreshes_incrementally() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store.clone(), "tbl").unwrap();
+        t.commit(vec![add("data/a", "t1", 0, 9), info("WRITE")]).unwrap();
+        let cache = SnapshotCache::new();
+        let s1 = cache.get(&t).unwrap();
+        assert_eq!(s1.files.len(), 1);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        // Same version: pure hit, and no commit-body GETs.
+        store.stats().reset();
+        let s2 = cache.get(&t).unwrap();
+        assert_eq!(s2.version, s1.version);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(store.stats().snapshot().0, 0, "hit must not GET commit bodies");
+        // Advance the table: incremental refresh replays only the new commit.
+        t.commit(vec![add("data/b", "t1", 0, 9), info("WRITE")]).unwrap();
+        store.stats().reset();
+        let s3 = cache.get(&t).unwrap();
+        assert_eq!(s3.files.len(), 2);
+        assert_eq!(store.stats().snapshot().0, 1, "refresh replays exactly the new commit");
+        assert_eq!(cache.misses(), 1, "refresh is not a full replay");
+        // Cached result matches a from-scratch snapshot.
+        let direct = t.snapshot().unwrap();
+        assert_eq!(s3.files.keys().collect::<Vec<_>>(), direct.files.keys().collect::<Vec<_>>());
     }
 
     #[test]

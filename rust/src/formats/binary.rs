@@ -184,9 +184,9 @@ impl TensorStore for BinaryFormat {
 
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {
         let rel = self.object_rel(id);
-        let snap = table.snapshot()?;
+        let snap = crate::query::engine::snapshot(table)?;
         ensure!(snap.files.contains_key(&rel), "tensor {id:?} not found (binary)");
-        let bytes = table.store().get(&table.data_key(&rel))?;
+        let bytes = crate::query::engine::fetch_object(table, &rel)?;
         Self::deserialize(&bytes)
     }
 
@@ -197,6 +197,23 @@ impl TensorStore for BinaryFormat {
             TensorData::Dense(t) => TensorData::Dense(t.slice(slice)?),
             TensorData::Sparse(s) => TensorData::Sparse(s.slice(slice)?),
         })
+    }
+
+    fn plan_read(
+        &self,
+        table: &DeltaTable,
+        id: &str,
+        slice: Option<&Slice>,
+    ) -> Result<crate::query::engine::ReadSpec> {
+        // One opaque object: every read — sliced or not — fetches it whole.
+        let _ = slice;
+        let rel = self.object_rel(id);
+        let snap = crate::query::engine::snapshot(table)?;
+        let f = snap
+            .files
+            .get(&rel)
+            .with_context(|| format!("tensor {id:?} not found (binary)"))?;
+        Ok(crate::query::engine::ReadSpec::whole_object(1, 1, f.size))
     }
 }
 

@@ -17,7 +17,8 @@ use super::common::{self, shape_from_i64};
 use super::encoders::{blocks_to_coo, coo_to_blocks, default_block_shape, BlockSparse};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
-use crate::delta::DeltaTable;
+use crate::delta::{AddFile, DeltaTable};
+use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice};
 use crate::Result;
 use anyhow::{ensure, Context};
@@ -84,6 +85,46 @@ impl BsgsFormat {
             Some(b) => b.iter().zip(tensor_shape).map(|(&b, &d)| b.min(d).max(1)).collect(),
             None => default_block_shape(tensor_shape, self.block_edge),
         }
+    }
+
+    /// Geometry (dense shape, block shape, dtype): the authoritative source
+    /// is the stored rows — the writer's block shape need not match this
+    /// reader's configuration — so probe parts for a non-empty group first,
+    /// falling back to the Add action's meta for all-zero tensors.
+    #[allow(clippy::type_complexity)]
+    fn metadata(
+        &self,
+        table: &DeltaTable,
+        parts: &[AddFile],
+    ) -> Result<(Vec<usize>, Vec<usize>, DType)> {
+        for part in parts {
+            let read = PartRead::all_groups(part.clone(), &["dense_shape", "block_shape", "dtype"]);
+            for data in engine::read_parts(table, vec![read])? {
+                for mut cols in data.columns {
+                    let dtypes = cols.pop().unwrap().into_strs()?;
+                    let blocks = cols.pop().unwrap().into_intlists()?;
+                    let shapes = cols.pop().unwrap().into_intlists()?;
+                    if !dtypes.is_empty() {
+                        return Ok((
+                            shape_from_i64(&shapes[0])?,
+                            shape_from_i64(&blocks[0])?,
+                            DType::parse(&dtypes[0])?,
+                        ));
+                    }
+                }
+            }
+        }
+        let (shape, dt) = common::meta_from_parts(parts).context("bsgs tensor has no metadata")?;
+        let bs = self.block_shape_for(&shape);
+        Ok((shape, bs, dt))
+    }
+
+    /// Fetch descriptors for a dim-0 block window `[blo, bhi]`.
+    fn fetch_descriptors(parts: &[AddFile], blo: i64, bhi: i64) -> Vec<PartRead> {
+        common::prune_parts(parts, blo, bhi)
+            .into_iter()
+            .map(|p| PartRead::pruned(p, "indices", blo, bhi, &["indices", "values"]))
+            .collect()
     }
 }
 
@@ -205,25 +246,33 @@ impl TensorStore for BsgsFormat {
         let mut block_shape: Vec<usize> = Vec::new();
         let mut dtype = DType::F64;
         let mut block_indices = Vec::new();
-        let mut block_values = Vec::new();
-        for part in &parts {
-            let r = common::open_part(table, part)?;
-            let idx_col = r.schema().index_of("indices")?;
-            let val_col = r.schema().index_of("values")?;
-            let groups: Vec<usize> = (0..r.footer().row_groups.len())
-                .filter(|&g| r.footer().row_groups[g].rows > 0)
-                .collect();
-            if let (None, Some(&g)) = (&dense_shape, groups.first()) {
-                dense_shape = Some(shape_from_i64(&common::first_intlist(&r, g, "dense_shape")?)?);
-                block_shape = shape_from_i64(&common::first_intlist(&r, g, "block_shape")?)?;
-                dtype = DType::parse(&common::first_str(&r, g, "dtype")?)?;
-            }
-            for mut cols in r.read_columns_groups(&groups, &[idx_col, val_col])? {
+        let mut raw_payloads: Vec<Vec<u8>> = Vec::new();
+        // All parts fetched in parallel; the tiny metadata columns ride in
+        // the same coalesced span. Payloads are decoded once the dtype is
+        // known (the first non-empty group supplies it).
+        let reads: Vec<PartRead> = parts
+            .iter()
+            .map(|p| {
+                PartRead::all_groups(
+                    p.clone(),
+                    &["dense_shape", "block_shape", "indices", "values", "dtype"],
+                )
+            })
+            .collect();
+        for data in engine::read_parts(table, reads)? {
+            for mut cols in data.columns {
+                let dtypes = cols.pop().unwrap().into_strs()?;
                 let payloads = cols.pop().unwrap().into_bytes()?;
-                block_indices.extend(cols.pop().unwrap().into_intlists()?);
-                for payload in payloads {
-                    block_values.push(bytes_to_block_values(&payload, dtype)?);
+                let idxs = cols.pop().unwrap().into_intlists()?;
+                let blocks = cols.pop().unwrap().into_intlists()?;
+                let shapes = cols.pop().unwrap().into_intlists()?;
+                if dense_shape.is_none() && !dtypes.is_empty() {
+                    dense_shape = Some(shape_from_i64(&shapes[0])?);
+                    block_shape = shape_from_i64(&blocks[0])?;
+                    dtype = DType::parse(&dtypes[0])?;
                 }
+                block_indices.extend(idxs);
+                raw_payloads.extend(payloads);
             }
         }
         let (dense_shape, dtype) = match dense_shape {
@@ -235,39 +284,17 @@ impl TensorStore for BsgsFormat {
                 (shape, dt)
             }
         };
+        let mut block_values = Vec::with_capacity(raw_payloads.len());
+        for payload in raw_payloads {
+            block_values.push(bytes_to_block_values(&payload, dtype)?);
+        }
         let b = BlockSparse { dense_shape, block_shape, block_indices, block_values };
         Ok(TensorData::Sparse(blocks_to_coo(&b, dtype)?))
     }
 
     fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData> {
         let parts = common::tensor_parts(table, id, self.layout())?;
-        // Metadata from the first non-empty group.
-        let mut meta: Option<(Vec<usize>, Vec<usize>, DType)> = None;
-        for part in &parts {
-            let r = common::open_part(table, part)?;
-            for g in 0..r.footer().row_groups.len() {
-                if r.footer().row_groups[g].rows > 0 {
-                    meta = Some((
-                        shape_from_i64(&common::first_intlist(&r, g, "dense_shape")?)?,
-                        shape_from_i64(&common::first_intlist(&r, g, "block_shape")?)?,
-                        DType::parse(&common::first_str(&r, g, "dtype")?)?,
-                    ));
-                    break;
-                }
-            }
-            if meta.is_some() {
-                break;
-            }
-        }
-        let (dense_shape, block_shape, dtype) = match meta {
-            Some(m) => m,
-            None => {
-                let (shape, dt) =
-                    common::meta_from_parts(&parts).context("bsgs tensor has no metadata")?;
-                let bs = self.block_shape_for(&shape);
-                (shape, bs, dt)
-            }
-        };
+        let (dense_shape, block_shape, dtype) = self.metadata(table, &parts)?;
         let ranges = slice.resolve(&dense_shape)?;
         // Block-grid window per dimension.
         let grid_ranges: Vec<(i64, i64)> = ranges
@@ -286,12 +313,10 @@ impl TensorStore for BsgsFormat {
         let mut block_indices = Vec::new();
         let mut block_values = Vec::new();
         if bhi >= blo {
-            for part in common::prune_parts(&parts, blo, bhi) {
-                let r = common::open_part(table, &part)?;
-                let idx_col = r.schema().index_of("indices")?;
-                let val_col = r.schema().index_of("values")?;
-                let groups = r.prune_groups(idx_col, blo, bhi);
-                for mut cols in r.read_columns_groups(&groups, &[idx_col, val_col])? {
+            let reads = Self::fetch_descriptors(&parts, blo, bhi);
+            engine::stats().note_files_pruned((parts.len() - reads.len()) as u64);
+            for data in engine::read_parts(table, reads)? {
+                for mut cols in data.columns {
                     let payloads = cols.pop().unwrap().into_bytes()?;
                     let idxs = cols.pop().unwrap().into_intlists()?;
                     for (i, bi) in idxs.iter().enumerate() {
@@ -312,6 +337,29 @@ impl TensorStore for BsgsFormat {
         // Reconstruct the candidate blocks then cut precisely to the slice.
         let coo = blocks_to_coo(&b, dtype)?;
         Ok(TensorData::Sparse(coo.slice(slice)?))
+    }
+
+    fn plan_read(&self, table: &DeltaTable, id: &str, slice: Option<&Slice>) -> Result<ReadSpec> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let total = parts.len();
+        let reads = match slice {
+            None => parts
+                .iter()
+                .map(|p| PartRead::all_groups(p.clone(), &["indices", "values"]))
+                .collect(),
+            Some(s) => {
+                let (dense_shape, block_shape, _) = self.metadata(table, &parts)?;
+                let ranges = s.resolve(&dense_shape)?;
+                if ranges[0].end == ranges[0].start {
+                    Vec::new()
+                } else {
+                    let blo = (ranges[0].start / block_shape[0]) as i64;
+                    let bhi = ((ranges[0].end - 1) / block_shape[0]) as i64;
+                    Self::fetch_descriptors(&parts, blo, bhi)
+                }
+            }
+        };
+        Ok(ReadSpec::from_reads(total, reads))
     }
 }
 

@@ -77,8 +77,10 @@ pub fn commit_parts(
 }
 
 /// The live part files of a tensor, ordered by path (== part number order).
+/// Served from the engine's snapshot cache: repeated reads pay one version
+/// probe instead of a log replay.
 pub fn tensor_parts(table: &DeltaTable, id: &str, layout: &str) -> Result<Vec<AddFile>> {
-    let snap = table.snapshot()?;
+    let snap = crate::query::engine::snapshot(table)?;
     let prefix = format!("data/{id}/{}-part-", layout.to_lowercase());
     let mut parts: Vec<AddFile> = snap
         .files_for_tensor(id)
@@ -91,7 +93,9 @@ pub fn tensor_parts(table: &DeltaTable, id: &str, layout: &str) -> Result<Vec<Ad
     Ok(parts)
 }
 
-/// Subset of `parts` whose key range may overlap `[lo, hi]`.
+/// Subset of `parts` whose key range may overlap `[lo, hi]`. Pure — the
+/// `engine.files_pruned` counter is bumped by the executing read path, not
+/// here, so an EXPLAIN that plans the same read doesn't double-count.
 pub fn prune_parts(parts: &[AddFile], lo: i64, hi: i64) -> Vec<AddFile> {
     parts
         .iter()
@@ -103,9 +107,11 @@ pub fn prune_parts(parts: &[AddFile], lo: i64, hi: i64) -> Vec<AddFile> {
         .collect()
 }
 
-/// Open a part file for reading.
+/// Open a part file for reading. The footer comes from the engine's cache
+/// when this part has been opened before at the same version.
 pub fn open_part<'a>(table: &'a DeltaTable, part: &AddFile) -> Result<FileReader<'a>> {
-    FileReader::open(table.store(), &table.data_key(&part.path))
+    let footer = crate::query::engine::part_footer(table, part)?;
+    Ok(FileReader::with_footer(table.store(), &table.data_key(&part.path), footer))
 }
 
 /// Read a metadata (single-valued) string column from the first row of the

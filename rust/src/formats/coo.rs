@@ -12,7 +12,8 @@
 use super::common::{self, shape_from_i64};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
-use crate::delta::DeltaTable;
+use crate::delta::{AddFile, DeltaTable};
+use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice, SparseCoo};
 use crate::Result;
 use anyhow::{ensure, Context};
@@ -77,6 +78,33 @@ impl CooFormat {
             ColumnData::Float(values),
             ColumnData::Str(vec![s.dtype().name().to_string(); rows]),
         ]
+    }
+
+    /// Shape/dtype: prefer the Add action's meta (no extra GETs), else the
+    /// first non-empty row group of the first part.
+    fn metadata(&self, table: &DeltaTable, parts: &[AddFile]) -> Result<(Vec<usize>, DType)> {
+        match common::meta_from_parts(parts) {
+            Some(m) => Ok(m),
+            None => {
+                let r0 = common::open_part(table, &parts[0])?;
+                let g0 = (0..r0.footer().row_groups.len())
+                    .find(|&g| r0.footer().row_groups[g].rows > 0)
+                    .context("empty tensor has no metadata")?;
+                Ok((
+                    shape_from_i64(&common::first_intlist(&r0, g0, "dense_shape")?)?,
+                    DType::parse(&common::first_str(&r0, g0, "dtype")?)?,
+                ))
+            }
+        }
+    }
+
+    /// Fetch descriptors for a dim-0 window `[lo, hi]`: pruned parts,
+    /// stats-pruned row groups, the (indices, value) columns.
+    fn fetch_descriptors(parts: &[AddFile], lo: i64, hi: i64) -> Vec<PartRead> {
+        common::prune_parts(parts, lo, hi)
+            .into_iter()
+            .map(|p| PartRead::pruned(p, "indices", lo, hi, &["indices", "value"]))
+            .collect()
     }
 }
 
@@ -143,24 +171,27 @@ impl TensorStore for CooFormat {
             shape = Some(s);
             dtype = d;
         }
+        // All parts fetched in parallel through the engine; the metadata
+        // columns ride along (dictionary-compressed to almost nothing and
+        // adjacent to indices/value, so they coalesce into the same span)
+        // in case the Add actions carry no meta.
+        let reads: Vec<PartRead> = parts
+            .iter()
+            .map(|p| PartRead::all_groups(p.clone(), &["dense_shape", "indices", "value", "dtype"]))
+            .collect();
         let mut indices: Vec<u32> = Vec::new();
         let mut values: Vec<f64> = Vec::new();
-        for part in &parts {
-            let r = common::open_part(table, part)?;
-            let idx_col = r.schema().index_of("indices")?;
-            let val_col = r.schema().index_of("value")?;
-            let groups: Vec<usize> = (0..r.footer().row_groups.len()).collect();
-            if shape.is_none() {
-                if let Some(g) = groups.iter().find(|&&g| r.footer().row_groups[g].rows > 0) {
-                    shape = Some(shape_from_i64(&common::first_intlist(&r, *g, "dense_shape")?)?);
-                    dtype = DType::parse(&common::first_str(&r, *g, "dtype")?)?;
-                }
-            }
-            // indices+value are adjacent in schema order; all groups of the
-            // part coalesce into one ranged GET.
-            for mut cols in r.read_columns_groups(&groups, &[idx_col, val_col])? {
+        for data in engine::read_parts(table, reads)? {
+            for mut cols in data.columns {
+                let dtypes = cols.pop().unwrap().into_strs()?;
                 let vals = cols.pop().unwrap().into_floats()?;
-                for row in cols.pop().unwrap().into_intlists()? {
+                let rows = cols.pop().unwrap().into_intlists()?;
+                let shapes = cols.pop().unwrap().into_intlists()?;
+                if shape.is_none() && !vals.is_empty() {
+                    shape = Some(shape_from_i64(&shapes[0])?);
+                    dtype = DType::parse(&dtypes[0])?;
+                }
+                for row in rows {
                     indices.extend(row.iter().map(|&i| i as u32));
                 }
                 values.extend(vals);
@@ -172,21 +203,7 @@ impl TensorStore for CooFormat {
 
     fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData> {
         let parts = common::tensor_parts(table, id, self.layout())?;
-        // Need metadata first (shape to resolve the slice): prefer the Add
-        // action's meta (no extra GETs), else the first non-empty row group.
-        let (shape, dtype) = match common::meta_from_parts(&parts) {
-            Some(m) => m,
-            None => {
-                let r0 = common::open_part(table, &parts[0])?;
-                let g0 = (0..r0.footer().row_groups.len())
-                    .find(|&g| r0.footer().row_groups[g].rows > 0)
-                    .context("empty tensor has no metadata")?;
-                (
-                    shape_from_i64(&common::first_intlist(&r0, g0, "dense_shape")?)?,
-                    DType::parse(&common::first_str(&r0, g0, "dtype")?)?,
-                )
-            }
-        };
+        let (shape, dtype) = self.metadata(table, &parts)?;
         let ranges = slice.resolve(&shape)?;
         let out_shape: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
         let (lo, hi) = (ranges[0].start as i64, ranges[0].end as i64 - 1);
@@ -194,14 +211,12 @@ impl TensorStore for CooFormat {
             return Ok(TensorData::Sparse(SparseCoo::new(dtype, &out_shape, vec![], vec![])?));
         }
 
+        let reads = Self::fetch_descriptors(&parts, lo, hi);
+        engine::stats().note_files_pruned((parts.len() - reads.len()) as u64);
         let mut indices: Vec<u32> = Vec::new();
         let mut values: Vec<f64> = Vec::new();
-        for part in common::prune_parts(&parts, lo, hi) {
-            let r = common::open_part(table, &part)?;
-            let idx_col = r.schema().index_of("indices")?;
-            let val_col = r.schema().index_of("value")?;
-            let groups = r.prune_groups(idx_col, lo, hi);
-            for mut cols in r.read_columns_groups(&groups, &[idx_col, val_col])? {
+        for data in engine::read_parts(table, reads)? {
+            for mut cols in data.columns {
                 let vals = cols.pop().unwrap().into_floats()?;
                 let rows = cols.pop().unwrap().into_intlists()?;
                 'rows: for (row, v) in rows.iter().zip(vals) {
@@ -220,6 +235,28 @@ impl TensorStore for CooFormat {
             }
         }
         Ok(TensorData::Sparse(SparseCoo::new(dtype, &out_shape, indices, values)?))
+    }
+
+    fn plan_read(&self, table: &DeltaTable, id: &str, slice: Option<&Slice>) -> Result<ReadSpec> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let total = parts.len();
+        let reads = match slice {
+            None => parts
+                .iter()
+                .map(|p| PartRead::all_groups(p.clone(), &["indices", "value"]))
+                .collect(),
+            Some(s) => {
+                let (shape, _) = self.metadata(table, &parts)?;
+                let ranges = s.resolve(&shape)?;
+                let (lo, hi) = (ranges[0].start as i64, ranges[0].end as i64 - 1);
+                if hi < lo {
+                    Vec::new()
+                } else {
+                    Self::fetch_descriptors(&parts, lo, hi)
+                }
+            }
+        };
+        Ok(ReadSpec::from_reads(total, reads))
     }
 }
 

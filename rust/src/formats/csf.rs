@@ -20,7 +20,8 @@ use super::common::{self, shape_from_i64};
 use super::encoders::{coo_to_csf, csf_slice_dim0, csf_to_coo, CsfTensor};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
-use crate::delta::DeltaTable;
+use crate::delta::{AddFile, DeltaTable};
+use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
@@ -120,36 +121,36 @@ impl CsfFormat {
         ]
     }
 
-    /// Read an entry range `[lo, hi)` of a chunked int stream.
+    /// Read an entry range `[lo, hi)` of a chunked int stream: one engine
+    /// fetch with seq-stats group pruning and a coalesced batched GET.
     fn fetch_ints(
         &self,
         table: &DeltaTable,
-        part: &crate::delta::AddFile,
+        part: &AddFile,
         lo: usize,
         hi: usize,
     ) -> Result<Vec<i64>> {
         if hi <= lo {
             return Ok(Vec::new());
         }
-        let r = common::open_part(table, part)?;
-        let seq_col = r.schema().index_of("seq")?;
-        let ints_col = r.schema().index_of("ints")?;
         let (c0, c1) = (lo / self.chunk_len, (hi - 1) / self.chunk_len);
+        let read = PartRead::pruned(part.clone(), "seq", c0 as i64, c1 as i64, &["seq", "ints"]);
         let mut out = Vec::with_capacity(hi - lo);
-        let groups = r.prune_groups(seq_col, c0 as i64, c1 as i64);
-        for mut cs in r.read_columns_groups(&groups, &[seq_col, ints_col])? {
-            let intss = cs.pop().unwrap().into_intlists()?;
-            let seqs = cs.pop().unwrap().into_ints()?;
-            for (s, ints) in seqs.iter().zip(intss) {
-                let s = *s as usize;
-                if s < c0 || s > c1 {
-                    continue;
-                }
-                let base = s * self.chunk_len;
-                let a = lo.max(base) - base;
-                let b = (hi.min(base + ints.len())).saturating_sub(base);
-                if b > a {
-                    out.push((base + a, ints[a..b].to_vec()));
+        for data in engine::read_parts(table, vec![read])? {
+            for mut cs in data.columns {
+                let intss = cs.pop().unwrap().into_intlists()?;
+                let seqs = cs.pop().unwrap().into_ints()?;
+                for (s, ints) in seqs.iter().zip(intss) {
+                    let s = *s as usize;
+                    if s < c0 || s > c1 {
+                        continue;
+                    }
+                    let base = s * self.chunk_len;
+                    let a = lo.max(base) - base;
+                    let b = (hi.min(base + ints.len())).saturating_sub(base);
+                    if b > a {
+                        out.push((base + a, ints[a..b].to_vec()));
+                    }
                 }
             }
         }
@@ -166,33 +167,32 @@ impl CsfFormat {
     fn fetch_vals(
         &self,
         table: &DeltaTable,
-        part: &crate::delta::AddFile,
+        part: &AddFile,
         lo: usize,
         hi: usize,
     ) -> Result<Vec<f64>> {
         if hi <= lo {
             return Ok(Vec::new());
         }
-        let r = common::open_part(table, part)?;
-        let seq_col = r.schema().index_of("seq")?;
-        let pay_col = r.schema().index_of("payload")?;
         let (c0, c1) = (lo / self.chunk_len, (hi - 1) / self.chunk_len);
+        let read = PartRead::pruned(part.clone(), "seq", c0 as i64, c1 as i64, &["seq", "payload"]);
         let mut pieces = Vec::new();
-        let groups = r.prune_groups(seq_col, c0 as i64, c1 as i64);
-        for mut cs in r.read_columns_groups(&groups, &[seq_col, pay_col])? {
-            let pays = cs.pop().unwrap().into_bytes()?;
-            let seqs = cs.pop().unwrap().into_ints()?;
-            for (s, pay) in seqs.iter().zip(pays) {
-                let s = *s as usize;
-                if s < c0 || s > c1 {
-                    continue;
-                }
-                let vals = bytes_to_vals(&pay)?;
-                let base = s * self.chunk_len;
-                let a = lo.max(base) - base;
-                let b = (hi.min(base + vals.len())).saturating_sub(base);
-                if b > a {
-                    pieces.push((base + a, vals[a..b].to_vec()));
+        for data in engine::read_parts(table, vec![read])? {
+            for mut cs in data.columns {
+                let pays = cs.pop().unwrap().into_bytes()?;
+                let seqs = cs.pop().unwrap().into_ints()?;
+                for (s, pay) in seqs.iter().zip(pays) {
+                    let s = *s as usize;
+                    if s < c0 || s > c1 {
+                        continue;
+                    }
+                    let vals = bytes_to_vals(&pay)?;
+                    let base = s * self.chunk_len;
+                    let a = lo.max(base) - base;
+                    let b = (hi.min(base + vals.len())).saturating_sub(base);
+                    if b > a {
+                        pieces.push((base + a, vals[a..b].to_vec()));
+                    }
                 }
             }
         }
@@ -205,47 +205,48 @@ impl CsfFormat {
         Ok(flat)
     }
 
-    /// Load the header: metadata + level-0/1 arrays.
+    /// Load the header: metadata + level-0/1 arrays, in one engine fetch.
     #[allow(clippy::type_complexity)]
     fn load_header(
         &self,
         table: &DeltaTable,
-        parts: &[crate::delta::AddFile],
+        parts: &[AddFile],
     ) -> Result<(Vec<usize>, DType, usize, Vec<Vec<i64>>, Vec<Vec<i64>>)> {
-        let header = &parts[0];
-        let r = common::open_part(table, header)?;
-        let kind_col = r.schema().index_of("kind")?;
-        let level_col = r.schema().index_of("level")?;
-        let ints_col = r.schema().index_of("ints")?;
+        let read = PartRead::all_groups(
+            parts[0].clone(),
+            &["dense_shape", "dtype", "kind", "level", "ints"],
+        );
         let mut shape = None;
         let mut dtype = DType::F64;
         let mut nnz = 0usize;
         let mut fids: Vec<Vec<i64>> = vec![Vec::new(); 2];
         let mut fptrs: Vec<Vec<i64>> = vec![Vec::new(); 2];
-        let groups: Vec<usize> = (0..r.footer().row_groups.len()).collect();
-        let all = r.read_columns_groups(&groups, &[kind_col, level_col, ints_col])?;
-        for (g, mut cs) in groups.iter().copied().zip(all) {
-            let intss = cs.pop().unwrap().into_intlists()?;
-            let levels = cs.pop().unwrap().into_ints()?;
-            let kinds = cs.pop().unwrap().into_strs()?;
-            for i in 0..kinds.len() {
-                match kinds[i].as_str() {
-                    "meta" => {
-                        shape = Some(shape_from_i64(&common::first_intlist(&r, g, "dense_shape")?)?);
-                        dtype = DType::parse(&common::first_str(&r, g, "dtype")?)?;
-                        nnz = intss[i].first().copied().unwrap_or(0) as usize;
+        for data in engine::read_parts(table, vec![read])? {
+            for mut cs in data.columns {
+                let intss = cs.pop().unwrap().into_intlists()?;
+                let levels = cs.pop().unwrap().into_ints()?;
+                let kinds = cs.pop().unwrap().into_strs()?;
+                let dtypes = cs.pop().unwrap().into_strs()?;
+                let shapes = cs.pop().unwrap().into_intlists()?;
+                for i in 0..kinds.len() {
+                    match kinds[i].as_str() {
+                        "meta" => {
+                            shape = Some(shape_from_i64(&shapes[i])?);
+                            dtype = DType::parse(&dtypes[i])?;
+                            nnz = intss[i].first().copied().unwrap_or(0) as usize;
+                        }
+                        "fid" => {
+                            let l = levels[i] as usize;
+                            ensure!(l < 2, "non-chunked fid level {l} in header");
+                            fids[l] = intss[i].clone();
+                        }
+                        "fptr" => {
+                            let l = levels[i] as usize;
+                            ensure!(l < 2, "non-chunked fptr level {l} in header");
+                            fptrs[l] = intss[i].clone();
+                        }
+                        other => bail!("unknown header row kind {other:?}"),
                     }
-                    "fid" => {
-                        let l = levels[i] as usize;
-                        ensure!(l < 2, "non-chunked fid level {l} in header");
-                        fids[l] = intss[i].clone();
-                    }
-                    "fptr" => {
-                        let l = levels[i] as usize;
-                        ensure!(l < 2, "non-chunked fptr level {l} in header");
-                        fptrs[l] = intss[i].clone();
-                    }
-                    other => bail!("unknown header row kind {other:?}"),
                 }
             }
         }
@@ -442,6 +443,24 @@ impl TensorStore for CsfFormat {
             sliced.slice(&Slice::ranges(&spec))?
         };
         Ok(TensorData::Sparse(out))
+    }
+
+    fn plan_read(&self, table: &DeltaTable, id: &str, slice: Option<&Slice>) -> Result<ReadSpec> {
+        // CSF's deep-level windows depend on pointer values fetched at
+        // execution time, so the plan is the conservative upper bound:
+        // header + every stream part (the engine still prunes seq groups
+        // when the windows resolve).
+        let _ = slice;
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let total = parts.len();
+        let mut reads = vec![PartRead::all_groups(
+            parts[0].clone(),
+            &["dense_shape", "dtype", "kind", "level", "ints"],
+        )];
+        for p in &parts[1..] {
+            reads.push(PartRead::all_groups(p.clone(), &["seq", "ints", "payload"]));
+        }
+        Ok(ReadSpec::from_reads(total, reads))
     }
 }
 

@@ -17,7 +17,8 @@ use super::common::{self, shape_from_i64};
 use super::encoders::{coo_to_csr, csr_to_coo, flatten_shape_2d, CsrMatrix};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
-use crate::delta::DeltaTable;
+use crate::delta::{AddFile, DeltaTable};
+use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice, SparseCoo};
 use crate::Result;
 use anyhow::{ensure, Context};
@@ -115,6 +116,33 @@ impl CsrFormat {
                 Ok((coo_to_csr(&t)?, s.shape().to_vec()))
             }
         }
+    }
+
+    /// Shape/dtype: prefer the Add action's meta, else the first non-empty
+    /// row group of the first part.
+    fn metadata(&self, table: &DeltaTable, parts: &[AddFile]) -> Result<(Vec<usize>, DType)> {
+        match common::meta_from_parts(parts) {
+            Some(m) => Ok(m),
+            None => {
+                let r0 = common::open_part(table, &parts[0])?;
+                let g0 = (0..r0.footer().row_groups.len())
+                    .find(|&g| r0.footer().row_groups[g].rows > 0)
+                    .context("empty tensor")?;
+                Ok((
+                    shape_from_i64(&common::first_intlist(&r0, g0, "dense_shape")?)?,
+                    DType::parse(&common::first_str(&r0, g0, "dtype")?)?,
+                ))
+            }
+        }
+    }
+
+    /// Fetch descriptors for a matrix-row window `[lo, hi]`: pruned parts,
+    /// all groups (partitions can span the window start), the CSR arrays.
+    fn fetch_descriptors(parts: &[AddFile], lo: i64, hi: i64) -> Vec<PartRead> {
+        common::prune_parts(parts, lo, hi)
+            .into_iter()
+            .map(|p| PartRead::all_groups(p, &["row_start", "crow", "cols", "values"]))
+            .collect()
     }
 
     fn from_matrix(&self, m: &CsrMatrix, dense_shape: &[usize], dtype: DType) -> Result<SparseCoo> {
@@ -251,26 +279,33 @@ impl TensorStore for CsrFormat {
         let mut dense_shape: Option<Vec<usize>> = None;
         let mut flat: Option<Vec<usize>> = None;
         let mut dtype = DType::F64;
+        // All parts fetched in parallel through the engine; the tiny
+        // metadata columns ride in the same coalesced span.
+        let reads: Vec<PartRead> = parts
+            .iter()
+            .map(|p| {
+                PartRead::all_groups(
+                    p.clone(),
+                    &["dense_shape", "flattened_shape", "row_start", "crow", "cols", "values", "dtype"],
+                )
+            })
+            .collect();
         // partition rows keyed by row_start for ordered reassembly
         let mut chunks: Vec<(i64, Vec<i64>, Vec<i64>, Vec<f64>)> = Vec::new();
-        for part in &parts {
-            let r = common::open_part(table, part)?;
-            let cols_of = |n: &str| r.schema().index_of(n);
-            let (c_rs, c_crow, c_cols, c_vals) =
-                (cols_of("row_start")?, cols_of("crow")?, cols_of("cols")?, cols_of("values")?);
-            let groups: Vec<usize> = (0..r.footer().row_groups.len())
-                .filter(|&g| r.footer().row_groups[g].rows > 0)
-                .collect();
-            if let (None, Some(&g)) = (&dense_shape, groups.first()) {
-                dense_shape = Some(shape_from_i64(&common::first_intlist(&r, g, "dense_shape")?)?);
-                flat = Some(shape_from_i64(&common::first_intlist(&r, g, "flattened_shape")?)?);
-                dtype = DType::parse(&common::first_str(&r, g, "dtype")?)?;
-            }
-            for mut cs in r.read_columns_groups(&groups, &[c_rs, c_crow, c_cols, c_vals])? {
+        for data in engine::read_parts(table, reads)? {
+            for mut cs in data.columns {
+                let dtypes = cs.pop().unwrap().into_strs()?;
                 let valss = cs.pop().unwrap().into_bytes()?;
                 let colss = cs.pop().unwrap().into_intlists()?;
                 let crows = cs.pop().unwrap().into_intlists()?;
                 let rs = cs.pop().unwrap().into_ints()?;
+                let flats = cs.pop().unwrap().into_intlists()?;
+                let shapes = cs.pop().unwrap().into_intlists()?;
+                if dense_shape.is_none() && !rs.is_empty() {
+                    dense_shape = Some(shape_from_i64(&shapes[0])?);
+                    flat = Some(shape_from_i64(&flats[0])?);
+                    dtype = DType::parse(&dtypes[0])?;
+                }
                 for i in 0..rs.len() {
                     chunks.push((rs[i], crows[i].clone(), colss[i].clone(), bytes_to_values(&valss[i])?));
                 }
@@ -319,19 +354,7 @@ impl TensorStore for CsrFormat {
             return Ok(TensorData::Sparse(full.slice(slice)?));
         }
         let parts = common::tensor_parts(table, id, self.layout())?;
-        let (dense_shape, dtype) = match common::meta_from_parts(&parts) {
-            Some(m) => m,
-            None => {
-                let r0 = common::open_part(table, &parts[0])?;
-                let g0 = (0..r0.footer().row_groups.len())
-                    .find(|&g| r0.footer().row_groups[g].rows > 0)
-                    .context("empty tensor")?;
-                (
-                    shape_from_i64(&common::first_intlist(&r0, g0, "dense_shape")?)?,
-                    DType::parse(&common::first_str(&r0, g0, "dtype")?)?,
-                )
-            }
-        };
+        let (dense_shape, dtype) = self.metadata(table, &parts)?;
         let ranges = slice.resolve(&dense_shape)?;
         let (lo, hi) = (ranges[0].start, ranges[0].end);
         let out_dim0 = hi - lo;
@@ -344,17 +367,13 @@ impl TensorStore for CsrFormat {
         let tail_shape = &dense_shape[1..];
         let mut indices: Vec<u32> = Vec::new();
         let mut values: Vec<f64> = Vec::new();
-        for part in common::prune_parts(&parts, lo as i64, hi as i64 - 1) {
-            let r = common::open_part(table, &part)?;
-            let c_rs = r.schema().index_of("row_start")?;
-            let c_crow = r.schema().index_of("crow")?;
-            let c_cols = r.schema().index_of("cols")?;
-            let c_vals = r.schema().index_of("values")?;
-            // Note: no row-group pruning on `row_start` — a partition whose
-            // start precedes `lo` may still span it; coverage-correct pruning
-            // happens at file level via the Add min/max key range.
-            let groups: Vec<usize> = (0..r.footer().row_groups.len()).collect();
-            for mut cs in r.read_columns_groups(&groups, &[c_rs, c_crow, c_cols, c_vals])? {
+        // Note: no row-group pruning on `row_start` — a partition whose
+        // start precedes `lo` may still span it; coverage-correct pruning
+        // happens at file level via the Add min/max key range.
+        let reads = Self::fetch_descriptors(&parts, lo as i64, hi as i64 - 1);
+        engine::stats().note_files_pruned((parts.len() - reads.len()) as u64);
+        for data in engine::read_parts(table, reads)? {
+            for mut cs in data.columns {
                 let valss = cs.pop().unwrap().into_bytes()?;
                 let colss = cs.pop().unwrap().into_intlists()?;
                 let crows = cs.pop().unwrap().into_intlists()?;
@@ -391,6 +410,33 @@ impl TensorStore for CsrFormat {
         let mut trailing: Vec<(usize, usize)> = vec![(0, out_dim0)];
         trailing.extend(ranges[1..].iter().map(|r| (r.start, r.end)));
         Ok(TensorData::Sparse(partial.slice(&Slice::ranges(&trailing))?))
+    }
+
+    fn plan_read(&self, table: &DeltaTable, id: &str, slice: Option<&Slice>) -> Result<ReadSpec> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let total = parts.len();
+        let all = || -> Vec<PartRead> {
+            parts
+                .iter()
+                .map(|p| PartRead::all_groups(p.clone(), &["row_start", "crow", "cols", "values"]))
+                .collect()
+        };
+        let reads = match slice {
+            // CSC reads everything regardless of the slice.
+            None => all(),
+            Some(_) if self.orientation == CsrOrientation::Column => all(),
+            Some(s) => {
+                let (dense_shape, _) = self.metadata(table, &parts)?;
+                let ranges = s.resolve(&dense_shape)?;
+                let (lo, hi) = (ranges[0].start, ranges[0].end);
+                if ranges.iter().any(|r| r.end == r.start) {
+                    Vec::new()
+                } else {
+                    Self::fetch_descriptors(&parts, lo as i64, hi as i64 - 1)
+                }
+            }
+        };
+        Ok(ReadSpec::from_reads(total, reads))
     }
 }
 

@@ -17,7 +17,8 @@
 use super::common::{self, shape_from_i64};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
-use crate::delta::DeltaTable;
+use crate::delta::{AddFile, DeltaTable};
+use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{numel, strides_for, DType, DenseTensor, Slice};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
@@ -77,6 +78,44 @@ impl FtsfFormat {
             shape
         );
         Ok(&shape[..shape.len() - self.chunk_dims])
+    }
+
+    /// Tensor geometry (shape, dtype, chunk rank) from the Add action's meta
+    /// (zero GETs), else from the first row group of the first part.
+    fn geometry(
+        &self,
+        table: &DeltaTable,
+        parts: &[AddFile],
+    ) -> Result<(Vec<usize>, DType, usize)> {
+        let from_meta = parts.iter().find_map(|p| {
+            let j = crate::jsonx::parse(p.meta.as_deref()?).ok()?;
+            let dims: Vec<usize> =
+                j.get("shape")?.to_int_vec()?.into_iter().map(|d| d as usize).collect();
+            let dtype = DType::parse(j.get("dtype")?.as_str()?).ok()?;
+            let cd = j.get("cdims")?.as_u64()? as usize;
+            Some((dims, dtype, cd))
+        });
+        match from_meta {
+            Some(m) => Ok(m),
+            None => {
+                let r0 = common::open_part(table, &parts[0])?;
+                let dims = shape_from_i64(&common::first_intlist(&r0, 0, "dimensions")?)?;
+                let dtype = DType::parse(&common::first_str(&r0, 0, "dtype")?)?;
+                let col = r0.schema().index_of("chunk_dim_count")?;
+                let v = r0.read_column(0, col)?.into_ints()?;
+                let cd = *v.first().context("chunk_dim_count empty")? as usize;
+                Ok((dims, dtype, cd))
+            }
+        }
+    }
+
+    /// Fetch descriptors for the chunk-index window `[lo, hi]`: pruned
+    /// parts, stats-pruned row groups, the `(chunk_idx, chunk)` columns.
+    fn fetch_descriptors(parts: &[AddFile], lo: i64, hi: i64) -> Vec<PartRead> {
+        common::prune_parts(parts, lo, hi)
+            .into_iter()
+            .map(|p| PartRead::pruned(p, "chunk_idx", lo, hi, &["chunk_idx", "chunk"]))
+            .collect()
     }
 }
 
@@ -167,29 +206,7 @@ impl TensorStore for FtsfFormat {
 
     fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData> {
         let parts = common::tensor_parts(table, id, self.layout())?;
-
-        // Geometry from the Add action's meta (zero GETs), else from the
-        // first row group of the first part.
-        let from_meta = parts.iter().find_map(|p| {
-            let j = crate::jsonx::parse(p.meta.as_deref()?).ok()?;
-            let dims: Vec<usize> =
-                j.get("shape")?.to_int_vec()?.into_iter().map(|d| d as usize).collect();
-            let dtype = DType::parse(j.get("dtype")?.as_str()?).ok()?;
-            let cd = j.get("cdims")?.as_u64()? as usize;
-            Some((dims, dtype, cd))
-        });
-        let (dims, dtype, cd) = match from_meta {
-            Some(m) => m,
-            None => {
-                let r0 = common::open_part(table, &parts[0])?;
-                let dims = shape_from_i64(&common::first_intlist(&r0, 0, "dimensions")?)?;
-                let dtype = DType::parse(&common::first_str(&r0, 0, "dtype")?)?;
-                let col = r0.schema().index_of("chunk_dim_count")?;
-                let v = r0.read_column(0, col)?.into_ints()?;
-                let cd = *v.first().context("chunk_dim_count empty")? as usize;
-                (dims, dtype, cd)
-            }
-        };
+        let (dims, dtype, cd) = self.geometry(table, &parts)?;
         ensure!(cd >= 1 && cd < dims.len(), "corrupt chunk_dim_count {cd}");
         let lead = &dims[..dims.len() - cd];
         let chunk_shape = &dims[dims.len() - cd..];
@@ -233,24 +250,20 @@ impl TensorStore for FtsfFormat {
             }
         };
 
-        // Fetch needed chunks: prune files by key range, then row groups by
-        // chunk_idx stats, then filter rows.
+        // Fetch the needed chunks through the engine: files pruned by key
+        // range, row groups by chunk_idx stats, the (chunk_idx, chunk)
+        // column ranges coalesced into one batched GET per part, parts
+        // fetched in parallel.
         let esize = dtype.size();
         let out_numel: usize = out_shape.iter().product();
         let mut out = vec![0u8; out_numel * esize];
         let out_strides = strides_for(&out_shape);
         let sliced_chunk_numel: usize = chunk_ranges.iter().map(|r| r.end - r.start).product();
 
-        for part in common::prune_parts(&parts, lo, hi) {
-            let reader = common::open_part(table, &part)?;
-            let idx_col = reader.schema().index_of("chunk_idx")?;
-            let blob_col = reader.schema().index_of("chunk")?;
-            // Dim-0 slices select contiguous chunk ranges, so the pruned
-            // groups are contiguous and a single (idx, blob) span per part
-            // is right-sized: one ranged GET instead of idx-pass + blob-pass
-            // (which each spanned ~the whole file for full reads).
-            let groups = reader.prune_groups(idx_col, lo, hi);
-            for mut cs in reader.read_columns_groups(&groups, &[idx_col, blob_col])? {
+        let reads = Self::fetch_descriptors(&parts, lo, hi);
+        engine::stats().note_files_pruned((parts.len() - reads.len()) as u64);
+        for data in engine::read_parts(table, reads)? {
+            for mut cs in data.columns {
                 let blobs = cs.pop().unwrap().into_bytes()?;
                 let idxs = cs.pop().unwrap().into_ints()?;
                 for (ci, blob) in idxs.iter().zip(blobs) {
@@ -274,6 +287,29 @@ impl TensorStore for FtsfFormat {
             }
         }
         Ok(TensorData::Dense(DenseTensor::from_bytes(dtype, &out_shape, out)?))
+    }
+
+    fn plan_read(&self, table: &DeltaTable, id: &str, slice: Option<&Slice>) -> Result<ReadSpec> {
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let total = parts.len();
+        let (dims, _dtype, cd) = self.geometry(table, &parts)?;
+        ensure!(cd >= 1 && cd < dims.len(), "corrupt chunk_dim_count {cd}");
+        let lead = &dims[..dims.len() - cd];
+        let full = Slice::all(dims.len());
+        let ranges = slice.unwrap_or(&full).resolve(&dims)?;
+        // The chunk-index window spanned by the leading ranges: chunk ids
+        // are row-major over the lead dims, so the window is [first, last]
+        // of the lead-range cartesian product.
+        if ranges[..lead.len()].iter().any(|r| r.end == r.start) {
+            return Ok(ReadSpec::from_reads(total, Vec::new()));
+        }
+        let lead_strides = strides_for(lead);
+        let lo: usize =
+            ranges[..lead.len()].iter().zip(&lead_strides).map(|(r, s)| r.start * s).sum();
+        let hi: usize =
+            ranges[..lead.len()].iter().zip(&lead_strides).map(|(r, s)| (r.end - 1) * s).sum();
+        let reads = Self::fetch_descriptors(&parts, lo as i64, hi as i64);
+        Ok(ReadSpec::from_reads(total, reads))
     }
 }
 

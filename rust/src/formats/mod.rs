@@ -35,6 +35,7 @@ pub use csr::{CsrFormat, CsrOrientation};
 pub use ftsf::FtsfFormat;
 
 use crate::delta::DeltaTable;
+use crate::query::engine::{PartRead, ReadSpec};
 use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
 use crate::Result;
 
@@ -108,6 +109,11 @@ impl From<SparseCoo> for TensorData {
 /// Implementations write a tensor as table rows + data files, and read it
 /// back fully or sliced. The write path returns nothing but the commit is
 /// durable on return; sizes are observable via [`storage_bytes`].
+///
+/// All read paths execute through [`crate::query::engine`]: `plan_read`
+/// produces the fetch descriptors (part files × row groups × columns) and
+/// the engine turns them into coalesced, parallel, cached I/O; `read`/
+/// `read_slice` decode what the engine fetched.
 pub trait TensorStore {
     /// Stable layout name recorded in table rows ("FTSF", "COO", ...).
     fn layout(&self) -> &'static str;
@@ -120,6 +126,19 @@ pub trait TensorStore {
 
     /// Read the sub-tensor selected by `slice`.
     fn read_slice(&self, table: &DeltaTable, id: &str, slice: &Slice) -> Result<TensorData>;
+
+    /// Describe the I/O a read would perform: the fetch descriptors the
+    /// engine will execute (`None` slice = whole read). Drives EXPLAIN
+    /// ([`crate::query::plan`]) from the same pruning logic the read path
+    /// uses. The default claims every live part whole; formats with
+    /// columnar parts override with precise group/column selections.
+    fn plan_read(&self, table: &DeltaTable, id: &str, slice: Option<&Slice>) -> Result<ReadSpec> {
+        let _ = slice;
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let total = parts.len();
+        let reads = parts.into_iter().map(|p| PartRead::all_groups(p, &[])).collect();
+        Ok(ReadSpec::from_reads(total, reads))
+    }
 }
 
 /// Total bytes of live data files for tensor `id` (the paper's `S_encode`).

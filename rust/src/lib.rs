@@ -13,15 +13,19 @@
 //! * [`columnar`] — Parquet-like columnar file format (row groups, pages,
 //!   dictionary/RLE/delta encodings, zstd compression, stats).
 //! * [`delta`] — ACID table layer: action log, snapshots, time travel,
-//!   optimistic concurrency, checkpoints, compaction.
+//!   optimistic concurrency, checkpoints, compaction, plus the
+//!   incremental [`delta::SnapshotCache`] serving the read engine.
 //! * [`tensor`] — dense/sparse tensor types and slicing.
 //! * [`formats`] — the paper's five storage methods (FTSF, COO, CSR/CSC,
 //!   CSF, BSGS) plus the binary baselines, behind one [`formats::TensorStore`]
-//!   API.
-//! * [`query`] — read planning: stats-based row-group pruning.
+//!   API. Formats plan their reads (`plan_read`) and decode; the engine
+//!   does the I/O.
+//! * [`query`] — the unified read engine ([`query::engine`]: plan →
+//!   coalesced, parallel, cached fetches for every format) and the
+//!   cross-format surface: EXPLAIN plans, table statistics.
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled decode artifacts.
 //! * [`coordinator`] — streaming ingestion orchestrator: worker pool,
-//!   backpressure, commit coordination, metrics.
+//!   backpressure, commit coordination, metrics (including the engine's).
 //! * [`workload`] — synthetic FFHQ-like and Uber-pickups-like generators.
 
 pub mod util;

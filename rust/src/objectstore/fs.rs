@@ -152,6 +152,24 @@ impl ObjectStore for FsStore {
             Err(e) => Err(e.into()),
         }
     }
+
+    fn get_ranges(&self, key: &str, ranges: &[(u64, u64)]) -> Result<Vec<Vec<u8>>> {
+        use std::io::{Read, Seek, SeekFrom};
+        // One open + stat serves the whole batch; each range is a seek+read.
+        let path = self.path_for(key)?;
+        let mut f = fs::File::open(&path).with_context(|| format!("object not found: {key}"))?;
+        let size = f.metadata()?.len();
+        let mut out = Vec::with_capacity(ranges.len());
+        for &(off, len) in ranges {
+            let start = off.min(size);
+            let end = off.saturating_add(len).min(size);
+            f.seek(SeekFrom::Start(start))?;
+            let mut buf = vec![0u8; (end - start) as usize];
+            f.read_exact(&mut buf)?;
+            out.push(buf);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]

@@ -90,6 +90,23 @@ impl ObjectStore for MemStore {
             None => bail!("object not found: {key}"),
         }
     }
+
+    fn get_ranges(&self, key: &str, ranges: &[(u64, u64)]) -> Result<Vec<Vec<u8>>> {
+        // One map lookup serves the whole batch.
+        let obj = self.map.read().unwrap().get(key).cloned();
+        let v = match obj {
+            Some(v) => v,
+            None => bail!("object not found: {key}"),
+        };
+        Ok(ranges
+            .iter()
+            .map(|&(off, len)| {
+                let start = (off as usize).min(v.len());
+                let end = (off.saturating_add(len) as usize).min(v.len());
+                v[start..end].to_vec()
+            })
+            .collect())
+    }
 }
 
 #[cfg(test)]

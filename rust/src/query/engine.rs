@@ -1,0 +1,465 @@
+//! The unified read engine: every format's `read`/`read_slice` executes
+//! through this module.
+//!
+//! A read is planned as a set of [`PartRead`] fetch descriptors — which
+//! columns of which row groups of which part files — and the engine turns
+//! the plan into I/O:
+//!
+//! 1. **Footer resolution** through a process-wide [`FooterCache`], so
+//!    repeated reads of the same table version pay zero footer GETs.
+//! 2. **Range coalescing**: the byte ranges of all selected column chunks
+//!    in a file are sorted and merged (ranges closer than
+//!    [`COALESCE_GAP`] become one span), then fetched with a single
+//!    batched [`ObjectStore::get_ranges`] request per file.
+//! 3. **Parallel fan-out**: per-file fetch+decode jobs run on a shared
+//!    [`WorkerPool`]; chunks are decoded in completion order and results
+//!    are returned in submission order.
+//!
+//! Snapshots are served by a process-wide [`SnapshotCache`] (one LIST probe
+//! per read instead of a full log replay), and engine-wide counters —
+//! ranges coalesced, files pruned, cache hits — are exported via
+//! [`stats`]/[`report`] for the coordinator's metrics surface.
+
+use crate::columnar::{ColumnData, Footer, FooterCache};
+use crate::coordinator::WorkerPool;
+use crate::delta::{AddFile, DeltaTable, Snapshot, SnapshotCache};
+use crate::objectstore::{ObjectStore, ObjectStoreHandle};
+use crate::Result;
+use anyhow::Context;
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Chunk byte ranges closer than this are merged into one coalesced span:
+/// at object-store latencies, re-fetching a small gap is far cheaper than
+/// paying another round trip.
+pub const COALESCE_GAP: u64 = 16 * 1024;
+
+/// Row-group selection within one part file.
+#[derive(Debug, Clone)]
+pub enum GroupSel {
+    /// Every row group.
+    All,
+    /// Row groups whose named column's min/max statistics may contain a
+    /// value in `[lo, hi]` (the footer-stats pruning the formats rely on).
+    Stats {
+        /// Column whose chunk statistics drive the pruning.
+        column: String,
+        /// Inclusive lower bound.
+        lo: i64,
+        /// Inclusive upper bound.
+        hi: i64,
+    },
+}
+
+/// Fetch descriptor: which columns of which row groups of one part file.
+#[derive(Debug, Clone)]
+pub struct PartRead {
+    /// The part file (from the snapshot; size/timestamp pin the footer
+    /// cache entry).
+    pub part: AddFile,
+    /// Row-group selection.
+    pub groups: GroupSel,
+    /// Columns to fetch, by schema name.
+    pub columns: Vec<String>,
+}
+
+impl PartRead {
+    /// Read `columns` from every row group of `part`.
+    pub fn all_groups(part: AddFile, columns: &[&str]) -> Self {
+        let columns = columns.iter().map(|c| c.to_string()).collect();
+        Self { part, groups: GroupSel::All, columns }
+    }
+
+    /// Read `columns` from the row groups whose `stat_col` statistics may
+    /// overlap `[lo, hi]`.
+    pub fn pruned(part: AddFile, stat_col: &str, lo: i64, hi: i64, columns: &[&str]) -> Self {
+        Self {
+            part,
+            groups: GroupSel::Stats { column: stat_col.to_string(), lo, hi },
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+        }
+    }
+}
+
+/// Decoded output of one [`PartRead`].
+#[derive(Debug)]
+pub struct PartData {
+    /// Index of the originating descriptor in the submitted batch.
+    pub read_index: usize,
+    /// Selected row-group indices, ascending.
+    pub groups: Vec<usize>,
+    /// Per selected group, the decoded columns in request order.
+    pub columns: Vec<Vec<ColumnData>>,
+}
+
+/// What a read will touch — produced by `TensorStore::plan_read`, executed
+/// by [`read_parts`] and rendered by `query::plan` for EXPLAIN output.
+#[derive(Debug, Clone)]
+pub struct ReadSpec {
+    /// Live part files of the tensor before pruning.
+    pub total_files: usize,
+    /// Part files surviving pruning for this read.
+    pub selected_files: usize,
+    /// Total bytes of the selected files (upper bound on fetched bytes).
+    pub selected_bytes: u64,
+    /// The fetch descriptors the engine will execute. Empty for
+    /// whole-object formats (Binary), which fetch outside the DTPQ path.
+    pub reads: Vec<PartRead>,
+}
+
+impl ReadSpec {
+    /// Spec over an explicit descriptor list.
+    pub fn from_reads(total_files: usize, reads: Vec<PartRead>) -> Self {
+        let selected_bytes = reads.iter().map(|r| r.part.size).sum();
+        Self { total_files, selected_files: reads.len(), selected_bytes, reads }
+    }
+
+    /// Spec for a whole-object read (no columnar descriptors).
+    pub fn whole_object(total_files: usize, selected_files: usize, selected_bytes: u64) -> Self {
+        Self { total_files, selected_files, selected_bytes, reads: Vec::new() }
+    }
+}
+
+/// Engine-wide counters (process-global, monotonic).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Part-file fetches executed.
+    pub part_fetches: AtomicU64,
+    /// Chunk byte ranges requested before coalescing.
+    pub ranges_requested: AtomicU64,
+    /// Coalesced spans actually fetched.
+    pub ranges_coalesced: AtomicU64,
+    /// Part files skipped by min/max key pruning.
+    pub files_pruned: AtomicU64,
+    /// Row groups skipped by footer-stats pruning.
+    pub groups_pruned: AtomicU64,
+    /// Whole objects fetched outside the DTPQ path (Binary format).
+    pub object_fetches: AtomicU64,
+}
+
+impl EngineStats {
+    /// Record part files skipped by pruning.
+    pub fn note_files_pruned(&self, n: u64) {
+        self.files_pruned.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+static STATS: Lazy<EngineStats> = Lazy::new(EngineStats::default);
+static SNAPSHOTS: Lazy<SnapshotCache> = Lazy::new(SnapshotCache::new);
+static FOOTERS: Lazy<FooterCache> = Lazy::new(FooterCache::new);
+static POOL: Lazy<WorkerPool> = Lazy::new(|| {
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    WorkerPool::new(n.clamp(2, 16), 1024)
+});
+
+/// Engine-wide counters.
+pub fn stats() -> &'static EngineStats {
+    &STATS
+}
+
+/// The latest snapshot of `table`, via the process-wide snapshot cache.
+pub fn snapshot(table: &DeltaTable) -> Result<Arc<Snapshot>> {
+    SNAPSHOTS.get(table)
+}
+
+/// Plain-text engine metrics report (counters + cache hit rates), in the
+/// same `name value` format as `coordinator::Metrics::report`.
+pub fn report() -> String {
+    format!(
+        "engine.part_fetches {}\nengine.ranges_requested {}\nengine.ranges_coalesced {}\n\
+         engine.files_pruned {}\nengine.groups_pruned {}\nengine.object_fetches {}\n\
+         engine.footer_cache_hits {}\nengine.footer_cache_misses {}\n\
+         engine.snapshot_cache_hits {}\nengine.snapshot_cache_misses {}\n",
+        STATS.part_fetches.load(Ordering::Relaxed),
+        STATS.ranges_requested.load(Ordering::Relaxed),
+        STATS.ranges_coalesced.load(Ordering::Relaxed),
+        STATS.files_pruned.load(Ordering::Relaxed),
+        STATS.groups_pruned.load(Ordering::Relaxed),
+        STATS.object_fetches.load(Ordering::Relaxed),
+        FOOTERS.hits(),
+        FOOTERS.misses(),
+        SNAPSHOTS.hits(),
+        SNAPSHOTS.misses(),
+    )
+}
+
+/// The cached footer for a part file of `table`.
+pub fn part_footer(table: &DeltaTable, part: &AddFile) -> Result<Arc<Footer>> {
+    let store = table.store();
+    FOOTERS.get(store, store.instance_id(), &table.data_key(&part.path), part.size, part.timestamp)
+}
+
+/// Fetch a whole object belonging to `table` (the Binary format's path),
+/// counted in the engine metrics.
+pub fn fetch_object(table: &DeltaTable, rel: &str) -> Result<Vec<u8>> {
+    STATS.object_fetches.fetch_add(1, Ordering::Relaxed);
+    table.store().get(&table.data_key(rel))
+}
+
+/// Execute a batch of fetch descriptors: coalesce each file's chunk ranges,
+/// fan the per-file fetches across the worker pool, decode in completion
+/// order and return the results in submission order.
+pub fn read_parts(table: &DeltaTable, reads: Vec<PartRead>) -> Result<Vec<PartData>> {
+    match reads.len() {
+        0 => Ok(Vec::new()),
+        // Single-file reads skip the pool round trip.
+        1 => {
+            let read = reads.into_iter().next().unwrap();
+            let key = table.data_key(&read.part.path);
+            Ok(vec![fetch_one(table.store(), &key, 0, &read)?])
+        }
+        n => {
+            let (tx, rx) = mpsc::channel::<Result<PartData>>();
+            for (i, read) in reads.into_iter().enumerate() {
+                let store = table.store().clone();
+                let key = table.data_key(&read.part.path);
+                let tx = tx.clone();
+                POOL.submit(move || {
+                    let out = fetch_one(&store, &key, i, &read);
+                    let _ = tx.send(out);
+                });
+            }
+            drop(tx);
+            let mut slots: Vec<Option<PartData>> = Vec::new();
+            slots.resize_with(n, || None);
+            for res in rx {
+                let d = res?;
+                let idx = d.read_index;
+                slots[idx] = Some(d);
+            }
+            slots
+                .into_iter()
+                .map(|s| s.context("engine worker dropped a part result"))
+                .collect()
+        }
+    }
+}
+
+/// Fetch and decode one part file: cached footer, group selection, range
+/// coalescing, one batched GET, chunk decode.
+fn fetch_one(
+    store: &ObjectStoreHandle,
+    key: &str,
+    read_index: usize,
+    read: &PartRead,
+) -> Result<PartData> {
+    let footer =
+        FOOTERS.get(store, store.instance_id(), key, read.part.size, read.part.timestamp)?;
+    let cols: Vec<usize> = read
+        .columns
+        .iter()
+        .map(|n| footer.schema.index_of(n))
+        .collect::<Result<Vec<usize>>>()?;
+    let total_groups = footer.row_groups.len();
+    let groups: Vec<usize> = match &read.groups {
+        GroupSel::All => (0..total_groups).collect(),
+        GroupSel::Stats { column, lo, hi } => {
+            let c = footer.schema.index_of(column)?;
+            footer
+                .row_groups
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| g.columns[c].stats.may_overlap(*lo, *hi))
+                .map(|(i, _)| i)
+                .collect()
+        }
+    };
+    STATS.groups_pruned.fetch_add((total_groups - groups.len()) as u64, Ordering::Relaxed);
+
+    // Collect every selected chunk's byte range, then coalesce.
+    let mut ranges: Vec<(u64, u64)> = Vec::new();
+    for &g in &groups {
+        for &c in &cols {
+            let m = &footer.row_groups[g].columns[c];
+            if m.len > 0 {
+                ranges.push((m.offset, m.len));
+            }
+        }
+    }
+    STATS.ranges_requested.fetch_add(ranges.len() as u64, Ordering::Relaxed);
+    let spans = coalesce(ranges);
+    STATS.ranges_coalesced.fetch_add(spans.len() as u64, Ordering::Relaxed);
+    let bodies = store.get_ranges(key, &spans)?;
+
+    let mut columns = Vec::with_capacity(groups.len());
+    for &g in &groups {
+        let mut row = Vec::with_capacity(cols.len());
+        for &c in &cols {
+            let m = &footer.row_groups[g].columns[c];
+            if m.len == 0 {
+                row.push(footer.decode_chunk(g, c, &[], key)?);
+                continue;
+            }
+            let (si, off) = locate(&spans, m.offset)
+                .with_context(|| format!("chunk {key}[{g}.{c}] outside fetched spans"))?;
+            let body = bodies[si]
+                .get(off..off + m.len as usize)
+                .with_context(|| format!("short span for {key}[{g}.{c}]"))?;
+            row.push(footer.decode_chunk(g, c, body, key)?);
+        }
+        columns.push(row);
+    }
+    STATS.part_fetches.fetch_add(1, Ordering::Relaxed);
+    Ok(PartData { read_index, groups, columns })
+}
+
+/// Sort and merge byte ranges, joining ranges separated by less than
+/// [`COALESCE_GAP`] into one span.
+fn coalesce(mut ranges: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    ranges.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(ranges.len());
+    for (off, len) in ranges {
+        if let Some(last) = out.last_mut() {
+            let last_end = last.0 + last.1;
+            if off <= last_end.saturating_add(COALESCE_GAP) {
+                let end = (off + len).max(last_end);
+                last.1 = end - last.0;
+                continue;
+            }
+        }
+        out.push((off, len));
+    }
+    out
+}
+
+/// Index of the span containing `offset`, and the offset within it.
+fn locate(spans: &[(u64, u64)], offset: u64) -> Option<(usize, usize)> {
+    // Spans are sorted and disjoint; binary-search the start.
+    let i = match spans.binary_search_by(|&(o, _)| o.cmp(&offset)) {
+        Ok(i) => i,
+        Err(0) => return None,
+        Err(i) => i - 1,
+    };
+    let (o, l) = spans[i];
+    if offset >= o && offset < o + l {
+        Some((i, (offset - o) as usize))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::columnar::{write_file, Field, PhysType, Schema, WriteOptions};
+    use crate::delta::{Action, DeltaTable};
+    use crate::objectstore::ObjectStoreHandle;
+
+    #[test]
+    fn coalesce_merges_and_orders() {
+        // Adjacent and overlapping ranges merge; far ranges stay apart.
+        let spans = coalesce(vec![(100, 50), (0, 10), (150, 10), (5, 20)]);
+        assert_eq!(spans.len(), 2, "{spans:?}");
+        assert_eq!(spans[0], (0, 25));
+        assert_eq!(spans[1], (100, 60));
+        // Gap below the threshold merges too.
+        let spans = coalesce(vec![(0, 10), (10 + COALESCE_GAP, 10)]);
+        assert_eq!(spans.len(), 1);
+        // Gap above the threshold does not.
+        let spans = coalesce(vec![(0, 10), (11 + COALESCE_GAP, 10)]);
+        assert_eq!(spans.len(), 2);
+        assert!(coalesce(vec![]).is_empty());
+    }
+
+    #[test]
+    fn locate_finds_containing_span() {
+        let spans = vec![(0u64, 10u64), (100, 50)];
+        assert_eq!(locate(&spans, 0), Some((0, 0)));
+        assert_eq!(locate(&spans, 9), Some((0, 9)));
+        assert_eq!(locate(&spans, 10), None);
+        assert_eq!(locate(&spans, 120), Some((1, 20)));
+        assert_eq!(locate(&spans, 150), None);
+        assert_eq!(locate(&[], 5), None);
+    }
+
+    fn table_with_part(groups: usize) -> (ObjectStoreHandle, DeltaTable, AddFile) {
+        let store = ObjectStoreHandle::mem();
+        let table = DeltaTable::create(store.clone(), "t").unwrap();
+        let schema = Schema::new(vec![
+            Field::new("k", PhysType::Int),
+            Field::new("v", PhysType::Float),
+        ])
+        .unwrap();
+        let data: Vec<Vec<ColumnData>> = (0..groups)
+            .map(|g| {
+                let base = (g * 10) as i64;
+                vec![
+                    ColumnData::Int((0..10).map(|i| base + i).collect()),
+                    ColumnData::Float((0..10).map(|i| (base + i) as f64 * 0.5).collect()),
+                ]
+            })
+            .collect();
+        let bytes = write_file(&schema, &data, WriteOptions::default()).unwrap();
+        store.put("t/data/x/p0", &bytes).unwrap();
+        let add = AddFile {
+            path: "data/x/p0".into(),
+            size: bytes.len() as u64,
+            rows: (groups * 10) as u64,
+            tensor_id: "x".into(),
+            min_key: Some(0),
+            max_key: Some((groups * 10) as i64 - 1),
+            timestamp: 1,
+            meta: None,
+        };
+        table
+            .commit(vec![Action::Add(add.clone()), Action::CommitInfo {
+                operation: "W".into(),
+                timestamp: 1,
+            }])
+            .unwrap();
+        (store, table, add)
+    }
+
+    #[test]
+    fn read_parts_roundtrips_and_batches() {
+        let (store, table, add) = table_with_part(4);
+        store.stats().reset();
+        let out = read_parts(
+            &table,
+            vec![PartRead::all_groups(add.clone(), &["k", "v"])],
+        )
+        .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].groups, vec![0, 1, 2, 3]);
+        let ks = out[0].columns[2][0].clone().into_ints().unwrap();
+        assert_eq!(ks, (20..30).collect::<Vec<i64>>());
+        let vs = out[0].columns[2][1].clone().into_floats().unwrap();
+        assert_eq!(vs[0], 10.0);
+        // Footer (cold) + one coalesced batch.
+        let (gets, ..) = store.stats().snapshot();
+        assert!(gets <= 2, "footer + one batched GET, saw {gets}");
+    }
+
+    #[test]
+    fn read_parts_prunes_groups_by_stats() {
+        let (_store, table, add) = table_with_part(4);
+        let out = read_parts(
+            &table,
+            vec![PartRead::pruned(add, "k", 15, 22, &["k"])],
+        )
+        .unwrap();
+        assert_eq!(out[0].groups, vec![1, 2], "groups holding keys 10..30");
+    }
+
+    #[test]
+    fn read_parts_parallel_order_is_stable() {
+        let (_store, table, add) = table_with_part(2);
+        // Submit the same part several times; outputs come back in
+        // submission order regardless of completion order.
+        let reads: Vec<PartRead> =
+            (0..6).map(|_| PartRead::all_groups(add.clone(), &["k"])).collect();
+        let out = read_parts(&table, reads).unwrap();
+        assert_eq!(out.len(), 6);
+        for (i, d) in out.iter().enumerate() {
+            assert_eq!(d.read_index, i);
+            assert_eq!(d.groups.len(), 2);
+        }
+    }
+
+    #[test]
+    fn missing_column_is_an_error() {
+        let (_store, table, add) = table_with_part(1);
+        assert!(read_parts(&table, vec![PartRead::all_groups(add, &["nope"])]).is_err());
+    }
+}

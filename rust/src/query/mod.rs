@@ -1,10 +1,14 @@
 //! Read planning and table-level queries.
 //!
-//! The per-format read paths (row-group pruning, pointer-window fetches)
-//! live with their formats; this module provides the cross-format layer:
-//! execution plans with observable I/O estimates, table scans/statistics
+//! Every format's read path executes through the [`engine`] submodule: a
+//! read is planned as fetch descriptors (`TensorStore::plan_read`) and the
+//! engine turns them into coalesced, parallel, cached I/O. This module adds
+//! the cross-format surface on top: EXPLAIN-style [`ReadPlan`]s derived
+//! from the same descriptors the engine executes, table scans/statistics
 //! for `inspect`, and the optional XLA-accelerated decode route that runs
 //! the AOT artifacts from [`crate::runtime`] on fetched sparse slices.
+
+pub mod engine;
 
 use crate::coordinator::{discover_layout, format_by_name};
 use crate::delta::DeltaTable;
@@ -13,6 +17,11 @@ use crate::tensor::Slice;
 use crate::Result;
 
 /// A description of what a read will touch, for EXPLAIN-style output.
+///
+/// Derived from the same `plan_read` fetch descriptors the engine
+/// executes, so EXPLAIN reflects exactly what the read path does — a
+/// leading index selection `X[i]`, for example, prunes on the width-1
+/// window `(i, i)` just like the formats' min/max pruning.
 #[derive(Debug, Clone)]
 pub struct ReadPlan {
     /// Tensor id.
@@ -24,48 +33,28 @@ pub struct ReadPlan {
     /// Files surviving min/max pruning for the slice (whole read: all).
     pub selected_files: usize,
     /// Total bytes of the selected files (upper bound on fetched bytes;
-    /// ranged GETs usually fetch less).
+    /// coalesced ranged GETs usually fetch less).
     pub selected_bytes: u64,
 }
 
 /// Build a read plan for a whole-tensor or sliced read.
+///
+/// Because the plan comes from the formats' own `plan_read`, it validates
+/// the slice against the tensor's shape (an out-of-bounds window is an
+/// error, exactly as executing it would be) and may perform a little
+/// metadata I/O — footer-cached and coalesced — when the geometry isn't
+/// carried on the Add actions (legacy tables, or BSGS whose authoritative
+/// block shape lives in the stored rows).
 pub fn plan(table: &DeltaTable, id: &str, slice: Option<&Slice>) -> Result<ReadPlan> {
     let layout = discover_layout(table, id)?;
-    let snap = table.snapshot()?;
-    let files: Vec<_> = snap.files_for_tensor(id).into_iter().cloned().collect();
-    let total_files = files.len();
-    let (selected, bytes) = match slice {
-        None => (total_files, files.iter().map(|f| f.size).sum()),
-        Some(s) => {
-            // Estimate with the dim-0 window when the slice provides one;
-            // formats prune on the leading key.
-            let window = match s.dims().first() {
-                Some(crate::tensor::Dim::Range(a, b)) if b > a => {
-                    Some((*a as i64, *b as i64 - 1))
-                }
-                _ => None,
-            };
-            match window {
-                None => (total_files, files.iter().map(|f| f.size).sum()),
-                Some((lo, hi)) => {
-                    let kept: Vec<_> = files
-                        .iter()
-                        .filter(|f| match (f.min_key, f.max_key) {
-                            (Some(min), Some(max)) => !(hi < min || lo > max),
-                            _ => true,
-                        })
-                        .collect();
-                    (kept.len(), kept.iter().map(|f| f.size).sum())
-                }
-            }
-        }
-    };
+    let fmt = format_by_name(&layout)?;
+    let spec = fmt.plan_read(table, id, slice)?;
     Ok(ReadPlan {
         id: id.to_string(),
         layout,
-        total_files,
-        selected_files: selected,
-        selected_bytes: bytes,
+        total_files: spec.total_files,
+        selected_files: spec.selected_files,
+        selected_bytes: spec.selected_bytes,
     })
 }
 
@@ -95,8 +84,12 @@ pub struct TensorInfo {
 }
 
 /// Scan the snapshot into per-tensor statistics.
+///
+/// One cached-snapshot pass derives counts, sizes **and** layouts — the
+/// layout falls out of each file's path, so `inspect` is O(files), not
+/// O(tensors × files) worth of per-tensor snapshot replays.
 pub fn table_stats(table: &DeltaTable) -> Result<Vec<TensorInfo>> {
-    let snap = table.snapshot()?;
+    let snap = engine::snapshot(table)?;
     let mut by_id: std::collections::BTreeMap<String, TensorInfo> = Default::default();
     for f in snap.files() {
         if f.tensor_id.is_empty() {
@@ -112,12 +105,18 @@ pub fn table_stats(table: &DeltaTable) -> Result<Vec<TensorInfo>> {
         e.files += 1;
         e.bytes += f.size;
         e.rows += f.rows;
+        if e.layout.is_empty() {
+            if let Some(l) = crate::coordinator::layout_from_path(&f.path, &f.tensor_id) {
+                e.layout = l;
+            }
+        }
     }
-    let mut out: Vec<TensorInfo> = by_id.into_values().collect();
-    for info in &mut out {
-        info.layout = discover_layout(table, &info.id).unwrap_or_else(|_| "?".into());
+    for info in by_id.values_mut() {
+        if info.layout.is_empty() {
+            info.layout = "?".into();
+        }
     }
-    Ok(out)
+    Ok(by_id.into_values().collect())
 }
 
 /// Decode a sparse slice through the XLA artifact when it fits the

@@ -5,13 +5,18 @@ use crate::Result;
 use anyhow::ensure;
 use std::ops::Range;
 
-/// Per-dimension selection: either a half-open range or the full dimension.
+/// Per-dimension selection: the full dimension, a half-open range, or a
+/// single index.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Dim {
     /// The whole dimension (`:`).
     All,
     /// A half-open range `[start, end)`.
     Range(usize, usize),
+    /// A single index `i` — equivalent to `Range(i, i + 1)` and resolved to
+    /// the width-1 window `(i, i)` by read planning, so `X[i]` prunes
+    /// exactly like the formats' min/max pruning does.
+    Index(usize),
 }
 
 /// A slice over an n-dimensional tensor: one [`Dim`] per dimension.
@@ -39,7 +44,7 @@ impl Slice {
     /// A single index in dimension 0 (the paper's `X[i,:,:,:]` read-slice
     /// workload): `index(3)` is `X[3:4, ...]`.
     pub fn index(i: usize) -> Self {
-        Self { dims: vec![Dim::Range(i, i + 1)] }
+        Self { dims: vec![Dim::Index(i)] }
     }
 
     /// Range `[start, end)` in dimension `dim`, everything elsewhere, for a
@@ -78,6 +83,10 @@ impl Slice {
                     ensure!(e <= d, "slice dim {i}: end {e} out of bounds (size {d})");
                     s..e
                 }
+                Some(&Dim::Index(ix)) => {
+                    ensure!(ix < d, "slice dim {i}: index {ix} out of bounds (size {d})");
+                    ix..ix + 1
+                }
             };
             out.push(r);
         }
@@ -113,7 +122,9 @@ mod tests {
     #[test]
     fn index_slice() {
         let s = Slice::index(3);
+        assert_eq!(s.dims(), &[Dim::Index(3)]);
         assert_eq!(s.resolve(&[10, 4]).unwrap(), vec![3..4, 0..4]);
+        assert!(Slice::index(10).resolve(&[10]).is_err(), "index out of bounds");
     }
 
     #[test]
