@@ -20,7 +20,14 @@ use delta_tensor::util::{human_bytes, RunStats, Stopwatch};
 use delta_tensor::workload::{ffhq_like, FfhqParams};
 
 fn fresh_table() -> DeltaTable {
-    DeltaTable::create(ObjectStoreHandle::sim_mem(benchkit::net()), "t").unwrap()
+    // These benches measure cold object-store reads (the paper's regime);
+    // keep the serving tier's block cache out of the measurement.
+    cold_table(DeltaTable::create(ObjectStoreHandle::sim_mem(benchkit::net()), "t").unwrap())
+}
+
+fn cold_table(table: DeltaTable) -> DeltaTable {
+    delta_tensor::serving::set_cache_enabled(table.store().instance_id(), false);
+    table
 }
 
 fn main() {

@@ -1,0 +1,67 @@
+//! Serving-tier load bench: the closed-loop Zipfian hot-set workload of
+//! `workload::serve`, run twice over a fresh simulated cloud store — once
+//! through the block cache + single-flight serving tier, once straight to
+//! the backend — and compared on throughput, latency quantiles, GETs and
+//! bytes moved.
+//!
+//! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
+//! `DT_BENCH_OUT` (JSON report path, default `BENCH_serve.json`). CI runs
+//! the tiny scale and uploads the JSON so the perf trajectory accumulates
+//! across commits.
+
+use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
+use delta_tensor::coordinator::Coordinator;
+use delta_tensor::prelude::*;
+use delta_tensor::util::human_bytes;
+use delta_tensor::workload::serve::{populate_serve_table, run_serve, ServeParams, ServeReport};
+
+fn run_once(cache: bool, params: &ServeParams) -> ServeReport {
+    let mut params = params.clone();
+    params.cache = cache;
+    let store = ObjectStoreHandle::sim_mem(benchkit::net());
+    let table = DeltaTable::create(store, "serve").expect("fresh table");
+    let c = Coordinator::new(table, 4, 32);
+    let ids = populate_serve_table(&c, &params).expect("populate");
+    run_serve(&c, &ids, &params).expect("serve run")
+}
+
+fn main() {
+    let params = match benchkit::scale() {
+        Scale::Tiny => ServeParams::tiny(),
+        Scale::Small => ServeParams::small(),
+        Scale::Paper => ServeParams::paper(),
+    };
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for cache in [true, false] {
+        let r = run_once(cache, &params);
+        rows.push(Row {
+            label: if cache { "cache" } else { "no-cache" }.to_string(),
+            cells: vec![
+                format!("{:.0}", r.throughput_rps),
+                fmt_secs(r.p50_secs),
+                fmt_secs(r.p95_secs),
+                fmt_secs(r.p99_secs),
+                r.get_ops.to_string(),
+                human_bytes(r.bytes_read),
+            ],
+        });
+        reports.push(r);
+    }
+    print_table(
+        "serve: closed-loop Zipfian reads, serving tier on vs off",
+        &["mode", "req/s", "p50", "p95", "p99", "GETs", "bytes"],
+        &rows,
+    );
+    let speedup = reports[0].throughput_rps / reports[1].throughput_rps.max(1e-9);
+    println!("\nthroughput speedup with serving tier: {speedup:.2}x");
+
+    let out = std::env::var("DT_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let json = format!(
+        "{{\"bench\":\"serve\",\"cache\":{},\"no_cache\":{},\"speedup\":{speedup:.4}}}",
+        reports[0].to_json(),
+        reports[1].to_json()
+    );
+    std::fs::write(&out, json).expect("write bench report");
+    println!("wrote {out}");
+}

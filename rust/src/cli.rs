@@ -11,9 +11,13 @@
 //!   history    table commit history (time travel log)
 //!   optimize   compact a tensor's files                  (--id)
 //!   vacuum     delete unreferenced data objects
-//!   bench      run a paper experiment                    (--experiment fig12|fig13-16)
-//!   serve      run a simple request loop over stdin
+//!   bench      serving load harness                      (bench serve --clients ...)
 //! ```
+//!
+//! `bench serve` drives the coordinator with a closed-loop Zipfian hot-set
+//! workload ([`crate::workload::serve`]) and prints throughput, latency
+//! quantiles, and the serving-tier counters; `--json PATH` additionally
+//! writes the machine-readable report.
 
 use crate::coordinator::{Coordinator, IngestJob};
 use crate::delta::DeltaTable;
@@ -25,11 +29,14 @@ use crate::Result;
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
 
-/// Parsed command line: subcommand + `--key value` flags.
+/// Parsed command line: command, optional subcommand, `--key value` flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
-    /// Subcommand name.
+    /// Command name.
     pub command: String,
+    /// Optional subcommand (the first token after the command when it does
+    /// not start with `--`, as in `bench serve`).
+    pub subcommand: Option<String>,
     /// `--key value` pairs.
     pub flags: BTreeMap<String, String>,
 }
@@ -39,6 +46,10 @@ impl Args {
     pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Args> {
         let mut it = args.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
+        let subcommand = match it.peek() {
+            Some(v) if !v.starts_with("--") => it.next(),
+            _ => None,
+        };
         let mut flags = BTreeMap::new();
         while let Some(a) = it.next() {
             let key = a
@@ -51,7 +62,7 @@ impl Args {
             };
             flags.insert(key, value);
         }
-        Ok(Args { command, flags })
+        Ok(Args { command, subcommand, flags })
     }
 
     /// Required string flag.
@@ -68,6 +79,14 @@ impl Args {
     pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.flags.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    /// Optional f64 flag with default.
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
             None => Ok(default),
         }
     }
@@ -99,6 +118,13 @@ pub fn store_from_args(args: &Args) -> Result<ObjectStoreHandle> {
 
 /// Execute a parsed command. Returns the text to print.
 pub fn run(args: &Args) -> Result<String> {
+    if let Some(sub) = &args.subcommand {
+        // Only `bench` (and `help`, which ignores it) takes a subcommand;
+        // anywhere else a positional token is a usage error, not noise.
+        if !matches!(args.command.as_str(), "bench" | "help") {
+            bail!("unexpected argument {sub:?} for command {:?}", args.command);
+        }
+    }
     match args.command.as_str() {
         "help" | "--help" | "-h" => Ok(HELP.to_string()),
         "ingest" => cmd_ingest(args),
@@ -108,6 +134,7 @@ pub fn run(args: &Args) -> Result<String> {
         "history" => cmd_history(args),
         "optimize" => cmd_optimize(args),
         "vacuum" => cmd_vacuum(args),
+        "bench" => cmd_bench(args),
         "metrics-demo" => cmd_metrics_demo(args),
         other => bail!("unknown command {other:?}; try `delta-tensor help`"),
     }
@@ -126,6 +153,10 @@ COMMANDS
   history                        commit log (version, operation, timestamp)
   optimize  --id NAME            compact a tensor's part files
   vacuum                         delete unreferenced data objects
+  bench serve                    closed-loop Zipfian serving load harness
+            [--clients N] [--requests N] [--tensors N] [--dim0 N]
+            [--zipf S] [--no-cache] [--warmup-off] [--layout NAME]
+            [--seed N] [--workers N] [--json PATH]
 COMMON FLAGS
   --table NAME                   table root (default: tensors)
   --store mem|fs                 backend (default fs)   --root PATH
@@ -135,8 +166,12 @@ Benches for the paper's figures: `cargo bench` (see EXPERIMENTS.md).
 "#;
 
 fn open_table(args: &Args) -> Result<DeltaTable> {
+    open_table_named(args, "tensors")
+}
+
+fn open_table_named(args: &Args, default_table: &str) -> Result<DeltaTable> {
     let store = store_from_args(args)?;
-    DeltaTable::create_or_open(store, args.opt("table", "tensors"))
+    DeltaTable::create_or_open(store, args.opt("table", default_table))
 }
 
 fn cmd_ingest(args: &Args) -> Result<String> {
@@ -264,6 +299,42 @@ fn cmd_vacuum(args: &Args) -> Result<String> {
     Ok(format!("vacuum removed {n} objects"))
 }
 
+fn cmd_bench(args: &Args) -> Result<String> {
+    let what = args
+        .subcommand
+        .clone()
+        .unwrap_or_else(|| args.opt("experiment", "serve").to_string());
+    match what.as_str() {
+        "serve" => cmd_bench_serve(args),
+        other => {
+            bail!("unknown bench {other:?} (try `bench serve`; figure benches run via `cargo bench`)")
+        }
+    }
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<String> {
+    let table = open_table_named(args, "serve-bench")?;
+    let params = workload::serve::ServeParams {
+        clients: args.opt_usize("clients", 4)?,
+        requests_per_client: args.opt_usize("requests", 50)?,
+        tensors: args.opt_usize("tensors", 6)?,
+        dim0: args.opt_usize("dim0", 16)?,
+        zipf_s: args.opt_f64("zipf", 1.1)?,
+        cache: !args.has("no-cache"),
+        warmup: !args.has("warmup-off"),
+        seed: args.opt_usize("seed", 7)? as u64,
+        layout: args.opt("layout", "COO").to_string(),
+    };
+    let c = Coordinator::new(table, args.opt_usize("workers", 4)?, 32);
+    let ids = workload::serve::populate_serve_table(&c, &params)?;
+    let report = workload::serve::run_serve(&c, &ids, &params)?;
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing serve report to {path}"))?;
+    }
+    Ok(format!("{}\n{}", report.summary(), c.report()))
+}
+
 fn cmd_metrics_demo(args: &Args) -> Result<String> {
     // Small end-to-end smoke used by `make test` docs: write + read + report.
     let table = open_table(args)?;
@@ -290,17 +361,32 @@ mod tests {
     fn parse_flags() {
         let a = args(&["ingest", "--workload", "uber", "--layout", "CSF", "--dry-run"]);
         assert_eq!(a.command, "ingest");
+        assert_eq!(a.subcommand, None);
         assert_eq!(a.req("workload").unwrap(), "uber");
         assert_eq!(a.opt("layout", "auto"), "CSF");
         assert!(a.has("dry-run"));
         assert!(a.req("missing").is_err());
-        assert!(Args::parse(["x".to_string(), "oops".to_string()]).is_err());
+        // A stray positional after the flags start is still an error.
+        let stray = ["x", "--k", "v", "stray"].iter().map(|s| s.to_string());
+        assert!(Args::parse(stray).is_err());
+    }
+
+    #[test]
+    fn parse_subcommand() {
+        let a = args(&["bench", "serve", "--clients", "2"]);
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt_usize("clients", 0).unwrap(), 2);
+        assert_eq!(a.opt_f64("zipf", 1.1).unwrap(), 1.1);
     }
 
     #[test]
     fn help_and_unknown() {
         assert!(run(&args(&["help"])).unwrap().contains("USAGE"));
         assert!(run(&args(&["frobnicate"])).is_err());
+        // Stray positionals are rejected for commands without subcommands.
+        assert!(run(&args(&["vacuum", "stray", "--store", "mem"])).is_err());
+        assert!(run(&args(&["help", "bench"])).is_ok());
     }
 
     #[test]
@@ -357,6 +443,18 @@ mod tests {
         assert!(out.contains("vacuum removed"), "{out}");
 
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bench_serve_smoke() {
+        let out = run(&args(&[
+            "bench", "serve", "--store", "mem", "--clients", "2", "--requests", "5",
+            "--tensors", "2", "--dim0", "4",
+        ]))
+        .unwrap();
+        assert!(out.contains("req/s"), "{out}");
+        assert!(out.contains("serving.cache_hits"), "{out}");
+        assert!(run(&args(&["bench", "frobnicate"])).is_err());
     }
 
     #[test]

@@ -401,7 +401,7 @@ mod tests {
 
     #[test]
     fn i64_encoder_picks_compact_encodings() {
-        let rle = encode_i64s(&vec![7i64; 10_000]);
+        let rle = encode_i64s(&[7i64; 10_000]);
         assert!(rle.len() < 50, "constant column should RLE to ~nothing, got {}", rle.len());
         let sorted: Vec<i64> = (0..10_000).collect();
         let delta = encode_i64s(&sorted);

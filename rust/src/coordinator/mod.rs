@@ -8,7 +8,9 @@
 //!   discovers each tensor's layout from the (engine-cached) snapshot and
 //!   dispatches to the right format, whose read path executes through
 //!   [`crate::query::engine`] — coalesced batched GETs, parallel part
-//!   fetches, footer/snapshot caches.
+//!   fetches, footer/snapshot caches — and the serving tier
+//!   ([`crate::serving`]): block cache, single-flight dedup, admission
+//!   gate.
 //! * **Maintenance**: OPTIMIZE-style rewrite of a tensor into fresh,
 //!   well-sized part files (its read side also runs through the engine);
 //!   VACUUM delegation.
@@ -108,9 +110,15 @@ impl Coordinator {
     }
 
     /// Full metrics report: coordinator counters/histograms plus the read
-    /// engine's counters (ranges coalesced, files pruned, cache hits).
+    /// engine's counters (ranges coalesced, files pruned, cache hits) and
+    /// the serving tier's (block cache, single-flight, admission gate).
     pub fn report(&self) -> String {
-        format!("{}{}", self.metrics.report(), crate::query::engine::report())
+        format!(
+            "{}{}{}",
+            self.metrics.report(),
+            crate::query::engine::report(),
+            crate::serving::report()
+        )
     }
 
     /// Submit an ingestion job (blocks when the queue is full).
@@ -321,12 +329,16 @@ mod tests {
         assert!(report.contains("ingest.ok 1"), "{report}");
         assert!(report.contains("read.tensor 1"), "{report}");
         assert!(report.contains("ingest.write_secs"), "{report}");
-        // The full report additionally exposes the read engine's counters.
+        // The full report additionally exposes the read engine's and the
+        // serving tier's counters.
         let full = c.report();
         assert!(full.contains("ingest.ok 1"), "{full}");
         assert!(full.contains("engine.part_fetches"), "{full}");
         assert!(full.contains("engine.ranges_coalesced"), "{full}");
         assert!(full.contains("engine.snapshot_cache_hits"), "{full}");
+        assert!(full.contains("serving.cache_hits"), "{full}");
+        assert!(full.contains("serving.flight_leaders"), "{full}");
+        assert!(full.contains("serving.gate_acquired"), "{full}");
     }
 
     #[test]

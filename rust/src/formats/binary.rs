@@ -185,8 +185,11 @@ impl TensorStore for BinaryFormat {
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {
         let rel = self.object_rel(id);
         let snap = crate::query::engine::snapshot(table)?;
-        ensure!(snap.files.contains_key(&rel), "tensor {id:?} not found (binary)");
-        let bytes = crate::query::engine::fetch_object(table, &rel)?;
+        let add = snap
+            .files
+            .get(&rel)
+            .with_context(|| format!("tensor {id:?} not found (binary)"))?;
+        let bytes = crate::query::engine::fetch_object(table, add)?;
         Self::deserialize(&bytes)
     }
 

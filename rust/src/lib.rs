@@ -23,10 +23,14 @@
 //! * [`query`] — the unified read engine ([`query::engine`]: plan →
 //!   coalesced, parallel, cached fetches for every format) and the
 //!   cross-format surface: EXPLAIN plans, table statistics.
+//! * [`serving`] — the serving tier between the engine and the store:
+//!   sharded LRU block cache, single-flight fetch deduplication, and a
+//!   per-store admission gate.
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled decode artifacts.
 //! * [`coordinator`] — streaming ingestion orchestrator: worker pool,
 //!   backpressure, commit coordination, metrics (including the engine's).
-//! * [`workload`] — synthetic FFHQ-like and Uber-pickups-like generators.
+//! * [`workload`] — synthetic FFHQ-like and Uber-pickups-like generators,
+//!   plus the closed-loop serving load harness ([`workload::serve`]).
 
 pub mod util;
 pub mod jsonx;
@@ -36,6 +40,7 @@ pub mod delta;
 pub mod tensor;
 pub mod formats;
 pub mod query;
+pub mod serving;
 pub mod runtime;
 pub mod coordinator;
 pub mod workload;

@@ -268,7 +268,7 @@ mod tests {
             bandwidth_bytes_per_sec: f64::INFINITY,
             list_latency: Duration::ZERO,
         });
-        s.put("k", &vec![0u8; 4096]).unwrap();
+        s.put("k", &[0u8; 4096]).unwrap();
         // head() under this model is free (list_latency = 0), so the batch
         // costs ~1 latency while the serial loop costs one per range.
         let sw = Stopwatch::start();
@@ -289,7 +289,8 @@ mod tests {
             bandwidth_bytes_per_sec: 1e6, // 1 MB/s
             list_latency: Duration::ZERO,
         });
-        s.put("k", &vec![0u8; 2_000_000]).unwrap();
+        let data = vec![0u8; 2_000_000];
+        s.put("k", &data).unwrap();
         // Range read of 10 KB should take ~10 ms, not the 2 s full-object time.
         let sw = Stopwatch::start();
         let _ = s.get_range("k", 0, 10_000).unwrap();

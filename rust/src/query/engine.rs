@@ -19,11 +19,18 @@
 //! per read instead of a full log replay), and engine-wide counters —
 //! ranges coalesced, files pruned, cache hits — are exported via
 //! [`stats`]/[`report`] for the coordinator's metrics surface.
+//!
+//! All range I/O goes through the **serving tier**
+//! ([`crate::serving::fetch_spans`]): a sharded LRU block cache keyed by
+//! `(store, path, size, timestamp, range)`, single-flight deduplication of
+//! identical concurrent fetches, and a per-store admission gate. Hot
+//! repeated reads therefore issue zero GETs; identical cold reads collapse
+//! into one batch.
 
 use crate::columnar::{ColumnData, Footer, FooterCache};
 use crate::coordinator::WorkerPool;
 use crate::delta::{AddFile, DeltaTable, Snapshot, SnapshotCache};
-use crate::objectstore::{ObjectStore, ObjectStoreHandle};
+use crate::objectstore::ObjectStoreHandle;
 use crate::Result;
 use anyhow::Context;
 use once_cell::sync::Lazy;
@@ -191,10 +198,20 @@ pub fn part_footer(table: &DeltaTable, part: &AddFile) -> Result<Arc<Footer>> {
 }
 
 /// Fetch a whole object belonging to `table` (the Binary format's path),
-/// counted in the engine metrics.
-pub fn fetch_object(table: &DeltaTable, rel: &str) -> Result<Vec<u8>> {
+/// counted in the engine metrics. The object rides the serving tier as a
+/// single `(0, size)` block, so hot Binary reads are cache hits too; the
+/// Add action's size/timestamp pin the version exactly like part files.
+pub fn fetch_object(table: &DeltaTable, add: &AddFile) -> Result<Vec<u8>> {
     STATS.object_fetches.fetch_add(1, Ordering::Relaxed);
-    table.store().get(&table.data_key(rel))
+    let key = table.data_key(&add.path);
+    let blocks = crate::serving::fetch_spans(
+        table.store(),
+        &key,
+        add.size,
+        add.timestamp,
+        &[(0, add.size)],
+    )?;
+    Ok(blocks.into_iter().next().map(|b| b.as_ref().clone()).unwrap_or_default())
 }
 
 /// Execute a batch of fetch descriptors: coalesce each file's chunk ranges,
@@ -280,7 +297,8 @@ fn fetch_one(
     STATS.ranges_requested.fetch_add(ranges.len() as u64, Ordering::Relaxed);
     let spans = coalesce(ranges);
     STATS.ranges_coalesced.fetch_add(spans.len() as u64, Ordering::Relaxed);
-    let bodies = store.get_ranges(key, &spans)?;
+    let bodies =
+        crate::serving::fetch_spans(store, key, read.part.size, read.part.timestamp, &spans)?;
 
     let mut columns = Vec::with_capacity(groups.len());
     for &g in &groups {
@@ -344,7 +362,7 @@ mod tests {
     use super::*;
     use crate::columnar::{write_file, Field, PhysType, Schema, WriteOptions};
     use crate::delta::{Action, DeltaTable};
-    use crate::objectstore::ObjectStoreHandle;
+    use crate::objectstore::{ObjectStore, ObjectStoreHandle};
 
     #[test]
     fn coalesce_merges_and_orders() {

@@ -1,0 +1,285 @@
+//! Sharded, memory-budgeted LRU block cache for fetched byte ranges.
+//!
+//! Entries are keyed by [`BlockKey`] — `(store instance, part path, file
+//! size, file timestamp, byte offset, byte length)`. The `(size, timestamp)`
+//! components come from the part file's Add action, exactly like the footer
+//! cache's keys: part files are immutable under a given Add, and an
+//! OPTIMIZE rewrite of the same path carries a new size/timestamp, so stale
+//! entries simply stop being addressed and age out via LRU. No TTLs, no
+//! explicit invalidation, no possibility of serving wrong bytes.
+//!
+//! The cache is sharded to keep lock hold times short under concurrent
+//! serving traffic: a key hashes to one shard, each shard is an independent
+//! LRU with `budget / shards` bytes of capacity. Blocks larger than one
+//! shard's budget are never admitted (they would evict an entire shard for
+//! a single entry).
+
+use super::Block;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cache key: which bytes of which version of which object in which store.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    /// `ObjectStoreHandle::instance_id` of the owning store.
+    pub instance: u64,
+    /// Full object key of the part file.
+    pub path: String,
+    /// Object size from the Add action (version pin, half 1).
+    pub size: u64,
+    /// Add-action timestamp (version pin, half 2; strictly monotonic per
+    /// process, see `delta::now_ms`).
+    pub stamp: i64,
+    /// Byte offset of the cached range.
+    pub off: u64,
+    /// Byte length of the cached range as requested (bodies may be shorter
+    /// when the range was clamped at the object tail).
+    pub len: u64,
+}
+
+struct CacheEntry {
+    data: Block,
+    seq: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<BlockKey, CacheEntry>,
+    /// Recency order: ascending `seq` is least- to most-recently used.
+    order: BTreeMap<u64, BlockKey>,
+    bytes: u64,
+}
+
+/// The sharded LRU block cache.
+pub struct BlockCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: u64,
+    budget: u64,
+    seq: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+    bytes: AtomicU64,
+    hit_bytes: AtomicU64,
+}
+
+impl BlockCache {
+    /// New cache with a total byte budget split across `shards` shards.
+    pub fn new(budget_bytes: u64, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let mut v = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            v.push(Mutex::new(Shard::default()));
+        }
+        Self {
+            shard_budget: (budget_bytes / shards as u64).max(1),
+            budget: budget_bytes,
+            shards: v,
+            seq: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            hit_bytes: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &BlockKey) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Look up a block, refreshing its recency on hit.
+    pub fn get(&self, key: &BlockKey) -> Option<Block> {
+        let mut guard = self.shards[self.shard_of(key)].lock().unwrap();
+        let shard = &mut *guard;
+        match shard.map.get_mut(key) {
+            Some(e) => {
+                let fresh = self.seq.fetch_add(1, Ordering::Relaxed);
+                let stale = e.seq;
+                e.seq = fresh;
+                let data = e.data.clone();
+                shard.order.remove(&stale);
+                shard.order.insert(fresh, key.clone());
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hit_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+                Some(data)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Look up a block without touching the hit/miss counters or recency
+    /// order — the single-flight leader's re-probe, where the outcome was
+    /// already accounted by the caller's [`BlockCache::get`].
+    pub fn peek(&self, key: &BlockKey) -> Option<Block> {
+        let guard = self.shards[self.shard_of(key)].lock().unwrap();
+        guard.map.get(key).map(|e| e.data.clone())
+    }
+
+    /// Admit a block, evicting least-recently-used entries of its shard
+    /// while the shard is over budget. Blocks larger than one shard's
+    /// budget are not admitted; re-inserting an existing key is a no-op.
+    pub fn insert(&self, key: BlockKey, data: Block) {
+        let len = data.len() as u64;
+        if len > self.shard_budget {
+            return;
+        }
+        let mut guard = self.shards[self.shard_of(&key)].lock().unwrap();
+        let shard = &mut *guard;
+        match shard.map.entry(key.clone()) {
+            std::collections::hash_map::Entry::Occupied(_) => return,
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+                v.insert(CacheEntry { data, seq });
+                shard.order.insert(seq, key);
+            }
+        }
+        shard.bytes += len;
+        self.bytes.fetch_add(len, Ordering::Relaxed);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        while shard.bytes > self.shard_budget {
+            let Some(oldest) = shard.order.keys().next().copied() else {
+                break;
+            };
+            let victim = shard.order.remove(&oldest).expect("order key present");
+            if let Some(e) = shard.map.remove(&victim) {
+                let elen = e.data.len() as u64;
+                shard.bytes -= elen;
+                self.bytes.fetch_sub(elen, Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Total configured byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Bytes currently held.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cache hits so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Blocks admitted so far.
+    pub fn inserts(&self) -> u64 {
+        self.inserts.load(Ordering::Relaxed)
+    }
+
+    /// Blocks evicted so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Bytes served from cache so far.
+    pub fn hit_bytes(&self) -> u64 {
+        self.hit_bytes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn key(path: &str, off: u64) -> BlockKey {
+        BlockKey { instance: 1, path: path.to_string(), size: 100, stamp: 1, off, len: 10 }
+    }
+
+    fn block(n: usize) -> Block {
+        Arc::new(vec![7u8; n])
+    }
+
+    #[test]
+    fn hit_miss_and_byte_accounting() {
+        let c = BlockCache::new(1024, 4);
+        assert!(c.get(&key("a", 0)).is_none());
+        assert_eq!(c.misses(), 1);
+        c.insert(key("a", 0), block(10));
+        let b = c.get(&key("a", 0)).expect("inserted block");
+        assert_eq!(b.len(), 10);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.bytes(), 10);
+        assert_eq!(c.hit_bytes(), 10);
+        // Same path, different range: distinct entry.
+        assert!(c.get(&key("a", 50)).is_none());
+        // Same range, different version pin: distinct entry.
+        let mut stale = key("a", 0);
+        stale.stamp = 2;
+        assert!(c.get(&stale).is_none());
+    }
+
+    #[test]
+    fn peek_does_not_count_or_touch_recency() {
+        let c = BlockCache::new(1024, 1);
+        assert!(c.peek(&key("a", 0)).is_none());
+        c.insert(key("a", 0), block(10));
+        assert!(c.peek(&key("a", 0)).is_some());
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 0);
+    }
+
+    #[test]
+    fn reinsert_is_noop() {
+        let c = BlockCache::new(1024, 1);
+        c.insert(key("a", 0), block(10));
+        c.insert(key("a", 0), block(10));
+        assert_eq!(c.inserts(), 1);
+        assert_eq!(c.bytes(), 10);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first() {
+        // Single shard for deterministic ordering; budget holds two blocks.
+        let c = BlockCache::new(25, 1);
+        c.insert(key("a", 0), block(10));
+        c.insert(key("b", 0), block(10));
+        // Touch "a" so "b" is now the least recently used.
+        assert!(c.get(&key("a", 0)).is_some());
+        c.insert(key("c", 0), block(10));
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(&key("a", 0)).is_some(), "recently used survives");
+        assert!(c.get(&key("b", 0)).is_none(), "LRU victim evicted");
+        assert!(c.get(&key("c", 0)).is_some());
+        assert!(c.bytes() <= 25);
+    }
+
+    #[test]
+    fn oversized_blocks_are_not_admitted() {
+        let c = BlockCache::new(64, 4); // 16 bytes per shard
+        c.insert(key("big", 0), block(32));
+        assert_eq!(c.inserts(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert!(c.get(&key("big", 0)).is_none());
+    }
+
+    #[test]
+    fn eviction_keeps_global_bytes_consistent() {
+        let c = BlockCache::new(30, 1);
+        for i in 0..10 {
+            c.insert(key("k", i * 10), block(10));
+        }
+        assert!(c.bytes() <= 30, "bytes {}", c.bytes());
+        assert_eq!(c.inserts(), 10);
+        assert_eq!(c.evictions(), 7);
+    }
+}

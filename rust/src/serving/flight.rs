@@ -1,0 +1,199 @@
+//! Single-flight deduplication of identical in-flight fetches.
+//!
+//! When N concurrent readers need the same byte ranges of the same part
+//! file version, only the first (the *leader*) issues the batched
+//! `get_ranges` request; the rest (*followers*) block on a condvar and
+//! receive the leader's result when it lands. Keys carry the same
+//! `(store instance, path, size, timestamp)` version pin as the block
+//! cache plus the exact span list, so two flights can only merge when
+//! their results would be byte-identical.
+//!
+//! A completed flight is removed from the in-flight map immediately after
+//! its result is broadcast; late arrivals start a fresh flight (and in
+//! practice hit the block cache instead).
+
+use super::Block;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Identity of one fetch: store instance, object path, size/timestamp
+/// version pin, and the exact spans requested.
+pub type FlightKey = (u64, String, u64, i64, Vec<(u64, u64)>);
+
+/// Broadcastable outcome: the fetched blocks, or the leader's error text.
+type FlightResult = std::result::Result<Arc<Vec<Block>>, String>;
+
+struct Flight {
+    slot: Mutex<Option<FlightResult>>,
+    cv: Condvar,
+}
+
+/// The single-flight table.
+pub struct SingleFlight {
+    inflight: Mutex<HashMap<FlightKey, Arc<Flight>>>,
+    leaders: AtomicU64,
+    followers: AtomicU64,
+}
+
+impl Default for SingleFlight {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SingleFlight {
+    /// New empty table.
+    pub fn new() -> Self {
+        Self {
+            inflight: Mutex::new(HashMap::new()),
+            leaders: AtomicU64::new(0),
+            followers: AtomicU64::new(0),
+        }
+    }
+
+    /// Execute `fetch` under single-flight semantics: if an identical fetch
+    /// is already in flight, wait for its result instead of issuing a
+    /// duplicate request. Errors (and panics, surfaced as errors) are
+    /// broadcast to every waiter.
+    pub fn run<F>(&self, key: FlightKey, fetch: F) -> Result<Arc<Vec<Block>>>
+    where
+        F: FnOnce() -> Result<Vec<Block>>,
+    {
+        let (flight, leader) = {
+            let mut map = self.inflight.lock().unwrap();
+            match map.get(&key) {
+                Some(f) => (f.clone(), false),
+                None => {
+                    let f = Arc::new(Flight { slot: Mutex::new(None), cv: Condvar::new() });
+                    map.insert(key.clone(), f.clone());
+                    (f, true)
+                }
+            }
+        };
+        if leader {
+            self.leaders.fetch_add(1, Ordering::Relaxed);
+            // A panicking fetch must still release the flight, or every
+            // follower would block forever.
+            let outcome: FlightResult =
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(fetch)) {
+                    Ok(Ok(blocks)) => Ok(Arc::new(blocks)),
+                    Ok(Err(e)) => Err(format!("{e:#}")),
+                    Err(_) => Err("fetch panicked".to_string()),
+                };
+            {
+                let mut slot = flight.slot.lock().unwrap();
+                *slot = Some(outcome.clone());
+            }
+            flight.cv.notify_all();
+            self.inflight.lock().unwrap().remove(&key);
+            outcome.map_err(|e| anyhow::anyhow!(e))
+        } else {
+            self.followers.fetch_add(1, Ordering::Relaxed);
+            let mut slot = flight.slot.lock().unwrap();
+            while slot.is_none() {
+                slot = flight.cv.wait(slot).unwrap();
+            }
+            slot.clone().expect("loop exits only when set").map_err(|e| anyhow::anyhow!(e))
+        }
+    }
+
+    /// Fetches actually executed.
+    pub fn leaders(&self) -> u64 {
+        self.leaders.load(Ordering::Relaxed)
+    }
+
+    /// Fetches satisfied by waiting on a leader.
+    pub fn followers(&self) -> u64 {
+        self.followers.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+    use std::time::Duration;
+
+    fn k(tag: u64) -> FlightKey {
+        (tag, "obj".to_string(), 100, 1, vec![(0, 16)])
+    }
+
+    #[test]
+    fn concurrent_identical_fetches_run_once() {
+        let sf = Arc::new(SingleFlight::new());
+        let calls = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(Barrier::new(4));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let sf2 = sf.clone();
+            let calls = calls.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                let sf3 = sf2.clone();
+                sf2.run(k(1), move || {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    // Hold the flight open until the other three threads are
+                    // registered as followers (bounded spin: CI scheduling).
+                    for _ in 0..5000 {
+                        if sf3.followers() >= 3 {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Ok(vec![Arc::new(vec![1u8, 2, 3])])
+                })
+                .unwrap()
+            }));
+        }
+        let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "exactly one fetch for 4 callers");
+        assert_eq!(sf.leaders(), 1);
+        assert_eq!(sf.followers(), 3);
+        for o in &outs {
+            assert_eq!(o.as_ref().len(), 1);
+            assert_eq!(*o[0], vec![1u8, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn sequential_fetches_do_not_share() {
+        let sf = SingleFlight::new();
+        let calls = AtomicUsize::new(0);
+        for _ in 0..2 {
+            sf.run(k(2), || {
+                calls.fetch_add(1, Ordering::SeqCst);
+                Ok(vec![Arc::new(vec![0u8])])
+            })
+            .unwrap();
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 2, "completed flights are not reused");
+        assert_eq!(sf.followers(), 0);
+    }
+
+    #[test]
+    fn errors_are_broadcast() {
+        let sf = SingleFlight::new();
+        let err = sf.run(k(3), || anyhow::bail!("backend down")).unwrap_err();
+        assert!(format!("{err:#}").contains("backend down"));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_merge() {
+        let sf = SingleFlight::new();
+        let calls = AtomicUsize::new(0);
+        let mut key_b = k(4);
+        key_b.4 = vec![(0, 32)];
+        for key in [k(4), key_b] {
+            sf.run(key, || {
+                calls.fetch_add(1, Ordering::SeqCst);
+                Ok(vec![Arc::new(vec![0u8])])
+            })
+            .unwrap();
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,147 @@
+//! Admission gate: bounded in-flight fetch permits per store instance.
+//!
+//! A burst of cold reads (cache misses that single-flight cannot merge)
+//! would otherwise open an unbounded number of concurrent requests against
+//! the backend. The gate caps concurrent fetches per store: excess callers
+//! block until a permit frees, so a cold burst degrades into queueing
+//! latency instead of thundering the object store. Permits are per
+//! *instance*, so one hot store cannot starve fetches against another.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Per-store-instance fetch concurrency limiter.
+pub struct FetchGate {
+    max_per_store: usize,
+    in_flight: Mutex<HashMap<u64, usize>>,
+    freed: Condvar,
+    acquired: AtomicU64,
+    waits: AtomicU64,
+}
+
+/// A held permit; dropping it releases the slot and wakes one waiter.
+pub struct GatePermit<'a> {
+    gate: &'a FetchGate,
+    instance: u64,
+}
+
+impl FetchGate {
+    /// New gate allowing `max_per_store` concurrent fetches per instance.
+    pub fn new(max_per_store: usize) -> Self {
+        Self {
+            max_per_store: max_per_store.max(1),
+            in_flight: Mutex::new(HashMap::new()),
+            freed: Condvar::new(),
+            acquired: AtomicU64::new(0),
+            waits: AtomicU64::new(0),
+        }
+    }
+
+    /// Acquire a permit for `instance`, blocking while the store is at its
+    /// concurrency cap.
+    pub fn acquire(&self, instance: u64) -> GatePermit<'_> {
+        let mut held = self.in_flight.lock().unwrap();
+        let mut counted_wait = false;
+        while held.get(&instance).copied().unwrap_or(0) >= self.max_per_store {
+            if !counted_wait {
+                self.waits.fetch_add(1, Ordering::Relaxed);
+                counted_wait = true;
+            }
+            held = self.freed.wait(held).unwrap();
+        }
+        *held.entry(instance).or_insert(0) += 1;
+        self.acquired.fetch_add(1, Ordering::Relaxed);
+        GatePermit { gate: self, instance }
+    }
+
+    /// Permits handed out so far.
+    pub fn acquired(&self) -> u64 {
+        self.acquired.load(Ordering::Relaxed)
+    }
+
+    /// Acquisitions that had to block at least once.
+    pub fn waits(&self) -> u64 {
+        self.waits.load(Ordering::Relaxed)
+    }
+
+    /// Concurrency cap per store instance.
+    pub fn max_per_store(&self) -> usize {
+        self.max_per_store
+    }
+}
+
+impl Drop for GatePermit<'_> {
+    fn drop(&mut self) {
+        let mut held = self.gate.in_flight.lock().unwrap();
+        if let Some(n) = held.get_mut(&self.instance) {
+            *n -= 1;
+            if *n == 0 {
+                held.remove(&self.instance);
+            }
+        }
+        drop(held);
+        self.gate.freed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn caps_concurrency_per_store() {
+        let gate = Arc::new(FetchGate::new(2));
+        let current = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let gate = gate.clone();
+            let current = current.clone();
+            let peak = peak.clone();
+            handles.push(std::thread::spawn(move || {
+                let _permit = gate.acquire(42);
+                let now = current.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(20));
+                current.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+        assert_eq!(gate.acquired(), 6);
+        assert!(gate.waits() >= 1, "six fetches through two permits must queue");
+    }
+
+    #[test]
+    fn stores_do_not_share_permits() {
+        let gate = FetchGate::new(1);
+        let a = gate.acquire(1);
+        // A different instance proceeds immediately even though instance 1
+        // is saturated.
+        let b = gate.acquire(2);
+        drop(a);
+        drop(b);
+        assert_eq!(gate.acquired(), 2);
+        assert_eq!(gate.waits(), 0);
+    }
+
+    #[test]
+    fn released_permits_unblock_waiters() {
+        let gate = Arc::new(FetchGate::new(1));
+        let first = gate.acquire(7);
+        let gate2 = gate.clone();
+        let h = std::thread::spawn(move || {
+            let _p = gate2.acquire(7);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(first);
+        h.join().unwrap();
+        assert_eq!(gate.acquired(), 2);
+    }
+}

@@ -1,0 +1,274 @@
+//! The serving tier: a caching, deduplicating, admission-controlled layer
+//! between the read engine and the object store.
+//!
+//! PR 1's read engine coalesces and parallelizes GETs but still pays the
+//! object store on every read. Under serving traffic — many concurrent
+//! clients hammering a hot set of tensors — the same byte ranges are
+//! fetched over and over. This module closes that gap with three
+//! mechanisms, applied in order on every range fetch:
+//!
+//! 1. **Block cache** ([`BlockCache`]): a sharded, memory-budgeted LRU of
+//!    fetched range bytes keyed by `(store instance, path, size, timestamp,
+//!    offset, length)`. The `(size, timestamp)` version pin makes
+//!    correctness TTL-free: OPTIMIZE rewrites carry new timestamps, so
+//!    stale entries are never addressed and age out via LRU.
+//! 2. **Single-flight** ([`SingleFlight`]): N concurrent identical fetches
+//!    collapse into one `get_ranges` batch whose result is broadcast to
+//!    every waiter.
+//! 3. **Admission gate** ([`FetchGate`]): bounded in-flight fetch permits
+//!    per store, so a burst of cold misses queues instead of thundering
+//!    the backend.
+//!
+//! The engine routes all range I/O through [`fetch_spans`]; every format
+//! (FTSF, COO, CSR/CSC, CSF, BSGS and the Binary baseline's whole-object
+//! reads) benefits transparently. Counters are exported through
+//! [`report`], which `Coordinator::report` appends to its output.
+//!
+//! Knobs: `DT_CACHE_MB` (total cache budget, default 256 MiB; 0 disables
+//! admission) and `DT_FETCH_PERMITS` (per-store in-flight fetch cap,
+//! default 64). [`set_cache_enabled`] bypasses the cache and single-flight
+//! per store instance — the load harness's control group.
+
+mod cache;
+mod flight;
+mod gate;
+
+pub use cache::{BlockCache, BlockKey};
+pub use flight::{FlightKey, SingleFlight};
+pub use gate::{FetchGate, GatePermit};
+
+use crate::objectstore::{ObjectStore, ObjectStoreHandle};
+use crate::Result;
+use anyhow::ensure;
+use once_cell::sync::Lazy;
+use std::collections::HashSet;
+use std::sync::{Arc, RwLock};
+
+/// A fetched block of bytes, shared between the cache and all waiters.
+pub type Block = Arc<Vec<u8>>;
+
+/// Number of cache shards (keeps lock hold times short under fan-out).
+const CACHE_SHARDS: usize = 16;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+static CACHE: Lazy<BlockCache> =
+    Lazy::new(|| BlockCache::new(env_u64("DT_CACHE_MB", 256) * 1024 * 1024, CACHE_SHARDS));
+static FLIGHT: Lazy<SingleFlight> = Lazy::new(SingleFlight::new);
+static GATE: Lazy<FetchGate> =
+    Lazy::new(|| FetchGate::new(env_u64("DT_FETCH_PERMITS", 64) as usize));
+static BYPASS: Lazy<RwLock<HashSet<u64>>> = Lazy::new(|| RwLock::new(HashSet::new()));
+
+/// The process-wide block cache.
+pub fn block_cache() -> &'static BlockCache {
+    &CACHE
+}
+
+/// The process-wide single-flight table.
+pub fn flight() -> &'static SingleFlight {
+    &FLIGHT
+}
+
+/// The process-wide admission gate.
+pub fn gate() -> &'static FetchGate {
+    &GATE
+}
+
+/// Enable or disable the serving cache (and single-flight) for one store
+/// instance. Enabled by default for every store; disabling routes that
+/// store's fetches straight through the admission gate to the backend —
+/// the control group for cache-on/off comparisons.
+pub fn set_cache_enabled(instance: u64, enabled: bool) {
+    let mut bypass = BYPASS.write().unwrap();
+    if enabled {
+        bypass.remove(&instance);
+    } else {
+        bypass.insert(instance);
+    }
+}
+
+/// Whether the serving cache is active for a store instance.
+pub fn cache_enabled(instance: u64) -> bool {
+    !BYPASS.read().unwrap().contains(&instance)
+}
+
+/// Fetch `spans` of the object at `key` through the serving tier: block
+/// cache, then single-flight-deduplicated, gate-limited `get_ranges` for
+/// the misses. `size`/`stamp` pin the object version (take them from the
+/// part file's Add action). Returns one block per span in input order.
+pub fn fetch_spans(
+    store: &ObjectStoreHandle,
+    key: &str,
+    size: u64,
+    stamp: i64,
+    spans: &[(u64, u64)],
+) -> Result<Vec<Block>> {
+    if spans.is_empty() {
+        return Ok(Vec::new());
+    }
+    let instance = store.instance_id();
+    if !cache_enabled(instance) {
+        let _permit = GATE.acquire(instance);
+        return Ok(store.get_ranges(key, spans)?.into_iter().map(Arc::new).collect());
+    }
+    let mut out: Vec<Option<Block>> = vec![None; spans.len()];
+    let mut missing: Vec<(usize, (u64, u64))> = Vec::new();
+    for (i, &(off, len)) in spans.iter().enumerate() {
+        let k = BlockKey { instance, path: key.to_string(), size, stamp, off, len };
+        match CACHE.get(&k) {
+            Some(block) => out[i] = Some(block),
+            None => missing.push((i, (off, len))),
+        }
+    }
+    if !missing.is_empty() {
+        let miss_spans: Vec<(u64, u64)> = missing.iter().map(|&(_, span)| span).collect();
+        let fkey: FlightKey = (instance, key.to_string(), size, stamp, miss_spans.clone());
+        let fetched = FLIGHT.run(fkey, || {
+            // A caller that missed the cache just before an identical flight
+            // completed becomes a fresh leader here; the blocks that flight
+            // inserted make this a pure cache read — re-probe before paying
+            // the backend.
+            let cached: Vec<Block> = missing
+                .iter()
+                .map_while(|&(_, (off, len))| {
+                    CACHE.peek(&BlockKey { instance, path: key.to_string(), size, stamp, off, len })
+                })
+                .collect();
+            if cached.len() == missing.len() {
+                return Ok(cached);
+            }
+            let _permit = GATE.acquire(instance);
+            let bodies = store.get_ranges(key, &miss_spans)?;
+            let blocks: Vec<Block> = bodies.into_iter().map(Arc::new).collect();
+            for (j, &(_, (off, len))) in missing.iter().enumerate() {
+                CACHE.insert(
+                    BlockKey { instance, path: key.to_string(), size, stamp, off, len },
+                    blocks[j].clone(),
+                );
+            }
+            Ok(blocks)
+        })?;
+        ensure!(
+            fetched.len() == missing.len(),
+            "single-flight returned {} blocks for {} spans",
+            fetched.len(),
+            missing.len()
+        );
+        for (j, &(slot, _)) in missing.iter().enumerate() {
+            out[slot] = Some(fetched[j].clone());
+        }
+    }
+    Ok(out.into_iter().map(|b| b.expect("every span resolved")).collect())
+}
+
+/// Plain-text serving-tier metrics, in the same `name value` format as the
+/// coordinator and engine reports.
+pub fn report() -> String {
+    format!(
+        "serving.cache_bytes {}\nserving.cache_budget_bytes {}\nserving.cache_evictions {}\n\
+         serving.cache_hit_bytes {}\nserving.cache_hits {}\nserving.cache_inserts {}\n\
+         serving.cache_misses {}\nserving.flight_followers {}\nserving.flight_leaders {}\n\
+         serving.gate_acquired {}\nserving.gate_waits {}\n",
+        CACHE.bytes(),
+        CACHE.budget(),
+        CACHE.evictions(),
+        CACHE.hit_bytes(),
+        CACHE.hits(),
+        CACHE.inserts(),
+        CACHE.misses(),
+        FLIGHT.followers(),
+        FLIGHT.leaders(),
+        GATE.acquired(),
+        GATE.waits(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fetch_spans_serves_repeats_from_cache() {
+        let store = ObjectStoreHandle::mem();
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        store.put("t/data/x/p0", &data).unwrap();
+        store.stats().reset();
+        let spans = [(0u64, 64u64), (1024, 64), (4000, 200)];
+        let first = fetch_spans(&store, "t/data/x/p0", 4096, 1, &spans).unwrap();
+        assert_eq!(first.len(), 3);
+        assert_eq!(*first[0], data[0..64].to_vec());
+        assert_eq!(*first[1], data[1024..1088].to_vec());
+        assert_eq!(*first[2], data[4000..4096].to_vec(), "clamped at the tail");
+        assert_eq!(store.stats().snapshot().0, 1, "one batched GET for the cold read");
+        let again = fetch_spans(&store, "t/data/x/p0", 4096, 1, &spans).unwrap();
+        for (a, b) in first.iter().zip(again.iter()) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(store.stats().snapshot().0, 1, "warm read issues zero GETs");
+    }
+
+    #[test]
+    fn partial_hits_fetch_only_the_misses() {
+        let store = ObjectStoreHandle::mem();
+        store.put("k", &[9u8; 1024]).unwrap();
+        fetch_spans(&store, "k", 1024, 2, &[(0, 100)]).unwrap();
+        store.stats().reset();
+        let out = fetch_spans(&store, "k", 1024, 2, &[(0, 100), (500, 100)]).unwrap();
+        assert_eq!(out.len(), 2);
+        let (gets, _, _, bytes, _) = store.stats().snapshot();
+        assert_eq!(gets, 1);
+        assert_eq!(bytes, 100, "only the missing span is fetched");
+    }
+
+    #[test]
+    fn version_pin_separates_rewrites() {
+        let store = ObjectStoreHandle::mem();
+        store.put("k", &[1u8; 256]).unwrap();
+        let old = fetch_spans(&store, "k", 256, 10, &[(0, 256)]).unwrap();
+        assert_eq!(*old[0], vec![1u8; 256]);
+        // OPTIMIZE-style rewrite: same path, new bytes, new (size, stamp).
+        store.put("k", &[2u8; 300]).unwrap();
+        let new = fetch_spans(&store, "k", 300, 11, &[(0, 300)]).unwrap();
+        assert_eq!(*new[0], vec![2u8; 300], "new version pin never sees stale bytes");
+    }
+
+    #[test]
+    fn bypassed_stores_always_hit_the_backend() {
+        let store = ObjectStoreHandle::mem();
+        store.put("k", &[3u8; 128]).unwrap();
+        set_cache_enabled(store.instance_id(), false);
+        for _ in 0..3 {
+            let out = fetch_spans(&store, "k", 128, 1, &[(0, 128)]).unwrap();
+            assert_eq!(*out[0], vec![3u8; 128]);
+        }
+        assert_eq!(store.stats().snapshot().0, 3, "every bypassed read pays a GET");
+        set_cache_enabled(store.instance_id(), true);
+        assert!(cache_enabled(store.instance_id()));
+    }
+
+    #[test]
+    fn empty_span_list_is_free() {
+        let store = ObjectStoreHandle::mem();
+        assert!(fetch_spans(&store, "missing", 0, 0, &[]).unwrap().is_empty());
+        assert_eq!(store.stats().snapshot().0, 0);
+    }
+
+    #[test]
+    fn report_lists_all_counters() {
+        let r = report();
+        for name in [
+            "serving.cache_hits",
+            "serving.cache_misses",
+            "serving.cache_evictions",
+            "serving.cache_bytes",
+            "serving.flight_leaders",
+            "serving.flight_followers",
+            "serving.gate_acquired",
+            "serving.gate_waits",
+        ] {
+            assert!(r.contains(name), "missing {name} in {r}");
+        }
+    }
+}

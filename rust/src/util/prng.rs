@@ -133,6 +133,58 @@ impl Pcg64 {
     }
 }
 
+/// Zipfian sampler over `{0, .., n-1}` with exponent `s`: item `k` is drawn
+/// with probability proportional to `1 / (k+1)^s`. Rank 0 is the hottest
+/// item — the serving load harness uses this to model a hot set of tensors
+/// and slices under skewed read traffic.
+///
+/// Sampling is a binary search over the precomputed CDF (O(log n) per
+/// draw, fully deterministic given the RNG).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the distribution for `n` items (n >= 1) with exponent `s`.
+    /// `s = 0` degenerates to uniform; larger `s` concentrates mass on the
+    /// lowest ranks (s ≈ 1 is the classic web-traffic regime).
+    pub fn new(n: usize, s: f64) -> Self {
+        let n = n.max(1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Number of items.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Always false (the constructor clamps `n` to at least 1).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Draw one rank in `[0, n)`.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let x = rng.next_f64();
+        // First index whose CDF value exceeds x.
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&x).expect("finite cdf")) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +260,44 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(16, 1.1);
+        assert_eq!(z.len(), 16);
+        let mut rng = Pcg64::new(21);
+        let mut counts = [0usize; 16];
+        for _ in 0..20_000 {
+            let k = z.sample(&mut rng);
+            assert!(k < 16);
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[1], "rank 0 hottest: {counts:?}");
+        assert!(counts[1] > counts[8], "mass decays with rank: {counts:?}");
+        let head: usize = counts[..4].iter().sum();
+        assert!(head > 10_000, "hot set carries most of the traffic: {head}");
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_roughly_uniform() {
+        let z = Zipf::new(8, 0.0);
+        let mut rng = Pcg64::new(23);
+        let mut counts = [0usize; 8];
+        for _ in 0..16_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 2000.0).abs() < 400.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_single_item() {
+        let z = Zipf::new(1, 1.5);
+        let mut rng = Pcg64::new(1);
+        assert_eq!(z.sample(&mut rng), 0);
+        assert!(!z.is_empty());
     }
 
     #[test]

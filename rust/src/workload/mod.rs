@@ -11,6 +11,12 @@
 //!   sweeps and property tests.
 //!
 //! All generators are deterministic in their seed.
+//!
+//! The [`serve`] submodule is the closed-loop serving load harness: Zipfian
+//! hot-set reads driven through the coordinator by concurrent clients, with
+//! throughput and latency-quantile reporting.
+
+pub mod serve;
 
 use crate::tensor::{DType, DenseTensor, SparseCoo};
 use crate::util::prng::Pcg64;

@@ -1,0 +1,371 @@
+//! Closed-loop serving load harness.
+//!
+//! Drives the [`Coordinator`] the way a fleet of inference/training clients
+//! would: `clients` threads issue slice reads back-to-back (closed loop —
+//! each client waits for its response before sending the next request),
+//! with tensor and slice choice drawn from a Zipfian hot set. Built to run
+//! over `SimStore` so the serving tier's block cache, single-flight dedup
+//! and admission gate show up as wall-clock wins, and reporting throughput
+//! plus p50/p95/p99 latency from the repo's timing machinery
+//! ([`RunStats`]).
+//!
+//! Used three ways: the `bench serve` CLI subcommand, `benches/serve.rs`
+//! (cache on/off comparison, JSON report for CI), and `tests/serving.rs`
+//! (the acceptance assertions: warm cache-hit reads issue **zero** GETs and
+//! strictly beat the uncached run on throughput and p99).
+
+use crate::coordinator::{Coordinator, IngestJob};
+use crate::jsonx::Json;
+use crate::tensor::Slice;
+use crate::util::prng::{Pcg64, Zipf};
+use crate::util::{RunStats, Stopwatch};
+use crate::Result;
+use anyhow::ensure;
+
+/// Knobs for one serve run.
+#[derive(Debug, Clone)]
+pub struct ServeParams {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests each client issues in the measured phase.
+    pub requests_per_client: usize,
+    /// Tensors in the table (the Zipf hot set ranges over them).
+    pub tensors: usize,
+    /// First-dimension extent of each tensor; slice starts are drawn
+    /// Zipfian over `[0, dim0)`.
+    pub dim0: usize,
+    /// Zipf exponent for both tensor and slice choice (≈1 is web-like
+    /// skew; 0 is uniform).
+    pub zipf_s: f64,
+    /// Serve through the block cache + single-flight (false = control
+    /// group: every read pays the backend).
+    pub cache: bool,
+    /// Issue every `(tensor, slice)` pair once, untimed, before measuring —
+    /// so the measured phase of a cached run exercises the hit path.
+    pub warmup: bool,
+    /// Workload seed (tensor content and request streams derive from it).
+    pub seed: u64,
+    /// Storage layout for the served tensors.
+    pub layout: String,
+}
+
+impl ServeParams {
+    /// CI-smoke scale (sub-second on the fast sim model).
+    pub fn tiny() -> Self {
+        Self {
+            clients: 4,
+            requests_per_client: 40,
+            tensors: 6,
+            dim0: 12,
+            zipf_s: 1.1,
+            cache: true,
+            warmup: true,
+            seed: 7,
+            layout: "COO".into(),
+        }
+    }
+
+    /// Default bench scale (seconds to a minute on the fast sim model).
+    pub fn small() -> Self {
+        Self {
+            clients: 8,
+            requests_per_client: 200,
+            tensors: 16,
+            dim0: 24,
+            zipf_s: 1.1,
+            cache: true,
+            warmup: true,
+            seed: 7,
+            layout: "COO".into(),
+        }
+    }
+
+    /// Paper-regime scale (minutes on the 1 Gbps model).
+    pub fn paper() -> Self {
+        Self {
+            clients: 16,
+            requests_per_client: 500,
+            tensors: 32,
+            dim0: 48,
+            zipf_s: 1.05,
+            cache: true,
+            warmup: true,
+            seed: 7,
+            layout: "COO".into(),
+        }
+    }
+}
+
+/// Result of one serve run: throughput, latency quantiles, and the
+/// store/cache counters that explain them.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Total measured requests.
+    pub requests: u64,
+    /// Whether the serving cache was active.
+    pub cache_enabled: bool,
+    /// Measured-phase wall time.
+    pub wall_secs: f64,
+    /// Requests per second over the measured phase.
+    pub throughput_rps: f64,
+    /// Mean request latency.
+    pub mean_secs: f64,
+    /// Median request latency.
+    pub p50_secs: f64,
+    /// 95th-percentile request latency.
+    pub p95_secs: f64,
+    /// 99th-percentile request latency.
+    pub p99_secs: f64,
+    /// GET requests issued to the store during the measured phase.
+    pub get_ops: u64,
+    /// Bytes downloaded during the measured phase.
+    pub bytes_read: u64,
+    /// Block-cache hits during the measured phase (process-global delta).
+    pub cache_hits: u64,
+    /// Block-cache misses during the measured phase (process-global delta).
+    pub cache_misses: u64,
+}
+
+impl ServeReport {
+    /// Compact JSON object (for `BENCH_serve.json` / CI artifacts).
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("clients", Json::Int(self.clients as i64)),
+            ("requests", Json::Int(self.requests as i64)),
+            ("cache_enabled", Json::Bool(self.cache_enabled)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("throughput_rps", Json::from(self.throughput_rps)),
+            ("mean_secs", Json::from(self.mean_secs)),
+            ("p50_secs", Json::from(self.p50_secs)),
+            ("p95_secs", Json::from(self.p95_secs)),
+            ("p99_secs", Json::from(self.p99_secs)),
+            ("get_ops", Json::Int(self.get_ops as i64)),
+            ("bytes_read", Json::Int(self.bytes_read as i64)),
+            ("cache_hits", Json::Int(self.cache_hits as i64)),
+            ("cache_misses", Json::Int(self.cache_misses as i64)),
+        ])
+        .dump()
+    }
+
+    /// Human-readable one-run summary.
+    pub fn summary(&self) -> String {
+        let ms = |s: f64| format!("{:.3}ms", s * 1e3);
+        format!(
+            "serve: {} clients x {} req (cache {}) in {:.3}s -> {:.0} req/s\n  \
+             latency mean {} p50 {} p95 {} p99 {}\n  \
+             store: {} GETs, {} bytes; block cache: {} hits / {} misses",
+            self.clients,
+            self.requests / (self.clients.max(1) as u64),
+            if self.cache_enabled { "on" } else { "off" },
+            self.wall_secs,
+            self.throughput_rps,
+            ms(self.mean_secs),
+            ms(self.p50_secs),
+            ms(self.p95_secs),
+            ms(self.p99_secs),
+            self.get_ops,
+            self.bytes_read,
+            self.cache_hits,
+            self.cache_misses,
+        )
+    }
+}
+
+/// Ingest the serve working set: `p.tensors` sparse tensors named
+/// `serve-<i>`, each `[dim0, 12, 12]` at 5% density. Idempotent — ids
+/// already present in the table are reused, so re-running `bench serve`
+/// against a durable store does not duplicate data.
+pub fn populate_serve_table(c: &Coordinator, p: &ServeParams) -> Result<Vec<String>> {
+    ensure!(p.tensors > 0, "serve needs at least one tensor");
+    ensure!(p.dim0 > 0, "serve needs a non-empty first dimension");
+    let existing: std::collections::HashSet<String> = c.list_tensors()?.into_iter().collect();
+    let mut ids = Vec::with_capacity(p.tensors);
+    for i in 0..p.tensors {
+        let id = format!("serve-{i:04}");
+        if !existing.contains(&id) {
+            let data =
+                super::generic_sparse(p.seed.wrapping_add(i as u64), &[p.dim0, 12, 12], 0.05)?;
+            c.submit(IngestJob { id: id.clone(), layout: p.layout.clone(), data: data.into() });
+        }
+        ids.push(id);
+    }
+    let errors = c.drain();
+    ensure!(errors.is_empty(), "serve populate failed: {errors:?}");
+    Ok(ids)
+}
+
+/// Restores a store's serving-cache mode when dropped, so a `cache: false`
+/// control run never leaks its bypass past the harness (early returns
+/// included).
+struct CacheModeGuard {
+    instance: u64,
+    was_enabled: bool,
+}
+
+impl Drop for CacheModeGuard {
+    fn drop(&mut self) {
+        crate::serving::set_cache_enabled(self.instance, self.was_enabled);
+    }
+}
+
+/// Run the closed loop and report. The coordinator's table must already
+/// hold `ids` (see [`populate_serve_table`]); per-request latencies are
+/// also recorded in the coordinator's `serve.request_secs` histogram. The
+/// store's serving-cache mode is set from `p.cache` for the duration of the
+/// run and restored afterwards.
+pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<ServeReport> {
+    ensure!(!ids.is_empty(), "no tensors to serve");
+    ensure!(p.clients > 0 && p.requests_per_client > 0, "empty serve run");
+    let store = c.table().store().clone();
+    let _restore = CacheModeGuard {
+        instance: store.instance_id(),
+        was_enabled: crate::serving::cache_enabled(store.instance_id()),
+    };
+    crate::serving::set_cache_enabled(store.instance_id(), p.cache);
+    // Warm the control plane (snapshot cache) so the measured loop is
+    // data-plane bound, then optionally the data plane itself.
+    let _ = c.list_tensors()?;
+    if p.warmup {
+        for id in ids {
+            for d in 0..p.dim0 {
+                let _ = c.read_slice(id, &Slice::index(d))?;
+            }
+        }
+    }
+
+    let (get0, _, _, bytes0, _) = store.stats().snapshot();
+    let hits0 = crate::serving::block_cache().hits();
+    let misses0 = crate::serving::block_cache().misses();
+    let sw = Stopwatch::start();
+    let mut latencies: Vec<f64> = Vec::with_capacity(p.clients * p.requests_per_client);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(p.clients);
+        for client in 0..p.clients {
+            handles.push(scope.spawn(move || -> Result<Vec<f64>> {
+                let mut rng = Pcg64::new(p.seed ^ (0x5EB5_E001 + client as u64));
+                let pick_tensor = Zipf::new(ids.len(), p.zipf_s);
+                let pick_slice = Zipf::new(p.dim0, p.zipf_s);
+                let mut lat = Vec::with_capacity(p.requests_per_client);
+                for _ in 0..p.requests_per_client {
+                    let id = &ids[pick_tensor.sample(&mut rng)];
+                    let d = pick_slice.sample(&mut rng);
+                    let req = Stopwatch::start();
+                    let out = c.read_slice(id, &Slice::index(d))?;
+                    std::hint::black_box(&out);
+                    lat.push(req.secs());
+                }
+                Ok(lat)
+            }));
+        }
+        for h in handles {
+            let lat = h.join().map_err(|_| anyhow::anyhow!("serve client panicked"))??;
+            latencies.extend(lat);
+        }
+        Ok(())
+    })?;
+    let wall = sw.secs();
+
+    let hist = c.metrics().histogram("serve.request_secs");
+    let mut stats = RunStats::new();
+    for &l in &latencies {
+        stats.push(l);
+        hist.observe(l);
+    }
+    let (get1, _, _, bytes1, _) = store.stats().snapshot();
+    let requests = latencies.len() as u64;
+    c.metrics().counter("serve.requests").add(requests);
+    Ok(ServeReport {
+        clients: p.clients,
+        requests,
+        cache_enabled: p.cache,
+        wall_secs: wall,
+        throughput_rps: requests as f64 / wall.max(1e-9),
+        mean_secs: stats.mean(),
+        p50_secs: stats.percentile(50.0),
+        p95_secs: stats.percentile(95.0),
+        p99_secs: stats.percentile(99.0),
+        get_ops: get1 - get0,
+        bytes_read: bytes1 - bytes0,
+        cache_hits: crate::serving::block_cache().hits() - hits0,
+        cache_misses: crate::serving::block_cache().misses() - misses0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::DeltaTable;
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn coordinator() -> Coordinator {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "serve-t").unwrap();
+        Coordinator::new(table, 2, 16)
+    }
+
+    #[test]
+    fn populate_is_idempotent() {
+        let c = coordinator();
+        let p = ServeParams { tensors: 3, dim0: 6, ..ServeParams::tiny() };
+        let ids = populate_serve_table(&c, &p).unwrap();
+        assert_eq!(ids.len(), 3);
+        let again = populate_serve_table(&c, &p).unwrap();
+        assert_eq!(ids, again);
+        assert_eq!(c.list_tensors().unwrap().len(), 3, "no duplicate ingestion");
+    }
+
+    #[test]
+    fn run_serve_reports_consistent_numbers() {
+        let c = coordinator();
+        let p = ServeParams {
+            clients: 2,
+            requests_per_client: 10,
+            tensors: 2,
+            dim0: 5,
+            ..ServeParams::tiny()
+        };
+        let ids = populate_serve_table(&c, &p).unwrap();
+        let r = run_serve(&c, &ids, &p).unwrap();
+        assert_eq!(r.requests, 20);
+        assert_eq!(r.clients, 2);
+        assert!(r.wall_secs > 0.0);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.p50_secs <= r.p95_secs && r.p95_secs <= r.p99_secs);
+        assert_eq!(c.metrics().counter("serve.requests").get(), 20);
+        assert_eq!(c.metrics().histogram("serve.request_secs").count(), 20);
+        // JSON report round-trips through the crate's own parser.
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("requests").and_then(|v| v.as_i64()), Some(20));
+        assert_eq!(j.get("cache_enabled").and_then(|v| v.as_bool()), Some(true));
+        assert!(r.summary().contains("req/s"));
+    }
+
+    #[test]
+    fn cache_mode_is_restored_after_run() {
+        let c = coordinator();
+        let p = ServeParams {
+            clients: 1,
+            requests_per_client: 2,
+            tensors: 1,
+            dim0: 3,
+            cache: false,
+            ..ServeParams::tiny()
+        };
+        let ids = populate_serve_table(&c, &p).unwrap();
+        let instance = c.table().store().instance_id();
+        assert!(crate::serving::cache_enabled(instance));
+        run_serve(&c, &ids, &p).unwrap();
+        assert!(crate::serving::cache_enabled(instance), "bypass must not leak past the run");
+    }
+
+    #[test]
+    fn empty_runs_are_rejected() {
+        let c = coordinator();
+        let p = ServeParams { clients: 0, ..ServeParams::tiny() };
+        assert!(run_serve(&c, &["x".to_string()], &p).is_err());
+        assert!(run_serve(&c, &[], &ServeParams::tiny()).is_err());
+        let bad = ServeParams { tensors: 0, ..ServeParams::tiny() };
+        assert!(populate_serve_table(&c, &bad).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Serving-tier acceptance tests: block cache, single-flight fetch dedup,
+//! and the closed-loop load harness — the behaviors the serving layer
+//! exists to provide:
+//!
+//! * a Zipfian hot-read workload with the cache enabled issues **zero**
+//!   GETs in its warmed phase and strictly beats the cache-disabled run on
+//!   throughput and p99;
+//! * N concurrent identical cold reads collapse into exactly one fetch
+//!   batch;
+//! * concurrent readers through the coordinator are byte-identical and
+//!   cheaper than N independent cold reads;
+//! * OPTIMIZE + VACUUM never yield stale cached bytes.
+
+use delta_tensor::coordinator::{Coordinator, IngestJob};
+use delta_tensor::prelude::*;
+use delta_tensor::workload;
+use delta_tensor::workload::serve::{populate_serve_table, run_serve, ServeParams};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// Latency-only cost model: every data request pays `ms`, metadata is free
+/// (so the comparisons isolate the data plane the cache serves).
+fn lat_model(ms: u64) -> CostModel {
+    CostModel {
+        first_byte_latency: Duration::from_millis(ms),
+        bandwidth_bytes_per_sec: f64::INFINITY,
+        list_latency: Duration::ZERO,
+    }
+}
+
+#[test]
+fn zipf_hot_workload_cache_beats_no_cache() {
+    let mut reports = Vec::new();
+    for cache in [true, false] {
+        let store = ObjectStoreHandle::sim_mem(lat_model(2));
+        let table = DeltaTable::create(store, "serve").unwrap();
+        let c = Coordinator::new(table, 2, 16);
+        let params = ServeParams {
+            clients: 3,
+            requests_per_client: 25,
+            tensors: 4,
+            dim0: 8,
+            zipf_s: 1.1,
+            cache,
+            warmup: true,
+            seed: 11,
+            layout: "COO".into(),
+        };
+        let ids = populate_serve_table(&c, &params).unwrap();
+        reports.push(run_serve(&c, &ids, &params).unwrap());
+    }
+    let (with, without) = (&reports[0], &reports[1]);
+    assert_eq!(with.requests, 75);
+    assert_eq!(without.requests, 75);
+    // Every measured request of the warmed cached run is a cache hit: the
+    // store sees no GET traffic at all.
+    assert_eq!(with.get_ops, 0, "cache-hit reads must issue zero GETs");
+    assert_eq!(with.bytes_read, 0);
+    assert!(with.cache_hits > 0, "hot set must be served from cache");
+    assert!(without.get_ops > 0, "control group pays the backend");
+    assert!(
+        with.throughput_rps > without.throughput_rps,
+        "cached {} req/s vs uncached {} req/s",
+        with.throughput_rps,
+        without.throughput_rps
+    );
+    assert!(
+        with.p99_secs < without.p99_secs,
+        "cached p99 {}s vs uncached p99 {}s",
+        with.p99_secs,
+        without.p99_secs
+    );
+}
+
+#[test]
+fn concurrent_identical_cold_reads_issue_one_fetch_batch() {
+    // 25 ms of first-byte latency keeps the leader's fetch in flight long
+    // enough that every barrier-released thread either joins the flight or
+    // lands on the already-populated cache.
+    let store = ObjectStoreHandle::sim_mem(lat_model(25));
+    let table = DeltaTable::create(store.clone(), "t").unwrap();
+    let c = Arc::new(Coordinator::new(table, 2, 8));
+    let data = workload::generic_sparse(3, &[16, 10, 10], 0.05).unwrap();
+    c.submit(IngestJob { id: "x".into(), layout: "COO".into(), data: data.into() });
+    assert!(c.drain().is_empty());
+    // Warm the control plane (snapshot + footers) so the measured GETs are
+    // purely data-span fetches.
+    let snap = delta_tensor::query::engine::snapshot(c.table()).unwrap();
+    for f in snap.files_for_tensor("x") {
+        delta_tensor::query::engine::part_footer(c.table(), f).unwrap();
+    }
+    store.stats().reset();
+
+    let n = 6;
+    let barrier = Arc::new(Barrier::new(n));
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let c = c.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            c.read_slice("x", &Slice::index(2)).unwrap().to_dense().unwrap()
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for o in &outs {
+        assert_eq!(o, &outs[0], "all readers see byte-identical results");
+    }
+    let (gets, ..) = store.stats().snapshot();
+    let (batches, _) = store.stats().batched();
+    assert_eq!(batches, 1, "{n} identical cold reads must collapse into one fetch batch");
+    assert_eq!(gets, 1, "no GETs besides the single-flight batch");
+}
+
+#[test]
+fn concurrent_readers_beat_independent_cold_reads() {
+    let data = workload::generic_sparse(5, &[12, 8, 8], 0.06).unwrap();
+    let make = || {
+        let store = ObjectStoreHandle::mem();
+        let table = DeltaTable::create(store.clone(), "t").unwrap();
+        let c = Coordinator::new(table, 2, 8);
+        c.submit(IngestJob { id: "x".into(), layout: "BSGS".into(), data: data.clone().into() });
+        assert!(c.drain().is_empty());
+        (store, c)
+    };
+
+    // Baseline: one fully cold read (snapshot replay + footer + data).
+    let (store_a, c_a) = make();
+    store_a.stats().reset();
+    let want = c_a.read_slice("x", &Slice::index(1)).unwrap().to_dense().unwrap();
+    let (cold_gets, ..) = store_a.stats().snapshot();
+    assert!(cold_gets > 0);
+
+    // N concurrent readers against an identical fresh table.
+    let n = 6;
+    let (store_b, c_b) = make();
+    store_b.stats().reset();
+    let c_b = Arc::new(c_b);
+    let barrier = Arc::new(Barrier::new(n));
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let c = c_b.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            c.read_slice("x", &Slice::index(1)).unwrap().to_dense().unwrap()
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for o in &outs {
+        assert_eq!(o, &want, "concurrent readers match the cold baseline bytes");
+    }
+    let (concurrent_gets, ..) = store_b.stats().snapshot();
+    assert!(
+        concurrent_gets < n as u64 * cold_gets,
+        "single-flight + cache must beat {n} independent cold reads: \
+         {concurrent_gets} GETs vs {} (= {n} x {cold_gets})",
+        n as u64 * cold_gets
+    );
+}
+
+#[test]
+fn read_after_optimize_and_vacuum_is_clean() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    let c = Coordinator::new(table, 1, 4);
+    let data = workload::generic_sparse(9, &[20, 10, 10], 0.02).unwrap();
+    // Fragment on purpose so OPTIMIZE has real work to do.
+    let fmt = CooFormat { rows_per_group: 8, rows_per_file: 16, ..Default::default() };
+    fmt.write(c.table(), "x", &data.clone().into()).unwrap();
+    let want_full = data.to_dense().unwrap();
+    let want_slice = data.slice(&Slice::index(3)).unwrap().to_dense().unwrap();
+
+    // Populate snapshot, footer and block caches through the serving tier.
+    assert_eq!(c.read("x").unwrap().to_dense().unwrap(), want_full);
+    assert_eq!(c.read_slice("x", &Slice::index(3)).unwrap().to_dense().unwrap(), want_slice);
+
+    // OPTIMIZE rewrites the parts (new size/timestamp keys), VACUUM deletes
+    // the old objects the caches still hold blocks for.
+    c.optimize("x").unwrap();
+    let deleted = c.table().vacuum().unwrap();
+    assert!(deleted > 0, "vacuum must remove the pre-OPTIMIZE objects");
+
+    // Reads must succeed with fresh bytes: the cached blocks of removed
+    // files are keyed by the old (size, timestamp) pins and can never be
+    // addressed by the new snapshot — no panic, no stale result.
+    assert_eq!(c.read("x").unwrap().to_dense().unwrap(), want_full);
+    assert_eq!(c.read_slice("x", &Slice::index(3)).unwrap().to_dense().unwrap(), want_slice);
+}
