@@ -1,0 +1,71 @@
+//! Write-engine load bench: the closed-loop batched-ingest workload of
+//! `workload::ingest`, run twice over a fresh simulated cloud store — once
+//! committing multi-tensor batches through the write engine, once
+//! committing one tensor per version (the seed's serial regime) — and
+//! compared on throughput, per-commit latency, PUT batches and log growth.
+//!
+//! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
+//! `DT_BENCH_OUT` (JSON report path, default `BENCH_ingest.json`). CI runs
+//! the tiny scale, uploads the JSON, and gates on it via
+//! `cargo run --bin benchgate` against `bench_baselines/ingest.json`.
+
+use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
+use delta_tensor::prelude::*;
+use delta_tensor::workload::ingest::{run_ingest, IngestParams, IngestReport};
+
+fn run_once(serial: bool, base: &IngestParams) -> IngestReport {
+    let mut params = base.clone();
+    if serial {
+        // Same total tensors, one per commit.
+        params.batches_per_writer *= params.tensors_per_batch;
+        params.tensors_per_batch = 1;
+    }
+    let store = ObjectStoreHandle::sim_mem(benchkit::net());
+    let table = DeltaTable::create(store, "ingest").expect("fresh table");
+    run_ingest(&table, &params).expect("ingest run")
+}
+
+fn main() {
+    let params = match benchkit::scale() {
+        Scale::Tiny => IngestParams::tiny(),
+        Scale::Small => IngestParams::small(),
+        Scale::Paper => IngestParams::paper(),
+    };
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for serial in [false, true] {
+        let r = run_once(serial, &params);
+        rows.push(Row {
+            label: if serial { "serial" } else { "batched" }.to_string(),
+            cells: vec![
+                format!("{:.1}", r.throughput_tps),
+                fmt_secs(r.p50_secs),
+                fmt_secs(r.p95_secs),
+                r.put_ops.to_string(),
+                r.put_batches.to_string(),
+                r.log_commits.to_string(),
+            ],
+        });
+        reports.push(r);
+    }
+    print_table(
+        "ingest: closed-loop batched writes, multi-tensor commits vs one-per-tensor",
+        &["mode", "tensors/s", "p50", "p95", "PUTs", "PUT batches", "commits"],
+        &rows,
+    );
+    let speedup = reports[0].throughput_tps / reports[1].throughput_tps.max(1e-9);
+    println!("\nthroughput speedup from batched commits: {speedup:.2}x");
+    println!(
+        "log growth: {} versions batched vs {} serial",
+        reports[0].log_commits, reports[1].log_commits
+    );
+
+    let out = std::env::var("DT_BENCH_OUT").unwrap_or_else(|_| "BENCH_ingest.json".to_string());
+    let json = format!(
+        "{{\"bench\":\"ingest\",\"batched\":{},\"serial\":{},\"speedup\":{speedup:.4}}}",
+        reports[0].to_json(),
+        reports[1].to_json()
+    );
+    std::fs::write(&out, json).expect("write bench report");
+    println!("wrote {out}");
+}

@@ -1,0 +1,141 @@
+//! CI perf-regression gate.
+//!
+//! Compares the JSON reports the benches emit (`BENCH_serve.json`,
+//! `BENCH_ingest.json`) against committed baselines
+//! (`bench_baselines/<name>.json`) and exits non-zero when a gated metric
+//! regresses more than the threshold (default 25%).
+//!
+//! A baseline file pins the metric path and its expected value:
+//!
+//! ```text
+//! {"bench": "serve", "metric": "cache.throughput_rps", "value": 40.0}
+//! ```
+//!
+//! The metric path is dot-separated into the report's JSON object; the
+//! gate fails when `report[metric] < (1 - threshold) * value`. Refresh a
+//! baseline by copying the measured value from a trusted CI run's artifact
+//! into the committed file (see rust/README.md).
+//!
+//! ```text
+//! cargo run --release --bin benchgate -- \
+//!     --baseline-dir ../bench_baselines --threshold 0.25 \
+//!     --report serve=BENCH_serve.json --report ingest=BENCH_ingest.json
+//! ```
+
+use anyhow::{bail, Context};
+use delta_tensor::jsonx::{self, Json};
+use delta_tensor::Result;
+
+/// Walk a dot-separated path into a JSON object.
+fn value_at(j: &Json, path: &str) -> Option<f64> {
+    let mut cur = j;
+    for seg in path.split('.') {
+        cur = cur.get(seg)?;
+    }
+    cur.as_f64()
+}
+
+fn load(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    jsonx::parse(&text).with_context(|| format!("parsing {path}"))
+}
+
+struct Gate {
+    name: String,
+    metric: String,
+    measured: f64,
+    baseline: f64,
+    floor: f64,
+    pass: bool,
+}
+
+fn check(name: &str, report_path: &str, baseline_dir: &str, threshold: f64) -> Result<Gate> {
+    let report = load(report_path)?;
+    let baseline_path = format!("{baseline_dir}/{name}.json");
+    let baseline = load(&baseline_path)?;
+    let metric = baseline
+        .get("metric")
+        .and_then(Json::as_str)
+        .with_context(|| format!("{baseline_path}: missing \"metric\""))?
+        .to_string();
+    let expected = baseline
+        .get("value")
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{baseline_path}: missing numeric \"value\""))?;
+    let measured = value_at(&report, &metric)
+        .with_context(|| format!("{report_path}: no numeric value at {metric:?}"))?;
+    let floor = expected * (1.0 - threshold);
+    Ok(Gate {
+        name: name.to_string(),
+        metric,
+        measured,
+        baseline: expected,
+        floor,
+        pass: measured >= floor,
+    })
+}
+
+fn real_main() -> Result<()> {
+    let mut baseline_dir = "../bench_baselines".to_string();
+    let mut threshold = 0.25f64;
+    let mut reports: Vec<(String, String)> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--baseline-dir" => {
+                baseline_dir = args.next().context("--baseline-dir needs a value")?;
+            }
+            "--threshold" => {
+                threshold = args
+                    .next()
+                    .context("--threshold needs a value")?
+                    .parse()
+                    .context("--threshold must be a number in [0, 1)")?;
+            }
+            "--report" => {
+                let v = args.next().context("--report needs NAME=PATH")?;
+                let (name, path) =
+                    v.split_once('=').context("--report must be NAME=PATH")?;
+                reports.push((name.to_string(), path.to_string()));
+            }
+            other => bail!("unknown argument {other:?} (see src/bin/benchgate.rs)"),
+        }
+    }
+    if reports.is_empty() {
+        bail!("no --report NAME=PATH given; nothing to gate");
+    }
+    if !(0.0..1.0).contains(&threshold) {
+        bail!("--threshold must be in [0, 1), got {threshold}");
+    }
+
+    let mut failed = false;
+    println!("benchgate: threshold {:.0}% below baseline", threshold * 100.0);
+    for (name, path) in &reports {
+        let g = check(name, path, &baseline_dir, threshold)?;
+        println!(
+            "  {:<8} {:<24} measured {:>10.2}  baseline {:>10.2}  floor {:>10.2}  {}",
+            g.name,
+            g.metric,
+            g.measured,
+            g.baseline,
+            g.floor,
+            if g.pass { "ok" } else { "REGRESSION" },
+        );
+        failed |= !g.pass;
+    }
+    if failed {
+        bail!(
+            "throughput regressed more than {:.0}% against bench_baselines/ — \
+             investigate, or refresh the baseline if the change is intended",
+            threshold * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("benchgate: {e:#}");
+        std::process::exit(1);
+    }
+}

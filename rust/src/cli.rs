@@ -16,8 +16,11 @@
 //!
 //! `bench serve` drives the coordinator with a closed-loop Zipfian hot-set
 //! workload ([`crate::workload::serve`]) and prints throughput, latency
-//! quantiles, and the serving-tier counters; `--json PATH` additionally
-//! writes the machine-readable report.
+//! quantiles, and the serving-tier counters; `bench ingest` drives the
+//! write engine with concurrent batch-committing writers
+//! ([`crate::workload::ingest`]) and prints tensors/s, per-commit latency
+//! quantiles, and the write-engine counters. `--json PATH` additionally
+//! writes the machine-readable report for either.
 
 use crate::coordinator::{Coordinator, IngestJob};
 use crate::delta::DeltaTable;
@@ -157,6 +160,9 @@ COMMANDS
             [--clients N] [--requests N] [--tensors N] [--dim0 N]
             [--zipf S] [--no-cache] [--warmup-off] [--layout NAME]
             [--seed N] [--workers N] [--json PATH]
+  bench ingest                   closed-loop batched-write load harness
+            [--writers N] [--batches N] [--batch N] [--dim0 N]
+            [--density F] [--layout NAME] [--seed N] [--json PATH]
 COMMON FLAGS
   --table NAME                   table root (default: tensors)
   --store mem|fs                 backend (default fs)   --root PATH
@@ -306,10 +312,30 @@ fn cmd_bench(args: &Args) -> Result<String> {
         .unwrap_or_else(|| args.opt("experiment", "serve").to_string());
     match what.as_str() {
         "serve" => cmd_bench_serve(args),
+        "ingest" => cmd_bench_ingest(args),
         other => {
-            bail!("unknown bench {other:?} (try `bench serve`; figure benches run via `cargo bench`)")
+            bail!("unknown bench {other:?} (try `bench serve` or `bench ingest`; figure benches run via `cargo bench`)")
         }
     }
+}
+
+fn cmd_bench_ingest(args: &Args) -> Result<String> {
+    let table = open_table_named(args, "ingest-bench")?;
+    let params = workload::ingest::IngestParams {
+        writers: args.opt_usize("writers", 2)?,
+        batches_per_writer: args.opt_usize("batches", 2)?,
+        tensors_per_batch: args.opt_usize("batch", 8)?,
+        dim0: args.opt_usize("dim0", 12)?,
+        density: args.opt_f64("density", 0.05)?,
+        layout: args.opt("layout", "COO").to_string(),
+        seed: args.opt_usize("seed", 7)? as u64,
+    };
+    let report = workload::ingest::run_ingest(&table, &params)?;
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing ingest report to {path}"))?;
+    }
+    Ok(format!("{}\n{}", report.summary(), crate::ingest::report()))
 }
 
 fn cmd_bench_serve(args: &Args) -> Result<String> {
@@ -455,6 +481,17 @@ mod tests {
         assert!(out.contains("req/s"), "{out}");
         assert!(out.contains("serving.cache_hits"), "{out}");
         assert!(run(&args(&["bench", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn bench_ingest_smoke() {
+        let out = run(&args(&[
+            "bench", "ingest", "--store", "mem", "--writers", "1", "--batches", "1",
+            "--batch", "3", "--dim0", "6",
+        ]))
+        .unwrap();
+        assert!(out.contains("tensors/s"), "{out}");
+        assert!(out.contains("ingest.put_batches"), "{out}");
     }
 
     #[test]

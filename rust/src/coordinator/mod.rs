@@ -110,14 +110,17 @@ impl Coordinator {
     }
 
     /// Full metrics report: coordinator counters/histograms plus the read
-    /// engine's counters (ranges coalesced, files pruned, cache hits) and
-    /// the serving tier's (block cache, single-flight, admission gate).
+    /// engine's counters (ranges coalesced, files pruned, cache hits), the
+    /// serving tier's (block cache, single-flight, admission gate) and the
+    /// write engine's (parts encoded in parallel, PUT batches, staged
+    /// bytes, commit retries).
     pub fn report(&self) -> String {
         format!(
-            "{}{}{}",
+            "{}{}{}{}",
             self.metrics.report(),
             crate::query::engine::report(),
-            crate::serving::report()
+            crate::serving::report(),
+            crate::ingest::report()
         )
     }
 
@@ -159,6 +162,35 @@ impl Coordinator {
     pub fn drain(&self) -> Vec<String> {
         self.pool.wait_idle();
         std::mem::take(&mut self.errors.lock().unwrap())
+    }
+
+    /// Ingest a batch of jobs as ONE atomic Delta commit through the write
+    /// engine's [`crate::ingest::TensorWriter`]: every tensor's parts
+    /// encode in parallel, uploads ride batched PUTs, and the log grows by
+    /// a single version however many tensors the batch holds. Returns the
+    /// committed version.
+    pub fn ingest_batch(&self, jobs: Vec<IngestJob>) -> Result<u64> {
+        let sw = Stopwatch::start();
+        let n = jobs.len() as u64;
+        let mut writer = crate::ingest::TensorWriter::new(&self.table);
+        for job in jobs {
+            let fmt: Box<dyn TensorStore + Send + Sync> =
+                if job.layout.eq_ignore_ascii_case("auto") {
+                    crate::formats::auto_format(&job.data)
+                } else {
+                    format_by_name(&job.layout)?
+                };
+            writer.stage(fmt.plan_write(&job.id, &job.data)?);
+        }
+        let version = writer.commit()?;
+        // `batch_requests`, not `batch_commits`: these count this
+        // coordinator's API calls; the write engine's process-global
+        // `ingest.batch_commits`/`ingest.tensors_committed` count every
+        // TensorWriter commit, coordinator-driven or not.
+        self.metrics.counter("ingest.batch_requests").add(1);
+        self.metrics.counter("ingest.batch_request_tensors").add(n);
+        self.metrics.histogram("ingest.batch_secs").observe(sw.secs());
+        Ok(version)
     }
 
     /// Serve a whole-tensor read (layout auto-discovered).
@@ -339,6 +371,31 @@ mod tests {
         assert!(full.contains("serving.cache_hits"), "{full}");
         assert!(full.contains("serving.flight_leaders"), "{full}");
         assert!(full.contains("serving.gate_acquired"), "{full}");
+        assert!(full.contains("ingest.parts_encoded"), "{full}");
+        assert!(full.contains("ingest.put_batches"), "{full}");
+        assert!(full.contains("ingest.commit_retries"), "{full}");
+    }
+
+    #[test]
+    fn ingest_batch_lands_one_version_for_many_tensors() {
+        let c = coordinator(2);
+        let v0 = c.table().latest_version().unwrap();
+        let jobs: Vec<IngestJob> = (0..5)
+            .map(|i| IngestJob {
+                id: format!("b{i}"),
+                layout: if i % 2 == 0 { "COO".into() } else { "auto".into() },
+                data: sparse(i as u64),
+            })
+            .collect();
+        let v = c.ingest_batch(jobs).unwrap();
+        assert_eq!(v, v0 + 1, "five tensors, one commit");
+        assert_eq!(c.table().latest_version().unwrap(), v0 + 1);
+        assert_eq!(c.list_tensors().unwrap().len(), 5);
+        for i in 0..5u64 {
+            let got = c.read(&format!("b{i}")).unwrap().to_dense().unwrap();
+            assert_eq!(got, sparse(i).to_dense().unwrap());
+        }
+        assert_eq!(c.metrics().counter("ingest.batch_request_tensors").get(), 5);
     }
 
     #[test]

@@ -33,6 +33,16 @@ const CHECKPOINT_INTERVAL: u64 = 10;
 /// Give up after this many optimistic-concurrency retries.
 const MAX_COMMIT_RETRIES: usize = 32;
 
+/// Process-wide count of `put_if_absent` races lost during commits (each
+/// loss is followed by a retry against the refreshed log position).
+/// Exported through the write engine's metrics (`ingest.commit_retries`).
+static COMMIT_RETRIES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total commit conflicts retried so far, process-wide.
+pub fn commit_retry_count() -> u64 {
+    COMMIT_RETRIES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Milliseconds since the Unix epoch, **strictly monotonic within the
 /// process**: two calls never return the same value even inside one
 /// millisecond. Commit/Add timestamps therefore uniquely distinguish
@@ -186,9 +196,14 @@ impl DeltaTable {
     /// Commit `actions` with optimistic concurrency. Returns the version.
     ///
     /// Append-only commits (adds + commitInfo) rebase automatically on
-    /// conflict. Commits containing `remove` actions re-validate that their
-    /// removed files still exist in the new snapshot and fail otherwise
-    /// (the caller must re-plan, as Delta does for conflicting OPTIMIZE).
+    /// conflict: when `put_if_absent` loses the race, the writer refreshes
+    /// the log position (`latest_version`) and retries **past every commit
+    /// that landed meanwhile**, instead of stepping one version at a time —
+    /// a burst of concurrent winners would otherwise exhaust the retry
+    /// budget and error out. Commits containing `remove` actions
+    /// re-validate against the refreshed snapshot that their removed files
+    /// are still live and fail otherwise (the caller must re-plan, as
+    /// Delta does for conflicting OPTIMIZE).
     pub fn commit(&self, actions: Vec<Action>) -> Result<u64> {
         let removes: Vec<String> = actions
             .iter()
@@ -215,7 +230,11 @@ impl DeltaTable {
                 }
                 return Ok(version);
             }
-            // Conflict: someone won this version.
+            // Conflict: someone won this version. Refresh instead of
+            // erroring — re-read the log position so the retry lands past
+            // every commit that won meanwhile, and re-validate removes
+            // against the refreshed snapshot.
+            COMMIT_RETRIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             if !removes.is_empty() {
                 let snap = self.snapshot()?;
                 for r in &removes {
@@ -224,7 +243,7 @@ impl DeltaTable {
                     }
                 }
             }
-            version += 1;
+            version = (self.latest_version()? + 1).max(version + 1);
         }
         bail!("giving up after {MAX_COMMIT_RETRIES} commit conflicts")
     }
@@ -614,6 +633,72 @@ mod tests {
             .unwrap();
         let res = t.commit(vec![Action::Remove { path: "data/a".into(), timestamp: now_ms() }]);
         assert!(res.is_err(), "double remove after conflict must fail");
+    }
+
+    /// A store whose first conditional PUT of a commit (version >= 1) is
+    /// preceded by a rival landing a burst of commits longer than the
+    /// retry budget — the race window between a writer's version probe and
+    /// its `put_if_absent`, stretched to worst case.
+    struct BurstRival {
+        inner: crate::objectstore::MemStore,
+        fired: std::sync::atomic::AtomicBool,
+    }
+
+    impl ObjectStore for BurstRival {
+        fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+            self.inner.put(key, data)
+        }
+        fn put_if_absent(&self, key: &str, data: &[u8]) -> Result<bool> {
+            if let Some(v) = parse_commit_version(key) {
+                if v >= 1 && !self.fired.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                    let dir = &key[..key.rfind('/').unwrap() + 1];
+                    for r in 0..(MAX_COMMIT_RETRIES as u64 + 8) {
+                        let rival = format!("{dir}{:020}.json", v + r);
+                        let body =
+                            b"{\"commitInfo\":{\"operation\":\"RIVAL\",\"timestamp\":0}}\n";
+                        self.inner.put_if_absent(&rival, body)?;
+                    }
+                }
+            }
+            self.inner.put_if_absent(key, data)
+        }
+        fn get(&self, key: &str) -> Result<Vec<u8>> {
+            self.inner.get(key)
+        }
+        fn get_range(&self, key: &str, off: u64, len: u64) -> Result<Vec<u8>> {
+            self.inner.get_range(key, off, len)
+        }
+        fn head(&self, key: &str) -> Result<Option<u64>> {
+            self.inner.head(key)
+        }
+        fn list(&self, prefix: &str) -> Result<Vec<String>> {
+            self.inner.list(prefix)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            self.inner.delete(key)
+        }
+    }
+
+    #[test]
+    fn lost_race_retries_against_refreshed_log_position() {
+        // Regression: the loser of a put_if_absent burst must refresh the
+        // log position and land past the winners, not step one version at
+        // a time until the retry budget runs out.
+        let store = ObjectStoreHandle::new(Arc::new(BurstRival {
+            inner: crate::objectstore::MemStore::new(),
+            fired: std::sync::atomic::AtomicBool::new(false),
+        }));
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        let retries_before = commit_retry_count();
+        let v = t.commit(vec![add("data/a", "t1", 0, 9), info("WRITE")]).unwrap();
+        assert_eq!(
+            v,
+            1 + MAX_COMMIT_RETRIES as u64 + 8,
+            "commit must land after the rival burst"
+        );
+        assert!(commit_retry_count() > retries_before, "the lost race must be counted");
+        let snap = t.snapshot().unwrap();
+        assert!(snap.files.contains_key("data/a"));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::{TensorData, TensorStore};
 use crate::delta::DeltaTable;
-use crate::objectstore::ObjectStore;
+use crate::ingest::{PartPayload, PartSpec, WritePlan};
 use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
 use crate::util::bytes::{get_u32, get_u64, put_u32, put_u64};
 use crate::Result;
@@ -158,28 +158,23 @@ impl TensorStore for BinaryFormat {
         "Binary"
     }
 
-    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
         let bytes = match data {
             TensorData::Dense(t) => Self::serialize_dense(t),
             TensorData::Sparse(s) => Self::serialize_sparse(s),
         };
-        let rel = self.object_rel(id);
-        table.store().put(&table.data_key(&rel), &bytes)?;
-        let ts = crate::delta::now_ms();
-        table.commit(vec![
-            crate::delta::Action::Add(crate::delta::AddFile {
-                path: rel,
-                size: bytes.len() as u64,
+        Ok(WritePlan {
+            tensor_id: id.to_string(),
+            operation: "WRITE BINARY".into(),
+            parts: vec![PartSpec {
+                rel_path: self.object_rel(id),
                 rows: 1,
-                tensor_id: id.to_string(),
                 min_key: None,
                 max_key: None,
-                timestamp: ts,
                 meta: None,
-            }),
-            crate::delta::Action::CommitInfo { operation: "WRITE BINARY".into(), timestamp: ts },
-        ])?;
-        Ok(())
+                payload: PartPayload::Raw(bytes),
+            }],
+        })
     }
 
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {

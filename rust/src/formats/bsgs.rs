@@ -18,6 +18,7 @@ use super::encoders::{blocks_to_coo, coo_to_blocks, default_block_shape, BlockSp
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
 use crate::delta::{AddFile, DeltaTable};
+use crate::ingest::WritePlan;
 use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice};
 use crate::Result;
@@ -161,7 +162,7 @@ impl TensorStore for BsgsFormat {
         "BSGS"
     }
 
-    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
         let mut s = data.to_sparse()?;
         if !s.is_sorted() {
             s.sort_canonical();
@@ -222,7 +223,7 @@ impl TensorStore for BsgsFormat {
                 id,
                 part_no,
                 &SCHEMA,
-                &groups,
+                groups,
                 WriteOptions { codec: self.codec, row_group_rows: self.rows_per_group },
                 key_range,
             )?;
@@ -236,8 +237,7 @@ impl TensorStore for BsgsFormat {
             }
             fstart = fend;
         }
-        common::commit_parts(table, id, "WRITE BSGS", parts)?;
-        Ok(())
+        Ok(WritePlan { tensor_id: id.to_string(), operation: "WRITE BSGS".into(), parts })
     }
 
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {

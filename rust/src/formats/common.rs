@@ -1,31 +1,16 @@
-//! Shared plumbing for the format implementations: writing row groups to
-//! DTPQ part files under a table, committing Add actions with pruning
-//! stats, and locating/opening a tensor's part files from a snapshot.
+//! Shared plumbing for the format implementations: staging row groups as
+//! write-engine part descriptors (committing is the engine's job — see
+//! [`crate::ingest`]), and locating/opening a tensor's part files from a
+//! snapshot.
 
 use crate::columnar::{ColumnData, FileReader, Schema, WriteOptions};
-use crate::delta::{Action, AddFile, DeltaTable};
-use crate::objectstore::ObjectStore;
+use crate::delta::{AddFile, DeltaTable};
+use crate::ingest::{PartPayload, PartSpec};
 use crate::Result;
 use anyhow::{ensure, Context};
 
-/// A part file staged for commit.
-pub struct StagedPart {
-    /// Path relative to the table root.
-    pub rel_path: String,
-    /// Serialized DTPQ bytes.
-    pub bytes: Vec<u8>,
-    /// Row count.
-    pub rows: u64,
-    /// Min pruning key across the file (leading-dim coordinate/chunk index).
-    pub min_key: Option<i64>,
-    /// Max pruning key across the file.
-    pub max_key: Option<i64>,
-    /// Optional tensor metadata JSON carried on the Add action (shape,
-    /// dtype) so empty tensors remain readable.
-    pub meta: Option<String>,
-}
-
-/// Serialize row groups into a staged part file for `id`.
+/// Stage row groups as a part descriptor for `id`. Serialization is
+/// deferred to the write engine, which encodes staged parts in parallel.
 ///
 /// `part_no` distinguishes multiple files of one write; the pruning key
 /// range is supplied by the caller (it knows which column is the key).
@@ -34,46 +19,19 @@ pub fn stage_part(
     id: &str,
     part_no: usize,
     schema: &Schema,
-    groups: &[Vec<ColumnData>],
+    groups: Vec<Vec<ColumnData>>,
     opts: WriteOptions,
     key_range: Option<(i64, i64)>,
-) -> Result<StagedPart> {
-    let bytes = crate::columnar::write_file(schema, groups, opts)?;
+) -> Result<PartSpec> {
     let rows: usize = groups.iter().map(|g| g.first().map_or(0, |c| c.len())).sum();
-    Ok(StagedPart {
+    Ok(PartSpec {
         rel_path: format!("data/{id}/{}-part-{part_no:05}.dtpq", layout.to_lowercase()),
-        bytes,
+        payload: PartPayload::Columnar { schema: schema.clone(), groups, opts },
         rows: rows as u64,
         min_key: key_range.map(|r| r.0),
         max_key: key_range.map(|r| r.1),
         meta: None,
     })
-}
-
-/// Upload staged parts and commit them atomically as one table version.
-pub fn commit_parts(
-    table: &DeltaTable,
-    id: &str,
-    operation: &str,
-    parts: Vec<StagedPart>,
-) -> Result<u64> {
-    let ts = crate::delta::now_ms();
-    let mut actions = Vec::with_capacity(parts.len() + 1);
-    for p in parts {
-        table.store().put(&table.data_key(&p.rel_path), &p.bytes)?;
-        actions.push(Action::Add(AddFile {
-            path: p.rel_path,
-            size: p.bytes.len() as u64,
-            rows: p.rows,
-            tensor_id: id.to_string(),
-            min_key: p.min_key,
-            max_key: p.max_key,
-            timestamp: ts,
-            meta: p.meta,
-        }));
-    }
-    actions.push(Action::CommitInfo { operation: operation.to_string(), timestamp: ts });
-    table.commit(actions)
 }
 
 /// The live part files of a tensor, ordered by path (== part number order).
@@ -169,7 +127,18 @@ pub fn shape_from_i64(xs: &[i64]) -> Result<Vec<usize>> {
 mod tests {
     use super::*;
     use crate::columnar::{Field, PhysType};
+    use crate::ingest::WritePlan;
     use crate::objectstore::ObjectStoreHandle;
+
+    /// Commit staged parts through the write engine (what the formats'
+    /// default `write` does after `plan_write`).
+    fn commit(table: &DeltaTable, id: &str, parts: Vec<PartSpec>) -> u64 {
+        crate::ingest::write_one(
+            table,
+            WritePlan { tensor_id: id.to_string(), operation: "WRITE".into(), parts },
+        )
+        .unwrap()
+    }
 
     fn schema() -> Schema {
         Schema::new(vec![
@@ -194,7 +163,7 @@ mod tests {
             "x1",
             0,
             &schema(),
-            &[group("x1", &[0, 1, 2])],
+            vec![group("x1", &[0, 1, 2])],
             WriteOptions::default(),
             Some((0, 2)),
         )
@@ -204,12 +173,12 @@ mod tests {
             "x1",
             1,
             &schema(),
-            &[group("x1", &[3, 4])],
+            vec![group("x1", &[3, 4])],
             WriteOptions::default(),
             Some((3, 4)),
         )
         .unwrap();
-        commit_parts(&table, "x1", "WRITE", vec![p0, p1]).unwrap();
+        commit(&table, "x1", vec![p0, p1]);
 
         let parts = tensor_parts(&table, "x1", "COO").unwrap();
         assert_eq!(parts.len(), 2);
@@ -237,10 +206,10 @@ mod tests {
     #[test]
     fn layouts_do_not_collide() {
         let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
-        let p = stage_part("COO", "x", 0, &schema(), &[group("x", &[1])], WriteOptions::default(), None).unwrap();
-        commit_parts(&table, "x", "W", vec![p]).unwrap();
-        let p = stage_part("CSF", "x", 0, &schema(), &[group("x", &[1])], WriteOptions::default(), None).unwrap();
-        commit_parts(&table, "x", "W", vec![p]).unwrap();
+        let p = stage_part("COO", "x", 0, &schema(), vec![group("x", &[1])], WriteOptions::default(), None).unwrap();
+        commit(&table, "x", vec![p]);
+        let p = stage_part("CSF", "x", 0, &schema(), vec![group("x", &[1])], WriteOptions::default(), None).unwrap();
+        commit(&table, "x", vec![p]);
         assert_eq!(tensor_parts(&table, "x", "COO").unwrap().len(), 1);
         assert_eq!(tensor_parts(&table, "x", "CSF").unwrap().len(), 1);
     }

@@ -13,6 +13,7 @@ use super::common::{self, shape_from_i64};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
 use crate::delta::{AddFile, DeltaTable};
+use crate::ingest::WritePlan;
 use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice, SparseCoo};
 use crate::Result;
@@ -113,7 +114,7 @@ impl TensorStore for CooFormat {
         "COO"
     }
 
-    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
         let mut s = data.to_sparse()?;
         if !s.is_sorted() {
             s.sort_canonical();
@@ -145,7 +146,7 @@ impl TensorStore for CooFormat {
                 id,
                 part_no,
                 &SCHEMA,
-                &groups,
+                groups,
                 WriteOptions { codec: self.codec, row_group_rows: self.rows_per_group },
                 key_range,
             )?;
@@ -159,8 +160,7 @@ impl TensorStore for CooFormat {
             }
             fstart = fend;
         }
-        common::commit_parts(table, id, "WRITE COO", parts)?;
-        Ok(())
+        Ok(WritePlan { tensor_id: id.to_string(), operation: "WRITE COO".into(), parts })
     }
 
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {

@@ -21,6 +21,7 @@ use super::encoders::{coo_to_csf, csf_slice_dim0, csf_to_coo, CsfTensor};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
 use crate::delta::{AddFile, DeltaTable};
+use crate::ingest::WritePlan;
 use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice};
 use crate::Result;
@@ -260,7 +261,7 @@ impl TensorStore for CsfFormat {
         "CSF"
     }
 
-    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
         let mut s = data.to_sparse()?;
         if !s.is_sorted() {
             s.sort_canonical();
@@ -289,7 +290,7 @@ impl TensorStore for CsfFormat {
                 header_groups.push(self.header_row(id, &shape_i64, &dtype, "fptr", l as i64, 0, t.fptrs[l].clone(), vec![]));
             }
         }
-        let mut parts = vec![common::stage_part(self.layout(), id, 0, &SCHEMA, &header_groups, opts, None)?];
+        let mut parts = vec![common::stage_part(self.layout(), id, 0, &SCHEMA, header_groups, opts, None)?];
 
         // Chunked streams.
         let mut stage_stream = |_name: &str, part_no: usize, rows: Vec<Vec<ColumnData>>, maxseq: i64| -> Result<()> {
@@ -298,7 +299,7 @@ impl TensorStore for CsfFormat {
                 id,
                 part_no,
                 &SCHEMA,
-                &rows,
+                rows,
                 opts,
                 Some((0, maxseq)),
             )?);
@@ -339,8 +340,7 @@ impl TensorStore for CsfFormat {
             }
             stage_stream("vals", pn, rows, nchunks as i64 - 1)?;
         }
-        common::commit_parts(table, id, "WRITE CSF", parts)?;
-        Ok(())
+        Ok(WritePlan { tensor_id: id.to_string(), operation: "WRITE CSF".into(), parts })
     }
 
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {

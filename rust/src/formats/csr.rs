@@ -18,6 +18,7 @@ use super::encoders::{coo_to_csr, csr_to_coo, flatten_shape_2d, CsrMatrix};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
 use crate::delta::{AddFile, DeltaTable};
+use crate::ingest::WritePlan;
 use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{DType, Slice, SparseCoo};
 use crate::Result;
@@ -194,7 +195,7 @@ impl TensorStore for CsrFormat {
         self.layout_name()
     }
 
-    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
         let mut s = data.to_sparse()?;
         if !s.is_sorted() {
             s.sort_canonical();
@@ -261,7 +262,7 @@ impl TensorStore for CsrFormat {
                 id,
                 file_no,
                 &SCHEMA,
-                &[group],
+                vec![group],
                 WriteOptions { codec: self.codec, row_group_rows: self.parts_per_file },
                 key_range,
             )?;
@@ -270,8 +271,7 @@ impl TensorStore for CsrFormat {
             }
             parts.push(part);
         }
-        common::commit_parts(table, id, &format!("WRITE {layout}"), parts)?;
-        Ok(())
+        Ok(WritePlan { tensor_id: id.to_string(), operation: format!("WRITE {layout}"), parts })
     }
 
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {

@@ -18,6 +18,7 @@ use super::common::{self, shape_from_i64};
 use super::{TensorData, TensorStore};
 use crate::columnar::{ColumnData, Field, PhysType, Schema, WriteOptions};
 use crate::delta::{AddFile, DeltaTable};
+use crate::ingest::WritePlan;
 use crate::query::engine::{self, PartRead, ReadSpec};
 use crate::tensor::{numel, strides_for, DType, DenseTensor, Slice};
 use crate::Result;
@@ -124,7 +125,7 @@ impl TensorStore for FtsfFormat {
         "FTSF"
     }
 
-    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
         let t = match data {
             TensorData::Dense(t) => t,
             TensorData::Sparse(_) => bail!("FTSF stores general (dense) tensors"),
@@ -173,7 +174,7 @@ impl TensorStore for FtsfFormat {
                     id,
                     part_no,
                     &SCHEMA,
-                    &file_groups,
+                    std::mem::take(&mut file_groups),
                     WriteOptions { codec: self.codec, row_group_rows: self.rows_per_group },
                     Some((file_min, file_max)),
                 )?;
@@ -191,13 +192,11 @@ impl TensorStore for FtsfFormat {
                 }
                 parts.push(part);
                 part_no += 1;
-                file_groups = Vec::new();
                 file_min = i64::MAX;
                 file_max = i64::MIN;
             }
         }
-        common::commit_parts(table, id, "WRITE FTSF", parts)?;
-        Ok(())
+        Ok(WritePlan { tensor_id: id.to_string(), operation: "WRITE FTSF".into(), parts })
     }
 
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData> {

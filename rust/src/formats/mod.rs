@@ -35,6 +35,7 @@ pub use csr::{CsrFormat, CsrOrientation};
 pub use ftsf::FtsfFormat;
 
 use crate::delta::DeltaTable;
+use crate::ingest::WritePlan;
 use crate::query::engine::{PartRead, ReadSpec};
 use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
 use crate::Result;
@@ -110,16 +111,29 @@ impl From<SparseCoo> for TensorData {
 /// back fully or sliced. The write path returns nothing but the commit is
 /// durable on return; sizes are observable via [`storage_bytes`].
 ///
-/// All read paths execute through [`crate::query::engine`]: `plan_read`
-/// produces the fetch descriptors (part files × row groups × columns) and
-/// the engine turns them into coalesced, parallel, cached I/O; `read`/
-/// `read_slice` decode what the engine fetched.
+/// Both directions execute through an engine. Reads:
+/// [`crate::query::engine`] — `plan_read` produces the fetch descriptors
+/// (part files × row groups × columns) and the engine turns them into
+/// coalesced, parallel, cached I/O; `read`/`read_slice` decode what the
+/// engine fetched. Writes: [`crate::ingest`] — `plan_write` produces the
+/// part descriptors (unencoded row groups) and the engine encodes them in
+/// parallel, uploads them in batched PUTs and lands them in one atomic
+/// commit; a [`crate::ingest::TensorWriter`] batches many tensors' plans
+/// into a single commit.
 pub trait TensorStore {
     /// Stable layout name recorded in table rows ("FTSF", "COO", ...).
     fn layout(&self) -> &'static str;
 
-    /// Write `data` under `id` and commit.
-    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()>;
+    /// Describe the parts a write would stage: the unencoded part
+    /// descriptors the write engine serializes, uploads and commits.
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan>;
+
+    /// Write `data` under `id` and commit (one table version), routed
+    /// through the write engine.
+    fn write(&self, table: &DeltaTable, id: &str, data: &TensorData) -> Result<()> {
+        crate::ingest::write_one(table, self.plan_write(id, data)?)?;
+        Ok(())
+    }
 
     /// Read the entire tensor `id`.
     fn read(&self, table: &DeltaTable, id: &str) -> Result<TensorData>;

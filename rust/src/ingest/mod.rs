@@ -1,0 +1,671 @@
+//! The unified write engine: every format's `write()` executes through
+//! this module, symmetric to the read side's [`crate::query::engine`].
+//!
+//! A write is planned as a [`WritePlan`] — part descriptors carrying the
+//! **unencoded** row groups ([`PartSpec`]) — and the engine turns the plan
+//! into I/O:
+//!
+//! 1. **Parallel encode**: part payloads serialize to DTPQ bytes on a
+//!    shared worker pool, so a multi-part write (or a batch of tensors)
+//!    uses every core instead of encoding serially on the caller thread.
+//! 2. **Batched PUTs**: encoded parts upload in batches of `DT_PUT_BATCH`
+//!    objects (default [`DEFAULT_PUT_BATCH`]) through
+//!    [`ObjectStore::put_many`] — one request's worth of round-trip cost
+//!    per batch on the simulated cloud store, mirroring the read engine's
+//!    `get_ranges`.
+//! 3. **Bounded staging**: encoded-but-not-yet-uploaded bytes are capped
+//!    at `DT_INFLIGHT_MB` MiB (default [`DEFAULT_INFLIGHT_MB`]); encoders
+//!    block when the cap is reached, so a huge batch cannot balloon
+//!    resident memory however fast the encoders outrun the uploads.
+//! 4. **One commit per batch**: a [`TensorWriter`] lands N tensors in ONE
+//!    atomic Delta commit — the log grows by a single version however many
+//!    tensors ride the batch. Losing the `put_if_absent` race retries
+//!    against a refreshed log position (see [`crate::delta`]).
+//!
+//! Engine-wide counters — parts encoded (and how many rode the parallel
+//! path), PUT batches, staged bytes, batch commits, commit retries — are
+//! exported via [`stats`]/[`report`] for the coordinator's metrics
+//! surface and the CLI.
+
+use crate::columnar::{ColumnData, Schema, WriteOptions};
+use crate::coordinator::WorkerPool;
+use crate::delta::{Action, AddFile, DeltaTable};
+use crate::objectstore::ObjectStore;
+use crate::util::env_u64;
+use crate::Result;
+use anyhow::ensure;
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Default number of objects per batched PUT (`DT_PUT_BATCH` overrides).
+pub const DEFAULT_PUT_BATCH: usize = 8;
+
+/// Default cap, in MiB, on encoded-but-not-yet-uploaded bytes
+/// (`DT_INFLIGHT_MB` overrides).
+pub const DEFAULT_INFLIGHT_MB: usize = 256;
+
+/// The serialized payload of one staged part, encoding deferred.
+pub enum PartPayload {
+    /// A columnar DTPQ part: the engine runs
+    /// [`crate::columnar::write_file`] on the worker pool.
+    Columnar {
+        /// Part schema.
+        schema: Schema,
+        /// Row groups, outer = group, inner = columns.
+        groups: Vec<Vec<ColumnData>>,
+        /// Codec / row-group geometry.
+        opts: WriteOptions,
+    },
+    /// Pre-serialized bytes (the Binary format's whole-object payload).
+    Raw(Vec<u8>),
+}
+
+impl std::fmt::Debug for PartPayload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartPayload::Columnar { groups, .. } => {
+                f.debug_struct("Columnar").field("groups", &groups.len()).finish()
+            }
+            PartPayload::Raw(b) => f.debug_struct("Raw").field("bytes", &b.len()).finish(),
+        }
+    }
+}
+
+/// A part file staged for commit: where it goes, what it holds, and the
+/// pruning metadata its Add action will carry.
+#[derive(Debug)]
+pub struct PartSpec {
+    /// Path relative to the table root.
+    pub rel_path: String,
+    /// Unencoded payload (the engine serializes it).
+    pub payload: PartPayload,
+    /// Logical row count.
+    pub rows: u64,
+    /// Min pruning key across the file (leading-dim coordinate/chunk index).
+    pub min_key: Option<i64>,
+    /// Max pruning key across the file.
+    pub max_key: Option<i64>,
+    /// Optional tensor metadata JSON carried on the Add action (shape,
+    /// dtype) so empty tensors remain readable.
+    pub meta: Option<String>,
+}
+
+/// Everything one tensor's `write` needs committed: produced by
+/// `TensorStore::plan_write`, executed by [`write_one`] or batched through
+/// a [`TensorWriter`].
+#[derive(Debug)]
+pub struct WritePlan {
+    /// Tensor id the parts belong to.
+    pub tensor_id: String,
+    /// CommitInfo operation recorded when this plan commits alone.
+    pub operation: String,
+    /// Staged parts, in part-number order.
+    pub parts: Vec<PartSpec>,
+}
+
+/// Engine-wide counters (process-global, monotonic).
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    /// Part files encoded (DTPQ serialization or raw passthrough).
+    pub parts_encoded: AtomicU64,
+    /// Parts encoded on the shared pool (multi-part plans/batches); the
+    /// complement of `parts_encoded` took the single-part inline path.
+    pub parallel_encodes: AtomicU64,
+    /// Batched PUT requests issued.
+    pub put_batches: AtomicU64,
+    /// Objects carried by those batches.
+    pub put_parts: AtomicU64,
+    /// Encoded bytes staged for upload.
+    pub bytes_staged: AtomicU64,
+    /// Atomic batch commits executed.
+    pub batch_commits: AtomicU64,
+    /// Tensors landed by those commits.
+    pub tensors_committed: AtomicU64,
+}
+
+static STATS: Lazy<IngestStats> = Lazy::new(IngestStats::default);
+static POOL: Lazy<WorkerPool> = Lazy::new(|| {
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    WorkerPool::new(n.clamp(2, 16), 1024)
+});
+
+/// Engine-wide counters.
+pub fn stats() -> &'static IngestStats {
+    &STATS
+}
+
+/// Plain-text write-engine metrics report, in the same `name value` format
+/// as `coordinator::Metrics::report`.
+pub fn report() -> String {
+    format!(
+        "ingest.parts_encoded {}\ningest.parallel_encodes {}\ningest.put_batches {}\n\
+         ingest.put_parts {}\ningest.bytes_staged {}\ningest.batch_commits {}\n\
+         ingest.tensors_committed {}\ningest.commit_retries {}\n",
+        STATS.parts_encoded.load(Ordering::Relaxed),
+        STATS.parallel_encodes.load(Ordering::Relaxed),
+        STATS.put_batches.load(Ordering::Relaxed),
+        STATS.put_parts.load(Ordering::Relaxed),
+        STATS.bytes_staged.load(Ordering::Relaxed),
+        STATS.batch_commits.load(Ordering::Relaxed),
+        STATS.tensors_committed.load(Ordering::Relaxed),
+        crate::delta::commit_retry_count(),
+    )
+}
+
+/// Serialize one payload to its final on-store bytes.
+fn encode_payload(payload: PartPayload) -> Result<Vec<u8>> {
+    match payload {
+        PartPayload::Columnar { schema, groups, opts } => {
+            crate::columnar::write_file(&schema, &groups, opts)
+        }
+        PartPayload::Raw(bytes) => Ok(bytes),
+    }
+}
+
+/// Upper-bound estimate of a payload's encoded size — raw in-memory bytes
+/// of the columns plus varint/footer allowances. Reserved from the byte
+/// gate BEFORE the encode materializes its output buffer, so the budget
+/// throttles allocation itself rather than merely counting it afterwards;
+/// the reservation is corrected to the actual size once encoding finishes
+/// (compression usually shrinks it well below the estimate).
+fn payload_estimate(payload: &PartPayload) -> u64 {
+    match payload {
+        PartPayload::Raw(b) => b.len() as u64,
+        PartPayload::Columnar { groups, .. } => {
+            let mut est = 4096u64; // header + footer allowance
+            for group in groups {
+                for col in group {
+                    est += match col {
+                        ColumnData::Int(v) => v.len() as u64 * 10,
+                        ColumnData::Float(v) => v.len() as u64 * 8,
+                        ColumnData::Float32(v) => v.len() as u64 * 4,
+                        ColumnData::Bytes(v) => v.iter().map(|b| b.len() as u64 + 5).sum(),
+                        ColumnData::Str(v) => v.iter().map(|s| s.len() as u64 + 5).sum(),
+                        ColumnData::IntList(v) => {
+                            v.iter().map(|l| l.len() as u64 * 10 + 5).sum()
+                        }
+                    };
+                }
+            }
+            est
+        }
+    }
+}
+
+/// Byte-budget gate bounding encoded-but-not-uploaded bytes. Encoders
+/// reserve their estimated output size before materializing it; an
+/// acquire that would exceed the budget blocks until uploads release
+/// space, and an oversized single part is admitted when the gate is empty
+/// (it could never fit otherwise). `open` lifts the budget permanently —
+/// the error path uses it so blocked encoders can never wedge the shared
+/// pool.
+struct ByteGate {
+    budget: u64,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    used: u64,
+    waiting: usize,
+    open: bool,
+}
+
+impl ByteGate {
+    fn new(budget: u64) -> Self {
+        Self {
+            budget: budget.max(1),
+            state: Mutex::new(GateState { used: 0, waiting: 0, open: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn acquire(&self, n: u64) {
+        let mut s = self.state.lock().unwrap();
+        while !s.open && s.used > 0 && s.used + n > self.budget {
+            s.waiting += 1;
+            s = self.cv.wait(s).unwrap();
+            s.waiting -= 1;
+        }
+        s.used += n;
+    }
+
+    /// Correct a reservation from the pre-encode estimate to the actual
+    /// encoded size.
+    fn adjust(&self, from: u64, to: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.used = s.used.saturating_sub(from).saturating_add(to);
+        self.cv.notify_all();
+    }
+
+    fn release(&self, n: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.used = s.used.saturating_sub(n);
+        self.cv.notify_all();
+    }
+
+    /// True when at least one encoder is blocked waiting for budget — the
+    /// drain loop's signal that its held bytes must be flushed now.
+    fn has_waiters(&self) -> bool {
+        self.state.lock().unwrap().waiting > 0
+    }
+
+    fn open(&self) {
+        self.state.lock().unwrap().open = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Add-action metadata held back while a part's payload is off encoding.
+struct PartSlot {
+    rel_path: String,
+    rows: u64,
+    min_key: Option<i64>,
+    max_key: Option<i64>,
+    meta: Option<String>,
+    tensor_id: String,
+}
+
+/// Batches N tensors' write plans into ONE atomic Delta commit.
+///
+/// ```text
+/// let mut w = TensorWriter::new(&table);
+/// w.stage(fmt.plan_write("a", &ta)?);
+/// w.stage(fmt.plan_write("b", &tb)?);
+/// let version = w.commit()?;   // one new log version holds both
+/// ```
+///
+/// `commit` encodes every staged part in parallel, uploads them in batched
+/// PUTs under the in-flight byte budget, then writes one commit containing
+/// all the Add actions. Part bytes are identical to what per-tensor
+/// `write` calls would produce — only the number of PUT round trips and
+/// log versions changes.
+pub struct TensorWriter<'a> {
+    table: &'a DeltaTable,
+    plans: Vec<WritePlan>,
+    put_batch: usize,
+    inflight_bytes: u64,
+}
+
+impl<'a> TensorWriter<'a> {
+    /// New empty batch over `table`, knobs from the environment
+    /// (`DT_PUT_BATCH`, `DT_INFLIGHT_MB`).
+    pub fn new(table: &'a DeltaTable) -> Self {
+        Self::with_knobs(
+            table,
+            env_u64("DT_PUT_BATCH", DEFAULT_PUT_BATCH as u64) as usize,
+            env_u64("DT_INFLIGHT_MB", DEFAULT_INFLIGHT_MB as u64) * 1024 * 1024,
+        )
+    }
+
+    /// New empty batch with explicit PUT batch size and in-flight byte
+    /// budget (tests; the env-reading [`TensorWriter::new`] is the normal
+    /// entry point).
+    pub fn with_knobs(table: &'a DeltaTable, put_batch: usize, inflight_bytes: u64) -> Self {
+        Self { table, plans: Vec::new(), put_batch: put_batch.max(1), inflight_bytes }
+    }
+
+    /// Stage one tensor's plan into the batch.
+    pub fn stage(&mut self, plan: WritePlan) {
+        self.plans.push(plan);
+    }
+
+    /// Tensors staged so far.
+    pub fn staged(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Encode, upload and commit the whole batch as one table version.
+    pub fn commit(self) -> Result<u64> {
+        let Self { table, plans, put_batch, inflight_bytes } = self;
+        ensure!(!plans.is_empty(), "empty ingest batch");
+        let n_tensors = plans.len();
+        let operation = if n_tensors == 1 {
+            plans[0].operation.clone()
+        } else {
+            format!("WRITE BATCH({n_tensors})")
+        };
+        let mut slots: Vec<PartSlot> = Vec::new();
+        let mut payloads: Vec<PartPayload> = Vec::new();
+        for plan in plans {
+            ensure!(!plan.parts.is_empty(), "plan for {:?} stages no parts", plan.tensor_id);
+            for p in plan.parts {
+                slots.push(PartSlot {
+                    rel_path: p.rel_path,
+                    rows: p.rows,
+                    min_key: p.min_key,
+                    max_key: p.max_key,
+                    meta: p.meta,
+                    tensor_id: plan.tensor_id.clone(),
+                });
+                payloads.push(p.payload);
+            }
+        }
+        let n = payloads.len();
+        let mut sizes = vec![0u64; n];
+
+        if n == 1 {
+            // Single-part writes skip the pool round trip and the gate.
+            let bytes = encode_payload(payloads.pop().unwrap())?;
+            STATS.parts_encoded.fetch_add(1, Ordering::Relaxed);
+            STATS.bytes_staged.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            sizes[0] = bytes.len() as u64;
+            let key = table.data_key(&slots[0].rel_path);
+            table.store().put_many(&[(key.as_str(), bytes.as_slice())])?;
+            STATS.put_batches.fetch_add(1, Ordering::Relaxed);
+            STATS.put_parts.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let gate = Arc::new(ByteGate::new(inflight_bytes));
+            let (tx, rx) = mpsc::channel::<(usize, Result<Vec<u8>>)>();
+            // Submission runs on its own thread: `POOL.submit` blocks when
+            // the bounded queue fills, and encoders block on the byte
+            // gate — if this thread submitted everything up front before
+            // draining, a large enough batch would wedge all three
+            // (submitter on the queue, encoders on the gate, drain never
+            // entered). The submitter owns `tx`; the channel disconnects
+            // once it and every encode job are done.
+            {
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    for (idx, payload) in payloads.into_iter().enumerate() {
+                        let tx = tx.clone();
+                        let gate = gate.clone();
+                        POOL.submit(move || {
+                            // Reserve the estimated output size BEFORE the
+                            // encode allocates it, then correct to the
+                            // actual size — the budget caps materialized
+                            // bytes, not just already-materialized ones.
+                            let est = payload_estimate(&payload);
+                            gate.acquire(est);
+                            let out = encode_payload(payload);
+                            match &out {
+                                Ok(b) => gate.adjust(est, b.len() as u64),
+                                Err(_) => gate.release(est),
+                            }
+                            let _ = tx.send((idx, out));
+                        });
+                    }
+                });
+            }
+
+            // Drain encodes in completion order, flushing a batched PUT
+            // when `put_batch` parts are staged or the staged bytes reach
+            // half the gate budget (so this thread never parks more than
+            // half the budget while encoders wait on the other half). The
+            // recv timeout is the deadlock backstop: when encoders are
+            // *blocked on the gate* (`has_waiters`) while parts are held
+            // here, flush to free their budget — a slow encode with no
+            // waiters just keeps accumulating the batch, so large writes
+            // keep full-size PUT batches. On the first error the gate
+            // opens so still-blocked encoders drain instead of wedging
+            // the shared pool.
+            let mut batch: Vec<(usize, Vec<u8>)> = Vec::new();
+            let mut batch_bytes: u64 = 0;
+            let mut received = 0usize;
+            let mut first_err: Option<crate::Error> = None;
+            let flush = |batch: &mut Vec<(usize, Vec<u8>)>,
+                         batch_bytes: &mut u64,
+                         first_err: &mut Option<crate::Error>| {
+                if first_err.is_some() {
+                    for (_, b) in batch.drain(..) {
+                        gate.release(b.len() as u64);
+                    }
+                } else if let Err(e) = flush_batch(table, &slots, batch, &gate) {
+                    *first_err = Some(e);
+                    gate.open();
+                }
+                *batch_bytes = 0;
+            };
+            loop {
+                let msg = match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(mpsc::TryRecvError::Empty) if batch.is_empty() => rx.recv().ok(),
+                    Err(mpsc::TryRecvError::Empty) => {
+                        match rx.recv_timeout(std::time::Duration::from_millis(100)) {
+                            Ok(m) => Some(m),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if gate.has_waiters() {
+                                    flush(&mut batch, &mut batch_bytes, &mut first_err);
+                                }
+                                continue;
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => None,
+                };
+                let Some((idx, res)) = msg else { break };
+                received += 1;
+                match res {
+                    Ok(bytes) => {
+                        if first_err.is_some() {
+                            gate.release(bytes.len() as u64);
+                            continue;
+                        }
+                        STATS.parts_encoded.fetch_add(1, Ordering::Relaxed);
+                        STATS.parallel_encodes.fetch_add(1, Ordering::Relaxed);
+                        STATS.bytes_staged.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                        sizes[idx] = bytes.len() as u64;
+                        batch_bytes += bytes.len() as u64;
+                        batch.push((idx, bytes));
+                        if batch.len() >= put_batch
+                            || batch_bytes.saturating_mul(2) >= inflight_bytes
+                        {
+                            flush(&mut batch, &mut batch_bytes, &mut first_err);
+                        }
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                            gate.open();
+                        }
+                    }
+                }
+            }
+            flush(&mut batch, &mut batch_bytes, &mut first_err);
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            // A panicked encode job dies inside the pool without sending;
+            // committing anyway would land Add actions for objects that
+            // were never uploaded. Fail loudly instead (the read engine's
+            // "worker dropped a part result" guard, write side).
+            ensure!(
+                received == n,
+                "write engine dropped {} of {n} part results (encoder panicked?)",
+                n - received
+            );
+        }
+
+        // All parts durable: land every Add in one atomic commit.
+        let ts = crate::delta::now_ms();
+        let mut actions = Vec::with_capacity(n + 1);
+        for (slot, size) in slots.into_iter().zip(sizes) {
+            actions.push(Action::Add(AddFile {
+                path: slot.rel_path,
+                size,
+                rows: slot.rows,
+                tensor_id: slot.tensor_id,
+                min_key: slot.min_key,
+                max_key: slot.max_key,
+                timestamp: ts,
+                meta: slot.meta,
+            }));
+        }
+        actions.push(Action::CommitInfo { operation, timestamp: ts });
+        let version = table.commit(actions)?;
+        STATS.batch_commits.fetch_add(1, Ordering::Relaxed);
+        STATS.tensors_committed.fetch_add(n_tensors as u64, Ordering::Relaxed);
+        Ok(version)
+    }
+}
+
+/// Upload the staged batch with one `put_many`, releasing its bytes from
+/// the gate whether or not the upload succeeded (a stuck budget would
+/// deadlock the encoders).
+fn flush_batch(
+    table: &DeltaTable,
+    slots: &[PartSlot],
+    batch: &mut Vec<(usize, Vec<u8>)>,
+    gate: &ByteGate,
+) -> Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    let keys: Vec<String> =
+        batch.iter().map(|(i, _)| table.data_key(&slots[*i].rel_path)).collect();
+    let objs: Vec<(&str, &[u8])> =
+        keys.iter().zip(batch.iter()).map(|(k, (_, b))| (k.as_str(), b.as_slice())).collect();
+    let res = table.store().put_many(&objs);
+    STATS.put_batches.fetch_add(1, Ordering::Relaxed);
+    STATS.put_parts.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    for (_, b) in batch.drain(..) {
+        gate.release(b.len() as u64);
+    }
+    res
+}
+
+/// Execute one tensor's plan: the single-plan convenience over
+/// [`TensorWriter`] that every format's default `write` routes through.
+/// Returns the committed version.
+pub fn write_one(table: &DeltaTable, plan: WritePlan) -> Result<u64> {
+    let mut w = TensorWriter::new(table);
+    w.stage(plan);
+    w.commit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::columnar::{Field, PhysType};
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn schema() -> Schema {
+        Schema::new(vec![Field::new("k", PhysType::Int)]).unwrap()
+    }
+
+    fn columnar_part(no: usize, keys: Vec<i64>) -> PartSpec {
+        PartSpec {
+            rel_path: format!("data/x/coo-part-{no:05}.dtpq"),
+            rows: keys.len() as u64,
+            min_key: keys.first().copied(),
+            max_key: keys.last().copied(),
+            meta: None,
+            payload: PartPayload::Columnar {
+                schema: schema(),
+                groups: vec![vec![ColumnData::Int(keys)]],
+                opts: WriteOptions::default(),
+            },
+        }
+    }
+
+    fn plan(parts: Vec<PartSpec>) -> WritePlan {
+        WritePlan { tensor_id: "x".into(), operation: "WRITE TEST".into(), parts }
+    }
+
+    #[test]
+    fn single_part_plan_commits_one_version() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store.clone(), "t").unwrap();
+        let v = write_one(&t, plan(vec![columnar_part(0, vec![1, 2, 3])])).unwrap();
+        assert_eq!(v, 1);
+        let snap = t.snapshot().unwrap();
+        assert_eq!(snap.files.len(), 1);
+        let f = snap.files.values().next().unwrap();
+        assert_eq!(f.rows, 3);
+        assert_eq!((f.min_key, f.max_key), (Some(1), Some(3)));
+        assert_eq!(store.head(&t.data_key(&f.path)).unwrap(), Some(f.size));
+        assert!(f.size > 0);
+    }
+
+    #[test]
+    fn multi_tensor_batch_is_one_commit_with_batched_puts() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store.clone(), "t").unwrap();
+        store.stats().reset();
+        let mut w = TensorWriter::with_knobs(&t, 4, 1 << 20);
+        for i in 0..6 {
+            let mut p = plan(vec![columnar_part(0, vec![i, i + 1])]);
+            p.tensor_id = format!("t{i}");
+            p.parts[0].rel_path = format!("data/t{i}/coo-part-00000.dtpq");
+            w.stage(p);
+        }
+        assert_eq!(w.staged(), 6);
+        let v = w.commit().unwrap();
+        assert_eq!(v, 1, "six tensors, one new version");
+        // 6 parts at batch size 4 -> exactly 2 batched PUTs (+ 1 commit
+        // PUT): the timeout backstop only splits batches when encoders
+        // are blocked on the byte gate, which a 1 MiB budget rules out.
+        assert_eq!(store.stats().put_batched(), (2, 6));
+        let snap = t.snapshot().unwrap();
+        assert_eq!(snap.files.len(), 6);
+        for i in 0..6 {
+            assert_eq!(snap.files_for_tensor(&format!("t{i}")).len(), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_inflight_budget_still_lands_everything() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "t").unwrap();
+        // Budget far below one encoded part: the gate admits parts one at
+        // a time (oversized-when-empty rule) instead of deadlocking.
+        let mut w = TensorWriter::with_knobs(&t, 2, 16);
+        let parts = (0..5).map(|i| {
+            let mut p = columnar_part(i, (0..64).collect());
+            p.rel_path = format!("data/x/coo-part-{i:05}.dtpq");
+            p
+        });
+        w.stage(plan(parts.collect()));
+        w.commit().unwrap();
+        assert_eq!(t.snapshot().unwrap().files.len(), 5);
+    }
+
+    #[test]
+    fn empty_batch_and_empty_plan_are_rejected() {
+        let t = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        assert!(TensorWriter::new(&t).commit().is_err());
+        assert!(write_one(&t, plan(Vec::new())).is_err());
+    }
+
+    #[test]
+    fn encode_error_fails_the_commit_and_lands_nothing() {
+        let t = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        // A group whose column count does not match the schema fails
+        // write_file; the batch must fail without committing version 1.
+        let bad = PartSpec {
+            rel_path: "data/x/coo-part-00001.dtpq".into(),
+            rows: 1,
+            min_key: None,
+            max_key: None,
+            meta: None,
+            payload: PartPayload::Columnar {
+                schema: schema(),
+                groups: vec![vec![
+                    ColumnData::Int(vec![1]),
+                    ColumnData::Int(vec![2]),
+                ]],
+                opts: WriteOptions::default(),
+            },
+        };
+        let res = write_one(&t, plan(vec![columnar_part(0, vec![1]), bad]));
+        assert!(res.is_err());
+        assert_eq!(t.latest_version().unwrap(), 0, "failed batch must not commit");
+    }
+
+    #[test]
+    fn report_lists_engine_counters() {
+        let r = report();
+        for key in [
+            "ingest.parts_encoded",
+            "ingest.parallel_encodes",
+            "ingest.put_batches",
+            "ingest.bytes_staged",
+            "ingest.batch_commits",
+            "ingest.commit_retries",
+        ] {
+            assert!(r.contains(key), "{r}");
+        }
+    }
+}

@@ -113,7 +113,7 @@ impl Json {
         self.as_arr()?.iter().map(|j| j.as_i64()).collect()
     }
 
-    /// Serialize compactly (no whitespace). See [`writer`].
+    /// Serialize compactly (no whitespace; see the `writer` submodule).
     pub fn dump(&self) -> String {
         let mut s = String::new();
         writer::write(self, &mut s);

@@ -18,11 +18,14 @@
 //! * [`tensor`] — dense/sparse tensor types and slicing.
 //! * [`formats`] — the paper's five storage methods (FTSF, COO, CSR/CSC,
 //!   CSF, BSGS) plus the binary baselines, behind one [`formats::TensorStore`]
-//!   API. Formats plan their reads (`plan_read`) and decode; the engine
-//!   does the I/O.
+//!   API. Formats plan their reads (`plan_read`) and writes (`plan_write`)
+//!   and decode; the engines do the I/O.
 //! * [`query`] — the unified read engine ([`query::engine`]: plan →
 //!   coalesced, parallel, cached fetches for every format) and the
 //!   cross-format surface: EXPLAIN plans, table statistics.
+//! * [`ingest`] — the unified write engine: plan → parallel encode,
+//!   batched PUTs, one atomic commit for every format;
+//!   [`ingest::TensorWriter`] lands N tensors in a single log version.
 //! * [`serving`] — the serving tier between the engine and the store:
 //!   sharded LRU block cache, single-flight fetch deduplication, and a
 //!   per-store admission gate.
@@ -40,6 +43,7 @@ pub mod delta;
 pub mod tensor;
 pub mod formats;
 pub mod query;
+pub mod ingest;
 pub mod serving;
 pub mod runtime;
 pub mod coordinator;
@@ -55,6 +59,7 @@ pub mod prelude {
         storage_bytes, BinaryFormat, BsgsFormat, CooFormat, CsfFormat, CsrFormat, FtsfFormat,
         SliceSpec, TensorData, TensorStore,
     };
+    pub use crate::ingest::{TensorWriter, WritePlan};
     pub use crate::objectstore::{CostModel, ObjectStore, ObjectStoreHandle};
     pub use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
 }

@@ -153,6 +153,28 @@ impl ObjectStore for FsStore {
         }
     }
 
+    fn put_many(&self, objs: &[(&str, &[u8])]) -> Result<()> {
+        // Validate every key before writing anything, then create each
+        // parent directory once per batch; every object is still its own
+        // atomic temp-write + rename.
+        let mut paths = Vec::with_capacity(objs.len());
+        for (key, _) in objs {
+            paths.push(self.path_for(key)?);
+        }
+        let mut made: Option<&Path> = None;
+        for (path, (_, data)) in paths.iter().zip(objs) {
+            if let Some(parent) = path.parent() {
+                if made != Some(parent) {
+                    fs::create_dir_all(parent)?;
+                }
+                made = Some(parent);
+            }
+            let tmp = self.write_temp(data)?;
+            fs::rename(&tmp, path)?;
+        }
+        Ok(())
+    }
+
     fn get_ranges(&self, key: &str, ranges: &[(u64, u64)]) -> Result<Vec<Vec<u8>>> {
         use std::io::{Read, Seek, SeekFrom};
         // One open + stat serves the whole batch; each range is a seek+read.

@@ -91,6 +91,15 @@ impl ObjectStore for MemStore {
         }
     }
 
+    fn put_many(&self, objs: &[(&str, &[u8])]) -> Result<()> {
+        // One lock acquisition serves the whole batch.
+        let mut map = self.map.write().unwrap();
+        for (key, data) in objs {
+            map.insert(key.to_string(), Arc::new(data.to_vec()));
+        }
+        Ok(())
+    }
+
     fn get_ranges(&self, key: &str, ranges: &[(u64, u64)]) -> Result<Vec<Vec<u8>>> {
         // One map lookup serves the whole batch.
         let obj = self.map.read().unwrap().get(key).cloned();

@@ -181,6 +181,16 @@ impl ObjectStore for SimStore {
         self.inner.get_tail(key, n)
     }
 
+    fn put_many(&self, objs: &[(&str, &[u8])]) -> Result<()> {
+        // A batched upload pays ONE first-byte latency (the per-object
+        // latencies of concurrently issued PUTs overlap), then the bodies
+        // share the serialized link like any other transfer — the
+        // write-side mirror of the batched `get_ranges` accounting below.
+        let total: u64 = objs.iter().map(|(_, d)| d.len() as u64).sum();
+        self.charge(total);
+        self.inner.put_many(objs)
+    }
+
     fn get_ranges(&self, key: &str, ranges: &[(u64, u64)]) -> Result<Vec<Vec<u8>>> {
         // A coalesced batch pays ONE first-byte latency (the per-range
         // latencies of concurrently issued ranged GETs overlap), then the

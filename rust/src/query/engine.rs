@@ -10,7 +10,8 @@
 //! 2. **Range coalescing**: the byte ranges of all selected column chunks
 //!    in a file are sorted and merged (ranges closer than
 //!    [`COALESCE_GAP`] become one span), then fetched with a single
-//!    batched [`ObjectStore::get_ranges`] request per file.
+//!    batched [`crate::objectstore::ObjectStore::get_ranges`] request per
+//!    file.
 //! 3. **Parallel fan-out**: per-file fetch+decode jobs run on a shared
 //!    [`WorkerPool`]; chunks are decoded in completion order and results
 //!    are returned in submission order.

@@ -38,6 +38,7 @@ pub use flight::{FlightKey, SingleFlight};
 pub use gate::{FetchGate, GatePermit};
 
 use crate::objectstore::{ObjectStore, ObjectStoreHandle};
+use crate::util::env_u64;
 use crate::Result;
 use anyhow::ensure;
 use once_cell::sync::Lazy;
@@ -49,10 +50,6 @@ pub type Block = Arc<Vec<u8>>;
 
 /// Number of cache shards (keeps lock hold times short under fan-out).
 const CACHE_SHARDS: usize = 16;
-
-fn env_u64(name: &str, default: u64) -> u64 {
-    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
 
 static CACHE: Lazy<BlockCache> =
     Lazy::new(|| BlockCache::new(env_u64("DT_CACHE_MB", 256) * 1024 * 1024, CACHE_SHARDS));

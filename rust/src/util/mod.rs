@@ -15,3 +15,10 @@ pub mod varint;
 pub use bytes::human_bytes;
 pub use prng::{Pcg64, SplitMix64};
 pub use timing::{RunStats, Stopwatch};
+
+/// Read a `u64` tuning knob from the environment, falling back to
+/// `default` when unset or unparseable (shared by the serving tier's and
+/// the write engine's `DT_*` knobs).
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}

@@ -1,0 +1,336 @@
+//! Closed-loop ingest load harness.
+//!
+//! Drives the write engine the way a fleet of data-producing pipelines
+//! would: `writers` threads commit batches back-to-back (closed loop —
+//! each writer waits for its commit to land before staging the next
+//! batch), every batch landing `tensors_per_batch` tensors in ONE atomic
+//! Delta commit through [`TensorWriter`]. Built to run over `SimStore` so
+//! the engine's parallel encode and batched PUTs show up as wall-clock
+//! wins, and reporting throughput (tensors/s) plus p50/p95/p99 per-batch
+//! commit latency from the repo's timing machinery ([`RunStats`]).
+//!
+//! Used three ways: the `bench ingest` CLI subcommand, `benches/ingest.rs`
+//! (batched vs serial comparison, `BENCH_ingest.json` for CI's perf gate),
+//! and `tests/ingest.rs` (the acceptance assertions: a batched N-tensor
+//! ingest issues strictly fewer PUT batches and log commits than N serial
+//! writes).
+
+use crate::coordinator::format_by_name;
+use crate::delta::DeltaTable;
+use crate::formats::TensorData;
+use crate::ingest::TensorWriter;
+use crate::jsonx::Json;
+use crate::util::{RunStats, Stopwatch};
+use crate::Result;
+use anyhow::ensure;
+
+/// Knobs for one ingest run.
+#[derive(Debug, Clone)]
+pub struct IngestParams {
+    /// Concurrent closed-loop writer threads.
+    pub writers: usize,
+    /// Batches each writer commits in the measured phase.
+    pub batches_per_writer: usize,
+    /// Tensors landed per batch (1 = the serial baseline: one commit per
+    /// tensor).
+    pub tensors_per_batch: usize,
+    /// First-dimension extent of each generated tensor.
+    pub dim0: usize,
+    /// Non-zero density of the generated sparse tensors.
+    pub density: f64,
+    /// Storage layout for the ingested tensors (FTSF gets dense input).
+    pub layout: String,
+    /// Workload seed (tensor content derives from it).
+    pub seed: u64,
+}
+
+impl IngestParams {
+    /// CI-smoke scale (sub-second on the fast sim model).
+    pub fn tiny() -> Self {
+        Self {
+            writers: 2,
+            batches_per_writer: 2,
+            tensors_per_batch: 8,
+            dim0: 12,
+            density: 0.05,
+            layout: "COO".into(),
+            seed: 7,
+        }
+    }
+
+    /// Default bench scale (seconds to a minute on the fast sim model).
+    pub fn small() -> Self {
+        Self {
+            writers: 4,
+            batches_per_writer: 4,
+            tensors_per_batch: 16,
+            dim0: 24,
+            density: 0.05,
+            layout: "COO".into(),
+            seed: 7,
+        }
+    }
+
+    /// Paper-regime scale (minutes on the 1 Gbps model).
+    pub fn paper() -> Self {
+        Self {
+            writers: 8,
+            batches_per_writer: 8,
+            tensors_per_batch: 32,
+            dim0: 48,
+            density: 0.05,
+            layout: "COO".into(),
+            seed: 7,
+        }
+    }
+
+    /// Total tensors a run lands.
+    pub fn total_tensors(&self) -> usize {
+        self.writers * self.batches_per_writer * self.tensors_per_batch
+    }
+}
+
+/// Result of one ingest run: throughput, per-batch commit latency
+/// quantiles, and the store/log counters that explain them.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Concurrent writers.
+    pub writers: usize,
+    /// Tensors landed.
+    pub tensors: u64,
+    /// Batch commits executed.
+    pub batches: u64,
+    /// Measured-phase wall time.
+    pub wall_secs: f64,
+    /// Tensors per second over the measured phase.
+    pub throughput_tps: f64,
+    /// Mean per-batch commit latency.
+    pub mean_secs: f64,
+    /// Median per-batch commit latency.
+    pub p50_secs: f64,
+    /// 95th-percentile per-batch commit latency.
+    pub p95_secs: f64,
+    /// 99th-percentile per-batch commit latency.
+    pub p99_secs: f64,
+    /// PUT requests issued to the store during the measured phase.
+    pub put_ops: u64,
+    /// Batched PUT requests among them.
+    pub put_batches: u64,
+    /// Bytes uploaded during the measured phase.
+    pub bytes_written: u64,
+    /// New log versions the run created.
+    pub log_commits: u64,
+    /// Commit conflicts retried during the run (process-global delta).
+    pub commit_retries: u64,
+}
+
+impl IngestReport {
+    /// Compact JSON object (for `BENCH_ingest.json` / CI artifacts).
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("writers", Json::Int(self.writers as i64)),
+            ("tensors", Json::Int(self.tensors as i64)),
+            ("batches", Json::Int(self.batches as i64)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("throughput_tps", Json::from(self.throughput_tps)),
+            ("mean_secs", Json::from(self.mean_secs)),
+            ("p50_secs", Json::from(self.p50_secs)),
+            ("p95_secs", Json::from(self.p95_secs)),
+            ("p99_secs", Json::from(self.p99_secs)),
+            ("put_ops", Json::Int(self.put_ops as i64)),
+            ("put_batches", Json::Int(self.put_batches as i64)),
+            ("bytes_written", Json::Int(self.bytes_written as i64)),
+            ("log_commits", Json::Int(self.log_commits as i64)),
+            ("commit_retries", Json::Int(self.commit_retries as i64)),
+        ])
+        .dump()
+    }
+
+    /// Human-readable one-run summary.
+    pub fn summary(&self) -> String {
+        let ms = |s: f64| format!("{:.3}ms", s * 1e3);
+        format!(
+            "ingest: {} writers x {} batches ({} tensors) in {:.3}s -> {:.1} tensors/s\n  \
+             batch commit mean {} p50 {} p95 {} p99 {}\n  \
+             store: {} PUTs ({} batched), {} bytes; log: {} commits, {} conflict retries",
+            self.writers,
+            self.batches / (self.writers.max(1) as u64),
+            self.tensors,
+            self.wall_secs,
+            self.throughput_tps,
+            ms(self.mean_secs),
+            ms(self.p50_secs),
+            ms(self.p95_secs),
+            ms(self.p99_secs),
+            self.put_ops,
+            self.put_batches,
+            self.bytes_written,
+            self.log_commits,
+            self.commit_retries,
+        )
+    }
+}
+
+/// One deterministic tensor of the ingest working set: dense for FTSF,
+/// sparse otherwise.
+fn tensor_for(p: &IngestParams, seed: u64) -> Result<TensorData> {
+    if p.layout.eq_ignore_ascii_case("ftsf") {
+        let fp = crate::workload::FfhqParams { n: p.dim0, channels: 1, height: 8, width: 8 };
+        Ok(crate::workload::ffhq_like(seed, fp).into())
+    } else {
+        Ok(crate::workload::generic_sparse(seed, &[p.dim0, 12, 12], p.density)?.into())
+    }
+}
+
+/// Run the closed loop and report. Tensor ids carry a per-run nonce so
+/// repeated runs against a durable store never collide.
+pub fn run_ingest(table: &DeltaTable, p: &IngestParams) -> Result<IngestReport> {
+    ensure!(p.writers > 0, "ingest needs at least one writer");
+    ensure!(p.batches_per_writer > 0 && p.tensors_per_batch > 0, "empty ingest run");
+    let store = table.store().clone();
+
+    // Pre-generate the working set so the measured phase is write-side
+    // work (plan, encode, PUT, commit), not synthetic data generation.
+    let mut batches: Vec<Vec<Vec<(String, TensorData)>>> = Vec::with_capacity(p.writers);
+    let nonce = crate::delta::now_ms() as u64;
+    for w in 0..p.writers {
+        let mut per_writer = Vec::with_capacity(p.batches_per_writer);
+        for b in 0..p.batches_per_writer {
+            let mut batch = Vec::with_capacity(p.tensors_per_batch);
+            for t in 0..p.tensors_per_batch {
+                let id = format!("ing-{nonce:x}-{w}-{b}-{t}");
+                let seed = p
+                    .seed
+                    .wrapping_add((w as u64) << 40)
+                    .wrapping_add((b as u64) << 20)
+                    .wrapping_add(t as u64);
+                batch.push((id, tensor_for(p, seed)?));
+            }
+            per_writer.push(batch);
+        }
+        batches.push(per_writer);
+    }
+
+    let v0 = table.latest_version()?;
+    let (_, put0, _, _, bw0) = store.stats().snapshot();
+    let (pb0, _) = store.stats().put_batched();
+    let retries0 = crate::delta::commit_retry_count();
+    let sw = Stopwatch::start();
+    let mut latencies: Vec<f64> = Vec::with_capacity(p.writers * p.batches_per_writer);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(p.writers);
+        for per_writer in batches {
+            let layout = p.layout.clone();
+            handles.push(scope.spawn(move || -> Result<Vec<f64>> {
+                let fmt = format_by_name(&layout)?;
+                let mut lat = Vec::with_capacity(per_writer.len());
+                for batch in per_writer {
+                    let mut writer = TensorWriter::new(table);
+                    for (id, data) in &batch {
+                        writer.stage(fmt.plan_write(id, data)?);
+                    }
+                    let req = Stopwatch::start();
+                    writer.commit()?;
+                    lat.push(req.secs());
+                }
+                Ok(lat)
+            }));
+        }
+        for h in handles {
+            let lat = h.join().map_err(|_| anyhow::anyhow!("ingest writer panicked"))??;
+            latencies.extend(lat);
+        }
+        Ok(())
+    })?;
+    let wall = sw.secs();
+
+    let mut stats = RunStats::new();
+    for &l in &latencies {
+        stats.push(l);
+    }
+    let (_, put1, _, _, bw1) = store.stats().snapshot();
+    let (pb1, _) = store.stats().put_batched();
+    let tensors = (p.writers * p.batches_per_writer * p.tensors_per_batch) as u64;
+    Ok(IngestReport {
+        writers: p.writers,
+        tensors,
+        batches: latencies.len() as u64,
+        wall_secs: wall,
+        throughput_tps: tensors as f64 / wall.max(1e-9),
+        mean_secs: stats.mean(),
+        p50_secs: stats.percentile(50.0),
+        p95_secs: stats.percentile(95.0),
+        p99_secs: stats.percentile(99.0),
+        put_ops: put1 - put0,
+        put_batches: pb1 - pb0,
+        bytes_written: bw1 - bw0,
+        log_commits: table.latest_version()? - v0,
+        commit_retries: crate::delta::commit_retry_count() - retries0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn table() -> DeltaTable {
+        DeltaTable::create(ObjectStoreHandle::mem(), "ingest-t").unwrap()
+    }
+
+    #[test]
+    fn run_reports_consistent_numbers() {
+        let t = table();
+        let p = IngestParams {
+            writers: 2,
+            batches_per_writer: 2,
+            tensors_per_batch: 3,
+            ..IngestParams::tiny()
+        };
+        let r = run_ingest(&t, &p).unwrap();
+        assert_eq!(r.tensors, 12);
+        assert_eq!(r.batches, 4);
+        assert_eq!(r.log_commits, 4, "one commit per batch");
+        assert!(r.wall_secs > 0.0 && r.throughput_tps > 0.0);
+        assert!(r.p50_secs <= r.p95_secs && r.p95_secs <= r.p99_secs);
+        assert!(r.put_ops >= r.put_batches);
+        assert!(r.bytes_written > 0);
+        // JSON report round-trips through the crate's own parser.
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("tensors").and_then(|v| v.as_i64()), Some(12));
+        assert_eq!(j.get("log_commits").and_then(|v| v.as_i64()), Some(4));
+        assert!(r.summary().contains("tensors/s"));
+        // Every tensor is readable back through layout discovery.
+        let snap = t.snapshot().unwrap();
+        let ids: std::collections::BTreeSet<&str> =
+            snap.files().map(|f| f.tensor_id.as_str()).collect();
+        assert_eq!(ids.len(), 12);
+    }
+
+    #[test]
+    fn ftsf_layout_generates_dense_input() {
+        let t = table();
+        let p = IngestParams {
+            writers: 1,
+            batches_per_writer: 1,
+            tensors_per_batch: 2,
+            dim0: 4,
+            layout: "FTSF".into(),
+            ..IngestParams::tiny()
+        };
+        let r = run_ingest(&t, &p).unwrap();
+        assert_eq!(r.tensors, 2);
+        assert_eq!(r.log_commits, 1);
+    }
+
+    #[test]
+    fn empty_runs_are_rejected() {
+        let t = table();
+        assert!(run_ingest(&t, &IngestParams { writers: 0, ..IngestParams::tiny() }).is_err());
+        assert!(run_ingest(
+            &t,
+            &IngestParams { tensors_per_batch: 0, ..IngestParams::tiny() }
+        )
+        .is_err());
+    }
+}

@@ -14,8 +14,11 @@
 //!
 //! The [`serve`] submodule is the closed-loop serving load harness: Zipfian
 //! hot-set reads driven through the coordinator by concurrent clients, with
-//! throughput and latency-quantile reporting.
+//! throughput and latency-quantile reporting. The [`ingest`] submodule is
+//! its write-side twin: concurrent writers committing multi-tensor batches
+//! through the write engine, reporting tensors/s and per-commit latency.
 
+pub mod ingest;
 pub mod serve;
 
 use crate::tensor::{DType, DenseTensor, SparseCoo};
