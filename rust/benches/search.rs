@@ -1,0 +1,71 @@
+//! Vector-search load bench: the closed-loop Zipfian top-k workload of
+//! `workload::search`, run twice over a fresh simulated cloud store — once
+//! with posting fetches riding the serving tier's block cache, once
+//! straight to the backend — and compared on QPS, latency quantiles,
+//! recall@k, GETs and bytes moved.
+//!
+//! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
+//! `DT_SEED` (workload seed, default 7), `DT_BENCH_OUT` (JSON report path,
+//! default `BENCH_search.json`). CI runs the tiny scale and gates
+//! `cache.throughput_qps` against `bench_baselines/search.json`.
+
+use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
+use delta_tensor::prelude::*;
+use delta_tensor::util::human_bytes;
+use delta_tensor::workload::search::{
+    populate_search_corpus, run_search, SearchParams, SearchReport,
+};
+
+fn run_once(cache: bool, params: &SearchParams) -> SearchReport {
+    let mut params = params.clone();
+    params.cache = cache;
+    let store = ObjectStoreHandle::sim_mem(benchkit::net());
+    let table = DeltaTable::create(store, "search").expect("fresh table");
+    populate_search_corpus(&table, "vectors", &params).expect("populate");
+    run_search(&table, "vectors", &params).expect("search run")
+}
+
+fn main() {
+    let mut params = match benchkit::scale() {
+        Scale::Tiny => SearchParams::tiny(),
+        Scale::Small => SearchParams::small(),
+        Scale::Paper => SearchParams::paper(),
+    };
+    if let Ok(seed) = std::env::var("DT_SEED") {
+        params.seed = seed.parse().expect("DT_SEED must be an integer");
+    }
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for cache in [true, false] {
+        let r = run_once(cache, &params);
+        rows.push(Row {
+            label: if cache { "cache" } else { "no-cache" }.to_string(),
+            cells: vec![
+                format!("{:.0}", r.throughput_qps),
+                fmt_secs(r.p50_secs),
+                fmt_secs(r.p95_secs),
+                fmt_secs(r.p99_secs),
+                format!("{:.4}", r.recall_at_k),
+                r.get_ops.to_string(),
+                human_bytes(r.bytes_read),
+            ],
+        });
+        reports.push(r);
+    }
+    print_table(
+        "search: closed-loop Zipfian top-k queries, serving tier on vs off",
+        &["mode", "q/s", "p50", "p95", "p99", "recall@k", "GETs", "bytes"],
+        &rows,
+    );
+    let speedup = reports[0].throughput_qps / reports[1].throughput_qps.max(1e-9);
+    println!("\nthroughput speedup with serving tier: {speedup:.2}x");
+
+    let out = std::env::var("DT_BENCH_OUT").unwrap_or_else(|_| "BENCH_search.json".to_string());
+    let json = format!(
+        "{{\"bench\":\"search\",\"cache\":{},\"no_cache\":{},\"speedup\":{speedup:.4}}}",
+        reports[0].to_json(),
+        reports[1].to_json()
+    );
+    std::fs::write(&out, json).expect("write bench report");
+    println!("wrote {out}");
+}

@@ -7,11 +7,13 @@
 //!   ingest     generate a workload and store it          (--workload, --layout, ...)
 //!   read       read a whole tensor                       (--id)
 //!   slice      read a first-dimension slice              (--id, --start, --end)
-//!   inspect    per-tensor stats and read plans
+//!   inspect    per-tensor stats (incl. dtype/shape) and read plans
 //!   history    table commit history (time travel log)
 //!   optimize   compact a tensor's files                  (--id)
 //!   vacuum     delete unreferenced data objects
-//!   bench      serving load harness                      (bench serve --clients ...)
+//!   index      ANN index over a stored vector matrix     (index build / index status)
+//!   search     top-k nearest stored vectors              (--id, --query | --row)
+//!   bench      load harnesses                            (bench serve|ingest|search)
 //! ```
 //!
 //! `bench serve` drives the coordinator with a closed-loop Zipfian hot-set
@@ -19,8 +21,14 @@
 //! quantiles, and the serving-tier counters; `bench ingest` drives the
 //! write engine with concurrent batch-committing writers
 //! ([`crate::workload::ingest`]) and prints tensors/s, per-commit latency
-//! quantiles, and the write-engine counters. `--json PATH` additionally
-//! writes the machine-readable report for either.
+//! quantiles, and the write-engine counters; `bench search` drives the
+//! vector index tier with a closed-loop Zipfian query pool
+//! ([`crate::workload::search`]) and prints QPS, latency quantiles,
+//! recall@k and the index-tier counters. Every bench subcommand takes
+//! `--seed N`, which fully determines its Zipf draws, generated tensors,
+//! query vectors and k-means initialization — identical seeds reproduce
+//! identical runs across machines. `--json PATH` additionally writes the
+//! machine-readable report for any of them.
 
 use crate::coordinator::{Coordinator, IngestJob};
 use crate::delta::DeltaTable;
@@ -122,9 +130,10 @@ pub fn store_from_args(args: &Args) -> Result<ObjectStoreHandle> {
 /// Execute a parsed command. Returns the text to print.
 pub fn run(args: &Args) -> Result<String> {
     if let Some(sub) = &args.subcommand {
-        // Only `bench` (and `help`, which ignores it) takes a subcommand;
-        // anywhere else a positional token is a usage error, not noise.
-        if !matches!(args.command.as_str(), "bench" | "help") {
+        // Only `bench` and `index` (and `help`, which ignores it) take a
+        // subcommand; anywhere else a positional token is a usage error,
+        // not noise.
+        if !matches!(args.command.as_str(), "bench" | "index" | "help") {
             bail!("unexpected argument {sub:?} for command {:?}", args.command);
         }
     }
@@ -137,6 +146,8 @@ pub fn run(args: &Args) -> Result<String> {
         "history" => cmd_history(args),
         "optimize" => cmd_optimize(args),
         "vacuum" => cmd_vacuum(args),
+        "index" => cmd_index(args),
+        "search" => cmd_search(args),
         "bench" => cmd_bench(args),
         "metrics-demo" => cmd_metrics_demo(args),
         other => bail!("unknown command {other:?}; try `delta-tensor help`"),
@@ -152,10 +163,15 @@ COMMANDS
             [--id NAME] [--seed N] [--scale tiny|default] [--workers N]
   read      --id NAME            read a whole tensor, print a summary
   slice     --id NAME --start A --end B    read X[A:B, ...]
-  inspect                        per-tensor stats and read plans
+  inspect                        per-tensor stats (dtype, shape) and read plans
   history                        commit log (version, operation, timestamp)
   optimize  --id NAME            compact a tensor's part files
   vacuum                         delete unreferenced data objects
+  index build                    build the IVF ANN index over a 2-D f32/f64 tensor
+            [--id NAME] [--k N] [--iters N] [--sample N] [--nprobe N] [--seed N]
+            (--id omitted: picks the single indexable matrix, else lists them)
+  index status --id NAME [--version V]    index freshness (fresh/STALE/missing)
+  search    --id NAME (--query V1,V2,... | --row N) [--k N] [--nprobe N]
   bench serve                    closed-loop Zipfian serving load harness
             [--clients N] [--requests N] [--tensors N] [--dim0 N]
             [--zipf S] [--no-cache] [--warmup-off] [--layout NAME]
@@ -163,10 +179,16 @@ COMMANDS
   bench ingest                   closed-loop batched-write load harness
             [--writers N] [--batches N] [--batch N] [--dim0 N]
             [--density F] [--layout NAME] [--seed N] [--json PATH]
+  bench search                   closed-loop Zipfian vector-search harness
+            [--clients N] [--queries N] [--rows N] [--dim N] [--clusters N]
+            [--pool N] [--k N] [--nprobe N] [--zipf S] [--no-cache]
+            [--warmup-off] [--seed N] [--json PATH]
 COMMON FLAGS
   --table NAME                   table root (default: tensors)
   --store mem|fs                 backend (default fs)   --root PATH
   --net   free|fast|paper|vpc    simulated network cost model (default free)
+  --seed N                       reproducibility seed for every bench subcommand
+                                 (Zipf draws, generated data, queries, k-means)
 
 Benches for the paper's figures: `cargo bench` (see EXPERIMENTS.md).
 "#;
@@ -268,13 +290,21 @@ fn cmd_inspect(args: &Args) -> Result<String> {
         human_bytes(snap.total_bytes())
     );
     for t in stats {
+        let shape = if t.shape.is_empty() {
+            "?".to_string()
+        } else {
+            format!("{:?}", t.shape)
+        };
         out.push_str(&format!(
-            "  {:<28} {:<7} files={:<4} rows={:<8} {}\n",
+            "  {:<28} {:<7} {:<4} files={:<4} rows={:<8} shape={:<20} {}{}\n",
             t.id,
             t.layout,
+            t.dtype,
             t.files,
             t.rows,
-            human_bytes(t.bytes)
+            shape,
+            human_bytes(t.bytes),
+            if crate::index::is_indexable(&t.shape, &t.dtype) { "  [indexable]" } else { "" }
         ));
     }
     Ok(out)
@@ -313,10 +343,134 @@ fn cmd_bench(args: &Args) -> Result<String> {
     match what.as_str() {
         "serve" => cmd_bench_serve(args),
         "ingest" => cmd_bench_ingest(args),
+        "search" => cmd_bench_search(args),
         other => {
-            bail!("unknown bench {other:?} (try `bench serve` or `bench ingest`; figure benches run via `cargo bench`)")
+            bail!("unknown bench {other:?} (try `bench serve`, `bench ingest` or `bench search`; figure benches run via `cargo bench`)")
         }
     }
+}
+
+/// `index build` / `index status`: the CLI surface of the vector index
+/// tier. `index build` with no `--id` discovers the table's indexable
+/// matrices (2-D f32/f64, from the same per-tensor stats `inspect` prints)
+/// and builds the single candidate, or lists them when ambiguous.
+fn cmd_index(args: &Args) -> Result<String> {
+    match args.subcommand.as_deref().unwrap_or("build") {
+        "build" => cmd_index_build(args),
+        "status" => cmd_index_status(args),
+        other => bail!("unknown index subcommand {other:?} (try `index build` or `index status`)"),
+    }
+}
+
+fn cmd_index_build(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let id = match args.flags.get("id") {
+        Some(id) => id.clone(),
+        None => {
+            let cands: Vec<crate::query::TensorInfo> = crate::query::table_stats(&table)?
+                .into_iter()
+                .filter(|t| crate::index::is_indexable(&t.shape, &t.dtype))
+                .collect();
+            match cands.len() {
+                1 => cands[0].id.clone(),
+                0 => bail!(
+                    "no indexable vector matrices (2-D f32/f64) in table {}; see `inspect`",
+                    table.root()
+                ),
+                _ => bail!(
+                    "multiple indexable tensors — pick one with --id: {}",
+                    cands.iter().map(|t| t.id.as_str()).collect::<Vec<_>>().join(", ")
+                ),
+            }
+        }
+    };
+    let d = crate::index::BuildParams::default();
+    let p = crate::index::BuildParams {
+        k: args.opt_usize("k", d.k)?,
+        iters: args.opt_usize("iters", d.iters)?,
+        sample: args.opt_usize("sample", d.sample)?,
+        nprobe: args.opt_usize("nprobe", d.nprobe)?,
+        seed: args.opt_usize("seed", d.seed as usize)? as u64,
+    };
+    let summary = crate::index::build(&table, &id, &p)?;
+    Ok(format!("{}\n{}", summary.summary(), crate::index::report()))
+}
+
+fn cmd_index_status(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let id = args.req("id")?;
+    let status = if args.has("version") {
+        crate::index::status_at(&table, id, args.opt_usize("version", 0)? as u64)?
+    } else {
+        crate::index::status(&table, id)?
+    };
+    Ok(format!("index for {id}: {status}\n"))
+}
+
+/// `search`: top-k nearest stored vectors to a query, through the IVF
+/// index. The query comes from `--query v1,v2,...` or `--row N` (reuse a
+/// stored vector — handy for "more like this" checks).
+fn cmd_search(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let id = args.req("id")?;
+    let ivf = crate::index::IvfIndex::open(&table, id)?;
+    let query: Vec<f32> = if let Some(csv) = args.flags.get("query") {
+        csv.split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f32>()
+                    .with_context(|| format!("--query element {s:?} is not a number"))
+            })
+            .collect::<Result<Vec<f32>>>()?
+    } else if args.has("row") {
+        // A sliced read fetches just the requested row chunk — the whole
+        // matrix never rides the wire for a "more like this" query.
+        crate::index::load_row(&table, id, args.opt_usize("row", 0)?)?
+    } else {
+        bail!("search needs --query v1,v2,... or --row N");
+    };
+    let k = args.opt_usize("k", 10)?;
+    let nprobe = args.opt_usize("nprobe", 0)?;
+    let sw = crate::util::Stopwatch::start();
+    let hits = ivf.search(&query, k, nprobe)?;
+    let secs = sw.secs();
+    let mut out = format!(
+        "index for {id}: {} — {} centroids over {} vectors (dim {})\n",
+        ivf.status(),
+        ivf.k,
+        ivf.rows,
+        ivf.dim
+    );
+    for (rank, n) in hits.iter().enumerate() {
+        out.push_str(&format!("  #{rank:<3} row {:<8} dist {:.6}\n", n.row, n.dist));
+    }
+    out.push_str(&format!("searched in {:.3}ms\n", secs * 1e3));
+    Ok(out)
+}
+
+fn cmd_bench_search(args: &Args) -> Result<String> {
+    let table = open_table_named(args, "search-bench")?;
+    let params = workload::search::SearchParams {
+        clients: args.opt_usize("clients", 4)?,
+        queries_per_client: args.opt_usize("queries", 50)?,
+        rows: args.opt_usize("rows", 2000)?,
+        dim: args.opt_usize("dim", 32)?,
+        clusters: args.opt_usize("clusters", 32)?,
+        query_pool: args.opt_usize("pool", 16)?,
+        k: args.opt_usize("k", 10)?,
+        nprobe: args.opt_usize("nprobe", 0)?,
+        zipf_s: args.opt_f64("zipf", 1.1)?,
+        cache: !args.has("no-cache"),
+        warmup: !args.has("warmup-off"),
+        seed: args.opt_usize("seed", 7)? as u64,
+    };
+    workload::search::populate_search_corpus(&table, "vectors", &params)?;
+    let report = workload::search::run_search(&table, "vectors", &params)?;
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing search report to {path}"))?;
+    }
+    Ok(format!("{}\n{}", report.summary(), crate::index::report()))
 }
 
 fn cmd_bench_ingest(args: &Args) -> Result<String> {
@@ -481,6 +635,61 @@ mod tests {
         assert!(out.contains("req/s"), "{out}");
         assert!(out.contains("serving.cache_hits"), "{out}");
         assert!(run(&args(&["bench", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn bench_search_smoke() {
+        let out = run(&args(&[
+            "bench", "search", "--store", "mem", "--clients", "2", "--queries", "5",
+            "--rows", "200", "--dim", "8", "--clusters", "4", "--pool", "4", "--seed", "3",
+        ]))
+        .unwrap();
+        assert!(out.contains("q/s"), "{out}");
+        assert!(out.contains("recall@10"), "{out}");
+        assert!(out.contains("index.builds"), "{out}");
+    }
+
+    #[test]
+    fn index_and_search_fs_flow() {
+        let root = std::env::temp_dir().join(format!("dt-cli-idx-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let rootflag = root.to_string_lossy().to_string();
+        let common = ["--store", "fs", "--root", &rootflag, "--table", "sb"];
+
+        // `bench search` populates a 2-D f32 corpus ("vectors") + its index.
+        let mut v = vec![
+            "bench", "search", "--clients", "1", "--queries", "3", "--rows", "150", "--dim",
+            "8", "--clusters", "4", "--pool", "3", "--seed", "5",
+        ];
+        v.extend_from_slice(&common);
+        run(&args(&v)).unwrap();
+
+        // The corpus is visible (and flagged indexable) in inspect.
+        let mut v = vec!["inspect"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("vectors"), "{out}");
+        assert!(out.contains("f32"), "{out}");
+        assert!(out.contains("[indexable]"), "{out}");
+
+        let mut v = vec!["index", "status", "--id", "vectors"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("fresh"), "{out}");
+
+        // Searching with a stored row as the query returns that row first.
+        let mut v = vec!["search", "--id", "vectors", "--row", "0", "--k", "3"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("#0   row 0"), "{out}");
+
+        // Rebuild with --id picks the same tensor; auto-discovery agrees.
+        let mut v = vec!["index", "build", "--seed", "6"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("built ivf index"), "{out}");
+
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

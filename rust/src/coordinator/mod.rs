@@ -111,16 +111,18 @@ impl Coordinator {
 
     /// Full metrics report: coordinator counters/histograms plus the read
     /// engine's counters (ranges coalesced, files pruned, cache hits), the
-    /// serving tier's (block cache, single-flight, admission gate) and the
+    /// serving tier's (block cache, single-flight, admission gate), the
     /// write engine's (parts encoded in parallel, PUT batches, staged
-    /// bytes, commit retries).
+    /// bytes, commit retries) and the index tier's (builds, searches,
+    /// probes, postings scanned).
     pub fn report(&self) -> String {
         format!(
-            "{}{}{}{}",
+            "{}{}{}{}{}",
             self.metrics.report(),
             crate::query::engine::report(),
             crate::serving::report(),
-            crate::ingest::report()
+            crate::ingest::report(),
+            crate::index::report()
         )
     }
 
@@ -374,6 +376,8 @@ mod tests {
         assert!(full.contains("ingest.parts_encoded"), "{full}");
         assert!(full.contains("ingest.put_batches"), "{full}");
         assert!(full.contains("ingest.commit_retries"), "{full}");
+        assert!(full.contains("index.builds"), "{full}");
+        assert!(full.contains("index.searches"), "{full}");
     }
 
     #[test]

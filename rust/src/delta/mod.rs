@@ -372,14 +372,22 @@ impl DeltaTable {
         Ok(Some((cv, files, metadata)))
     }
 
-    /// Delete data files removed before the snapshot and no longer
-    /// referenced ("VACUUM"): returns number of objects deleted.
+    /// Delete objects no longer referenced by the snapshot ("VACUUM"):
+    /// returns the number deleted. Sweeps everything under the table root
+    /// except the transaction log itself, so every artifact family the
+    /// log tracks — tensor part files under `data/`, ANN index artifacts
+    /// under `index/`, and whatever future tiers add — is reclaimed
+    /// without this list needing maintenance.
     pub fn vacuum(&self) -> Result<usize> {
         let snap = self.snapshot()?;
         let live: std::collections::HashSet<&str> =
             snap.files.keys().map(|s| s.as_str()).collect();
+        let log = self.log_prefix();
         let mut deleted = 0usize;
-        for key in self.store.list(&format!("{}/data/", self.root))? {
+        for key in self.store.list(&format!("{}/", self.root))? {
+            if key.starts_with(&log) {
+                continue;
+            }
             let rel = key.strip_prefix(&format!("{}/", self.root)).unwrap_or(&key);
             if !live.contains(rel) {
                 self.store.delete(&key)?;

@@ -6,7 +6,7 @@
 //! Either way the tensor is **one opaque object**: a slice read must fetch
 //! and deserialize everything — exactly the cost the paper's formats avoid.
 
-use super::{TensorData, TensorStore};
+use super::{common, TensorData, TensorStore};
 use crate::delta::DeltaTable;
 use crate::ingest::{PartPayload, PartSpec, WritePlan};
 use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
@@ -171,7 +171,10 @@ impl TensorStore for BinaryFormat {
                 rows: 1,
                 min_key: None,
                 max_key: None,
-                meta: None,
+                // Geometry on the Add action so `inspect`/`table_stats`
+                // (and the index tier's auto-discovery) see shape and
+                // dtype without fetching the object.
+                meta: Some(common::meta_json(data.shape(), data.dtype())),
                 payload: PartPayload::Raw(bytes),
             }],
         })

@@ -1,0 +1,200 @@
+//! Seeded k-means centroid training for the IVF index.
+//!
+//! Deterministic Lloyd iterations over a bounded training sample: the
+//! initial centroids are `k` distinct vectors drawn from a seeded shuffle
+//! of the sample (so identical seeds give identical indexes on every
+//! machine — the property the bench baselines and the `--seed` CLI flag
+//! rely on), assignments use the same squared-L2 distance the query path
+//! uses, and empty clusters are reseeded to the sample point farthest from
+//! its current centroid. Training stops early once an iteration moves no
+//! assignment.
+
+use crate::util::prng::Pcg64;
+
+use super::dist2;
+
+/// Result of one training run.
+#[derive(Debug, Clone)]
+pub struct Trained {
+    /// `k * dim` row-major centroid matrix.
+    pub centroids: Vec<f32>,
+    /// Lloyd iterations actually executed (early stop on convergence).
+    pub iters_run: usize,
+}
+
+/// Train `k` centroids over `data` (`rows * dim` row-major f32).
+///
+/// At most `sample_cap` rows (seeded choice without replacement) feed the
+/// Lloyd iterations — the standard IVF practice that keeps training cost
+/// bounded on large corpora while leaving the assignment of *all* rows to
+/// the caller.
+pub fn train(
+    data: &[f32],
+    dim: usize,
+    k: usize,
+    iters: usize,
+    sample_cap: usize,
+    seed: u64,
+) -> Trained {
+    let rows = if dim == 0 { 0 } else { data.len() / dim };
+    assert!(k >= 1 && k <= rows, "k {k} must be in [1, rows {rows}]");
+    let mut rng = Pcg64::new(seed);
+
+    // Seeded sample without replacement: shuffle row ids, keep a prefix.
+    let mut order: Vec<u32> = (0..rows as u32).collect();
+    rng.shuffle(&mut order);
+    let sample: &[u32] = &order[..rows.min(sample_cap.max(k))];
+
+    // Initial centroids: the first k sampled rows (distinct by construction).
+    let mut centroids: Vec<f32> = Vec::with_capacity(k * dim);
+    for &r in &sample[..k] {
+        centroids.extend_from_slice(row(data, dim, r as usize));
+    }
+
+    let mut assign: Vec<u32> = vec![u32::MAX; sample.len()];
+    let mut iters_run = 0usize;
+    for _ in 0..iters {
+        iters_run += 1;
+        // Assignment step.
+        let mut moved = false;
+        for (slot, &r) in sample.iter().enumerate() {
+            let (best, _) = nearest(&centroids, dim, row(data, dim, r as usize));
+            if assign[slot] != best as u32 {
+                assign[slot] = best as u32;
+                moved = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+        // Update step: mean of each cluster's members.
+        let mut sums = vec![0f64; k * dim];
+        let mut counts = vec![0u64; k];
+        for (slot, &r) in sample.iter().enumerate() {
+            let c = assign[slot] as usize;
+            counts[c] += 1;
+            let acc = &mut sums[c * dim..(c + 1) * dim];
+            for (s, &v) in acc.iter_mut().zip(row(data, dim, r as usize)) {
+                *s += v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: reseed to the sample point farthest from
+                // its assigned centroid (splits the widest cluster). The
+                // point is reassigned to `c` on the spot so a second empty
+                // cluster in the same update picks a *different* seed
+                // instead of duplicating this centroid.
+                let far = farthest(data, dim, sample, &assign, &centroids);
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(row(data, dim, sample[far] as usize));
+                assign[far] = c as u32;
+                continue;
+            }
+            let inv = 1.0 / counts[c] as f64;
+            let dst = &mut centroids[c * dim..(c + 1) * dim];
+            for (d, &s) in dst.iter_mut().zip(&sums[c * dim..(c + 1) * dim]) {
+                *d = (s * inv) as f32;
+            }
+        }
+    }
+    Trained { centroids, iters_run }
+}
+
+/// Index and squared distance of the centroid nearest to `q`.
+pub fn nearest(centroids: &[f32], dim: usize, q: &[f32]) -> (usize, f32) {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for (c, cent) in centroids.chunks_exact(dim).enumerate() {
+        let d = dist2(cent, q);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+fn row(data: &[f32], dim: usize, r: usize) -> &[f32] {
+    &data[r * dim..(r + 1) * dim]
+}
+
+/// Sample slot whose point lies farthest from its assigned centroid.
+fn farthest(data: &[f32], dim: usize, sample: &[u32], assign: &[u32], centroids: &[f32]) -> usize {
+    let mut far = 0usize;
+    let mut far_d = -1.0f32;
+    for (slot, &r) in sample.iter().enumerate() {
+        let c = assign[slot] as usize;
+        let d = dist2(&centroids[c * dim..(c + 1) * dim], row(data, dim, r as usize));
+        if d > far_d {
+            far_d = d;
+            far = slot;
+        }
+    }
+    far
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two tight 2-D blobs around (0,0) and (10,10).
+    fn blobs() -> Vec<f32> {
+        let mut rng = Pcg64::new(5);
+        let mut data = Vec::new();
+        for i in 0..200 {
+            let base = if i % 2 == 0 { 0.0 } else { 10.0 };
+            data.push(base + rng.next_f32() * 0.5);
+            data.push(base + rng.next_f32() * 0.5);
+        }
+        data
+    }
+
+    #[test]
+    fn finds_well_separated_clusters() {
+        let data = blobs();
+        let t = train(&data, 2, 2, 20, 1024, 42);
+        assert_eq!(t.centroids.len(), 4);
+        assert!(t.iters_run >= 1);
+        // One centroid near each blob, whichever order they landed in.
+        let near = |x: f32, y: f32| {
+            t.centroids
+                .chunks_exact(2)
+                .any(|c| (c[0] - x).abs() < 1.0 && (c[1] - y).abs() < 1.0)
+        };
+        assert!(near(0.25, 0.25), "{:?}", t.centroids);
+        assert!(near(10.25, 10.25), "{:?}", t.centroids);
+    }
+
+    #[test]
+    fn training_is_deterministic_in_the_seed() {
+        let data = blobs();
+        let a = train(&data, 2, 4, 10, 64, 7);
+        let b = train(&data, 2, 4, 10, 64, 7);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.iters_run, b.iters_run);
+        let c = train(&data, 2, 4, 10, 64, 8);
+        assert_ne!(a.centroids, c.centroids, "distinct seeds must diverge");
+    }
+
+    #[test]
+    fn k_equal_rows_degenerates_to_the_points() {
+        let data = vec![0.0f32, 0.0, 1.0, 1.0, 2.0, 2.0];
+        let t = train(&data, 2, 3, 5, 16, 1);
+        // Every point is its own (possibly reordered) centroid.
+        for p in data.chunks_exact(2) {
+            assert!(
+                t.centroids.chunks_exact(2).any(|c| c == p),
+                "point {p:?} missing from {:?}",
+                t.centroids
+            );
+        }
+    }
+
+    #[test]
+    fn nearest_picks_the_closest_centroid() {
+        let cents = vec![0.0f32, 0.0, 5.0, 5.0];
+        assert_eq!(nearest(&cents, 2, &[0.2, 0.1]).0, 0);
+        assert_eq!(nearest(&cents, 2, &[4.0, 6.0]).0, 1);
+    }
+}

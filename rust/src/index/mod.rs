@@ -1,0 +1,965 @@
+//! Approximate-nearest-neighbor index tier over vectors stored in Delta
+//! tables.
+//!
+//! The paper's premise is storing *vector* data for AI/ML workloads in
+//! Delta Lake; this module answers the query those vectors exist for —
+//! "which stored vectors are closest to this one?" — with an **IVF-Flat**
+//! index whose artifacts live *inside* the Delta log, versioned and atomic
+//! with the data they cover (the NeurStore/Deep Lake arrangement, rather
+//! than a sidecar file that can silently drift from the table):
+//!
+//! * **Build** ([`build`]): the rows of a stored 2-D f32/f64 tensor are
+//!   read through the existing read engine ([`load_matrix`]), `k` centroids
+//!   are trained by seeded k-means ([`kmeans`]) over a bounded sample, and
+//!   every row is assigned to its nearest centroid's posting list. Two
+//!   artifact objects — a centroid file (header + centroid matrix + posting
+//!   offsets) and a posting file (concatenated `(row_id, vector)` entries)
+//!   — upload in one batched PUT and land in **one atomic Delta commit**
+//!   together with `Remove` actions for any previous build's artifacts.
+//! * **Staleness**: the commit pins the index to a fingerprint of the
+//!   tensor's live data files (path, size, timestamp). Opening the table at
+//!   any version recomputes the fingerprint from that snapshot:
+//!   mismatch (appends, OPTIMIZE rewrites) ⇒ [`IndexStatus::Stale`];
+//!   a version predating the build has no artifacts ⇒
+//!   [`IndexStatus::Missing`]. Rebuilds land as one commit, like builds.
+//! * **Search** ([`IvfIndex::search`]): rank centroids against the query,
+//!   probe the `nprobe` nearest posting lists, scan their entries for the
+//!   top-k by squared L2. Posting lists are fetched as byte spans through
+//!   [`crate::serving::fetch_spans`], so hot centroids are served from the
+//!   block cache (a warmed query stream issues zero GETs) and identical
+//!   concurrent probes collapse via single-flight. Probing all `k` lists
+//!   returns exactly the brute-force answer ([`exact_search`], the
+//!   correctness control) — both paths share one distance function and one
+//!   `(distance, row)` tie-break order.
+//!
+//! Build/search counters are exported through [`report`], which
+//! `Coordinator::report` appends to its output. The closed-loop load
+//! harness lives in [`crate::workload::search`]; the CLI surface is
+//! `index build` / `index status` / `search` / `bench search`.
+
+pub mod kmeans;
+
+use crate::delta::{Action, AddFile, DeltaTable, Snapshot};
+use crate::jsonx::{self, Json};
+use crate::objectstore::{ObjectStore, ObjectStoreHandle};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Artifact magic ("DTIX") + format version.
+const MAGIC: [u8; 4] = *b"DTIX";
+const ARTIFACT_VERSION: u32 = 1;
+/// Centroid-artifact header bytes before the centroid matrix.
+const HEADER_BYTES: usize = 32;
+/// Largest automatic centroid count (`k = sqrt(rows)` is clamped to this).
+const MAX_AUTO_K: usize = 256;
+
+/// Squared Euclidean distance between two equal-length vectors.
+///
+/// This is *the* distance of the index tier: training, search and the
+/// brute-force control all call it (or its byte-decoding twin) with the
+/// same accumulation order, so full-probe IVF results are bit-identical to
+/// the exact scan.
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// [`dist2`] against a little-endian f32 byte payload (a posting entry's
+/// vector), decoding in place to avoid a copy per candidate.
+fn dist2_le(q: &[f32], bytes: &[u8]) -> f32 {
+    let mut s = 0f32;
+    for (x, b) in q.iter().zip(bytes.chunks_exact(4)) {
+        let y = f32::from_le_bytes(b.try_into().expect("chunks_exact(4)"));
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// One search hit: stored row id and squared L2 distance to the query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Row index of the vector in the indexed matrix.
+    pub row: u32,
+    /// Squared Euclidean distance to the query.
+    pub dist: f32,
+}
+
+/// Heap candidate with the total `(dist, row)` order both search paths
+/// share — ties on distance break toward the lower row id, which is what
+/// makes "full nprobe equals brute force" an equality, not a set claim.
+#[derive(PartialEq)]
+struct Cand {
+    dist: f32,
+    row: u32,
+}
+
+impl Eq for Cand {}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.dist.total_cmp(&other.dist).then(self.row.cmp(&other.row))
+    }
+}
+
+/// Bounded max-heap keeping the k smallest candidates.
+struct TopK {
+    k: usize,
+    heap: std::collections::BinaryHeap<Cand>,
+}
+
+impl TopK {
+    fn new(k: usize) -> Self {
+        Self { k, heap: std::collections::BinaryHeap::with_capacity(k + 1) }
+    }
+
+    fn push(&mut self, dist: f32, row: u32) {
+        if self.k == 0 {
+            return;
+        }
+        let cand = Cand { dist, row };
+        if self.heap.len() < self.k {
+            self.heap.push(cand);
+        } else if let Some(worst) = self.heap.peek() {
+            if cand < *worst {
+                self.heap.pop();
+                self.heap.push(cand);
+            }
+        }
+    }
+
+    fn into_sorted(self) -> Vec<Neighbor> {
+        self.heap
+            .into_sorted_vec()
+            .into_iter()
+            .map(|c| Neighbor { row: c.row, dist: c.dist })
+            .collect()
+    }
+}
+
+/// A dense row-major f32 matrix — the vector corpus an index covers.
+#[derive(Debug, Clone)]
+pub struct Matrix {
+    /// Number of vectors.
+    pub rows: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// `rows * dim` row-major values.
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// One vector.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+}
+
+/// Whether a tensor is an indexable vector corpus: a 2-D matrix of f32 or
+/// f64 values (the dtype string is [`crate::tensor::DType::name`] output,
+/// as surfaced by `query::table_stats`).
+pub fn is_indexable(shape: &[usize], dtype: &str) -> bool {
+    shape.len() == 2 && shape[0] > 0 && shape[1] > 0 && matches!(dtype, "f32" | "f64")
+}
+
+/// Load tensor `id` as an f32 matrix through the read engine (layout
+/// auto-discovered; f64 values are narrowed to f32 — the index's vector
+/// space is f32 end to end, so the exact control and the IVF path see the
+/// same values).
+pub fn load_matrix(table: &DeltaTable, id: &str) -> Result<Matrix> {
+    let dense = crate::query::execute(table, id, None)?.to_dense()?;
+    let shape = dense.shape().to_vec();
+    ensure!(
+        shape.len() == 2,
+        "tensor {id:?} has rank {} — the index needs a 2-D vector matrix",
+        shape.len()
+    );
+    let data: Vec<f32> = match dense.dtype() {
+        crate::tensor::DType::F32 => dense.as_f32()?,
+        crate::tensor::DType::F64 => dense.as_f64()?.into_iter().map(|v| v as f32).collect(),
+        other => bail!("tensor {id:?} has dtype {} — the index needs f32/f64", other.name()),
+    };
+    Ok(Matrix { rows: shape[0], dim: shape[1], data })
+}
+
+/// Load one row of tensor `id` as an f32 vector via a first-dimension
+/// slice read — one pruned ranged fetch instead of downloading the whole
+/// matrix (the CLI's `search --row N` path). Out-of-bounds rows error
+/// exactly as executing the slice would.
+pub fn load_row(table: &DeltaTable, id: &str, row: usize) -> Result<Vec<f32>> {
+    let slice = crate::tensor::Slice::dim0(row, row + 1);
+    let dense = crate::query::execute(table, id, Some(&slice))?.to_dense()?;
+    ensure!(
+        dense.shape().len() == 2,
+        "tensor {id:?} has rank {} — the index needs a 2-D vector matrix",
+        dense.shape().len()
+    );
+    match dense.dtype() {
+        crate::tensor::DType::F32 => dense.as_f32(),
+        crate::tensor::DType::F64 => Ok(dense.as_f64()?.into_iter().map(|v| v as f32).collect()),
+        other => bail!("tensor {id:?} has dtype {} — the index needs f32/f64", other.name()),
+    }
+}
+
+/// Brute-force top-k over a loaded matrix (the correctness control).
+pub fn exact_topk(matrix: &Matrix, query: &[f32], k: usize) -> Vec<Neighbor> {
+    let mut top = TopK::new(k);
+    for r in 0..matrix.rows {
+        top.push(dist2(query, matrix.row(r)), r as u32);
+    }
+    top.into_sorted()
+}
+
+/// Brute-force top-k for tensor `id`, reading the matrix through the read
+/// engine. Counted separately from IVF searches in the metrics.
+pub fn exact_search(
+    table: &DeltaTable,
+    id: &str,
+    query: &[f32],
+    k: usize,
+) -> Result<Vec<Neighbor>> {
+    let matrix = load_matrix(table, id)?;
+    ensure!(
+        query.len() == matrix.dim,
+        "query has {} dims, matrix {id:?} has {}",
+        query.len(),
+        matrix.dim
+    );
+    STATS.exact_searches.fetch_add(1, Ordering::Relaxed);
+    Ok(exact_topk(&matrix, query, k))
+}
+
+/// Knobs for one index build.
+#[derive(Debug, Clone)]
+pub struct BuildParams {
+    /// Centroid count; 0 picks `sqrt(rows)` clamped to `[1, 256]`.
+    pub k: usize,
+    /// Maximum Lloyd iterations (early stop on convergence).
+    pub iters: usize,
+    /// Training-sample cap (k-means trains on at most this many rows).
+    pub sample: usize,
+    /// Default probe count recorded in the artifact; 0 picks `k/8`
+    /// clamped to `[1, k]`.
+    pub nprobe: usize,
+    /// Seed for the k-means initialization (sampling + init picks).
+    pub seed: u64,
+}
+
+impl Default for BuildParams {
+    fn default() -> Self {
+        Self { k: 0, iters: 8, sample: 4096, nprobe: 0, seed: 42 }
+    }
+}
+
+/// What one build produced — sizes, geometry and the commit it landed in.
+#[derive(Debug, Clone)]
+pub struct BuildSummary {
+    /// Log version the build committed as.
+    pub version: u64,
+    /// Table version whose data the index covers.
+    pub covers_version: u64,
+    /// Centroid count.
+    pub k: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Vectors indexed.
+    pub rows: usize,
+    /// Default probe count recorded in the artifact.
+    pub nprobe: usize,
+    /// k-means iterations run.
+    pub train_iters: usize,
+    /// Centroid-artifact bytes.
+    pub centroid_bytes: u64,
+    /// Posting-artifact bytes.
+    pub posting_bytes: u64,
+}
+
+impl BuildSummary {
+    /// Human-readable one-build summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "built ivf index: {} vectors x {} dims -> {} centroids (nprobe {}) in {} iters\n  \
+             artifacts: centroids {} B + postings {} B, committed @ v{} covering v{}",
+            self.rows,
+            self.dim,
+            self.k,
+            self.nprobe,
+            self.train_iters,
+            self.centroid_bytes,
+            self.posting_bytes,
+            self.version,
+            self.covers_version,
+        )
+    }
+}
+
+/// Freshness of an index relative to the snapshot it was opened at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexStatus {
+    /// No index artifacts exist in the snapshot.
+    Missing,
+    /// The covered data files are unchanged — results are exact w.r.t. the
+    /// indexed corpus.
+    Fresh {
+        /// Table version the index was built against.
+        covers: u64,
+    },
+    /// The tensor's data files changed since the build (append, OPTIMIZE);
+    /// the index still serves its build-time corpus but needs a rebuild.
+    Stale {
+        /// Table version the index was built against.
+        covers: u64,
+    },
+}
+
+impl IndexStatus {
+    /// True only for [`IndexStatus::Fresh`].
+    pub fn is_fresh(&self) -> bool {
+        matches!(self, IndexStatus::Fresh { .. })
+    }
+
+    /// The version the index covers, if one exists.
+    pub fn covers(&self) -> Option<u64> {
+        match self {
+            IndexStatus::Missing => None,
+            IndexStatus::Fresh { covers } | IndexStatus::Stale { covers } => Some(*covers),
+        }
+    }
+}
+
+impl std::fmt::Display for IndexStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IndexStatus::Missing => write!(f, "missing"),
+            IndexStatus::Fresh { covers } => write!(f, "fresh (covers v{covers})"),
+            IndexStatus::Stale { covers } => write!(f, "STALE (covers v{covers})"),
+        }
+    }
+}
+
+/// Index-tier counters (process-global, monotonic).
+#[derive(Debug, Default)]
+pub struct IndexStats {
+    /// Index builds committed.
+    pub builds: AtomicU64,
+    /// Vectors indexed across all builds.
+    pub vectors_indexed: AtomicU64,
+    /// k-means iterations run across all builds.
+    pub kmeans_iters: AtomicU64,
+    /// IVF searches served.
+    pub searches: AtomicU64,
+    /// Brute-force control searches served.
+    pub exact_searches: AtomicU64,
+    /// Posting lists probed.
+    pub probes: AtomicU64,
+    /// Posting entries scanned.
+    pub postings_scanned: AtomicU64,
+    /// Centroid-artifact loads (index opens).
+    pub centroid_loads: AtomicU64,
+}
+
+static STATS: Lazy<IndexStats> = Lazy::new(IndexStats::default);
+
+/// Index-tier counters.
+pub fn stats() -> &'static IndexStats {
+    &STATS
+}
+
+/// Plain-text index-tier metrics report, in the same `name value` format
+/// as the other engines' reports.
+pub fn report() -> String {
+    format!(
+        "index.builds {}\nindex.vectors_indexed {}\nindex.kmeans_iters {}\n\
+         index.searches {}\nindex.exact_searches {}\nindex.probes {}\n\
+         index.postings_scanned {}\nindex.centroid_loads {}\n",
+        STATS.builds.load(Ordering::Relaxed),
+        STATS.vectors_indexed.load(Ordering::Relaxed),
+        STATS.kmeans_iters.load(Ordering::Relaxed),
+        STATS.searches.load(Ordering::Relaxed),
+        STATS.exact_searches.load(Ordering::Relaxed),
+        STATS.probes.load(Ordering::Relaxed),
+        STATS.postings_scanned.load(Ordering::Relaxed),
+        STATS.centroid_loads.load(Ordering::Relaxed),
+    )
+}
+
+/// FNV-1a fingerprint of a tensor's live data files: path, size and
+/// timestamp of each, in path order. Any append, remove or rewrite of the
+/// covered tensor changes it — the staleness rule the index pins itself to.
+fn fingerprint(files: &[&AddFile]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for f in files {
+        eat(f.path.as_bytes());
+        eat(&f.size.to_le_bytes());
+        eat(&f.timestamp.to_le_bytes());
+        eat(&[0xFF]); // record separator
+    }
+    h
+}
+
+/// Object-key prefix of tensor `id`'s index artifacts (relative to the
+/// table root, like `AddFile::path`).
+fn artifact_prefix(id: &str) -> String {
+    format!("index/{id}/")
+}
+
+/// Parsed `meta` JSON of a centroid-artifact Add action.
+struct ArtifactMeta {
+    covers: u64,
+    fp: u64,
+    postings_path: String,
+}
+
+fn encode_meta(id: &str, covers: u64, fp: u64, postings_path: &str) -> String {
+    Json::obj([
+        ("index", Json::from("ivf")),
+        ("tensor", Json::from(id)),
+        ("covers", Json::from(covers)),
+        ("fp", Json::from(format!("{fp:016x}"))),
+        ("postings", Json::from(postings_path)),
+    ])
+    .dump()
+}
+
+fn decode_meta(meta: &str) -> Option<ArtifactMeta> {
+    let j = jsonx::parse(meta).ok()?;
+    if j.get("index")?.as_str()? != "ivf" {
+        return None;
+    }
+    Some(ArtifactMeta {
+        covers: j.get("covers")?.as_u64()?,
+        fp: u64::from_str_radix(j.get("fp")?.as_str()?, 16).ok()?,
+        postings_path: j.get("postings")?.as_str()?.to_string(),
+    })
+}
+
+/// The newest live centroid artifact for `id` in a snapshot, if any.
+fn find_centroid_add<'a>(snap: &'a Snapshot, id: &str) -> Option<(&'a AddFile, ArtifactMeta)> {
+    let prefix = artifact_prefix(id);
+    snap.files()
+        .filter(|f| f.path.starts_with(&prefix) && f.path.ends_with("-centroids.idx"))
+        .filter_map(|f| Some((f, decode_meta(f.meta.as_deref()?)?)))
+        .max_by_key(|(f, _)| f.timestamp)
+}
+
+/// The Fresh/Stale verdict for an index described by `meta`, against the
+/// tensor's live data files in `snap` — the single place the staleness
+/// rule is applied (both `status*` and `IvfIndex::open*` route here).
+fn staleness(snap: &Snapshot, id: &str, meta: &ArtifactMeta) -> IndexStatus {
+    if fingerprint(&snap.files_for_tensor(id)) == meta.fp {
+        IndexStatus::Fresh { covers: meta.covers }
+    } else {
+        IndexStatus::Stale { covers: meta.covers }
+    }
+}
+
+fn status_of(snap: &Snapshot, id: &str) -> IndexStatus {
+    match find_centroid_add(snap, id) {
+        None => IndexStatus::Missing,
+        Some((_, meta)) => staleness(snap, id, &meta),
+    }
+}
+
+/// Index freshness for tensor `id` at the table's **latest** version
+/// (served from the engine's snapshot cache; zero data GETs).
+pub fn status(table: &DeltaTable, id: &str) -> Result<IndexStatus> {
+    Ok(status_of(&crate::query::engine::snapshot(table)?, id))
+}
+
+/// Index freshness for tensor `id` at a pinned `version` (time travel). A
+/// version predating the build reports [`IndexStatus::Missing`].
+pub fn status_at(table: &DeltaTable, id: &str, version: u64) -> Result<IndexStatus> {
+    Ok(status_of(&table.snapshot_at(version)?, id))
+}
+
+// ---------------------------------------------------------------------------
+// Artifact serialization
+// ---------------------------------------------------------------------------
+
+fn encode_centroid_artifact(
+    rows: u64,
+    dim: usize,
+    nprobe: usize,
+    centroids: &[f32],
+    offsets: &[u64],
+) -> Vec<u8> {
+    let k = offsets.len() - 1;
+    let mut out = Vec::with_capacity(HEADER_BYTES + centroids.len() * 4 + offsets.len() * 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    out.extend_from_slice(&rows.to_le_bytes());
+    out.extend_from_slice(&(nprobe as u64).to_le_bytes());
+    for v in centroids {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for o in offsets {
+        out.extend_from_slice(&o.to_le_bytes());
+    }
+    out
+}
+
+struct CentroidArtifact {
+    rows: u64,
+    dim: usize,
+    nprobe: usize,
+    centroids: Vec<f32>,
+    offsets: Vec<u64>,
+}
+
+fn decode_centroid_artifact(bytes: &[u8]) -> Result<CentroidArtifact> {
+    ensure!(bytes.len() >= HEADER_BYTES, "centroid artifact truncated ({} B)", bytes.len());
+    let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    ensure!(bytes[..4] == MAGIC, "bad centroid artifact magic");
+    let version = u32_at(4);
+    ensure!(version == ARTIFACT_VERSION, "unsupported index artifact version {version}");
+    let k = u32_at(8) as usize;
+    let dim = u32_at(12) as usize;
+    let rows = u64_at(16);
+    let nprobe = u64_at(24) as usize;
+    let want = HEADER_BYTES + k * dim * 4 + (k + 1) * 8;
+    ensure!(
+        bytes.len() == want,
+        "centroid artifact is {} B, geometry (k={k}, dim={dim}) needs {want}",
+        bytes.len()
+    );
+    let cent_end = HEADER_BYTES + k * dim * 4;
+    let centroids: Vec<f32> = bytes[HEADER_BYTES..cent_end]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let offsets: Vec<u64> = bytes[cent_end..]
+        .chunks_exact(8)
+        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    Ok(CentroidArtifact { rows, dim, nprobe, centroids, offsets })
+}
+
+// ---------------------------------------------------------------------------
+// Build
+// ---------------------------------------------------------------------------
+
+/// Build (or rebuild) the IVF index for tensor `id` and commit it
+/// atomically: both artifact objects upload in one batched PUT, and a
+/// single log version carries their Add actions, the Removes of any
+/// previous build's artifacts, and the `BUILD INDEX` commit info.
+pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSummary> {
+    let snap = crate::query::engine::snapshot(table)?;
+    let data_files = snap.files_for_tensor(id);
+    ensure!(!data_files.is_empty(), "tensor {id:?} not found in table {}", table.root());
+    let covers_version = snap.version;
+    let fp = fingerprint(&data_files);
+
+    let matrix = load_matrix(table, id)?;
+    ensure!(matrix.rows > 0 && matrix.dim > 0, "cannot index an empty matrix");
+    let k = if p.k > 0 {
+        ensure!(p.k <= matrix.rows, "k {} exceeds row count {}", p.k, matrix.rows);
+        p.k
+    } else {
+        ((matrix.rows as f64).sqrt().round() as usize).clamp(1, MAX_AUTO_K).min(matrix.rows)
+    };
+    let nprobe = if p.nprobe > 0 { p.nprobe.min(k) } else { (k / 8).clamp(1, k) };
+
+    // Train on a seeded sample, then assign every row.
+    let trained = kmeans::train(&matrix.data, matrix.dim, k, p.iters, p.sample, p.seed);
+    let mut lists: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for r in 0..matrix.rows {
+        let (c, _) = kmeans::nearest(&trained.centroids, matrix.dim, matrix.row(r));
+        lists[c].push(r as u32);
+    }
+
+    // Serialize postings: per centroid, contiguous (row_id, vector) entries.
+    let entry_bytes = 4 + 4 * matrix.dim;
+    let mut postings = Vec::with_capacity(matrix.rows * entry_bytes);
+    let mut offsets = Vec::with_capacity(k + 1);
+    offsets.push(0u64);
+    for list in &lists {
+        for &r in list {
+            postings.extend_from_slice(&r.to_le_bytes());
+            for v in matrix.row(r as usize) {
+                postings.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        offsets.push(postings.len() as u64);
+    }
+    let centroid_bytes = encode_centroid_artifact(
+        matrix.rows as u64,
+        matrix.dim,
+        nprobe,
+        &trained.centroids,
+        &offsets,
+    );
+
+    // Upload both artifacts in one batched PUT, then commit atomically.
+    let nonce = crate::delta::now_ms();
+    let rel_cent = format!("{}ivf-{nonce:016x}-centroids.idx", artifact_prefix(id));
+    let rel_post = format!("{}ivf-{nonce:016x}-postings.idx", artifact_prefix(id));
+    let key_cent = table.data_key(&rel_cent);
+    let key_post = table.data_key(&rel_post);
+    table.store().put_many(&[
+        (key_cent.as_str(), centroid_bytes.as_slice()),
+        (key_post.as_str(), postings.as_slice()),
+    ])?;
+
+    let ts = crate::delta::now_ms();
+    let prefix = artifact_prefix(id);
+    let mut actions: Vec<Action> = snap
+        .files()
+        .filter(|f| f.path.starts_with(&prefix))
+        .map(|f| Action::Remove { path: f.path.clone(), timestamp: ts })
+        .collect();
+    actions.push(Action::Add(AddFile {
+        path: rel_cent,
+        size: centroid_bytes.len() as u64,
+        rows: k as u64,
+        tensor_id: String::new(),
+        min_key: None,
+        max_key: None,
+        timestamp: ts,
+        meta: Some(encode_meta(id, covers_version, fp, &rel_post)),
+    }));
+    actions.push(Action::Add(AddFile {
+        path: rel_post,
+        size: postings.len() as u64,
+        rows: matrix.rows as u64,
+        tensor_id: String::new(),
+        min_key: None,
+        max_key: None,
+        timestamp: ts,
+        meta: Some(
+            Json::obj([("index", Json::from("ivf-postings")), ("tensor", Json::from(id))]).dump(),
+        ),
+    }));
+    actions.push(Action::CommitInfo { operation: "BUILD INDEX".into(), timestamp: ts });
+    let version = table.commit(actions)?;
+
+    STATS.builds.fetch_add(1, Ordering::Relaxed);
+    STATS.vectors_indexed.fetch_add(matrix.rows as u64, Ordering::Relaxed);
+    STATS.kmeans_iters.fetch_add(trained.iters_run as u64, Ordering::Relaxed);
+    Ok(BuildSummary {
+        version,
+        covers_version,
+        k,
+        dim: matrix.dim,
+        rows: matrix.rows,
+        nprobe,
+        train_iters: trained.iters_run,
+        centroid_bytes: centroid_bytes.len() as u64,
+        posting_bytes: postings.len() as u64,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Open + search
+// ---------------------------------------------------------------------------
+
+/// An opened IVF index: centroids resident, posting lists fetched on
+/// demand through the serving tier.
+pub struct IvfIndex {
+    /// Tensor the index covers.
+    pub tensor_id: String,
+    /// Centroid count.
+    pub k: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Vectors indexed at build time.
+    pub rows: u64,
+    /// Probe count used when a search passes `nprobe = 0`.
+    pub default_nprobe: usize,
+    status: IndexStatus,
+    centroids: Vec<f32>,
+    offsets: Vec<u64>,
+    store: ObjectStoreHandle,
+    postings_key: String,
+    postings_size: u64,
+    postings_stamp: i64,
+}
+
+impl std::fmt::Debug for IvfIndex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IvfIndex")
+            .field("tensor_id", &self.tensor_id)
+            .field("k", &self.k)
+            .field("dim", &self.dim)
+            .field("rows", &self.rows)
+            .field("status", &self.status)
+            .finish()
+    }
+}
+
+impl IvfIndex {
+    /// Open the index for tensor `id` at the table's latest version.
+    pub fn open(table: &DeltaTable, id: &str) -> Result<IvfIndex> {
+        Self::open_from(table, &crate::query::engine::snapshot(table)?, id)
+    }
+
+    /// Open the index at a pinned table `version` (time travel). Errors if
+    /// that snapshot holds no index for `id` — check [`status_at`] first.
+    pub fn open_at(table: &DeltaTable, id: &str, version: u64) -> Result<IvfIndex> {
+        Self::open_from(table, &table.snapshot_at(version)?, id)
+    }
+
+    fn open_from(table: &DeltaTable, snap: &Snapshot, id: &str) -> Result<IvfIndex> {
+        let (cent_add, meta) = find_centroid_add(snap, id)
+            .with_context(|| format!("no index for tensor {id:?} at v{}", snap.version))?;
+        let post_add = snap
+            .files
+            .get(&meta.postings_path)
+            .with_context(|| format!("index postings {} not live", meta.postings_path))?;
+        // The centroid artifact rides the serving tier as one block: hot
+        // re-opens are cache hits, and (size, timestamp) pin the build.
+        let key = table.data_key(&cent_add.path);
+        let blocks = crate::serving::fetch_spans(
+            table.store(),
+            &key,
+            cent_add.size,
+            cent_add.timestamp,
+            &[(0, cent_add.size)],
+        )?;
+        let art = decode_centroid_artifact(blocks[0].as_slice())?;
+        ensure!(art.offsets.len() == art.centroids.len() / art.dim.max(1) + 1, "offset table size");
+        STATS.centroid_loads.fetch_add(1, Ordering::Relaxed);
+        let status = staleness(snap, id, &meta);
+        Ok(IvfIndex {
+            tensor_id: id.to_string(),
+            k: art.offsets.len() - 1,
+            dim: art.dim,
+            rows: art.rows,
+            default_nprobe: art.nprobe,
+            status,
+            centroids: art.centroids,
+            offsets: art.offsets,
+            store: table.store().clone(),
+            postings_key: table.data_key(&post_add.path),
+            postings_size: post_add.size,
+            postings_stamp: post_add.timestamp,
+        })
+    }
+
+    /// Freshness of this index relative to the snapshot it was opened at.
+    pub fn status(&self) -> IndexStatus {
+        self.status
+    }
+
+    /// Top-`k` nearest stored vectors to `query`, probing the `nprobe`
+    /// nearest posting lists (`0` = the build's default; values ≥ the
+    /// centroid count scan everything and equal the brute-force answer).
+    /// Posting spans are fetched through the serving tier, so hot lists
+    /// cost zero GETs.
+    pub fn search(&self, query: &[f32], k: usize, nprobe: usize) -> Result<Vec<Neighbor>> {
+        ensure!(
+            query.len() == self.dim,
+            "query has {} dims, index {:?} has {}",
+            query.len(),
+            self.tensor_id,
+            self.dim
+        );
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        let nprobe = if nprobe == 0 { self.default_nprobe } else { nprobe }.min(self.k);
+        // Rank centroids by distance (ties toward the lower centroid id).
+        let mut ranked: Vec<(f32, u32)> = self
+            .centroids
+            .chunks_exact(self.dim)
+            .enumerate()
+            .map(|(c, cent)| (dist2(query, cent), c as u32))
+            .collect();
+        ranked.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let spans: Vec<(u64, u64)> = ranked[..nprobe]
+            .iter()
+            .filter_map(|&(_, c)| {
+                let (lo, hi) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
+                (hi > lo).then_some((lo, hi - lo))
+            })
+            .collect();
+        STATS.searches.fetch_add(1, Ordering::Relaxed);
+        STATS.probes.fetch_add(spans.len() as u64, Ordering::Relaxed);
+
+        let blocks = crate::serving::fetch_spans(
+            &self.store,
+            &self.postings_key,
+            self.postings_size,
+            self.postings_stamp,
+            &spans,
+        )?;
+        let entry_bytes = 4 + 4 * self.dim;
+        let mut top = TopK::new(k);
+        let mut scanned = 0u64;
+        for block in &blocks {
+            for entry in block.chunks_exact(entry_bytes) {
+                let row = u32::from_le_bytes(entry[..4].try_into().expect("entry header"));
+                top.push(dist2_le(query, &entry[4..]), row);
+                scanned += 1;
+            }
+        }
+        STATS.postings_scanned.fetch_add(scanned, Ordering::Relaxed);
+        Ok(top.into_sorted())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add(path: &str, size: u64, ts: i64) -> AddFile {
+        AddFile {
+            path: path.into(),
+            size,
+            rows: 1,
+            tensor_id: "t".into(),
+            min_key: None,
+            max_key: None,
+            timestamp: ts,
+            meta: None,
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_file_set_changes() {
+        let a = add("data/t/p0", 100, 1);
+        let b = add("data/t/p1", 200, 2);
+        let base = fingerprint(&[&a, &b]);
+        assert_eq!(base, fingerprint(&[&a, &b]), "deterministic");
+        assert_ne!(base, fingerprint(&[&a]), "dropping a file changes it");
+        let b2 = add("data/t/p1", 200, 3);
+        assert_ne!(base, fingerprint(&[&a, &b2]), "a rewrite's new timestamp changes it");
+        let b3 = add("data/t/p1", 201, 2);
+        assert_ne!(base, fingerprint(&[&a, &b3]), "a size change changes it");
+    }
+
+    #[test]
+    fn centroid_artifact_roundtrips() {
+        let centroids = vec![0.5f32, -1.25, 3.0, 4.5, 0.0, 9.75];
+        let offsets = vec![0u64, 16, 16, 48];
+        let bytes = encode_centroid_artifact(7, 2, 2, &centroids, &offsets);
+        let art = decode_centroid_artifact(&bytes).unwrap();
+        assert_eq!(art.rows, 7);
+        assert_eq!(art.dim, 2);
+        assert_eq!(art.nprobe, 2);
+        assert_eq!(art.centroids, centroids);
+        assert_eq!(art.offsets, offsets);
+        // Corruption is rejected.
+        assert!(decode_centroid_artifact(&bytes[..10]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode_centroid_artifact(&bad).is_err());
+        let mut short = bytes;
+        short.pop();
+        assert!(decode_centroid_artifact(&short).is_err());
+    }
+
+    #[test]
+    fn meta_roundtrips() {
+        let m = encode_meta("vecs", 12, 0xDEAD_BEEF_0123_4567, "index/vecs/p.idx");
+        let back = decode_meta(&m).unwrap();
+        assert_eq!(back.covers, 12);
+        assert_eq!(back.fp, 0xDEAD_BEEF_0123_4567);
+        assert_eq!(back.postings_path, "index/vecs/p.idx");
+        assert!(decode_meta("{\"shape\":[2,2]}").is_none(), "tensor meta is not index meta");
+    }
+
+    #[test]
+    fn topk_orders_by_distance_then_row() {
+        let mut t = TopK::new(3);
+        for (d, r) in [(5.0f32, 1u32), (1.0, 9), (1.0, 2), (0.5, 4), (7.0, 0)] {
+            t.push(d, r);
+        }
+        let out = t.into_sorted();
+        assert_eq!(out.len(), 3);
+        assert_eq!((out[0].row, out[0].dist), (4, 0.5));
+        assert_eq!((out[1].row, out[1].dist), (2, 1.0), "tie breaks toward the lower row");
+        assert_eq!((out[2].row, out[2].dist), (9, 1.0));
+        let empty = TopK::new(0);
+        assert!(empty.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn dist2_twins_agree() {
+        let q = [1.0f32, -2.0, 0.5];
+        let v = [0.25f32, 4.0, -1.5];
+        let mut bytes = Vec::new();
+        for x in v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(dist2(&q, &v), dist2_le(&q, &bytes));
+    }
+
+    #[test]
+    fn exact_topk_matches_naive_sort() {
+        let matrix = Matrix {
+            rows: 6,
+            dim: 2,
+            data: vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0, 3.0, 3.0, -1.0, 0.0, 0.5, 0.5],
+        };
+        let q = [0.1f32, 0.1];
+        let got = exact_topk(&matrix, &q, 3);
+        let mut want: Vec<(f32, u32)> =
+            (0..6).map(|r| (dist2(&q, matrix.row(r)), r as u32)).collect();
+        want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (n, w) in got.iter().zip(&want) {
+            assert_eq!((n.dist, n.row), *w);
+        }
+    }
+
+    #[test]
+    fn indexable_rule() {
+        assert!(is_indexable(&[100, 64], "f32"));
+        assert!(is_indexable(&[2, 2], "f64"));
+        assert!(!is_indexable(&[100, 64], "u8"));
+        assert!(!is_indexable(&[100], "f32"));
+        assert!(!is_indexable(&[4, 4, 4], "f32"));
+        assert!(!is_indexable(&[0, 64], "f32"));
+    }
+
+    #[test]
+    fn status_display_and_accessors() {
+        assert!(!IndexStatus::Missing.is_fresh());
+        assert_eq!(IndexStatus::Missing.covers(), None);
+        let f = IndexStatus::Fresh { covers: 3 };
+        assert!(f.is_fresh());
+        assert_eq!(f.covers(), Some(3));
+        let s = IndexStatus::Stale { covers: 3 };
+        assert!(!s.is_fresh());
+        assert!(format!("{s}").contains("STALE"));
+    }
+
+    #[test]
+    fn report_lists_all_counters() {
+        let r = report();
+        for name in [
+            "index.builds",
+            "index.vectors_indexed",
+            "index.kmeans_iters",
+            "index.searches",
+            "index.exact_searches",
+            "index.probes",
+            "index.postings_scanned",
+            "index.centroid_loads",
+        ] {
+            assert!(r.contains(name), "missing {name} in {r}");
+        }
+    }
+}

@@ -288,15 +288,19 @@ pub struct TensorWriter<'a> {
     inflight_bytes: u64,
 }
 
+/// `DT_PUT_BATCH`, read once — every `TensorStore::write` constructs a
+/// `TensorWriter`, so the knobs must not cost an env lookup per tensor.
+static PUT_BATCH: Lazy<usize> =
+    Lazy::new(|| env_u64("DT_PUT_BATCH", DEFAULT_PUT_BATCH as u64) as usize);
+/// `DT_INFLIGHT_MB` in bytes, read once (see [`PUT_BATCH`]).
+static INFLIGHT_BYTES: Lazy<u64> =
+    Lazy::new(|| env_u64("DT_INFLIGHT_MB", DEFAULT_INFLIGHT_MB as u64) * 1024 * 1024);
+
 impl<'a> TensorWriter<'a> {
     /// New empty batch over `table`, knobs from the environment
-    /// (`DT_PUT_BATCH`, `DT_INFLIGHT_MB`).
+    /// (`DT_PUT_BATCH`, `DT_INFLIGHT_MB`, each read once per process).
     pub fn new(table: &'a DeltaTable) -> Self {
-        Self::with_knobs(
-            table,
-            env_u64("DT_PUT_BATCH", DEFAULT_PUT_BATCH as u64) as usize,
-            env_u64("DT_INFLIGHT_MB", DEFAULT_INFLIGHT_MB as u64) * 1024 * 1024,
-        )
+        Self::with_knobs(table, *PUT_BATCH, *INFLIGHT_BYTES)
     }
 
     /// New empty batch with explicit PUT batch size and in-flight byte
@@ -340,6 +344,20 @@ impl<'a> TensorWriter<'a> {
                     tensor_id: plan.tensor_id.clone(),
                 });
                 payloads.push(p.payload);
+            }
+        }
+        // Duplicate part paths in one batch would race nondeterministically:
+        // parts upload in encode-completion order, but the surviving Add
+        // action is fixed by slot order, so the committed metadata could
+        // describe different bytes than the object holds. Refuse up front.
+        {
+            let mut seen = std::collections::HashSet::with_capacity(slots.len());
+            for s in &slots {
+                ensure!(
+                    seen.insert(s.rel_path.as_str()),
+                    "duplicate part path {:?} staged in one batch (same tensor id staged twice?)",
+                    s.rel_path
+                );
             }
         }
         let n = payloads.len();
@@ -518,8 +536,12 @@ fn flush_batch(
     let objs: Vec<(&str, &[u8])> =
         keys.iter().zip(batch.iter()).map(|(k, (_, b))| (k.as_str(), b.as_slice())).collect();
     let res = table.store().put_many(&objs);
-    STATS.put_batches.fetch_add(1, Ordering::Relaxed);
-    STATS.put_parts.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    // Count the upload only once it actually happened — a failed PUT must
+    // not inflate the very counters incidents are diagnosed with.
+    if res.is_ok() {
+        STATS.put_batches.fetch_add(1, Ordering::Relaxed);
+        STATS.put_parts.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    }
     for (_, b) in batch.drain(..) {
         gate.release(b.len() as u64);
     }
@@ -577,6 +599,21 @@ mod tests {
         assert_eq!((f.min_key, f.max_key), (Some(1), Some(3)));
         assert_eq!(store.head(&t.data_key(&f.path)).unwrap(), Some(f.size));
         assert!(f.size > 0);
+    }
+
+    #[test]
+    fn duplicate_part_paths_in_one_batch_are_rejected() {
+        // Two plans staging the same rel_path would upload racily (encode
+        // completion order) while the commit's surviving Add is fixed by
+        // slot order — the writer must refuse instead of landing metadata
+        // that may describe the losing body.
+        let t = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+        let mut w = TensorWriter::with_knobs(&t, 4, 1 << 20);
+        w.stage(plan(vec![columnar_part(0, vec![1])]));
+        w.stage(plan(vec![columnar_part(0, vec![2])]));
+        let err = w.commit().unwrap_err();
+        assert!(err.to_string().contains("duplicate part path"), "{err:#}");
+        assert_eq!(t.latest_version().unwrap(), 0, "nothing may land");
     }
 
     #[test]

@@ -29,11 +29,17 @@
 //! * [`serving`] — the serving tier between the engine and the store:
 //!   sharded LRU block cache, single-flight fetch deduplication, and a
 //!   per-store admission gate.
+//! * [`index`] — the vector-search tier: a Delta-versioned IVF-Flat ANN
+//!   index over stored 2-D tensors (seeded k-means training, posting lists
+//!   fetched through the serving tier, staleness pinned to the covered
+//!   data files, brute-force exact control).
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled decode artifacts.
 //! * [`coordinator`] — streaming ingestion orchestrator: worker pool,
 //!   backpressure, commit coordination, metrics (including the engine's).
-//! * [`workload`] — synthetic FFHQ-like and Uber-pickups-like generators,
-//!   plus the closed-loop serving load harness ([`workload::serve`]).
+//! * [`workload`] — synthetic FFHQ-like, Uber-pickups-like and
+//!   embedding-like generators, plus the closed-loop serving, ingest and
+//!   vector-search load harnesses ([`workload::serve`],
+//!   [`workload::ingest`], [`workload::search`]).
 
 pub mod util;
 pub mod jsonx;
@@ -45,6 +51,7 @@ pub mod formats;
 pub mod query;
 pub mod ingest;
 pub mod serving;
+pub mod index;
 pub mod runtime;
 pub mod coordinator;
 pub mod workload;
@@ -59,6 +66,7 @@ pub mod prelude {
         storage_bytes, BinaryFormat, BsgsFormat, CooFormat, CsfFormat, CsrFormat, FtsfFormat,
         SliceSpec, TensorData, TensorStore,
     };
+    pub use crate::index::{IvfIndex, Neighbor};
     pub use crate::ingest::{TensorWriter, WritePlan};
     pub use crate::objectstore::{CostModel, ObjectStore, ObjectStoreHandle};
     pub use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};

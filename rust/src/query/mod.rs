@@ -81,13 +81,20 @@ pub struct TensorInfo {
     pub bytes: u64,
     /// Total logical rows.
     pub rows: u64,
+    /// Element dtype ("?" when no Add action carries metadata).
+    pub dtype: String,
+    /// Dense shape (empty when no Add action carries metadata).
+    pub shape: Vec<usize>,
 }
 
 /// Scan the snapshot into per-tensor statistics.
 ///
-/// One cached-snapshot pass derives counts, sizes **and** layouts — the
-/// layout falls out of each file's path, so `inspect` is O(files), not
-/// O(tensors × files) worth of per-tensor snapshot replays.
+/// One cached-snapshot pass derives counts, sizes, layouts **and**
+/// geometry — the layout falls out of each file's path and dtype/shape out
+/// of the Add actions' metadata, so `inspect` is O(files), not
+/// O(tensors × files) worth of per-tensor snapshot replays. The geometry
+/// is what lets `index build` discover which tensors are indexable vector
+/// matrices (2-D, f32/f64) without touching any data object.
 pub fn table_stats(table: &DeltaTable) -> Result<Vec<TensorInfo>> {
     let snap = engine::snapshot(table)?;
     let mut by_id: std::collections::BTreeMap<String, TensorInfo> = Default::default();
@@ -101,6 +108,8 @@ pub fn table_stats(table: &DeltaTable) -> Result<Vec<TensorInfo>> {
             files: 0,
             bytes: 0,
             rows: 0,
+            dtype: String::new(),
+            shape: Vec::new(),
         });
         e.files += 1;
         e.bytes += f.size;
@@ -110,13 +119,32 @@ pub fn table_stats(table: &DeltaTable) -> Result<Vec<TensorInfo>> {
                 e.layout = l;
             }
         }
+        if e.dtype.is_empty() {
+            if let Some((shape, dtype)) = meta_geometry(f.meta.as_deref()) {
+                e.shape = shape;
+                e.dtype = dtype;
+            }
+        }
     }
     for info in by_id.values_mut() {
         if info.layout.is_empty() {
             info.layout = "?".into();
         }
+        if info.dtype.is_empty() {
+            info.dtype = "?".into();
+        }
     }
     Ok(by_id.into_values().collect())
+}
+
+/// Parse `(shape, dtype)` out of an Add action's metadata JSON, when both
+/// are present (the `common::meta_json` convention every format follows).
+fn meta_geometry(meta: Option<&str>) -> Option<(Vec<usize>, String)> {
+    let j = crate::jsonx::parse(meta?).ok()?;
+    let shape: Vec<usize> =
+        j.get("shape")?.to_int_vec()?.into_iter().map(|d| d as usize).collect();
+    let dtype = j.get("dtype")?.as_str()?.to_string();
+    Some((shape, dtype))
 }
 
 /// Decode a sparse slice through the XLA artifact when it fits the
@@ -223,6 +251,12 @@ mod tests {
         let img = stats.iter().find(|s| s.id == "img").unwrap();
         assert_eq!(img.layout, "FTSF");
         assert!(img.bytes > 0 && img.files >= 4);
+        // Geometry from the Add-action metadata, with zero data GETs.
+        assert_eq!(img.dtype, "u8");
+        assert_eq!(img.shape, vec![8, 1, 8, 8]);
+        let events = stats.iter().find(|s| s.id == "events").unwrap();
+        assert_eq!(events.dtype, "f32");
+        assert_eq!(events.shape, vec![30, 8, 8]);
     }
 
     #[test]

@@ -293,6 +293,52 @@ mod tests {
     }
 
     #[test]
+    fn zipf_streams_are_deterministic_per_seed() {
+        // Every bench baseline rests on this: a seeded harness run draws
+        // the exact same Zipf stream on every machine, and distinct seeds
+        // explore genuinely different streams.
+        let z = Zipf::new(32, 1.1);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Pcg64::new(seed);
+            (0..256).map(|_| z.sample(&mut rng)).collect()
+        };
+        assert_eq!(draw(99), draw(99), "identical seeds -> identical Zipf streams");
+        assert_ne!(draw(99), draw(100), "distinct seeds must diverge");
+        // The distribution itself is seed-independent: rebuilding it
+        // changes nothing about the stream.
+        let z2 = Zipf::new(32, 1.1);
+        let mut a = Pcg64::new(4);
+        let mut b = Pcg64::new(4);
+        let xs: Vec<usize> = (0..64).map(|_| z.sample(&mut a)).collect();
+        let ys: Vec<usize> = (0..64).map(|_| z2.sample(&mut b)).collect();
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_and_gaussian_streams_are_deterministic_per_seed() {
+        let ints = |seed: u64| -> Vec<usize> {
+            let mut r = Pcg64::new(seed);
+            (0..256).map(|_| r.below(1000)).collect()
+        };
+        assert_eq!(ints(7), ints(7), "identical seeds -> identical uniform streams");
+        assert_ne!(ints(7), ints(8), "distinct seeds must diverge");
+        let floats = |seed: u64| -> Vec<u64> {
+            let mut r = Pcg64::new(seed);
+            (0..256).map(|_| r.next_f64().to_bits()).collect()
+        };
+        assert_eq!(floats(7), floats(7));
+        assert_ne!(floats(7), floats(8));
+        // Gaussian draws too — these seed the k-means initialization and
+        // the embedding-like corpus generator.
+        let gauss = |seed: u64| -> Vec<u64> {
+            let mut r = Pcg64::new(seed);
+            (0..64).map(|_| r.next_gaussian().to_bits()).collect()
+        };
+        assert_eq!(gauss(5), gauss(5));
+        assert_ne!(gauss(5), gauss(6));
+    }
+
+    #[test]
     fn zipf_single_item() {
         let z = Zipf::new(1, 1.5);
         let mut rng = Pcg64::new(1);

@@ -17,8 +17,12 @@
 //! throughput and latency-quantile reporting. The [`ingest`] submodule is
 //! its write-side twin: concurrent writers committing multi-tensor batches
 //! through the write engine, reporting tensors/s and per-commit latency.
+//! The [`search`] submodule drives the vector index tier the same way:
+//! Zipfian top-k queries with recall@k measured against the brute-force
+//! control, fed by the [`embedding_like`] clustered-vector generator.
 
 pub mod ingest;
+pub mod search;
 pub mod serve;
 
 use crate::tensor::{DType, DenseTensor, SparseCoo};
@@ -204,6 +208,26 @@ pub fn uber_like(seed: u64, p: UberParams) -> SparseCoo {
     SparseCoo::new(DType::F32, &p.shape(), indices, values).expect("valid coords")
 }
 
+/// Embedding-like vector corpus: an `n × dim` f32 matrix drawn from a
+/// seeded Gaussian mixture (`clusters` isotropic blobs with centers uniform
+/// in the unit cube, spread `sigma`). This is the ANN index tier's stand-in
+/// for a learned embedding table — real embeddings concentrate on
+/// manifolds, and that cluster structure is exactly what IVF centroids
+/// exploit. Deterministic in the seed.
+pub fn embedding_like(seed: u64, n: usize, dim: usize, clusters: usize, sigma: f64) -> DenseTensor {
+    let mut rng = Pcg64::new(seed);
+    let clusters = clusters.max(1);
+    let centers: Vec<f64> = (0..clusters * dim).map(|_| rng.next_f64()).collect();
+    let mut data = Vec::with_capacity(n * dim);
+    for _ in 0..n {
+        let c = rng.below(clusters);
+        for &ctr in &centers[c * dim..(c + 1) * dim] {
+            data.push((ctr + rng.next_gaussian() * sigma) as f32);
+        }
+    }
+    DenseTensor::from_f32(&[n, dim], &data).expect("shape math")
+}
+
 /// Uniform random sparse tensor at a target density (FROSTT-style).
 pub fn generic_sparse(seed: u64, shape: &[usize], density: f64) -> Result<SparseCoo> {
     let total: usize = shape.iter().product();
@@ -285,6 +309,30 @@ mod tests {
         let s = uber_like(3, p);
         let density = s.density();
         assert!(density < 0.01, "paper regime is <<1%: {density}");
+    }
+
+    #[test]
+    fn embedding_like_is_deterministic_and_clustered() {
+        let a = embedding_like(9, 200, 8, 4, 0.02);
+        assert_eq!(a, embedding_like(9, 200, 8, 4, 0.02), "same seed -> same corpus");
+        assert_ne!(a, embedding_like(10, 200, 8, 4, 0.02), "distinct seeds diverge");
+        assert_eq!(a.shape(), &[200, 8]);
+        assert_eq!(a.dtype(), DType::F32);
+        // Cluster structure: each vector sits within a few sigma of some
+        // other vector (its cluster mates), far tighter than the unit cube.
+        let vals = a.as_f32().unwrap();
+        let row = |r: usize| &vals[r * 8..(r + 1) * 8];
+        let mut nearest_sum = 0f32;
+        for r in 0..40 {
+            let mut best = f32::INFINITY;
+            for s in 0..200 {
+                if s != r {
+                    best = best.min(crate::index::dist2(row(r), row(s)));
+                }
+            }
+            nearest_sum += best.sqrt();
+        }
+        assert!(nearest_sum / 40.0 < 0.25, "mean NN gap {}", nearest_sum / 40.0);
     }
 
     #[test]

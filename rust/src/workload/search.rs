@@ -1,0 +1,450 @@
+//! Closed-loop vector-search load harness.
+//!
+//! Drives the index tier ([`crate::index`]) the way a fleet of retrieval
+//! clients would: `clients` threads issue top-k queries back-to-back
+//! (closed loop — each client waits for its result before sending the next
+//! query), with the query drawn from a Zipfian hot pool — repeated hot
+//! queries probe the same centroids, so their posting lists are served from
+//! the serving tier's block cache. Reports QPS, p50/p95/p99 latency from
+//! the repo's timing machinery ([`RunStats`]), and **recall@k** measured
+//! against the brute-force exact control over the same corpus.
+//!
+//! Used three ways: the `bench search` CLI subcommand, `benches/search.rs`
+//! (cache on/off comparison, `BENCH_search.json` for CI's perf gate), and
+//! `tests/index.rs` (the acceptance assertions: recall@10 ≥ 0.9 at the
+//! default `nprobe`, and a warmed run issues strictly fewer GETs than a
+//! cold one).
+
+use crate::delta::DeltaTable;
+use crate::formats::{FtsfFormat, TensorStore};
+use crate::index::{self, IvfIndex};
+use crate::jsonx::Json;
+use crate::util::prng::{Pcg64, Zipf};
+use crate::util::{RunStats, Stopwatch};
+use crate::Result;
+use anyhow::ensure;
+
+/// Knobs for one search run.
+#[derive(Debug, Clone)]
+pub struct SearchParams {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Queries each client issues in the measured phase.
+    pub queries_per_client: usize,
+    /// Vectors in the indexed corpus.
+    pub rows: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Gaussian-mixture components of the generated corpus.
+    pub clusters: usize,
+    /// Distinct query vectors; clients draw from this pool Zipfian, so low
+    /// ranks are the hot queries.
+    pub query_pool: usize,
+    /// Neighbors requested per query.
+    pub k: usize,
+    /// Posting lists probed per query (0 = the index build's default).
+    pub nprobe: usize,
+    /// Zipf exponent for query choice (≈1 is web-like skew; 0 uniform).
+    pub zipf_s: f64,
+    /// Serve posting fetches through the block cache + single-flight
+    /// (false = control group: every probe pays the backend).
+    pub cache: bool,
+    /// Issue every pool query once, untimed, before measuring — so the
+    /// measured phase of a cached run exercises the hit path.
+    pub warmup: bool,
+    /// Workload seed (corpus, query pool, Zipf draws and the k-means init
+    /// all derive from it).
+    pub seed: u64,
+}
+
+impl SearchParams {
+    /// CI-smoke scale (sub-second on the fast sim model).
+    pub fn tiny() -> Self {
+        Self {
+            clients: 4,
+            queries_per_client: 40,
+            rows: 2000,
+            dim: 32,
+            clusters: 32,
+            query_pool: 16,
+            k: 10,
+            nprobe: 0,
+            zipf_s: 1.1,
+            cache: true,
+            warmup: true,
+            seed: 7,
+        }
+    }
+
+    /// Default bench scale (seconds to a minute on the fast sim model).
+    pub fn small() -> Self {
+        Self {
+            clients: 8,
+            queries_per_client: 200,
+            rows: 20_000,
+            dim: 64,
+            clusters: 64,
+            query_pool: 64,
+            k: 10,
+            nprobe: 0,
+            zipf_s: 1.1,
+            cache: true,
+            warmup: true,
+            seed: 7,
+        }
+    }
+
+    /// Paper-regime scale (minutes on the 1 Gbps model).
+    pub fn paper() -> Self {
+        Self {
+            clients: 16,
+            queries_per_client: 500,
+            rows: 100_000,
+            dim: 96,
+            clusters: 128,
+            query_pool: 128,
+            k: 10,
+            nprobe: 0,
+            zipf_s: 1.05,
+            cache: true,
+            warmup: true,
+            seed: 7,
+        }
+    }
+}
+
+/// Result of one search run: throughput, latency quantiles, recall against
+/// the exact control, and the store/cache counters that explain them.
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Total measured queries.
+    pub queries: u64,
+    /// Neighbors requested per query.
+    pub k: usize,
+    /// Posting lists probed per query (the effective value).
+    pub nprobe: usize,
+    /// Whether the serving cache was active.
+    pub cache_enabled: bool,
+    /// Mean recall@k of the IVF results against the brute-force control,
+    /// over the query pool.
+    pub recall_at_k: f64,
+    /// Measured-phase wall time.
+    pub wall_secs: f64,
+    /// Queries per second over the measured phase.
+    pub throughput_qps: f64,
+    /// Mean query latency.
+    pub mean_secs: f64,
+    /// Median query latency.
+    pub p50_secs: f64,
+    /// 95th-percentile query latency.
+    pub p95_secs: f64,
+    /// 99th-percentile query latency.
+    pub p99_secs: f64,
+    /// GET requests issued to the store during the measured phase.
+    pub get_ops: u64,
+    /// Bytes downloaded during the measured phase.
+    pub bytes_read: u64,
+    /// Block-cache hits during the measured phase (process-global delta).
+    pub cache_hits: u64,
+    /// Block-cache misses during the measured phase (process-global delta).
+    pub cache_misses: u64,
+}
+
+impl SearchReport {
+    /// Compact JSON object (for `BENCH_search.json` / CI artifacts).
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("clients", Json::Int(self.clients as i64)),
+            ("queries", Json::Int(self.queries as i64)),
+            ("k", Json::Int(self.k as i64)),
+            ("nprobe", Json::Int(self.nprobe as i64)),
+            ("cache_enabled", Json::Bool(self.cache_enabled)),
+            ("recall_at_k", Json::from(self.recall_at_k)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("throughput_qps", Json::from(self.throughput_qps)),
+            ("mean_secs", Json::from(self.mean_secs)),
+            ("p50_secs", Json::from(self.p50_secs)),
+            ("p95_secs", Json::from(self.p95_secs)),
+            ("p99_secs", Json::from(self.p99_secs)),
+            ("get_ops", Json::Int(self.get_ops as i64)),
+            ("bytes_read", Json::Int(self.bytes_read as i64)),
+            ("cache_hits", Json::Int(self.cache_hits as i64)),
+            ("cache_misses", Json::Int(self.cache_misses as i64)),
+        ])
+        .dump()
+    }
+
+    /// Human-readable one-run summary.
+    pub fn summary(&self) -> String {
+        let ms = |s: f64| format!("{:.3}ms", s * 1e3);
+        format!(
+            "search: {} clients x {} queries (cache {}, nprobe {}) in {:.3}s -> {:.0} q/s\n  \
+             latency mean {} p50 {} p95 {} p99 {}\n  \
+             recall@{} {:.4}; store: {} GETs, {} bytes; block cache: {} hits / {} misses",
+            self.clients,
+            self.queries / (self.clients.max(1) as u64),
+            if self.cache_enabled { "on" } else { "off" },
+            self.nprobe,
+            self.wall_secs,
+            self.throughput_qps,
+            ms(self.mean_secs),
+            ms(self.p50_secs),
+            ms(self.p95_secs),
+            ms(self.p99_secs),
+            self.k,
+            self.recall_at_k,
+            self.get_ops,
+            self.bytes_read,
+            self.cache_hits,
+            self.cache_misses,
+        )
+    }
+}
+
+/// Ingest the search corpus (an `embedding_like` matrix stored as FTSF
+/// row-chunks) under `id` and ensure a fresh index covers it. Idempotent —
+/// an existing corpus is reused, and the index is only (re)built when
+/// missing or stale, so re-running `bench search` against a durable store
+/// duplicates nothing.
+pub fn populate_search_corpus(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<()> {
+    ensure!(p.rows > 0 && p.dim > 0, "search needs a non-empty corpus");
+    let exists = !crate::query::engine::snapshot(table)?.files_for_tensor(id).is_empty();
+    if exists {
+        // Reuse is only safe when the stored corpus matches the requested
+        // geometry — a durable table populated with different knobs would
+        // otherwise be benchmarked silently under the wrong flags. (The
+        // content seed is not fingerprinted; same-shape reruns reuse.)
+        let stats = crate::query::table_stats(table)?;
+        if let Some(info) = stats.iter().find(|t| t.id == id) {
+            ensure!(
+                info.shape == [p.rows, p.dim],
+                "existing corpus {id:?} is {:?} but this run asked for [{}, {}] — \
+                 use a fresh --table or matching --rows/--dim",
+                info.shape,
+                p.rows,
+                p.dim
+            );
+        }
+    } else {
+        let data = super::embedding_like(p.seed, p.rows, p.dim, p.clusters, 0.05);
+        // One row per chunk: slice reads and the matrix load stay cheap
+        // without fragmenting the corpus into hundreds of part files.
+        let fmt = FtsfFormat { rows_per_group: 256, rows_per_file: 4096, ..FtsfFormat::new(1) };
+        fmt.write(table, id, &data.into())?;
+    }
+    if !index::status(table, id)?.is_fresh() {
+        index::build(table, id, &index::BuildParams { seed: p.seed, ..Default::default() })?;
+    }
+    Ok(())
+}
+
+/// Restores a store's serving-cache mode when dropped, so a `cache: false`
+/// control run never leaks its bypass past the harness.
+struct CacheModeGuard {
+    instance: u64,
+    was_enabled: bool,
+}
+
+impl Drop for CacheModeGuard {
+    fn drop(&mut self) {
+        crate::serving::set_cache_enabled(self.instance, self.was_enabled);
+    }
+}
+
+/// Run the closed loop and report. The table must already hold the corpus
+/// and its index (see [`populate_search_corpus`]). The store's
+/// serving-cache mode is set from `p.cache` for the duration of the run
+/// and restored afterwards; recall@k is computed over the query pool after
+/// the measured phase, against the brute-force control.
+pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<SearchReport> {
+    ensure!(p.clients > 0 && p.queries_per_client > 0, "empty search run");
+    ensure!(p.query_pool > 0, "search needs at least one pool query");
+    ensure!(p.k > 0, "search needs k >= 1");
+    let store = table.store().clone();
+    let _restore = CacheModeGuard {
+        instance: store.instance_id(),
+        was_enabled: crate::serving::cache_enabled(store.instance_id()),
+    };
+    crate::serving::set_cache_enabled(store.instance_id(), p.cache);
+
+    let ivf = IvfIndex::open(table, id)?;
+    let nprobe = if p.nprobe == 0 { ivf.default_nprobe } else { p.nprobe.min(ivf.k) };
+    // The matrix doubles as query source and exact control.
+    let matrix = index::load_matrix(table, id)?;
+    ensure!(matrix.dim == ivf.dim, "corpus dims changed under the index");
+
+    // Query pool: corpus rows plus a little noise — queries live where the
+    // data lives, like retrieval traffic against an embedding table.
+    let mut qrng = Pcg64::new(p.seed ^ 0x5EA4_C401);
+    let pool: Vec<Vec<f32>> = (0..p.query_pool)
+        .map(|_| {
+            let r = qrng.below(matrix.rows);
+            matrix
+                .row(r)
+                .iter()
+                .map(|&v| v + qrng.next_gaussian() as f32 * 0.01)
+                .collect()
+        })
+        .collect();
+
+    if p.warmup {
+        for q in &pool {
+            let _ = ivf.search(q, p.k, nprobe)?;
+        }
+    }
+
+    let (get0, _, _, bytes0, _) = store.stats().snapshot();
+    let hits0 = crate::serving::block_cache().hits();
+    let misses0 = crate::serving::block_cache().misses();
+    let sw = Stopwatch::start();
+    let mut latencies: Vec<f64> = Vec::with_capacity(p.clients * p.queries_per_client);
+    let ivf_ref = &ivf;
+    let pool_ref = &pool;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(p.clients);
+        for client in 0..p.clients {
+            handles.push(scope.spawn(move || -> Result<Vec<f64>> {
+                let mut rng = Pcg64::new(p.seed ^ (0x5EB5_E002 + client as u64));
+                let pick = Zipf::new(pool_ref.len(), p.zipf_s);
+                let mut lat = Vec::with_capacity(p.queries_per_client);
+                for _ in 0..p.queries_per_client {
+                    let q = &pool_ref[pick.sample(&mut rng)];
+                    let req = Stopwatch::start();
+                    let out = ivf_ref.search(q, p.k, nprobe)?;
+                    std::hint::black_box(&out);
+                    lat.push(req.secs());
+                }
+                Ok(lat)
+            }));
+        }
+        for h in handles {
+            let lat = h.join().map_err(|_| anyhow::anyhow!("search client panicked"))??;
+            latencies.extend(lat);
+        }
+        Ok(())
+    })?;
+    let wall = sw.secs();
+    let (get1, _, _, bytes1, _) = store.stats().snapshot();
+    let hits1 = crate::serving::block_cache().hits();
+    let misses1 = crate::serving::block_cache().misses();
+
+    // Recall@k over the pool, after measurement so the measured phase sees
+    // exactly the cache state the warmup flag dictates. The denominator is
+    // the exact results actually returned, so k > rows still reads 1.0 for
+    // a perfect retrieval.
+    let mut hit = 0usize;
+    let mut truth_total = 0usize;
+    for q in &pool {
+        let approx = ivf.search(q, p.k, nprobe)?;
+        let exact = index::exact_topk(&matrix, q, p.k);
+        truth_total += exact.len();
+        let truth: Vec<u32> = exact.iter().map(|n| n.row).collect();
+        hit += approx.iter().filter(|n| truth.contains(&n.row)).count();
+    }
+    let recall = hit as f64 / truth_total.max(1) as f64;
+
+    let mut stats = RunStats::new();
+    for &l in &latencies {
+        stats.push(l);
+    }
+    let queries = latencies.len() as u64;
+    Ok(SearchReport {
+        clients: p.clients,
+        queries,
+        k: p.k,
+        nprobe,
+        cache_enabled: p.cache,
+        recall_at_k: recall,
+        wall_secs: wall,
+        throughput_qps: queries as f64 / wall.max(1e-9),
+        mean_secs: stats.mean(),
+        p50_secs: stats.percentile(50.0),
+        p95_secs: stats.percentile(95.0),
+        p99_secs: stats.percentile(99.0),
+        get_ops: get1 - get0,
+        bytes_read: bytes1 - bytes0,
+        cache_hits: hits1 - hits0,
+        cache_misses: misses1 - misses0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn tiny_params() -> SearchParams {
+        SearchParams {
+            clients: 2,
+            queries_per_client: 10,
+            rows: 300,
+            dim: 8,
+            clusters: 6,
+            query_pool: 5,
+            ..SearchParams::tiny()
+        }
+    }
+
+    fn table() -> DeltaTable {
+        DeltaTable::create(ObjectStoreHandle::mem(), "search-t").unwrap()
+    }
+
+    #[test]
+    fn populate_is_idempotent_and_run_reports_consistent_numbers() {
+        let t = table();
+        let p = tiny_params();
+        populate_search_corpus(&t, "vecs", &p).unwrap();
+        let v1 = t.latest_version().unwrap();
+        populate_search_corpus(&t, "vecs", &p).unwrap();
+        assert_eq!(t.latest_version().unwrap(), v1, "second populate is a no-op");
+
+        let r = run_search(&t, "vecs", &p).unwrap();
+        assert_eq!(r.queries, 20);
+        assert_eq!(r.clients, 2);
+        assert!(r.wall_secs > 0.0 && r.throughput_qps > 0.0);
+        assert!(r.p50_secs <= r.p95_secs && r.p95_secs <= r.p99_secs);
+        assert!((0.0..=1.0).contains(&r.recall_at_k), "recall {}", r.recall_at_k);
+        assert!(r.nprobe >= 1);
+        // JSON report round-trips through the crate's own parser.
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("queries").and_then(|v| v.as_i64()), Some(20));
+        assert_eq!(j.get("cache_enabled").and_then(|v| v.as_bool()), Some(true));
+        assert!(r.summary().contains("q/s"), "{}", r.summary());
+        assert!(r.summary().contains("recall@10"), "{}", r.summary());
+    }
+
+    #[test]
+    fn populate_rejects_geometry_mismatch() {
+        let t = table();
+        let p = tiny_params();
+        populate_search_corpus(&t, "vecs", &p).unwrap();
+        let bigger = SearchParams { rows: p.rows * 2, ..p.clone() };
+        assert!(populate_search_corpus(&t, "vecs", &bigger).is_err(), "rows changed");
+        let wider = SearchParams { dim: p.dim + 1, ..p };
+        assert!(populate_search_corpus(&t, "vecs", &wider).is_err(), "dim changed");
+    }
+
+    #[test]
+    fn cache_mode_is_restored_after_run() {
+        let t = table();
+        let p = SearchParams { cache: false, ..tiny_params() };
+        populate_search_corpus(&t, "vecs", &p).unwrap();
+        let instance = t.store().instance_id();
+        assert!(crate::serving::cache_enabled(instance));
+        run_search(&t, "vecs", &p).unwrap();
+        assert!(crate::serving::cache_enabled(instance), "bypass must not leak past the run");
+    }
+
+    #[test]
+    fn empty_runs_are_rejected() {
+        let t = table();
+        let p = tiny_params();
+        populate_search_corpus(&t, "vecs", &p).unwrap();
+        assert!(run_search(&t, "vecs", &SearchParams { clients: 0, ..p.clone() }).is_err());
+        assert!(run_search(&t, "vecs", &SearchParams { query_pool: 0, ..p.clone() }).is_err());
+        assert!(run_search(&t, "vecs", &SearchParams { k: 0, ..p.clone() }).is_err());
+        assert!(populate_search_corpus(&t, "v2", &SearchParams { rows: 0, ..p }).is_err());
+    }
+}
