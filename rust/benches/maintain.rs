@@ -1,0 +1,82 @@
+//! Maintenance-tier load bench: the closed-loop append/search/optimize
+//! workload of `workload::maintain`, run twice over a fresh simulated
+//! cloud store — once with incremental index upkeep (delta posting
+//! segments in the append commit, folded on OPTIMIZE), once with the
+//! rebuild-per-append control — and compared on append latency, search
+//! QPS and recall.
+//!
+//! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
+//! `DT_SEED` (workload seed, default 7), `DT_BENCH_OUT` (JSON report path,
+//! default `BENCH_maintain.json`). CI runs the tiny scale and gates
+//! `incremental.search_qps` against `bench_baselines/maintain.json`.
+
+use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
+use delta_tensor::prelude::*;
+use delta_tensor::workload::maintain::{
+    populate_maintain_corpus, run_maintain, MaintainParams, MaintainReport,
+};
+
+fn run_once(incremental: bool, base: &MaintainParams) -> MaintainReport {
+    let mut params = base.clone();
+    params.incremental = incremental;
+    let store = ObjectStoreHandle::sim_mem(benchkit::net());
+    let table = DeltaTable::create(store, "maintain").expect("fresh table");
+    populate_maintain_corpus(&table, "vectors", &params).expect("populate");
+    run_maintain(&table, "vectors", &params).expect("maintain run")
+}
+
+fn main() {
+    let mut params = match benchkit::scale() {
+        Scale::Tiny => MaintainParams::tiny(),
+        Scale::Small => MaintainParams::small(),
+        Scale::Paper => MaintainParams::paper(),
+    };
+    if let Ok(seed) = std::env::var("DT_SEED") {
+        params.seed = seed.parse().expect("DT_SEED must be an integer");
+    }
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for incremental in [true, false] {
+        let r = run_once(incremental, &params);
+        assert!(r.exact_full_nprobe, "full-nprobe search must equal brute force");
+        rows.push(Row {
+            label: if incremental { "incremental" } else { "rebuild" }.to_string(),
+            cells: vec![
+                fmt_secs(r.append_p50_secs),
+                fmt_secs(r.append_p99_secs),
+                format!("{:.0}", r.search_qps),
+                fmt_secs(r.search_p99_secs),
+                format!("{:.4}", r.recall_after_maintenance),
+                r.full_rebuilds.to_string(),
+                fmt_secs(r.optimize_secs),
+            ],
+        });
+        reports.push(r);
+    }
+    let headers = [
+        "mode", "append p50", "append p99", "q/s", "search p99", "recall@k", "rebuilds",
+        "optimize",
+    ];
+    print_table(
+        "maintain: append/search/optimize loop, incremental upkeep vs rebuild-per-append",
+        &headers,
+        &rows,
+    );
+    let speedup =
+        reports[1].append_mean_secs.max(1e-9) / reports[0].append_mean_secs.max(1e-9);
+    println!("\nappend-path speedup from incremental upkeep: {speedup:.2}x");
+    println!(
+        "recall: {:.4} maintained vs {:.4} control (full rebuild)",
+        reports[0].recall_after_maintenance, reports[0].recall_full_rebuild
+    );
+
+    let out = std::env::var("DT_BENCH_OUT").unwrap_or_else(|_| "BENCH_maintain.json".to_string());
+    let json = format!(
+        "{{\"bench\":\"maintain\",\"incremental\":{},\"rebuild\":{},\
+         \"append_speedup\":{speedup:.4}}}",
+        reports[0].to_json(),
+        reports[1].to_json()
+    );
+    std::fs::write(&out, json).expect("write bench report");
+    println!("wrote {out}");
+}

@@ -109,6 +109,7 @@ fn real_main() -> Result<()> {
     }
 
     let mut failed = false;
+    let mut gates = Vec::with_capacity(reports.len());
     println!("benchgate: threshold {:.0}% below baseline", threshold * 100.0);
     for (name, path) in &reports {
         let g = check(name, path, &baseline_dir, threshold)?;
@@ -122,6 +123,16 @@ fn real_main() -> Result<()> {
             if g.pass { "ok" } else { "REGRESSION" },
         );
         failed |= !g.pass;
+        gates.push(g);
+    }
+    // Inside GitHub Actions, mirror the verdicts into the job's step
+    // summary so a regression is readable from the run page without
+    // downloading artifacts. Best-effort: a write failure must not turn a
+    // passing gate red.
+    if let Ok(summary_path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        if let Err(e) = write_step_summary(&summary_path, &gates, threshold) {
+            eprintln!("benchgate: could not write step summary: {e:#}");
+        }
     }
     if failed {
         bail!(
@@ -130,6 +141,38 @@ fn real_main() -> Result<()> {
             threshold * 100.0
         );
     }
+    Ok(())
+}
+
+/// Append a per-metric pass/fail markdown table to the file GitHub
+/// Actions exposes via `$GITHUB_STEP_SUMMARY`.
+fn write_step_summary(path: &str, gates: &[Gate], threshold: f64) -> Result<()> {
+    use std::io::Write;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### benchgate — perf regression gate (threshold {:.0}% below baseline)\n\n",
+        threshold * 100.0
+    ));
+    out.push_str("| report | metric | measured | baseline | floor | status |\n");
+    out.push_str("|---|---|---:|---:|---:|---|\n");
+    for g in gates {
+        out.push_str(&format!(
+            "| {} | `{}` | {:.2} | {:.2} | {:.2} | {} |\n",
+            g.name,
+            g.metric,
+            g.measured,
+            g.baseline,
+            g.floor,
+            if g.pass { "✅ pass" } else { "❌ REGRESSION" },
+        ));
+    }
+    out.push('\n');
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {path}"))?;
+    f.write_all(out.as_bytes()).with_context(|| format!("appending to {path}"))?;
     Ok(())
 }
 

@@ -5,15 +5,16 @@
 //!
 //! Commands:
 //!   ingest     generate a workload and store it          (--workload, --layout, ...)
+//!   append     append rows along a tensor's leading dim  (--id, --rows)
 //!   read       read a whole tensor                       (--id)
 //!   slice      read a first-dimension slice              (--id, --start, --end)
 //!   inspect    per-tensor stats (incl. dtype/shape) and read plans
 //!   history    table commit history (time travel log)
-//!   optimize   compact a tensor's files                  (--id)
+//!   optimize   compact files + fold/refresh the index    (--id)
 //!   vacuum     delete unreferenced data objects
 //!   index      ANN index over a stored vector matrix     (index build / index status)
 //!   search     top-k nearest stored vectors              (--id, --query | --row)
-//!   bench      load harnesses                            (bench serve|ingest|search)
+//!   bench      load harnesses                            (bench serve|ingest|search|maintain)
 //! ```
 //!
 //! `bench serve` drives the coordinator with a closed-loop Zipfian hot-set
@@ -140,6 +141,7 @@ pub fn run(args: &Args) -> Result<String> {
     match args.command.as_str() {
         "help" | "--help" | "-h" => Ok(HELP.to_string()),
         "ingest" => cmd_ingest(args),
+        "append" => cmd_append(args),
         "read" => cmd_read(args, false),
         "slice" => cmd_read(args, true),
         "inspect" => cmd_inspect(args),
@@ -161,16 +163,22 @@ USAGE: delta-tensor <command> [--flag value ...]
 COMMANDS
   ingest    --workload ffhq|uber|generic --layout auto|Binary|FTSF|COO|CSR|CSC|CSF|BSGS
             [--id NAME] [--seed N] [--scale tiny|default] [--workers N]
+  append    --id NAME --rows N [--seed N]   append synthetic rows along the
+            leading dimension of a stored FTSF f32 matrix; data, grown shape
+            metadata and (when a fresh index covers it) the delta posting
+            segment land in ONE atomic commit
   read      --id NAME            read a whole tensor, print a summary
   slice     --id NAME --start A --end B    read X[A:B, ...]
   inspect                        per-tensor stats (dtype, shape) and read plans
   history                        commit log (version, operation, timestamp)
-  optimize  --id NAME            compact a tensor's part files
+  optimize  --id NAME            compact a tensor's part files (chunk rank
+                                 preserved) and fold/refresh its index
   vacuum                         delete unreferenced data objects
   index build                    build the IVF ANN index over a 2-D f32/f64 tensor
             [--id NAME] [--k N] [--iters N] [--sample N] [--nprobe N] [--seed N]
             (--id omitted: picks the single indexable matrix, else lists them)
-  index status --id NAME [--version V]    index freshness (fresh/STALE/missing)
+  index status --id NAME [--version V]    index freshness (fresh/STALE/missing;
+            stale output distinguishes rewritten-in-place from changed data)
   search    --id NAME (--query V1,V2,... | --row N) [--k N] [--nprobe N]
   bench serve                    closed-loop Zipfian serving load harness
             [--clients N] [--requests N] [--tensors N] [--dim0 N]
@@ -183,6 +191,11 @@ COMMANDS
             [--clients N] [--queries N] [--rows N] [--dim N] [--clusters N]
             [--pool N] [--k N] [--nprobe N] [--zipf S] [--no-cache]
             [--warmup-off] [--seed N] [--json PATH]
+  bench maintain                 closed-loop append/search/optimize harness
+            [--clients N] [--queries N] [--rounds N] [--append N]
+            [--optimize-every N] [--rows N] [--dim N] [--clusters N]
+            [--pool N] [--k N] [--nprobe N] [--zipf S] [--rebuild-control]
+            [--no-cache] [--seed N] [--json PATH]
 COMMON FLAGS
   --table NAME                   table root (default: tensors)
   --store mem|fs                 backend (default fs)   --root PATH
@@ -250,6 +263,38 @@ fn cmd_ingest(args: &Args) -> Result<String> {
         human_bytes(bytes),
         c.report()
     ))
+}
+
+/// `append`: land synthetic rows along a stored FTSF f32 matrix's leading
+/// dimension through the maintenance-aware append path — one atomic commit
+/// carries the data, the grown shape metadata and (when a fresh index
+/// covers the tensor) the delta posting segment. Rows come from the same
+/// Gaussian-mixture generator the index benches use, at the tensor's
+/// stored dimensionality.
+fn cmd_append(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let id = args.req("id")?.to_string();
+    let rows = args.opt_usize("rows", 64)?;
+    let seed = args.opt_usize("seed", 42)? as u64;
+    let stats = crate::query::table_stats(&table)?;
+    let info = stats
+        .iter()
+        .find(|t| t.id == id)
+        .with_context(|| format!("tensor {id:?} not found; see `inspect`"))?;
+    if info.shape.len() != 2 || info.dtype != "f32" {
+        bail!(
+            "append generates f32 vector rows; tensor {id:?} is {} {:?} — \
+             store a 2-D f32 matrix (e.g. via `bench search`/`bench maintain`)",
+            info.dtype,
+            info.shape
+        );
+    }
+    let dim = info.shape[1];
+    let data = workload::embedding_like(seed, rows, dim, 16, 0.05);
+    let c = Coordinator::new(table, 1, 1);
+    let v = c.append(&id, &data.into())?;
+    let status = crate::index::status(c.table(), &id)?;
+    Ok(format!("appended {rows} rows to {id} @ v{v} (index: {status})\n{}", c.report()))
 }
 
 fn cmd_read(args: &Args, sliced: bool) -> Result<String> {
@@ -344,8 +389,12 @@ fn cmd_bench(args: &Args) -> Result<String> {
         "serve" => cmd_bench_serve(args),
         "ingest" => cmd_bench_ingest(args),
         "search" => cmd_bench_search(args),
+        "maintain" => cmd_bench_maintain(args),
         other => {
-            bail!("unknown bench {other:?} (try `bench serve`, `bench ingest` or `bench search`; figure benches run via `cargo bench`)")
+            bail!(
+                "unknown bench {other:?} (try `bench serve`, `bench ingest`, `bench search` \
+                 or `bench maintain`; figure benches run via `cargo bench`)"
+            )
         }
     }
 }
@@ -399,12 +448,14 @@ fn cmd_index_build(args: &Args) -> Result<String> {
 fn cmd_index_status(args: &Args) -> Result<String> {
     let table = open_table(args)?;
     let id = args.req("id")?;
-    let status = if args.has("version") {
-        crate::index::status_at(&table, id, args.opt_usize("version", 0)? as u64)?
+    if args.has("version") {
+        let status = crate::index::status_at(&table, id, args.opt_usize("version", 0)? as u64)?;
+        Ok(format!("index for {id}: {status}\n"))
     } else {
-        crate::index::status(&table, id)?
-    };
-    Ok(format!("index for {id}: {status}\n"))
+        // The latest-version report distinguishes a rewrite-in-place
+        // (cheap fold refresh) from changed data (full rebuild).
+        crate::index::status_report(&table, id)
+    }
 }
 
 /// `search`: top-k nearest stored vectors to a query, through the IVF
@@ -469,6 +520,34 @@ fn cmd_bench_search(args: &Args) -> Result<String> {
     if let Some(path) = args.flags.get("json") {
         std::fs::write(path, report.to_json())
             .with_context(|| format!("writing search report to {path}"))?;
+    }
+    Ok(format!("{}\n{}", report.summary(), crate::index::report()))
+}
+
+fn cmd_bench_maintain(args: &Args) -> Result<String> {
+    let table = open_table_named(args, "maintain-bench")?;
+    let params = workload::maintain::MaintainParams {
+        clients: args.opt_usize("clients", 4)?,
+        queries_per_client: args.opt_usize("queries", 25)?,
+        rounds: args.opt_usize("rounds", 3)?,
+        append_rows: args.opt_usize("append", 64)?,
+        optimize_every: args.opt_usize("optimize-every", 2)?,
+        rows: args.opt_usize("rows", 2000)?,
+        dim: args.opt_usize("dim", 32)?,
+        clusters: args.opt_usize("clusters", 32)?,
+        query_pool: args.opt_usize("pool", 16)?,
+        k: args.opt_usize("k", 10)?,
+        nprobe: args.opt_usize("nprobe", 0)?,
+        zipf_s: args.opt_f64("zipf", 1.1)?,
+        incremental: !args.has("rebuild-control"),
+        cache: !args.has("no-cache"),
+        seed: args.opt_usize("seed", 7)? as u64,
+    };
+    workload::maintain::populate_maintain_corpus(&table, "vectors", &params)?;
+    let report = workload::maintain::run_maintain(&table, "vectors", &params)?;
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing maintain report to {path}"))?;
     }
     Ok(format!("{}\n{}", report.summary(), crate::index::report()))
 }
@@ -677,6 +756,14 @@ mod tests {
         let out = run(&args(&v)).unwrap();
         assert!(out.contains("fresh"), "{out}");
 
+        // Appending rows keeps the index fresh: the delta posting segment
+        // rides the same commit as the data.
+        let mut v = vec!["append", "--id", "vectors", "--rows", "8", "--seed", "9"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("appended 8 rows"), "{out}");
+        assert!(out.contains("index: fresh"), "{out}");
+
         // Searching with a stored row as the query returns that row first.
         let mut v = vec!["search", "--id", "vectors", "--row", "0", "--k", "3"];
         v.extend_from_slice(&common);
@@ -690,6 +777,19 @@ mod tests {
         assert!(out.contains("built ivf index"), "{out}");
 
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bench_maintain_smoke() {
+        let out = run(&args(&[
+            "bench", "maintain", "--store", "mem", "--clients", "2", "--queries", "4",
+            "--rounds", "2", "--append", "16", "--rows", "300", "--dim", "8", "--clusters",
+            "4", "--pool", "4", "--seed", "3",
+        ]))
+        .unwrap();
+        assert!(out.contains("maintain (incremental)"), "{out}");
+        assert!(out.contains("index.appends"), "{out}");
+        assert!(out.contains("index.folds"), "{out}");
     }
 
     #[test]

@@ -215,12 +215,55 @@ impl Coordinator {
         out
     }
 
-    /// OPTIMIZE: rewrite a tensor's files with the (fresh, defaults-sized)
-    /// format geometry — compacts small files left by incremental writes.
-    /// Two commits (remove, then write), as in Delta's OPTIMIZE + VACUUM.
+    /// Append `data` along a stored FTSF tensor's leading dimension. The
+    /// new part files, the grown shape metadata and — when a fresh vector
+    /// index covers the tensor — a delta posting segment plus the
+    /// re-pinned staleness fingerprint all land in ONE atomic commit (see
+    /// [`crate::index::maintain::append_rows`]): the index stays Fresh and
+    /// exact with zero rebuild work. Returns the committed version.
+    pub fn append(&self, id: &str, data: &TensorData) -> Result<u64> {
+        let sw = Stopwatch::start();
+        let out = crate::index::maintain::append_rows(
+            &self.table,
+            id,
+            data,
+            crate::index::maintain::Upkeep::Incremental,
+        )?;
+        self.metrics.counter("append.requests").add(1);
+        self.metrics.counter("append.rows").add(out.rows_appended as u64);
+        if out.index_maintained {
+            self.metrics.counter("append.index_maintained").add(1);
+        }
+        self.metrics.histogram("append.commit_secs").observe(sw.secs());
+        Ok(out.version)
+    }
+
+    /// OPTIMIZE: rewrite a tensor's files with fresh, defaults-sized file
+    /// geometry — compacts small files left by incremental writes — while
+    /// **preserving the stored chunk rank** (a 2-D FTSF corpus must not be
+    /// rewritten with the 3-D default, which would fail after the removes
+    /// already committed). Two commits for the data (remove, then write),
+    /// as in Delta's OPTIMIZE + VACUUM; when the tensor carries a vector
+    /// index, the same maintenance pass then refreshes it and leaves the
+    /// old artifacts Removed and vacuum-able.
+    ///
+    /// The refresh choice is provenance-driven: the index is **folded**
+    /// (delta segments merged, fingerprint re-pinned, no k-means) only
+    /// when it was Fresh *immediately before this pass's own rewrite* —
+    /// then the rewrite demonstrably preserved content (we read and
+    /// re-wrote the rows ourselves), so the index still describes every
+    /// vector. An index that was already stale covers changes this pass
+    /// knows nothing about (a content overwrite may keep the row count),
+    /// so it gets a full rebuild instead — folding there could silently
+    /// pin wrong vectors as Fresh.
     pub fn optimize(&self, id: &str) -> Result<()> {
         let layout = discover_layout(&self.table, id)?;
-        let fmt = format_by_name(&layout)?;
+        let fmt: Box<dyn TensorStore + Send + Sync> = if layout == "FTSF" {
+            Box::new(crate::formats::FtsfFormat::discover(&self.table, id)?)
+        } else {
+            format_by_name(&layout)?
+        };
+        let pre_status = crate::index::status(&self.table, id)?;
         let data = fmt.read(&self.table, id)?;
         let snap = self.table.snapshot()?;
         let ts = crate::delta::now_ms();
@@ -232,6 +275,17 @@ impl Coordinator {
         actions.push(Action::CommitInfo { operation: "OPTIMIZE".into(), timestamp: ts });
         self.table.commit(actions)?;
         fmt.write(&self.table, id, &data)?;
+        match pre_status {
+            crate::index::IndexStatus::Missing => {}
+            crate::index::IndexStatus::Fresh { .. } => {
+                crate::index::maintain::fold(&self.table, id)?;
+                self.metrics.counter("optimize.index_folds").add(1);
+            }
+            crate::index::IndexStatus::Stale { .. } => {
+                crate::index::build(&self.table, id, &crate::index::BuildParams::default())?;
+                self.metrics.counter("optimize.index_rebuilds").add(1);
+            }
+        }
         self.metrics.counter("optimize.runs").add(1);
         Ok(())
     }

@@ -59,6 +59,25 @@ impl Default for FtsfFormat {
     }
 }
 
+/// What [`FtsfFormat::plan_append`] produced: the staged new-chunk parts
+/// plus the metadata re-Add that grows the stored shape — the caller lands
+/// both in one commit via [`crate::ingest::TensorWriter::commit_with`].
+#[derive(Debug)]
+pub struct AppendPlan {
+    /// New-chunk part descriptors (chunk ids and part numbers continue
+    /// after the existing files).
+    pub plan: WritePlan,
+    /// The geometry-carrying Add action, re-issued with the grown shape.
+    /// Path, size and timestamp are unchanged (the object's bytes are
+    /// untouched), so footer-cache pins and the index fingerprint see the
+    /// same file — only the shape metadata advances.
+    pub meta_update: AddFile,
+    /// Leading-dimension extent before the append.
+    pub old_rows: usize,
+    /// Full tensor shape after the append.
+    pub new_shape: Vec<usize>,
+}
+
 impl FtsfFormat {
     /// FTSF with chunk rank `Dc` and default file geometry.
     pub fn new(chunk_dims: usize) -> Self {
@@ -68,6 +87,89 @@ impl FtsfFormat {
             rows_per_file: 128,
             codec: crate::columnar::Codec::Zstd(1),
         }
+    }
+
+    /// The format instance matching tensor `id`'s **stored** chunk rank
+    /// (file geometry knobs stay at their defaults). OPTIMIZE and append
+    /// must rewrite with the geometry the tensor was written with — the
+    /// default `Dc = 3` is invalid for a 2-D vector corpus.
+    pub fn discover(table: &DeltaTable, id: &str) -> Result<FtsfFormat> {
+        let probe = FtsfFormat::default();
+        let parts = common::tensor_parts(table, id, probe.layout())?;
+        let (_, _, cd) = probe.geometry(table, &parts)?;
+        Ok(FtsfFormat { chunk_dims: cd, ..FtsfFormat::default() })
+    }
+
+    /// Plan appending `data` along the leading dimension of the stored
+    /// tensor `id`: new chunks continue the existing chunk numbering (and
+    /// part-file numbering), and the returned [`AppendPlan::meta_update`]
+    /// re-issues the geometry Add action with the grown shape. Nothing is
+    /// uploaded or committed here — stage the plan on a
+    /// [`crate::ingest::TensorWriter`] and include the meta update (plus
+    /// any derived-state actions) via `commit_with`, so data and metadata
+    /// land atomically. See [`crate::index::maintain::append_rows`] for
+    /// the index-maintaining wrapper.
+    pub fn plan_append(
+        &self,
+        table: &DeltaTable,
+        id: &str,
+        data: &TensorData,
+    ) -> Result<AppendPlan> {
+        let t = match data {
+            TensorData::Dense(t) => t,
+            TensorData::Sparse(_) => bail!("FTSF stores general (dense) tensors"),
+        };
+        let parts = common::tensor_parts(table, id, self.layout())?;
+        let (dims, dtype, cd) = self.geometry(table, &parts)?;
+        ensure!(
+            cd == self.chunk_dims,
+            "tensor {id:?} was stored with chunk rank {cd}, this format uses {} — \
+             use FtsfFormat::discover",
+            self.chunk_dims
+        );
+        ensure!(
+            t.shape().len() == dims.len() && t.shape()[1..] == dims[1..],
+            "append shape {:?} must match stored {:?} on all but the leading dim",
+            t.shape(),
+            dims
+        );
+        ensure!(t.shape()[0] > 0, "append needs at least one new row");
+        ensure!(
+            t.dtype() == dtype,
+            "append dtype {} must match stored {}",
+            t.dtype().name(),
+            dtype.name()
+        );
+        let meta_part = parts.iter().find(|p| p.meta.is_some()).context(
+            "append requires shape metadata on the tensor's Add actions (legacy table?)",
+        )?;
+
+        let old_lead = &dims[..dims.len() - cd];
+        let chunk_base = numel(old_lead);
+        let part_base = parts
+            .iter()
+            .filter_map(|p| part_no_from_path(&p.path))
+            .max()
+            .map_or(0, |n| n + 1);
+        let mut new_shape = dims.clone();
+        new_shape[0] += t.shape()[0];
+        let dims_i64: Vec<i64> = new_shape.iter().map(|&d| d as i64).collect();
+        let parts = self.stage_chunks(id, t, &dims_i64, chunk_base, part_base, None)?;
+        let mut meta_update = meta_part.clone();
+        meta_update.meta = Some(
+            crate::jsonx::Json::obj([
+                ("shape", crate::jsonx::Json::ints(new_shape.iter().map(|&d| d as i64))),
+                ("dtype", crate::jsonx::Json::from(dtype.name())),
+                ("cdims", crate::jsonx::Json::from(cd)),
+            ])
+            .dump(),
+        );
+        Ok(AppendPlan {
+            plan: WritePlan { tensor_id: id.to_string(), operation: "APPEND FTSF".into(), parts },
+            meta_update,
+            old_rows: dims[0],
+            new_shape,
+        })
     }
 
     /// Shape of the leading (chunk-enumerating) dims for a tensor shape.
@@ -118,27 +220,30 @@ impl FtsfFormat {
             .map(|p| PartRead::pruned(p, "chunk_idx", lo, hi, &["chunk_idx", "chunk"]))
             .collect()
     }
-}
 
-impl TensorStore for FtsfFormat {
-    fn layout(&self) -> &'static str {
-        "FTSF"
-    }
-
-    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
-        let t = match data {
-            TensorData::Dense(t) => t,
-            TensorData::Sparse(_) => bail!("FTSF stores general (dense) tensors"),
-        };
-        let shape = t.shape().to_vec();
-        let lead = self.lead_shape(&shape)?.to_vec();
-        let chunk_shape = shape[lead.len()..].to_vec();
-        let n_chunks = numel(&lead);
-        let chunk_bytes = numel(&chunk_shape) * t.dtype().size();
-        let dims_i64: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    /// Stage `t`'s chunks as part descriptors: chunk ids start at
+    /// `chunk_base`, part-file numbering at `part_base`, and `dims_i64` is
+    /// the full tensor shape recorded in the per-row metadata columns. The
+    /// first staged part carries `meta` on its Add action (the zero-GET
+    /// geometry source); appends pass `None` and update the original
+    /// carrier instead.
+    fn stage_chunks(
+        &self,
+        id: &str,
+        t: &DenseTensor,
+        dims_i64: &[i64],
+        chunk_base: usize,
+        part_base: usize,
+        mut meta: Option<String>,
+    ) -> Result<Vec<crate::ingest::PartSpec>> {
+        let shape = t.shape();
+        let lead = self.lead_shape(shape)?;
+        let chunk_shape = &shape[lead.len()..];
+        let n_chunks = numel(lead);
+        let chunk_bytes = numel(chunk_shape) * t.dtype().size();
 
         let mut parts = Vec::new();
-        let mut part_no = 0usize;
+        let mut part_no = part_base;
         let mut file_groups: Vec<Vec<ColumnData>> = Vec::new();
         let mut file_min = i64::MAX;
         let mut file_max = i64::MIN;
@@ -151,18 +256,18 @@ impl TensorStore for FtsfFormat {
             let mut blobs = Vec::with_capacity(rows);
             for ci in c..g_end {
                 ids.push(id.to_string());
-                idxs.push(ci as i64);
+                idxs.push((chunk_base + ci) as i64);
                 let start = ci * chunk_bytes;
                 blobs.push(t.bytes()[start..start + chunk_bytes].to_vec());
             }
-            file_min = file_min.min(c as i64);
-            file_max = file_max.max((g_end - 1) as i64);
+            file_min = file_min.min((chunk_base + c) as i64);
+            file_max = file_max.max((chunk_base + g_end - 1) as i64);
             file_groups.push(vec![
                 ColumnData::Str(ids),
                 ColumnData::Int(idxs),
                 ColumnData::Bytes(blobs),
-                ColumnData::Int(vec![shape.len() as i64; rows]),
-                ColumnData::IntList(vec![dims_i64.clone(); rows]),
+                ColumnData::Int(vec![dims_i64.len() as i64; rows]),
+                ColumnData::IntList(vec![dims_i64.to_vec(); rows]),
                 ColumnData::Int(vec![self.chunk_dims as i64; rows]),
                 ColumnData::Str(vec![t.dtype().name().to_string(); rows]),
             ]);
@@ -178,24 +283,44 @@ impl TensorStore for FtsfFormat {
                     WriteOptions { codec: self.codec, row_group_rows: self.rows_per_group },
                     Some((file_min, file_max)),
                 )?;
-                if part_no == 0 {
-                    // shape/dtype/chunk-rank on the Add action: slice reads
-                    // resolve geometry with zero metadata GETs.
-                    part.meta = Some(
-                        crate::jsonx::Json::obj([
-                            ("shape", crate::jsonx::Json::ints(shape.iter().map(|&d| d as i64))),
-                            ("dtype", crate::jsonx::Json::from(t.dtype().name())),
-                            ("cdims", crate::jsonx::Json::from(self.chunk_dims)),
-                        ])
-                        .dump(),
-                    );
-                }
+                part.meta = meta.take();
                 parts.push(part);
                 part_no += 1;
                 file_min = i64::MAX;
                 file_max = i64::MIN;
             }
         }
+        Ok(parts)
+    }
+}
+
+/// The part number encoded in a `...-part-NNNNN.dtpq` path, if any.
+fn part_no_from_path(path: &str) -> Option<usize> {
+    let stem = path.strip_suffix(".dtpq")?;
+    let idx = stem.rfind("-part-")?;
+    stem[idx + 6..].parse().ok()
+}
+
+impl TensorStore for FtsfFormat {
+    fn layout(&self) -> &'static str {
+        "FTSF"
+    }
+
+    fn plan_write(&self, id: &str, data: &TensorData) -> Result<WritePlan> {
+        let t = match data {
+            TensorData::Dense(t) => t,
+            TensorData::Sparse(_) => bail!("FTSF stores general (dense) tensors"),
+        };
+        let dims_i64: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        // shape/dtype/chunk-rank on the first Add action: slice reads
+        // resolve geometry with zero metadata GETs.
+        let meta = crate::jsonx::Json::obj([
+            ("shape", crate::jsonx::Json::ints(dims_i64.iter().copied())),
+            ("dtype", crate::jsonx::Json::from(t.dtype().name())),
+            ("cdims", crate::jsonx::Json::from(self.chunk_dims)),
+        ])
+        .dump();
+        let parts = self.stage_chunks(id, t, &dims_i64, 0, 0, Some(meta))?;
         Ok(WritePlan { tensor_id: id.to_string(), operation: "WRITE FTSF".into(), parts })
     }
 
@@ -439,6 +564,74 @@ mod tests {
             fmt.read_slice(&tbl, "img", &s).unwrap().to_dense().unwrap(),
             t.slice(&s).unwrap()
         );
+    }
+
+    #[test]
+    fn plan_append_continues_numbering_and_roundtrips() {
+        let t0 = random_dense(11, &[10, 4]);
+        let extra = random_dense(12, &[6, 4]);
+        let tbl = table();
+        let fmt = FtsfFormat { rows_per_group: 4, rows_per_file: 8, ..FtsfFormat::new(1) };
+        fmt.write(&tbl, "m", &t0.clone().into()).unwrap();
+        let existing = common::tensor_parts(&tbl, "m", "FTSF").unwrap();
+        let max_no =
+            existing.iter().filter_map(|p| part_no_from_path(&p.path)).max().unwrap();
+
+        let ap = fmt.plan_append(&tbl, "m", &extra.clone().into()).unwrap();
+        assert_eq!(ap.old_rows, 10);
+        assert_eq!(ap.new_shape, vec![16, 4]);
+        assert!(
+            ap.plan.parts.iter().all(|p| p.min_key.unwrap() >= 10),
+            "appended chunks continue after the stored ones"
+        );
+        for (i, p) in ap.plan.parts.iter().enumerate() {
+            assert_eq!(part_no_from_path(&p.rel_path), Some(max_no + 1 + i));
+        }
+
+        // Land parts + grown-shape meta update atomically, then read back.
+        let meta_update = ap.meta_update;
+        let mut w = crate::ingest::TensorWriter::new(&tbl);
+        w.stage(ap.plan);
+        w.commit_with(move |_| Ok(vec![crate::delta::Action::Add(meta_update)])).unwrap();
+        let mut bytes = t0.bytes().to_vec();
+        bytes.extend_from_slice(extra.bytes());
+        let want = DenseTensor::from_bytes(DType::F32, &[16, 4], bytes).unwrap();
+        assert_eq!(fmt.read(&tbl, "m").unwrap().to_dense().unwrap(), want);
+        // A slice crossing the append boundary decodes from both eras.
+        let s = Slice::dim0(8, 12);
+        assert_eq!(
+            fmt.read_slice(&tbl, "m", &s).unwrap().to_dense().unwrap(),
+            want.slice(&s).unwrap()
+        );
+    }
+
+    #[test]
+    fn plan_append_validates_geometry() {
+        let tbl = table();
+        let fmt = FtsfFormat::new(1);
+        fmt.write(&tbl, "m", &random_dense(1, &[6, 4]).into()).unwrap();
+        // Trailing-dim mismatch, dtype mismatch, empty append, sparse input.
+        assert!(fmt.plan_append(&tbl, "m", &random_dense(2, &[3, 5]).into()).is_err());
+        let wrong_dtype =
+            DenseTensor::from_u8(&[2, 4], vec![0; 8]).unwrap();
+        assert!(fmt.plan_append(&tbl, "m", &wrong_dtype.into()).is_err());
+        assert!(fmt.plan_append(&tbl, "m", &random_dense(3, &[0, 4]).into()).is_err());
+        let s = crate::tensor::SparseCoo::new(DType::F32, &[2, 4], vec![0, 0], vec![1.0]).unwrap();
+        assert!(fmt.plan_append(&tbl, "m", &s.into()).is_err());
+        // A chunk-rank mismatch is rejected; discover() resolves it.
+        let wrong_rank = FtsfFormat::new(3);
+        assert!(wrong_rank.plan_append(&tbl, "m", &random_dense(4, &[2, 4]).into()).is_err());
+        assert_eq!(FtsfFormat::discover(&tbl, "m").unwrap().chunk_dims, 1);
+        let tbl2 = table();
+        FtsfFormat::new(3).write(&tbl2, "v", &random_dense(5, &[4, 2, 3, 3]).into()).unwrap();
+        assert_eq!(FtsfFormat::discover(&tbl2, "v").unwrap().chunk_dims, 3);
+    }
+
+    #[test]
+    fn part_numbers_parse_from_paths() {
+        assert_eq!(part_no_from_path("data/x/ftsf-part-00042.dtpq"), Some(42));
+        assert_eq!(part_no_from_path("data/x/binary.bin"), None);
+        assert_eq!(part_no_from_path("data/x/ftsf-part-abc.dtpq"), None);
     }
 
     #[test]

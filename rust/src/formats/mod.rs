@@ -32,7 +32,7 @@ pub use bsgs::BsgsFormat;
 pub use coo::CooFormat;
 pub use csf::CsfFormat;
 pub use csr::{CsrFormat, CsrOrientation};
-pub use ftsf::FtsfFormat;
+pub use ftsf::{AppendPlan, FtsfFormat};
 
 use crate::delta::DeltaTable;
 use crate::ingest::WritePlan;

@@ -1,0 +1,398 @@
+//! Incremental index maintenance — the paper's Delta-log discipline
+//! applied to derived state: an append must not cost a full index rebuild,
+//! and OPTIMIZE must leave the index as fresh as the data it rewrote.
+//!
+//! Two operations keep the IVF index of [`crate::index`] in lockstep with
+//! its tensor:
+//!
+//! * **Append** ([`append_rows`]): new rows land along the tensor's
+//!   leading dimension through the write engine, and — when a fresh index
+//!   covers the tensor — the same atomic commit carries a **delta posting
+//!   segment**: only the new rows are assigned to the *existing* centroids
+//!   (no k-means, no reassignment of old rows), and the index's staleness
+//!   fingerprint is re-pinned to the post-append file set. Search scans
+//!   delta segments alongside the main posting lists, so full-`nprobe`
+//!   results stay exactly equal to brute force over the appended corpus,
+//!   and the index reports Fresh with **zero** rebuild work. One commit:
+//!   either the data, its grown shape metadata, the delta segment and the
+//!   re-pinned fingerprint are all visible, or none are.
+//! * **Fold** ([`fold`]): delta segments accumulated by appends merge into
+//!   fresh main artifacts — same centroids, concatenated posting lists —
+//!   in one commit that Removes every superseded artifact (VACUUM reclaims
+//!   the objects). `Coordinator::optimize` folds after its rewrite **only
+//!   when the index was Fresh going in** — then the pass provably
+//!   preserved content; a pre-stale index gets a full rebuild instead,
+//!   because row-count stability alone cannot distinguish a compaction
+//!   from a same-shape content overwrite.
+
+use crate::delta::{Action, AddFile, DeltaTable};
+use crate::formats::{FtsfFormat, TensorData};
+use crate::ingest::TensorWriter;
+use crate::objectstore::ObjectStore;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::sync::atomic::Ordering;
+
+use super::{kmeans, Matrix, STATS};
+
+/// Whether an append should maintain the tensor's index incrementally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Upkeep {
+    /// Assign new rows to the existing centroids and land a delta posting
+    /// segment (plus the re-pinned fingerprint) in the append commit.
+    Incremental,
+    /// Append data only; an existing index flips to Stale (the control
+    /// group, and the escape hatch for callers that rebuild on their own
+    /// schedule).
+    Skip,
+}
+
+/// What one append committed.
+#[derive(Debug, Clone)]
+pub struct AppendSummary {
+    /// Log version the append landed as (exactly one commit).
+    pub version: u64,
+    /// Rows appended along the leading dimension.
+    pub rows_appended: usize,
+    /// Leading-dimension extent after the append.
+    pub rows_total: usize,
+    /// True when a delta posting segment rode the commit (index existed,
+    /// was fresh, and upkeep was [`Upkeep::Incremental`]).
+    pub index_maintained: bool,
+    /// Delta-segment bytes uploaded (0 when not maintained).
+    pub delta_bytes: u64,
+}
+
+/// Dense 2-D `data` as the index tier's f32 matrix (f64 narrows, like
+/// [`super::load_matrix`]).
+fn matrix_of(data: &TensorData) -> Result<Matrix> {
+    let dense = data.to_dense()?;
+    let shape = dense.shape().to_vec();
+    ensure!(shape.len() == 2, "index upkeep needs a 2-D vector matrix, got rank {}", shape.len());
+    let vals: Vec<f32> = match dense.dtype() {
+        crate::tensor::DType::F32 => dense.as_f32()?,
+        crate::tensor::DType::F64 => dense.as_f64()?.into_iter().map(|v| v as f32).collect(),
+        other => bail!("index upkeep needs f32/f64 rows, got {}", other.name()),
+    };
+    Ok(Matrix { rows: shape[0], dim: shape[1], data: vals })
+}
+
+/// Pre-commit upkeep state: everything the commit finalizer needs to land
+/// the delta segment atomically with the data.
+struct UpkeepState {
+    cent_add: AddFile,
+    covers: u64,
+    postings_path: String,
+    rows_before: u64,
+    rel_path: String,
+    bytes: Vec<u8>,
+}
+
+/// Append `data` along the leading dimension of FTSF tensor `id`, landing
+/// everything in **one atomic commit**: the new part files, the
+/// grown-shape metadata update, and — with [`Upkeep::Incremental`] and a
+/// fresh index over a 2-D corpus — a delta posting segment plus the
+/// re-pinned staleness fingerprint. The index answers stay exact (full
+/// `nprobe` equals brute force over the appended corpus) and no rebuild is
+/// issued.
+pub fn append_rows(
+    table: &DeltaTable,
+    id: &str,
+    data: &TensorData,
+    upkeep: Upkeep,
+) -> Result<AppendSummary> {
+    let snap = crate::query::engine::snapshot(table)?;
+    let fmt = FtsfFormat::discover(table, id)
+        .with_context(|| format!("append maintains FTSF tensors; is {id:?} stored as FTSF?"))?;
+    let ap = fmt.plan_append(table, id, data)?;
+    let rows_appended = data.shape()[0];
+    let rows_total = ap.new_shape[0];
+
+    // Plan the incremental upkeep before committing anything: it applies
+    // when the index exists, is fresh w.r.t. the pre-append snapshot (a
+    // stale index must not be silently re-pinned over changes it never
+    // saw), and the corpus is 2-D.
+    let mut upkeep_state: Option<UpkeepState> = None;
+    if upkeep == Upkeep::Incremental && ap.new_shape.len() == 2 {
+        if let Some((cent_add, meta)) = super::find_centroid_add(&snap, id) {
+            if super::staleness(&snap, id, &meta).is_fresh() {
+                let key = table.data_key(&cent_add.path);
+                let blocks = crate::serving::fetch_spans(
+                    table.store(),
+                    &key,
+                    cent_add.size,
+                    cent_add.timestamp,
+                    &[(0, cent_add.size)],
+                )?;
+                let art = super::decode_centroid_artifact(blocks[0].as_slice())?;
+                let new = matrix_of(data)?;
+                ensure!(
+                    new.dim == art.dim,
+                    "appended rows have dim {}, index has {}",
+                    new.dim,
+                    art.dim
+                );
+                let k = art.offsets.len() - 1;
+                let mut lists: Vec<Vec<u32>> = vec![Vec::new(); k];
+                for r in 0..new.rows {
+                    let (c, _) = kmeans::nearest(&art.centroids, art.dim, new.row(r));
+                    lists[c].push(r as u32);
+                }
+                let bytes = super::encode_delta_segment(&new, &lists, ap.old_rows as u32);
+                let nonce = crate::delta::now_ms();
+                let rel_path =
+                    format!("{}ivf-{nonce:016x}-delta.idx", super::artifact_prefix(id));
+                upkeep_state = Some(UpkeepState {
+                    cent_add: cent_add.clone(),
+                    covers: meta.covers,
+                    postings_path: meta.postings_path.clone(),
+                    rows_before: meta.rows.unwrap_or(art.rows),
+                    rel_path,
+                    bytes,
+                });
+            }
+        }
+    }
+
+    // Pre-append live data files: the finalizer merges them with the new
+    // Adds (sizes known only post-encode) into the re-pinned fingerprint.
+    let old_files: Vec<(String, u64, i64)> = snap
+        .files_for_tensor(id)
+        .iter()
+        .map(|f| (f.path.clone(), f.size, f.timestamp))
+        .collect();
+
+    let maintained = upkeep_state.is_some();
+    let delta_bytes = upkeep_state.as_ref().map_or(0, |s| s.bytes.len() as u64);
+    let meta_update = ap.meta_update;
+    let mut w = TensorWriter::new(table);
+    w.stage(ap.plan);
+    let version = w.commit_with(move |adds| {
+        // The grown-shape metadata re-Add rides every append.
+        let mut extra = vec![Action::Add(meta_update)];
+        if let Some(st) = upkeep_state {
+            // Delta artifact durable before the commit references it.
+            let key = table.data_key(&st.rel_path);
+            table.store().put_many(&[(key.as_str(), st.bytes.as_slice())])?;
+            // Fingerprint of the post-append file set, in path order. The
+            // metadata re-Add keeps part 0's (path, size, timestamp)
+            // unchanged, so only the new parts move the pin.
+            let mut merged: Vec<(&str, u64, i64)> =
+                old_files.iter().map(|(p, s, t)| (p.as_str(), *s, *t)).collect();
+            merged.extend(
+                adds.iter()
+                    .filter(|a| a.tensor_id == id)
+                    .map(|a| (a.path.as_str(), a.size, a.timestamp)),
+            );
+            merged.sort_by(|a, b| a.0.cmp(b.0));
+            let fp = super::fingerprint_of(merged.into_iter());
+            extra.push(Action::Add(AddFile {
+                path: st.rel_path.clone(),
+                size: st.bytes.len() as u64,
+                rows: rows_appended as u64,
+                tensor_id: String::new(),
+                min_key: None,
+                max_key: None,
+                timestamp: crate::delta::now_ms(),
+                meta: Some(super::encode_delta_meta(id, rows_appended as u64)),
+            }));
+            // Re-pin the centroid artifact: same object bytes, refreshed
+            // fingerprint and row count in its Add metadata.
+            let mut cent = st.cent_add;
+            cent.meta = Some(super::encode_meta(
+                id,
+                st.covers,
+                fp,
+                &st.postings_path,
+                st.rows_before + rows_appended as u64,
+            ));
+            extra.push(Action::Add(cent));
+        }
+        Ok(extra)
+    })?;
+
+    if maintained {
+        STATS.appends.fetch_add(1, Ordering::Relaxed);
+        STATS.rows_appended.fetch_add(rows_appended as u64, Ordering::Relaxed);
+        STATS.delta_segments.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(AppendSummary {
+        version,
+        rows_appended,
+        rows_total,
+        index_maintained: maintained,
+        delta_bytes,
+    })
+}
+
+/// What one fold committed.
+#[derive(Debug, Clone)]
+pub struct FoldSummary {
+    /// Log version the fold landed as.
+    pub version: u64,
+    /// Delta segments merged away.
+    pub segments_folded: usize,
+    /// Rows the folded index covers.
+    pub rows: u64,
+    /// New centroid-artifact bytes.
+    pub centroid_bytes: u64,
+    /// New posting-artifact bytes.
+    pub posting_bytes: u64,
+}
+
+/// Merge the delta posting segments into fresh main artifacts: same
+/// centroids (no k-means), each centroid's list the concatenation of its
+/// main entries and every delta segment's entries, committed in **one**
+/// version whose Removes retire all superseded artifacts (VACUUM reclaims
+/// the objects). The new fingerprint pins the *current* data files, so a
+/// fold right after an OPTIMIZE rewrite leaves the index Fresh.
+///
+/// **Contract**: the caller must know the tensor's content and row order
+/// are unchanged from what the index (main + deltas) describes —
+/// `Coordinator::optimize` satisfies this by folding only when the index
+/// was Fresh immediately before its own read-and-rewrite. The row-count
+/// guard below is a backstop against obvious drift (it refuses when the
+/// counts diverge), **not** proof of content equality: a same-shape
+/// overwrite passes it, and folding over one would pin stale vectors as
+/// Fresh. When in doubt, [`super::build`].
+pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
+    let snap = crate::query::engine::snapshot(table)?;
+    let (cent_add, meta) = super::find_centroid_add(&snap, id)
+        .with_context(|| format!("no index to fold for tensor {id:?}"))?;
+    let post_add = snap
+        .files
+        .get(&meta.postings_path)
+        .with_context(|| format!("index postings {} not live", meta.postings_path))?;
+    let store = table.store();
+
+    let key = table.data_key(&cent_add.path);
+    let span = [(0, cent_add.size)];
+    let blocks =
+        crate::serving::fetch_spans(store, &key, cent_add.size, cent_add.timestamp, &span)?;
+    let art = super::decode_centroid_artifact(blocks[0].as_slice())?;
+    let k = art.offsets.len() - 1;
+
+    let main: Vec<u8> = if post_add.size > 0 {
+        let key = table.data_key(&post_add.path);
+        let blocks = crate::serving::fetch_spans(
+            store,
+            &key,
+            post_add.size,
+            post_add.timestamp,
+            &[(0, post_add.size)],
+        )?;
+        blocks[0].to_vec()
+    } else {
+        Vec::new()
+    };
+
+    let mut segs: Vec<(super::DeltaHeader, Vec<u8>)> = Vec::new();
+    let mut delta_rows = 0u64;
+    for (add, _) in super::find_delta_adds(&snap, id) {
+        let key = table.data_key(&add.path);
+        let blocks =
+            crate::serving::fetch_spans(store, &key, add.size, add.timestamp, &[(0, add.size)])?;
+        let bytes = blocks[0].to_vec();
+        let hdr_len = super::delta_header_len(k) as usize;
+        ensure!(bytes.len() >= hdr_len, "delta segment {} truncated", add.path);
+        let hdr = super::decode_delta_header(&bytes[..hdr_len], k)?;
+        ensure!(hdr.dim == art.dim, "delta segment {} dim mismatch", add.path);
+        ensure!(
+            bytes.len() as u64 == hdr_len as u64 + *hdr.offsets.last().unwrap(),
+            "delta segment {} size does not match its offset table",
+            add.path
+        );
+        delta_rows += hdr.rows;
+        segs.push((hdr, bytes));
+    }
+
+    let rows_total = art.rows + delta_rows;
+    if let Some(live) = super::live_rows(&snap, id) {
+        ensure!(
+            live == rows_total,
+            "fold cannot cover data changes: {rows_total} rows indexed vs {live} live — \
+             a full rebuild is required"
+        );
+    }
+
+    // Merge per centroid: main entries, then each delta's, preserving
+    // append order (row ids are globally unique, so list order only
+    // affects scan order, not results).
+    let hdr_len = super::delta_header_len(k) as usize;
+    let seg_bytes: usize = segs.iter().map(|(_, b)| b.len()).sum();
+    let mut postings = Vec::with_capacity(main.len() + seg_bytes);
+    let mut offsets = Vec::with_capacity(k + 1);
+    offsets.push(0u64);
+    for c in 0..k {
+        postings
+            .extend_from_slice(&main[art.offsets[c] as usize..art.offsets[c + 1] as usize]);
+        for (hdr, bytes) in &segs {
+            let (lo, hi) = (hdr.offsets[c] as usize, hdr.offsets[c + 1] as usize);
+            postings.extend_from_slice(&bytes[hdr_len + lo..hdr_len + hi]);
+        }
+        offsets.push(postings.len() as u64);
+    }
+    let centroid_bytes =
+        super::encode_centroid_artifact(rows_total, art.dim, art.nprobe, &art.centroids, &offsets);
+
+    // Upload + commit, exactly like a build: one batched PUT, one version
+    // carrying the Adds, the Removes of every superseded artifact, and the
+    // fingerprint of the current data files.
+    let data_files = snap.files_for_tensor(id);
+    let fp = super::fingerprint(&data_files);
+    let nonce = crate::delta::now_ms();
+    let prefix = super::artifact_prefix(id);
+    let rel_cent = format!("{prefix}ivf-{nonce:016x}-centroids.idx");
+    let rel_post = format!("{prefix}ivf-{nonce:016x}-postings.idx");
+    let key_cent = table.data_key(&rel_cent);
+    let key_post = table.data_key(&rel_post);
+    store.put_many(&[
+        (key_cent.as_str(), centroid_bytes.as_slice()),
+        (key_post.as_str(), postings.as_slice()),
+    ])?;
+
+    let ts = crate::delta::now_ms();
+    let mut actions: Vec<Action> = snap
+        .files()
+        .filter(|f| f.path.starts_with(&prefix))
+        .map(|f| Action::Remove { path: f.path.clone(), timestamp: ts })
+        .collect();
+    actions.push(Action::Add(AddFile {
+        path: rel_cent,
+        size: centroid_bytes.len() as u64,
+        rows: k as u64,
+        tensor_id: String::new(),
+        min_key: None,
+        max_key: None,
+        timestamp: ts,
+        meta: Some(super::encode_meta(id, snap.version, fp, &rel_post, rows_total)),
+    }));
+    actions.push(Action::Add(AddFile {
+        path: rel_post,
+        size: postings.len() as u64,
+        rows: rows_total,
+        tensor_id: String::new(),
+        min_key: None,
+        max_key: None,
+        timestamp: ts,
+        meta: Some(
+            crate::jsonx::Json::obj([
+                ("index", crate::jsonx::Json::from("ivf-postings")),
+                ("tensor", crate::jsonx::Json::from(id)),
+            ])
+            .dump(),
+        ),
+    }));
+    actions.push(Action::CommitInfo { operation: "FOLD INDEX".into(), timestamp: ts });
+    let version = table.commit(actions)?;
+
+    STATS.folds.fetch_add(1, Ordering::Relaxed);
+    Ok(FoldSummary {
+        version,
+        segments_folded: segs.len(),
+        rows: rows_total,
+        centroid_bytes: centroid_bytes.len() as u64,
+        posting_bytes: postings.len() as u64,
+    })
+}
+

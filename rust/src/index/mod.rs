@@ -19,9 +19,13 @@
 //! * **Staleness**: the commit pins the index to a fingerprint of the
 //!   tensor's live data files (path, size, timestamp). Opening the table at
 //!   any version recomputes the fingerprint from that snapshot:
-//!   mismatch (appends, OPTIMIZE rewrites) ⇒ [`IndexStatus::Stale`];
+//!   mismatch (un-maintained appends, rewrites) ⇒ [`IndexStatus::Stale`];
 //!   a version predating the build has no artifacts ⇒
 //!   [`IndexStatus::Missing`]. Rebuilds land as one commit, like builds.
+//!   The [`maintain`] submodule keeps the index Fresh *through* change:
+//!   appends land a delta posting segment and re-pin the fingerprint in
+//!   the same commit as the data, and OPTIMIZE folds the segments back
+//!   into the main artifacts.
 //! * **Search** ([`IvfIndex::search`]): rank centroids against the query,
 //!   probe the `nprobe` nearest posting lists, scan their entries for the
 //!   top-k by squared L2. Posting lists are fetched as byte spans through
@@ -38,6 +42,7 @@
 //! `index build` / `index status` / `search` / `bench search`.
 
 pub mod kmeans;
+pub mod maintain;
 
 use crate::delta::{Action, AddFile, DeltaTable, Snapshot};
 use crate::jsonx::{self, Json};
@@ -362,12 +367,21 @@ pub struct IndexStats {
     pub searches: AtomicU64,
     /// Brute-force control searches served.
     pub exact_searches: AtomicU64,
-    /// Posting lists probed.
+    /// Posting lists probed (delta-segment lists count separately, so
+    /// `postings_scanned / probes` stays an honest per-list size).
     pub probes: AtomicU64,
     /// Posting entries scanned.
     pub postings_scanned: AtomicU64,
     /// Centroid-artifact loads (index opens).
     pub centroid_loads: AtomicU64,
+    /// Incremental append-maintenance commits (data + delta segment).
+    pub appends: AtomicU64,
+    /// Rows assigned to existing centroids by those appends.
+    pub rows_appended: AtomicU64,
+    /// Delta posting segments landed by appends.
+    pub delta_segments: AtomicU64,
+    /// Fold maintenance passes (delta segments merged into main artifacts).
+    pub folds: AtomicU64,
 }
 
 static STATS: Lazy<IndexStats> = Lazy::new(IndexStats::default);
@@ -383,7 +397,9 @@ pub fn report() -> String {
     format!(
         "index.builds {}\nindex.vectors_indexed {}\nindex.kmeans_iters {}\n\
          index.searches {}\nindex.exact_searches {}\nindex.probes {}\n\
-         index.postings_scanned {}\nindex.centroid_loads {}\n",
+         index.postings_scanned {}\nindex.centroid_loads {}\n\
+         index.appends {}\nindex.rows_appended {}\nindex.delta_segments {}\n\
+         index.folds {}\n",
         STATS.builds.load(Ordering::Relaxed),
         STATS.vectors_indexed.load(Ordering::Relaxed),
         STATS.kmeans_iters.load(Ordering::Relaxed),
@@ -392,6 +408,10 @@ pub fn report() -> String {
         STATS.probes.load(Ordering::Relaxed),
         STATS.postings_scanned.load(Ordering::Relaxed),
         STATS.centroid_loads.load(Ordering::Relaxed),
+        STATS.appends.load(Ordering::Relaxed),
+        STATS.rows_appended.load(Ordering::Relaxed),
+        STATS.delta_segments.load(Ordering::Relaxed),
+        STATS.folds.load(Ordering::Relaxed),
     )
 }
 
@@ -399,6 +419,14 @@ pub fn report() -> String {
 /// timestamp of each, in path order. Any append, remove or rewrite of the
 /// covered tensor changes it — the staleness rule the index pins itself to.
 fn fingerprint(files: &[&AddFile]) -> u64 {
+    fingerprint_of(files.iter().map(|f| (f.path.as_str(), f.size, f.timestamp)))
+}
+
+/// [`fingerprint`] over raw `(path, size, timestamp)` records — the append
+/// path uses it to pin the index to a file set that includes Add actions
+/// not yet committed (the very commit carrying them updates the pin). The
+/// caller supplies records in path order, matching `files_for_tensor`.
+fn fingerprint_of<'a>(parts: impl Iterator<Item = (&'a str, u64, i64)>) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = OFFSET;
@@ -408,10 +436,10 @@ fn fingerprint(files: &[&AddFile]) -> u64 {
             h = h.wrapping_mul(PRIME);
         }
     };
-    for f in files {
-        eat(f.path.as_bytes());
-        eat(&f.size.to_le_bytes());
-        eat(&f.timestamp.to_le_bytes());
+    for (path, size, ts) in parts {
+        eat(path.as_bytes());
+        eat(&size.to_le_bytes());
+        eat(&ts.to_le_bytes());
         eat(&[0xFF]); // record separator
     }
     h
@@ -428,15 +456,20 @@ struct ArtifactMeta {
     covers: u64,
     fp: u64,
     postings_path: String,
+    /// Total rows the index covers — build rows plus every appended delta
+    /// segment's rows (absent on artifacts written before the maintenance
+    /// tier existed).
+    rows: Option<u64>,
 }
 
-fn encode_meta(id: &str, covers: u64, fp: u64, postings_path: &str) -> String {
+fn encode_meta(id: &str, covers: u64, fp: u64, postings_path: &str, rows: u64) -> String {
     Json::obj([
         ("index", Json::from("ivf")),
         ("tensor", Json::from(id)),
         ("covers", Json::from(covers)),
         ("fp", Json::from(format!("{fp:016x}"))),
         ("postings", Json::from(postings_path)),
+        ("rows", Json::from(rows)),
     ])
     .dump()
 }
@@ -450,7 +483,39 @@ fn decode_meta(meta: &str) -> Option<ArtifactMeta> {
         covers: j.get("covers")?.as_u64()?,
         fp: u64::from_str_radix(j.get("fp")?.as_str()?, 16).ok()?,
         postings_path: j.get("postings")?.as_str()?.to_string(),
+        rows: j.get("rows").and_then(Json::as_u64),
     })
+}
+
+/// `meta` JSON of a delta posting segment's Add action.
+fn encode_delta_meta(id: &str, rows: u64) -> String {
+    Json::obj([
+        ("index", Json::from("ivf-delta")),
+        ("tensor", Json::from(id)),
+        ("rows", Json::from(rows)),
+    ])
+    .dump()
+}
+
+/// Whether an Add action is a delta posting segment (and how many rows it
+/// carries).
+fn decode_delta_meta(meta: &str) -> Option<u64> {
+    let j = jsonx::parse(meta).ok()?;
+    if j.get("index")?.as_str()? != "ivf-delta" {
+        return None;
+    }
+    j.get("rows").and_then(Json::as_u64)
+}
+
+/// The live delta posting segments for `id`, in path order (the order
+/// search scans them — appends are path-monotonic, so this is also append
+/// order).
+fn find_delta_adds<'a>(snap: &'a Snapshot, id: &str) -> Vec<(&'a AddFile, u64)> {
+    let prefix = artifact_prefix(id);
+    snap.files()
+        .filter(|f| f.path.starts_with(&prefix))
+        .filter_map(|f| Some((f, decode_delta_meta(f.meta.as_deref()?)?)))
+        .collect()
 }
 
 /// The newest live centroid artifact for `id` in a snapshot, if any.
@@ -490,6 +555,51 @@ pub fn status(table: &DeltaTable, id: &str) -> Result<IndexStatus> {
 /// version predating the build reports [`IndexStatus::Missing`].
 pub fn status_at(table: &DeltaTable, id: &str, version: u64) -> Result<IndexStatus> {
     Ok(status_of(&table.snapshot_at(version)?, id))
+}
+
+/// Rows the tensor's data files claim via their Add-action shape metadata
+/// (`shape[0]`), when any file carries it.
+fn live_rows(snap: &Snapshot, id: &str) -> Option<u64> {
+    for f in snap.files_for_tensor(id) {
+        let Some(m) = &f.meta else { continue };
+        let Ok(j) = jsonx::parse(m) else { continue };
+        if let Some(shape) = j.get("shape").and_then(Json::to_int_vec) {
+            return shape.first().map(|&d| d as u64);
+        }
+    }
+    None
+}
+
+/// Human-oriented freshness report for `id` — the `index status` CLI
+/// surface. Fresh/missing lines mirror [`status`]; a stale index
+/// additionally names the repair path: a pure **rewrite** (row count
+/// unchanged — OPTIMIZE's fold re-pins it without k-means or
+/// reassignment) is distinguished from **changed data** (row counts
+/// differ — only a full rebuild covers it).
+pub fn status_report(table: &DeltaTable, id: &str) -> Result<String> {
+    let snap = crate::query::engine::snapshot(table)?;
+    let status = status_of(&snap, id);
+    let mut out = format!("index for {id}: {status}\n");
+    if matches!(status, IndexStatus::Stale { .. }) {
+        let indexed = find_centroid_add(&snap, id).and_then(|(_, m)| m.rows);
+        let live = live_rows(&snap, id);
+        out.push_str(&match (indexed, live) {
+            (Some(i), Some(l)) if i == l => format!(
+                "  data files were rewritten in place ({l} rows, count unchanged) — a \
+                 content-preserving rewrite (interrupted OPTIMIZE/compaction) is \
+                 recoverable by a cheap fold; `optimize --id {id}` re-reads the rows and \
+                 refreshes safely either way, or `index build --id {id}` forces a rebuild\n"
+            ),
+            (Some(i), Some(l)) => format!(
+                "  data changed since the build ({i} rows indexed vs {l} live) — \
+                 full rebuild required (`index build --id {id}`)\n"
+            ),
+            _ => format!(
+                "  change kind unknown (no row metadata) — rebuild with `index build --id {id}`\n"
+            ),
+        });
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -555,6 +665,83 @@ fn decode_centroid_artifact(bytes: &[u8]) -> Result<CentroidArtifact> {
         .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
         .collect();
     Ok(CentroidArtifact { rows, dim, nprobe, centroids, offsets })
+}
+
+/// Serialize a delta posting segment: the centroid artifact's 32-byte
+/// header (the `nprobe` slot zeroed), a `k+1` offset table **relative to
+/// the payload start**, then per-centroid contiguous `(row, vector)`
+/// entries in the postings file's exact entry format. Self-contained: one
+/// cached header fetch locates any centroid's delta entries. `lists` holds
+/// centroid-assigned *local* row indices into `matrix`; stored row ids are
+/// rebased by `base_row` (the tensor's pre-append row count), so delta
+/// entries and main postings share one global row-id space.
+fn encode_delta_segment(matrix: &Matrix, lists: &[Vec<u32>], base_row: u32) -> Vec<u8> {
+    let k = lists.len();
+    let entry_bytes = 4 + 4 * matrix.dim;
+    let total: usize = lists.iter().map(Vec::len).sum();
+    let mut offsets = Vec::with_capacity(k + 1);
+    let mut acc = 0u64;
+    offsets.push(acc);
+    for l in lists {
+        acc += (l.len() * entry_bytes) as u64;
+        offsets.push(acc);
+    }
+    let mut out = Vec::with_capacity(HEADER_BYTES + (k + 1) * 8 + total * entry_bytes);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    out.extend_from_slice(&(matrix.dim as u32).to_le_bytes());
+    out.extend_from_slice(&(total as u64).to_le_bytes());
+    out.extend_from_slice(&0u64.to_le_bytes()); // reserved (the nprobe slot)
+    for o in &offsets {
+        out.extend_from_slice(&o.to_le_bytes());
+    }
+    for l in lists {
+        for &r in l {
+            out.extend_from_slice(&(base_row + r).to_le_bytes());
+            for v in matrix.row(r as usize) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Decoded prefix of a delta segment: geometry + the offset table.
+struct DeltaHeader {
+    dim: usize,
+    rows: u64,
+    /// `k+1` entry-byte offsets relative to the payload start.
+    offsets: Vec<u64>,
+}
+
+/// Bytes before a delta segment's payload (header + offset table).
+fn delta_header_len(k: usize) -> u64 {
+    (HEADER_BYTES + (k + 1) * 8) as u64
+}
+
+fn decode_delta_header(bytes: &[u8], expect_k: usize) -> Result<DeltaHeader> {
+    ensure!(
+        bytes.len() as u64 == delta_header_len(expect_k),
+        "delta header is {} B, k={expect_k} needs {}",
+        bytes.len(),
+        delta_header_len(expect_k)
+    );
+    ensure!(bytes[..4] == MAGIC, "bad delta segment magic");
+    let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    let version = u32_at(4);
+    ensure!(version == ARTIFACT_VERSION, "unsupported delta segment version {version}");
+    let k = u32_at(8) as usize;
+    ensure!(k == expect_k, "delta segment has k={k}, index has k={expect_k}");
+    let dim = u32_at(12) as usize;
+    let rows = u64_at(16);
+    let offsets: Vec<u64> = bytes[HEADER_BYTES..]
+        .chunks_exact(8)
+        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    ensure!(offsets.len() == k + 1, "delta offset table size");
+    Ok(DeltaHeader { dim, rows, offsets })
 }
 
 // ---------------------------------------------------------------------------
@@ -638,7 +825,7 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
         min_key: None,
         max_key: None,
         timestamp: ts,
-        meta: Some(encode_meta(id, covers_version, fp, &rel_post)),
+        meta: Some(encode_meta(id, covers_version, fp, &rel_post, matrix.rows as u64)),
     }));
     actions.push(Action::Add(AddFile {
         path: rel_post,
@@ -675,8 +862,21 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
 // Open + search
 // ---------------------------------------------------------------------------
 
-/// An opened IVF index: centroids resident, posting lists fetched on
-/// demand through the serving tier.
+/// One attached delta posting segment: appended rows assigned to the
+/// existing centroids, searched alongside the main postings file.
+struct DeltaSeg {
+    key: String,
+    size: u64,
+    stamp: i64,
+    /// `k+1` offsets relative to `base`.
+    offsets: Vec<u64>,
+    /// Payload start within the object (header + offset table).
+    base: u64,
+}
+
+/// An opened IVF index: centroids resident, posting lists (main file plus
+/// any append-time delta segments) fetched on demand through the serving
+/// tier.
 pub struct IvfIndex {
     /// Tensor the index covers.
     pub tensor_id: String,
@@ -684,10 +884,12 @@ pub struct IvfIndex {
     pub k: usize,
     /// Vector dimensionality.
     pub dim: usize,
-    /// Vectors indexed at build time.
+    /// Vectors indexed — build rows plus appended delta-segment rows.
     pub rows: u64,
     /// Probe count used when a search passes `nprobe = 0`.
     pub default_nprobe: usize,
+    /// Delta posting segments attached by incremental appends.
+    pub delta_segments: usize,
     status: IndexStatus,
     centroids: Vec<f32>,
     offsets: Vec<u64>,
@@ -695,6 +897,7 @@ pub struct IvfIndex {
     postings_key: String,
     postings_size: u64,
     postings_stamp: i64,
+    deltas: Vec<DeltaSeg>,
 }
 
 impl std::fmt::Debug for IvfIndex {
@@ -742,12 +945,53 @@ impl IvfIndex {
         ensure!(art.offsets.len() == art.centroids.len() / art.dim.max(1) + 1, "offset table size");
         STATS.centroid_loads.fetch_add(1, Ordering::Relaxed);
         let status = staleness(snap, id, &meta);
+        let k = art.offsets.len() - 1;
+
+        // Attach delta posting segments (appended rows assigned to these
+        // centroids). Their headers ride the serving tier too — a hot
+        // re-open costs zero GETs.
+        let mut deltas = Vec::new();
+        let mut delta_rows = 0u64;
+        for (add, _) in find_delta_adds(snap, id) {
+            let key = table.data_key(&add.path);
+            let hdr_len = delta_header_len(k);
+            ensure!(add.size >= hdr_len, "delta segment {} truncated ({} B)", add.path, add.size);
+            let blocks = crate::serving::fetch_spans(
+                table.store(),
+                &key,
+                add.size,
+                add.timestamp,
+                &[(0, hdr_len)],
+            )?;
+            let hdr = decode_delta_header(blocks[0].as_slice(), k)?;
+            ensure!(
+                hdr.dim == art.dim,
+                "delta segment {} has dim {}, index has {}",
+                add.path,
+                hdr.dim,
+                art.dim
+            );
+            ensure!(
+                add.size == hdr_len + *hdr.offsets.last().unwrap(),
+                "delta segment {} size does not match its offset table",
+                add.path
+            );
+            delta_rows += hdr.rows;
+            deltas.push(DeltaSeg {
+                key,
+                size: add.size,
+                stamp: add.timestamp,
+                offsets: hdr.offsets,
+                base: hdr_len,
+            });
+        }
         Ok(IvfIndex {
             tensor_id: id.to_string(),
-            k: art.offsets.len() - 1,
+            k,
             dim: art.dim,
-            rows: art.rows,
+            rows: art.rows + delta_rows,
             default_nprobe: art.nprobe,
+            delta_segments: deltas.len(),
             status,
             centroids: art.centroids,
             offsets: art.offsets,
@@ -755,6 +999,7 @@ impl IvfIndex {
             postings_key: table.data_key(&post_add.path),
             postings_size: post_add.size,
             postings_stamp: post_add.timestamp,
+            deltas,
         })
     }
 
@@ -798,6 +1043,18 @@ impl IvfIndex {
         STATS.searches.fetch_add(1, Ordering::Relaxed);
         STATS.probes.fetch_add(spans.len() as u64, Ordering::Relaxed);
 
+        let entry_bytes = 4 + 4 * self.dim;
+        let mut top = TopK::new(k);
+        let mut scanned = 0u64;
+        let mut scan = |blocks: &[crate::serving::Block], top: &mut TopK| {
+            for block in blocks {
+                for entry in block.chunks_exact(entry_bytes) {
+                    let row = u32::from_le_bytes(entry[..4].try_into().expect("entry header"));
+                    top.push(dist2_le(query, &entry[4..]), row);
+                    scanned += 1;
+                }
+            }
+        };
         let blocks = crate::serving::fetch_spans(
             &self.store,
             &self.postings_key,
@@ -805,15 +1062,25 @@ impl IvfIndex {
             self.postings_stamp,
             &spans,
         )?;
-        let entry_bytes = 4 + 4 * self.dim;
-        let mut top = TopK::new(k);
-        let mut scanned = 0u64;
-        for block in &blocks {
-            for entry in block.chunks_exact(entry_bytes) {
-                let row = u32::from_le_bytes(entry[..4].try_into().expect("entry header"));
-                top.push(dist2_le(query, &entry[4..]), row);
-                scanned += 1;
+        scan(&blocks, &mut top);
+        // Delta segments hold the appended rows for the same centroids:
+        // scanning them alongside the main lists keeps full-`nprobe`
+        // search exactly equal to brute force over the appended corpus.
+        for seg in &self.deltas {
+            let spans: Vec<(u64, u64)> = ranked[..nprobe]
+                .iter()
+                .filter_map(|&(_, c)| {
+                    let (lo, hi) = (seg.offsets[c as usize], seg.offsets[c as usize + 1]);
+                    (hi > lo).then_some((seg.base + lo, hi - lo))
+                })
+                .collect();
+            if spans.is_empty() {
+                continue;
             }
+            STATS.probes.fetch_add(spans.len() as u64, Ordering::Relaxed);
+            let blocks =
+                crate::serving::fetch_spans(&self.store, &seg.key, seg.size, seg.stamp, &spans)?;
+            scan(&blocks, &mut top);
         }
         STATS.postings_scanned.fetch_add(scanned, Ordering::Relaxed);
         Ok(top.into_sorted())
@@ -873,12 +1140,48 @@ mod tests {
 
     #[test]
     fn meta_roundtrips() {
-        let m = encode_meta("vecs", 12, 0xDEAD_BEEF_0123_4567, "index/vecs/p.idx");
+        let m = encode_meta("vecs", 12, 0xDEAD_BEEF_0123_4567, "index/vecs/p.idx", 4096);
         let back = decode_meta(&m).unwrap();
         assert_eq!(back.covers, 12);
         assert_eq!(back.fp, 0xDEAD_BEEF_0123_4567);
         assert_eq!(back.postings_path, "index/vecs/p.idx");
+        assert_eq!(back.rows, Some(4096));
         assert!(decode_meta("{\"shape\":[2,2]}").is_none(), "tensor meta is not index meta");
+        // Delta-segment meta is its own tag: invisible to centroid lookup.
+        let d = encode_delta_meta("vecs", 64);
+        assert!(decode_meta(&d).is_none());
+        assert_eq!(decode_delta_meta(&d), Some(64));
+        assert_eq!(decode_delta_meta(&m), None);
+    }
+
+    #[test]
+    fn delta_segment_roundtrips() {
+        let matrix = Matrix {
+            rows: 4,
+            dim: 2,
+            data: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+        };
+        // k = 3 centroids; rows 0 and 2 in list 0, row 1 in list 2, list 1
+        // empty; global ids rebase by 100.
+        let lists = vec![vec![0u32, 2], vec![], vec![1, 3]];
+        let bytes = encode_delta_segment(&matrix, &lists, 100);
+        let hdr_len = delta_header_len(3) as usize;
+        let hdr = decode_delta_header(&bytes[..hdr_len], 3).unwrap();
+        assert_eq!(hdr.dim, 2);
+        assert_eq!(hdr.rows, 4);
+        let entry = 4 + 4 * 2;
+        assert_eq!(hdr.offsets, vec![0, 2 * entry as u64, 2 * entry as u64, 4 * entry as u64]);
+        assert_eq!(bytes.len() as u64, delta_header_len(3) + *hdr.offsets.last().unwrap());
+        // First entry of list 0 is global row 100 with vector (0, 1).
+        let e0 = &bytes[hdr_len..hdr_len + entry];
+        assert_eq!(u32::from_le_bytes(e0[..4].try_into().unwrap()), 100);
+        assert_eq!(f32::from_le_bytes(e0[4..8].try_into().unwrap()), 0.0);
+        assert_eq!(f32::from_le_bytes(e0[8..12].try_into().unwrap()), 1.0);
+        // k mismatch and corruption are rejected.
+        assert!(decode_delta_header(&bytes[..hdr_len], 4).is_err());
+        let mut bad = bytes[..hdr_len].to_vec();
+        bad[0] = b'X';
+        assert!(decode_delta_header(&bad, 3).is_err());
     }
 
     #[test]
@@ -958,6 +1261,10 @@ mod tests {
             "index.probes",
             "index.postings_scanned",
             "index.centroid_loads",
+            "index.appends",
+            "index.rows_appended",
+            "index.delta_segments",
+            "index.folds",
         ] {
             assert!(r.contains(name), "missing {name} in {r}");
         }

@@ -322,6 +322,23 @@ impl<'a> TensorWriter<'a> {
 
     /// Encode, upload and commit the whole batch as one table version.
     pub fn commit(self) -> Result<u64> {
+        self.commit_with(|_| Ok(Vec::new()))
+    }
+
+    /// Like [`TensorWriter::commit`], but invites `finalize` into the
+    /// commit: after every part is encoded and durably uploaded — sizes
+    /// known — the callback sees the exact [`AddFile`] actions about to
+    /// land and returns **extra actions** that ride the same atomic
+    /// commit. This is how derived state stays consistent with the data it
+    /// covers: the index tier uses it to land delta posting segments and a
+    /// refreshed staleness fingerprint in the very commit that appends the
+    /// rows (see [`crate::index::maintain`]). A failing callback aborts
+    /// the commit; already-uploaded part objects are unreferenced and
+    /// reclaimed by VACUUM.
+    pub fn commit_with<F>(self, finalize: F) -> Result<u64>
+    where
+        F: FnOnce(&[AddFile]) -> Result<Vec<Action>>,
+    {
         let Self { table, plans, put_batch, inflight_bytes } = self;
         ensure!(!plans.is_empty(), "empty ingest batch");
         let n_tensors = plans.len();
@@ -498,9 +515,10 @@ impl<'a> TensorWriter<'a> {
 
         // All parts durable: land every Add in one atomic commit.
         let ts = crate::delta::now_ms();
-        let mut actions = Vec::with_capacity(n + 1);
-        for (slot, size) in slots.into_iter().zip(sizes) {
-            actions.push(Action::Add(AddFile {
+        let adds: Vec<AddFile> = slots
+            .into_iter()
+            .zip(sizes)
+            .map(|(slot, size)| AddFile {
                 path: slot.rel_path,
                 size,
                 rows: slot.rows,
@@ -509,8 +527,12 @@ impl<'a> TensorWriter<'a> {
                 max_key: slot.max_key,
                 timestamp: ts,
                 meta: slot.meta,
-            }));
-        }
+            })
+            .collect();
+        let extra = finalize(&adds)?;
+        let mut actions = Vec::with_capacity(adds.len() + extra.len() + 1);
+        actions.extend(adds.into_iter().map(Action::Add));
+        actions.extend(extra);
         actions.push(Action::CommitInfo { operation, timestamp: ts });
         let version = table.commit(actions)?;
         STATS.batch_commits.fetch_add(1, Ordering::Relaxed);
@@ -599,6 +621,40 @@ mod tests {
         assert_eq!((f.min_key, f.max_key), (Some(1), Some(3)));
         assert_eq!(store.head(&t.data_key(&f.path)).unwrap(), Some(f.size));
         assert!(f.size > 0);
+    }
+
+    #[test]
+    fn commit_with_lands_extra_actions_atomically() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "t").unwrap();
+        let mut w = TensorWriter::with_knobs(&t, 4, 1 << 20);
+        w.stage(plan(vec![columnar_part(0, vec![1, 2])]));
+        let v = w
+            .commit_with(|adds| {
+                assert_eq!(adds.len(), 1);
+                assert!(adds[0].size > 0, "finalizer must see real encoded sizes");
+                Ok(vec![Action::Add(AddFile {
+                    path: "derived/x.idx".into(),
+                    size: 1,
+                    rows: 0,
+                    tensor_id: String::new(),
+                    min_key: None,
+                    max_key: None,
+                    timestamp: adds[0].timestamp,
+                    meta: None,
+                })])
+            })
+            .unwrap();
+        assert_eq!(v, 1, "data + derived state land as ONE version");
+        let snap = t.snapshot().unwrap();
+        assert!(snap.files.contains_key("derived/x.idx"));
+        assert_eq!(snap.files.len(), 2);
+
+        // A failing finalizer aborts the whole commit.
+        let mut w = TensorWriter::with_knobs(&t, 4, 1 << 20);
+        w.stage(plan(vec![columnar_part(1, vec![3])]));
+        assert!(w.commit_with(|_| anyhow::bail!("derived state failed")).is_err());
+        assert_eq!(t.latest_version().unwrap(), 1, "aborted commit must not land");
     }
 
     #[test]

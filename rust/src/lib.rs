@@ -32,14 +32,18 @@
 //! * [`index`] — the vector-search tier: a Delta-versioned IVF-Flat ANN
 //!   index over stored 2-D tensors (seeded k-means training, posting lists
 //!   fetched through the serving tier, staleness pinned to the covered
-//!   data files, brute-force exact control).
+//!   data files, brute-force exact control), plus the maintenance tier
+//!   ([`index::maintain`]): append-time delta posting segments landed in
+//!   the same commit as the data, fold-on-OPTIMIZE, refresh arbitration.
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled decode artifacts.
 //! * [`coordinator`] — streaming ingestion orchestrator: worker pool,
-//!   backpressure, commit coordination, metrics (including the engine's).
+//!   backpressure, commit coordination, append and index-aware OPTIMIZE,
+//!   metrics (including the engine's).
 //! * [`workload`] — synthetic FFHQ-like, Uber-pickups-like and
-//!   embedding-like generators, plus the closed-loop serving, ingest and
-//!   vector-search load harnesses ([`workload::serve`],
-//!   [`workload::ingest`], [`workload::search`]).
+//!   embedding-like generators, plus the closed-loop serving, ingest,
+//!   vector-search and maintenance load harnesses ([`workload::serve`],
+//!   [`workload::ingest`], [`workload::search`], [`workload::maintain`])
+//!   over the shared [`workload::driver`] skeleton.
 
 pub mod util;
 pub mod jsonx;

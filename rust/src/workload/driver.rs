@@ -1,0 +1,178 @@
+//! The shared closed-loop harness skeleton.
+//!
+//! The serve, ingest, search and maintain harnesses all drive the system
+//! the same way: `clients` threads issue operations back-to-back (closed
+//! loop — each client waits for its result before the next request), with
+//! per-client seeded RNGs for reproducible Zipf draws, per-operation
+//! latencies collected centrally, and p50/p95/p99 derived from the repo's
+//! timing machinery. This module is that skeleton, extracted once so every
+//! new tier gets a harness for the cost of one closure:
+//!
+//! * [`run_closed_loop`] — spawn the clients, run the op, return the
+//!   latencies and the measured wall time;
+//! * [`quantiles`] — mean/p50/p95/p99 over the collected latencies;
+//! * [`CacheModeGuard`] — scoped serving-cache on/off switch that restores
+//!   the previous mode on drop (early returns included), so a
+//!   `cache: false` control run never leaks its bypass past the harness.
+
+use crate::objectstore::ObjectStoreHandle;
+use crate::util::prng::Pcg64;
+use crate::util::{RunStats, Stopwatch};
+use crate::Result;
+use anyhow::ensure;
+
+/// Run `clients` closed-loop threads for `iters_per_client` operations
+/// each. Every call gets a per-client RNG seeded `seed ^ (salt + client)`
+/// (pass each harness a distinct `salt` so their streams never collide)
+/// and returns the latency to record — the op times exactly the phase it
+/// cares about (a request, a commit), not the surrounding bookkeeping.
+/// Returns all latencies (client-major order) and the measured wall time.
+pub fn run_closed_loop<F>(
+    clients: usize,
+    iters_per_client: usize,
+    seed: u64,
+    salt: u64,
+    op: F,
+) -> Result<(Vec<f64>, f64)>
+where
+    F: Fn(usize, usize, &mut Pcg64) -> Result<f64> + Sync,
+{
+    ensure!(clients > 0 && iters_per_client > 0, "empty closed-loop run");
+    let sw = Stopwatch::start();
+    let mut latencies: Vec<f64> = Vec::with_capacity(clients * iters_per_client);
+    let op = &op;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(clients);
+        for client in 0..clients {
+            handles.push(scope.spawn(move || -> Result<Vec<f64>> {
+                let mut rng = Pcg64::new(seed ^ (salt + client as u64));
+                let mut lat = Vec::with_capacity(iters_per_client);
+                for iter in 0..iters_per_client {
+                    lat.push(op(client, iter, &mut rng)?);
+                }
+                Ok(lat)
+            }));
+        }
+        for h in handles {
+            let lat = h.join().map_err(|_| anyhow::anyhow!("closed-loop client panicked"))??;
+            latencies.extend(lat);
+        }
+        Ok(())
+    })?;
+    Ok((latencies, sw.secs()))
+}
+
+/// Latency quantiles of one measured phase.
+#[derive(Debug, Clone, Copy)]
+pub struct Quantiles {
+    /// Mean latency.
+    pub mean: f64,
+    /// Median latency.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+}
+
+/// Mean/p50/p95/p99 over collected latencies (zeros when empty).
+pub fn quantiles(latencies: &[f64]) -> Quantiles {
+    let mut stats = RunStats::new();
+    for &l in latencies {
+        stats.push(l);
+    }
+    Quantiles {
+        mean: stats.mean(),
+        p50: stats.percentile(50.0),
+        p95: stats.percentile(95.0),
+        p99: stats.percentile(99.0),
+    }
+}
+
+/// Scoped serving-cache mode: applies `enabled` to the store on
+/// construction and restores the previous mode when dropped.
+pub struct CacheModeGuard {
+    instance: u64,
+    was_enabled: bool,
+}
+
+impl CacheModeGuard {
+    /// Set the store's serving-cache mode for the guard's lifetime.
+    pub fn set(store: &ObjectStoreHandle, enabled: bool) -> CacheModeGuard {
+        let instance = store.instance_id();
+        let was_enabled = crate::serving::cache_enabled(instance);
+        crate::serving::set_cache_enabled(instance, enabled);
+        CacheModeGuard { instance, was_enabled }
+    }
+}
+
+impl Drop for CacheModeGuard {
+    fn drop(&mut self) {
+        crate::serving::set_cache_enabled(self.instance, self.was_enabled);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_collects_every_latency() {
+        let (lat, wall) = run_closed_loop(3, 5, 7, 0x10, |client, iter, rng| {
+            let _ = rng.next_u64();
+            Ok((client * 100 + iter) as f64)
+        })
+        .unwrap();
+        assert_eq!(lat.len(), 15);
+        assert!(wall > 0.0);
+        // Client-major order: client 0's iterations come first.
+        assert_eq!(&lat[..5], &[0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert!(lat.contains(&204.0));
+    }
+
+    #[test]
+    fn closed_loop_rng_streams_are_deterministic_per_client() {
+        let draws = |salt: u64| -> Vec<u64> {
+            let (lat, _) = run_closed_loop(2, 1, 42, salt, |_, _, rng| {
+                Ok(rng.next_u64() as f64)
+            })
+            .unwrap();
+            lat.iter().map(|&v| v as u64).collect()
+        };
+        assert_eq!(draws(5), draws(5), "same seed/salt -> same streams");
+        assert_ne!(draws(5), draws(6), "distinct salts diverge");
+    }
+
+    #[test]
+    fn closed_loop_propagates_errors_and_rejects_empty_runs() {
+        assert!(run_closed_loop(0, 1, 0, 0, |_, _, _| Ok(0.0)).is_err());
+        assert!(run_closed_loop(1, 0, 0, 0, |_, _, _| Ok(0.0)).is_err());
+        let res = run_closed_loop(2, 3, 0, 0, |client, iter, _| {
+            anyhow::ensure!(!(client == 1 && iter == 1), "boom");
+            Ok(1.0)
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn quantiles_are_ordered() {
+        let lat: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let q = quantiles(&lat);
+        assert!(q.p50 <= q.p95 && q.p95 <= q.p99);
+        assert!((q.mean - 50.5).abs() < 1e-9);
+        let empty = quantiles(&[]);
+        assert_eq!(empty.p99, 0.0);
+    }
+
+    #[test]
+    fn cache_mode_guard_restores_on_drop() {
+        let store = ObjectStoreHandle::mem();
+        let instance = store.instance_id();
+        assert!(crate::serving::cache_enabled(instance));
+        {
+            let _g = CacheModeGuard::set(&store, false);
+            assert!(!crate::serving::cache_enabled(instance));
+        }
+        assert!(crate::serving::cache_enabled(instance));
+    }
+}

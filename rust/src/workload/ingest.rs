@@ -15,12 +15,13 @@
 //! ingest issues strictly fewer PUT batches and log commits than N serial
 //! writes).
 
+use super::driver;
 use crate::coordinator::format_by_name;
 use crate::delta::DeltaTable;
 use crate::formats::TensorData;
 use crate::ingest::TensorWriter;
 use crate::jsonx::Json;
-use crate::util::{RunStats, Stopwatch};
+use crate::util::Stopwatch;
 use crate::Result;
 use anyhow::ensure;
 
@@ -215,39 +216,24 @@ pub fn run_ingest(table: &DeltaTable, p: &IngestParams) -> Result<IngestReport> 
     let (_, put0, _, _, bw0) = store.stats().snapshot();
     let (pb0, _) = store.stats().put_batched();
     let retries0 = crate::delta::commit_retry_count();
-    let sw = Stopwatch::start();
-    let mut latencies: Vec<f64> = Vec::with_capacity(p.writers * p.batches_per_writer);
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::with_capacity(p.writers);
-        for per_writer in batches {
-            let layout = p.layout.clone();
-            handles.push(scope.spawn(move || -> Result<Vec<f64>> {
-                let fmt = format_by_name(&layout)?;
-                let mut lat = Vec::with_capacity(per_writer.len());
-                for batch in per_writer {
-                    let mut writer = TensorWriter::new(table);
-                    for (id, data) in &batch {
-                        writer.stage(fmt.plan_write(id, data)?);
-                    }
-                    let req = Stopwatch::start();
-                    writer.commit()?;
-                    lat.push(req.secs());
-                }
-                Ok(lat)
-            }));
-        }
-        for h in handles {
-            let lat = h.join().map_err(|_| anyhow::anyhow!("ingest writer panicked"))??;
-            latencies.extend(lat);
-        }
-        Ok(())
-    })?;
-    let wall = sw.secs();
+    let fmt = format_by_name(&p.layout)?;
+    let (latencies, wall) = driver::run_closed_loop(
+        p.writers,
+        p.batches_per_writer,
+        p.seed,
+        0x5EB5_E003,
+        |writer, batch, _| {
+            let mut w = TensorWriter::new(table);
+            for (id, data) in &batches[writer][batch] {
+                w.stage(fmt.plan_write(id, data)?);
+            }
+            let req = Stopwatch::start();
+            w.commit()?;
+            Ok(req.secs())
+        },
+    )?;
 
-    let mut stats = RunStats::new();
-    for &l in &latencies {
-        stats.push(l);
-    }
+    let q = driver::quantiles(&latencies);
     let (_, put1, _, _, bw1) = store.stats().snapshot();
     let (pb1, _) = store.stats().put_batched();
     let tensors = (p.writers * p.batches_per_writer * p.tensors_per_batch) as u64;
@@ -257,10 +243,10 @@ pub fn run_ingest(table: &DeltaTable, p: &IngestParams) -> Result<IngestReport> 
         batches: latencies.len() as u64,
         wall_secs: wall,
         throughput_tps: tensors as f64 / wall.max(1e-9),
-        mean_secs: stats.mean(),
-        p50_secs: stats.percentile(50.0),
-        p95_secs: stats.percentile(95.0),
-        p99_secs: stats.percentile(99.0),
+        mean_secs: q.mean,
+        p50_secs: q.p50,
+        p95_secs: q.p95,
+        p99_secs: q.p99,
         put_ops: put1 - put0,
         put_batches: pb1 - pb0,
         bytes_written: bw1 - bw0,

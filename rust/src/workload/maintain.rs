@@ -1,0 +1,503 @@
+//! Closed-loop maintenance load harness.
+//!
+//! Drives the maintenance tier the way a live embedding service would: a
+//! stream of **appends** lands new vectors (with incremental index upkeep,
+//! or a full rebuild as the control), closed-loop **searchers** query the
+//! index between appends, and a periodic **OPTIMIZE** compacts the data
+//! files and folds the accumulated delta segments. Built on the shared
+//! [`super::driver`] skeleton; reports append/search latency quantiles,
+//! search QPS, fold/optimize cost, and — the correctness core —
+//! **recall-after-append** measured against both the brute-force control
+//! and a from-scratch full rebuild of the index.
+//!
+//! Used three ways: the `bench maintain` CLI subcommand,
+//! `benches/maintain.rs` (incremental upkeep vs rebuild-per-append
+//! comparison, `BENCH_maintain.json` for CI's perf gate), and
+//! `tests/maintain.rs` (the acceptance assertions: append-then-search
+//! equals a full rebuild at full `nprobe`, appends land as ONE commit,
+//! OPTIMIZE preserves chunk rank and leaves the index Fresh).
+
+use super::driver::{self, CacheModeGuard};
+use crate::coordinator::Coordinator;
+use crate::delta::DeltaTable;
+use crate::formats::{FtsfFormat, TensorData, TensorStore};
+use crate::index::{self, maintain::Upkeep, BuildParams, IvfIndex};
+use crate::jsonx::Json;
+use crate::util::prng::{Pcg64, Zipf};
+use crate::util::Stopwatch;
+use crate::Result;
+use anyhow::ensure;
+
+/// Knobs for one maintenance run.
+#[derive(Debug, Clone)]
+pub struct MaintainParams {
+    /// Concurrent closed-loop search clients per round.
+    pub clients: usize,
+    /// Queries each client issues per round.
+    pub queries_per_client: usize,
+    /// Append rounds in the measured phase.
+    pub rounds: usize,
+    /// Rows appended per round.
+    pub append_rows: usize,
+    /// Run OPTIMIZE (compaction + index fold) every this many rounds
+    /// (0 = never).
+    pub optimize_every: usize,
+    /// Initial corpus rows.
+    pub rows: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+    /// Gaussian-mixture components of the generated corpus.
+    pub clusters: usize,
+    /// Distinct query vectors; clients draw from this pool Zipfian.
+    pub query_pool: usize,
+    /// Neighbors requested per query.
+    pub k: usize,
+    /// Posting lists probed per query (0 = the index build's default).
+    pub nprobe: usize,
+    /// Zipf exponent for query choice.
+    pub zipf_s: f64,
+    /// True = incremental upkeep (delta segments in the append commit);
+    /// false = the control group: every append is followed by a full
+    /// index rebuild.
+    pub incremental: bool,
+    /// Serve posting fetches through the serving tier's block cache.
+    pub cache: bool,
+    /// Workload seed (corpus, appended rows, queries, Zipf draws and the
+    /// k-means init all derive from it).
+    pub seed: u64,
+}
+
+impl MaintainParams {
+    /// CI-smoke scale (sub-second on the fast sim model).
+    pub fn tiny() -> Self {
+        Self {
+            clients: 4,
+            queries_per_client: 25,
+            rounds: 3,
+            append_rows: 64,
+            optimize_every: 2,
+            rows: 2000,
+            dim: 32,
+            clusters: 32,
+            query_pool: 16,
+            k: 10,
+            nprobe: 0,
+            zipf_s: 1.1,
+            incremental: true,
+            cache: true,
+            seed: 7,
+        }
+    }
+
+    /// Default bench scale (seconds to a minute on the fast sim model).
+    pub fn small() -> Self {
+        Self {
+            clients: 8,
+            queries_per_client: 100,
+            rounds: 6,
+            append_rows: 512,
+            optimize_every: 3,
+            rows: 20_000,
+            dim: 64,
+            clusters: 64,
+            query_pool: 64,
+            k: 10,
+            nprobe: 0,
+            zipf_s: 1.1,
+            incremental: true,
+            cache: true,
+            seed: 7,
+        }
+    }
+
+    /// Paper-regime scale (minutes on the 1 Gbps model).
+    pub fn paper() -> Self {
+        Self {
+            clients: 16,
+            queries_per_client: 250,
+            rounds: 8,
+            append_rows: 2048,
+            optimize_every: 4,
+            rows: 100_000,
+            dim: 96,
+            clusters: 128,
+            query_pool: 128,
+            k: 10,
+            nprobe: 0,
+            zipf_s: 1.05,
+            incremental: true,
+            cache: true,
+            seed: 7,
+        }
+    }
+}
+
+/// Result of one maintenance run.
+#[derive(Debug, Clone)]
+pub struct MaintainReport {
+    /// Append rounds executed.
+    pub rounds: u64,
+    /// Rows appended across all rounds.
+    pub appended_rows: u64,
+    /// Total measured search queries.
+    pub searches: u64,
+    /// Neighbors requested per query.
+    pub k: usize,
+    /// OPTIMIZE passes run.
+    pub optimizes: u64,
+    /// Full index rebuilds issued during the measured phase (0 in
+    /// incremental mode — that is the point).
+    pub full_rebuilds: u64,
+    /// Appends whose commit carried a delta segment.
+    pub maintained_appends: u64,
+    /// Whether this run used incremental upkeep.
+    pub incremental: bool,
+    /// Whole measured-phase wall time.
+    pub wall_secs: f64,
+    /// Queries per second over the search phases.
+    pub search_qps: f64,
+    /// Mean append-path latency (data + upkeep, or data + rebuild for the
+    /// control).
+    pub append_mean_secs: f64,
+    /// Median append-path latency.
+    pub append_p50_secs: f64,
+    /// 95th-percentile append-path latency.
+    pub append_p95_secs: f64,
+    /// 99th-percentile append-path latency.
+    pub append_p99_secs: f64,
+    /// Median search latency.
+    pub search_p50_secs: f64,
+    /// 95th-percentile search latency.
+    pub search_p95_secs: f64,
+    /// 99th-percentile search latency.
+    pub search_p99_secs: f64,
+    /// Total OPTIMIZE (compaction + fold) wall time.
+    pub optimize_secs: f64,
+    /// True when full-`nprobe` search equals brute force exactly over the
+    /// final (appended) corpus — the exactness acceptance bar.
+    pub exact_full_nprobe: bool,
+    /// Recall@k of the maintained index at the effective `nprobe`, against
+    /// brute force over the final corpus.
+    pub recall_after_maintenance: f64,
+    /// Recall@k of a from-scratch full rebuild (the control), same
+    /// queries, same corpus.
+    pub recall_full_rebuild: f64,
+    /// GET requests issued during the measured phase.
+    pub get_ops: u64,
+    /// Bytes downloaded during the measured phase.
+    pub bytes_read: u64,
+    /// New log versions the measured phase created.
+    pub log_commits: u64,
+}
+
+impl MaintainReport {
+    /// Compact JSON object (for `BENCH_maintain.json` / CI artifacts).
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("rounds", Json::Int(self.rounds as i64)),
+            ("appended_rows", Json::Int(self.appended_rows as i64)),
+            ("searches", Json::Int(self.searches as i64)),
+            ("k", Json::Int(self.k as i64)),
+            ("optimizes", Json::Int(self.optimizes as i64)),
+            ("full_rebuilds", Json::Int(self.full_rebuilds as i64)),
+            ("maintained_appends", Json::Int(self.maintained_appends as i64)),
+            ("incremental", Json::Bool(self.incremental)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("search_qps", Json::from(self.search_qps)),
+            ("append_mean_secs", Json::from(self.append_mean_secs)),
+            ("append_p50_secs", Json::from(self.append_p50_secs)),
+            ("append_p95_secs", Json::from(self.append_p95_secs)),
+            ("append_p99_secs", Json::from(self.append_p99_secs)),
+            ("search_p50_secs", Json::from(self.search_p50_secs)),
+            ("search_p95_secs", Json::from(self.search_p95_secs)),
+            ("search_p99_secs", Json::from(self.search_p99_secs)),
+            ("optimize_secs", Json::from(self.optimize_secs)),
+            ("exact_full_nprobe", Json::Bool(self.exact_full_nprobe)),
+            ("recall_after_maintenance", Json::from(self.recall_after_maintenance)),
+            ("recall_full_rebuild", Json::from(self.recall_full_rebuild)),
+            ("get_ops", Json::Int(self.get_ops as i64)),
+            ("bytes_read", Json::Int(self.bytes_read as i64)),
+            ("log_commits", Json::Int(self.log_commits as i64)),
+        ])
+        .dump()
+    }
+
+    /// Human-readable one-run summary.
+    pub fn summary(&self) -> String {
+        let ms = |s: f64| format!("{:.3}ms", s * 1e3);
+        format!(
+            "maintain ({}): {} rounds x {} rows appended, {} searches, {} optimizes in {:.3}s\n  \
+             append mean {} p50 {} p95 {} p99 {} ({} delta commits, {} full rebuilds)\n  \
+             search {:.0} q/s p50 {} p95 {} p99 {}; optimize total {}\n  \
+             recall@{}: {:.4} maintained vs {:.4} full rebuild; full-nprobe exact: {}\n  \
+             store: {} GETs, {} bytes; log: {} commits",
+            if self.incremental { "incremental" } else { "rebuild control" },
+            self.rounds,
+            self.appended_rows / self.rounds.max(1),
+            self.searches,
+            self.optimizes,
+            self.wall_secs,
+            ms(self.append_mean_secs),
+            ms(self.append_p50_secs),
+            ms(self.append_p95_secs),
+            ms(self.append_p99_secs),
+            self.maintained_appends,
+            self.full_rebuilds,
+            self.search_qps,
+            ms(self.search_p50_secs),
+            ms(self.search_p95_secs),
+            ms(self.search_p99_secs),
+            ms(self.optimize_secs),
+            self.k,
+            self.recall_after_maintenance,
+            self.recall_full_rebuild,
+            self.exact_full_nprobe,
+            self.get_ops,
+            self.bytes_read,
+            self.log_commits,
+        )
+    }
+}
+
+/// Ingest the maintenance corpus (an `embedding_like` matrix stored as
+/// FTSF row-chunks with append-friendly file geometry) under `id` and
+/// build its index. Create-if-absent: an existing corpus is reused as-is —
+/// a maintain run mutates its table, so reruns continue from wherever the
+/// last run left it.
+pub fn populate_maintain_corpus(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<()> {
+    ensure!(p.rows > 0 && p.dim > 0, "maintain needs a non-empty corpus");
+    let exists = !crate::query::engine::snapshot(table)?.files_for_tensor(id).is_empty();
+    if !exists {
+        let data = super::embedding_like(p.seed, p.rows, p.dim, p.clusters, 0.05);
+        let fmt = FtsfFormat { rows_per_group: 64, rows_per_file: 1024, ..FtsfFormat::new(1) };
+        fmt.write(table, id, &data.into())?;
+    }
+    if !index::status(table, id)?.is_fresh() {
+        index::build(table, id, &BuildParams { seed: p.seed, ..Default::default() })?;
+    }
+    Ok(())
+}
+
+/// Run the closed maintenance loop and report. The table must already hold
+/// the corpus and a fresh index (see [`populate_maintain_corpus`]). Each
+/// round appends `append_rows` new vectors (incremental upkeep or the
+/// rebuild control), runs the closed-loop search phase, and every
+/// `optimize_every` rounds an OPTIMIZE pass compacts data files and folds
+/// the delta segments. Recall is verified after the measured phase against
+/// brute force, and against a from-scratch rebuild of the index.
+pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<MaintainReport> {
+    ensure!(p.clients > 0 && p.queries_per_client > 0, "empty search phase");
+    ensure!(p.rounds > 0 && p.append_rows > 0, "empty append phase");
+    ensure!(p.query_pool > 0 && p.k > 0, "maintain needs queries and k >= 1");
+    let store = table.store().clone();
+    let _restore = CacheModeGuard::set(&store, p.cache);
+    let coord = Coordinator::new(table.clone(), 2, 8);
+
+    // Query pool: perturbed rows of the initial corpus — queries live
+    // where the data lives, and stay valid as the corpus grows.
+    let matrix0 = index::load_matrix(table, id)?;
+    ensure!(matrix0.dim == p.dim, "corpus dim {} != params dim {}", matrix0.dim, p.dim);
+    let mut qrng = Pcg64::new(p.seed ^ 0x5EA4_C402);
+    let pool: Vec<Vec<f32>> = (0..p.query_pool)
+        .map(|_| {
+            let r = qrng.below(matrix0.rows);
+            matrix0.row(r).iter().map(|&v| v + qrng.next_gaussian() as f32 * 0.01).collect()
+        })
+        .collect();
+    let pick = Zipf::new(pool.len(), p.zipf_s);
+
+    let v0 = table.latest_version()?;
+    let (get0, _, _, bytes0, _) = store.stats().snapshot();
+    let sw_total = Stopwatch::start();
+    let mut append_lat: Vec<f64> = Vec::with_capacity(p.rounds);
+    let mut search_lat: Vec<f64> = Vec::new();
+    let mut search_wall = 0f64;
+    let mut optimize_secs = 0f64;
+    let mut optimizes = 0u64;
+    let mut full_rebuilds = 0u64;
+    let mut maintained = 0u64;
+    let mut last_nprobe = p.nprobe.max(1);
+    for round in 0..p.rounds {
+        let data: TensorData = super::embedding_like(
+            p.seed ^ (0xA99E_4D00 + round as u64),
+            p.append_rows,
+            p.dim,
+            p.clusters,
+            0.05,
+        )
+        .into();
+        let sw = Stopwatch::start();
+        if p.incremental {
+            let out = index::maintain::append_rows(table, id, &data, Upkeep::Incremental)?;
+            if out.index_maintained {
+                maintained += 1;
+            }
+        } else {
+            // Control group: append data only, then pay a full rebuild —
+            // the regime this tier exists to retire.
+            index::maintain::append_rows(table, id, &data, Upkeep::Skip)?;
+            index::build(table, id, &BuildParams { seed: p.seed, ..Default::default() })?;
+            full_rebuilds += 1;
+        }
+        append_lat.push(sw.secs());
+
+        let ivf = IvfIndex::open(table, id)?;
+        let nprobe = if p.nprobe == 0 { ivf.default_nprobe } else { p.nprobe.min(ivf.k) };
+        last_nprobe = nprobe;
+        let (lat, wall) = driver::run_closed_loop(
+            p.clients,
+            p.queries_per_client,
+            p.seed ^ ((round as u64) << 8),
+            0x5EB5_E004,
+            |_, _, rng| {
+                let q = &pool[pick.sample(rng)];
+                let req = Stopwatch::start();
+                let out = ivf.search(q, p.k, nprobe)?;
+                std::hint::black_box(&out);
+                Ok(req.secs())
+            },
+        )?;
+        search_lat.extend(lat);
+        search_wall += wall;
+
+        if p.optimize_every > 0 && (round + 1) % p.optimize_every == 0 {
+            let sw = Stopwatch::start();
+            coord.optimize(id)?;
+            optimize_secs += sw.secs();
+            optimizes += 1;
+        }
+    }
+    let wall = sw_total.secs();
+    let (get1, _, _, bytes1, _) = store.stats().snapshot();
+    let log_commits = table.latest_version()? - v0;
+
+    // Verification, outside the measured phase: exactness at full nprobe,
+    // recall at the effective nprobe, and the full-rebuild control.
+    let matrix = index::load_matrix(table, id)?;
+    let recall_of = |ivf: &IvfIndex, nprobe: usize| -> Result<(f64, bool)> {
+        let mut hit = 0usize;
+        let mut truth_total = 0usize;
+        let mut exact = true;
+        for q in &pool {
+            let truth = index::exact_topk(&matrix, q, p.k);
+            let full = ivf.search(q, p.k, ivf.k)?;
+            exact &= full.len() == truth.len()
+                && full.iter().zip(&truth).all(|(a, b)| a.row == b.row && a.dist == b.dist);
+            let approx = ivf.search(q, p.k, nprobe)?;
+            truth_total += truth.len();
+            let ids: Vec<u32> = truth.iter().map(|n| n.row).collect();
+            hit += approx.iter().filter(|n| ids.contains(&n.row)).count();
+        }
+        Ok((hit as f64 / truth_total.max(1) as f64, exact))
+    };
+    let ivf = IvfIndex::open(table, id)?;
+    let (recall_after, exact_ok) = recall_of(&ivf, last_nprobe)?;
+    index::build(table, id, &BuildParams { seed: p.seed, ..Default::default() })?;
+    let control = IvfIndex::open(table, id)?;
+    let control_nprobe =
+        if p.nprobe == 0 { control.default_nprobe } else { p.nprobe.min(control.k) };
+    let (recall_rebuild, _) = recall_of(&control, control_nprobe)?;
+
+    let aq = driver::quantiles(&append_lat);
+    let sq = driver::quantiles(&search_lat);
+    Ok(MaintainReport {
+        rounds: p.rounds as u64,
+        appended_rows: (p.rounds * p.append_rows) as u64,
+        searches: search_lat.len() as u64,
+        k: p.k,
+        optimizes,
+        full_rebuilds,
+        maintained_appends: maintained,
+        incremental: p.incremental,
+        wall_secs: wall,
+        search_qps: search_lat.len() as f64 / search_wall.max(1e-9),
+        append_mean_secs: aq.mean,
+        append_p50_secs: aq.p50,
+        append_p95_secs: aq.p95,
+        append_p99_secs: aq.p99,
+        search_p50_secs: sq.p50,
+        search_p95_secs: sq.p95,
+        search_p99_secs: sq.p99,
+        optimize_secs,
+        exact_full_nprobe: exact_ok,
+        recall_after_maintenance: recall_after,
+        recall_full_rebuild: recall_rebuild,
+        get_ops: get1 - get0,
+        bytes_read: bytes1 - bytes0,
+        log_commits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn tiny_params() -> MaintainParams {
+        MaintainParams {
+            clients: 2,
+            queries_per_client: 5,
+            rounds: 2,
+            append_rows: 20,
+            optimize_every: 1,
+            rows: 400,
+            dim: 8,
+            clusters: 6,
+            query_pool: 4,
+            ..MaintainParams::tiny()
+        }
+    }
+
+    fn table() -> DeltaTable {
+        DeltaTable::create(ObjectStoreHandle::mem(), "maintain-t").unwrap()
+    }
+
+    #[test]
+    fn incremental_run_reports_consistent_numbers() {
+        let t = table();
+        let p = tiny_params();
+        populate_maintain_corpus(&t, "vecs", &p).unwrap();
+        let r = run_maintain(&t, "vecs", &p).unwrap();
+        assert_eq!(r.rounds, 2);
+        assert_eq!(r.appended_rows, 40);
+        assert_eq!(r.searches, 20);
+        assert_eq!(r.optimizes, 2);
+        assert_eq!(r.full_rebuilds, 0, "incremental mode never rebuilds");
+        assert_eq!(r.maintained_appends, 2, "every append carries a delta segment");
+        assert!(r.exact_full_nprobe, "full-nprobe search must equal brute force");
+        assert!(r.recall_after_maintenance > 0.0 && r.recall_after_maintenance <= 1.0);
+        assert!(r.search_qps > 0.0 && r.wall_secs > 0.0);
+        assert!(r.append_p50_secs <= r.append_p99_secs);
+        assert!(r.log_commits >= 2, "at least one commit per append round");
+        // JSON report round-trips through the crate's own parser.
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("rounds").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(j.get("incremental").and_then(|v| v.as_bool()), Some(true));
+        assert!(r.summary().contains("q/s"), "{}", r.summary());
+        assert!(r.summary().contains("recall@10"), "{}", r.summary());
+    }
+
+    #[test]
+    fn rebuild_control_rebuilds_every_round() {
+        let t = table();
+        let p = MaintainParams { incremental: false, optimize_every: 0, ..tiny_params() };
+        populate_maintain_corpus(&t, "vecs", &p).unwrap();
+        let r = run_maintain(&t, "vecs", &p).unwrap();
+        assert_eq!(r.full_rebuilds, 2);
+        assert_eq!(r.maintained_appends, 0);
+        assert_eq!(r.optimizes, 0);
+        assert!(r.exact_full_nprobe, "rebuilds are exact too");
+    }
+
+    #[test]
+    fn empty_runs_are_rejected() {
+        let t = table();
+        let p = tiny_params();
+        populate_maintain_corpus(&t, "vecs", &p).unwrap();
+        assert!(run_maintain(&t, "vecs", &MaintainParams { clients: 0, ..p.clone() }).is_err());
+        assert!(run_maintain(&t, "vecs", &MaintainParams { rounds: 0, ..p.clone() }).is_err());
+        assert!(
+            populate_maintain_corpus(&t, "v2", &MaintainParams { rows: 0, ..p }).is_err()
+        );
+    }
+}

@@ -19,9 +19,17 @@
 //! through the write engine, reporting tensors/s and per-commit latency.
 //! The [`search`] submodule drives the vector index tier the same way:
 //! Zipfian top-k queries with recall@k measured against the brute-force
-//! control, fed by the [`embedding_like`] clustered-vector generator.
+//! control, fed by the [`embedding_like`] clustered-vector generator. The
+//! [`maintain`] submodule closes the loop over the maintenance tier: an
+//! append/search/optimize mix measuring upkeep latency and
+//! recall-after-append against a full-rebuild control. All four are built
+//! on one skeleton — [`driver`]: closed-loop clients, per-client seeded
+//! RNG streams, latency quantiles and the scoped cache-mode guard —
+//! extracted once so future tiers get a harness for free.
 
+pub mod driver;
 pub mod ingest;
+pub mod maintain;
 pub mod search;
 pub mod serve;
 

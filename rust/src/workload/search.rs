@@ -15,12 +15,13 @@
 //! default `nprobe`, and a warmed run issues strictly fewer GETs than a
 //! cold one).
 
+use super::driver::{self, CacheModeGuard};
 use crate::delta::DeltaTable;
 use crate::formats::{FtsfFormat, TensorStore};
 use crate::index::{self, IvfIndex};
 use crate::jsonx::Json;
 use crate::util::prng::{Pcg64, Zipf};
-use crate::util::{RunStats, Stopwatch};
+use crate::util::Stopwatch;
 use crate::Result;
 use anyhow::ensure;
 
@@ -240,19 +241,6 @@ pub fn populate_search_corpus(table: &DeltaTable, id: &str, p: &SearchParams) ->
     Ok(())
 }
 
-/// Restores a store's serving-cache mode when dropped, so a `cache: false`
-/// control run never leaks its bypass past the harness.
-struct CacheModeGuard {
-    instance: u64,
-    was_enabled: bool,
-}
-
-impl Drop for CacheModeGuard {
-    fn drop(&mut self) {
-        crate::serving::set_cache_enabled(self.instance, self.was_enabled);
-    }
-}
-
 /// Run the closed loop and report. The table must already hold the corpus
 /// and its index (see [`populate_search_corpus`]). The store's
 /// serving-cache mode is set from `p.cache` for the duration of the run
@@ -263,11 +251,7 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
     ensure!(p.query_pool > 0, "search needs at least one pool query");
     ensure!(p.k > 0, "search needs k >= 1");
     let store = table.store().clone();
-    let _restore = CacheModeGuard {
-        instance: store.instance_id(),
-        was_enabled: crate::serving::cache_enabled(store.instance_id()),
-    };
-    crate::serving::set_cache_enabled(store.instance_id(), p.cache);
+    let _restore = CacheModeGuard::set(&store, p.cache);
 
     let ivf = IvfIndex::open(table, id)?;
     let nprobe = if p.nprobe == 0 { ivf.default_nprobe } else { p.nprobe.min(ivf.k) };
@@ -298,34 +282,20 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
     let (get0, _, _, bytes0, _) = store.stats().snapshot();
     let hits0 = crate::serving::block_cache().hits();
     let misses0 = crate::serving::block_cache().misses();
-    let sw = Stopwatch::start();
-    let mut latencies: Vec<f64> = Vec::with_capacity(p.clients * p.queries_per_client);
-    let ivf_ref = &ivf;
-    let pool_ref = &pool;
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::with_capacity(p.clients);
-        for client in 0..p.clients {
-            handles.push(scope.spawn(move || -> Result<Vec<f64>> {
-                let mut rng = Pcg64::new(p.seed ^ (0x5EB5_E002 + client as u64));
-                let pick = Zipf::new(pool_ref.len(), p.zipf_s);
-                let mut lat = Vec::with_capacity(p.queries_per_client);
-                for _ in 0..p.queries_per_client {
-                    let q = &pool_ref[pick.sample(&mut rng)];
-                    let req = Stopwatch::start();
-                    let out = ivf_ref.search(q, p.k, nprobe)?;
-                    std::hint::black_box(&out);
-                    lat.push(req.secs());
-                }
-                Ok(lat)
-            }));
-        }
-        for h in handles {
-            let lat = h.join().map_err(|_| anyhow::anyhow!("search client panicked"))??;
-            latencies.extend(lat);
-        }
-        Ok(())
-    })?;
-    let wall = sw.secs();
+    let pick = Zipf::new(pool.len(), p.zipf_s);
+    let (latencies, wall) = driver::run_closed_loop(
+        p.clients,
+        p.queries_per_client,
+        p.seed,
+        0x5EB5_E002,
+        |_, _, rng| {
+            let q = &pool[pick.sample(rng)];
+            let req = Stopwatch::start();
+            let out = ivf.search(q, p.k, nprobe)?;
+            std::hint::black_box(&out);
+            Ok(req.secs())
+        },
+    )?;
     let (get1, _, _, bytes1, _) = store.stats().snapshot();
     let hits1 = crate::serving::block_cache().hits();
     let misses1 = crate::serving::block_cache().misses();
@@ -345,10 +315,7 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
     }
     let recall = hit as f64 / truth_total.max(1) as f64;
 
-    let mut stats = RunStats::new();
-    for &l in &latencies {
-        stats.push(l);
-    }
+    let q = driver::quantiles(&latencies);
     let queries = latencies.len() as u64;
     Ok(SearchReport {
         clients: p.clients,
@@ -359,10 +326,10 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
         recall_at_k: recall,
         wall_secs: wall,
         throughput_qps: queries as f64 / wall.max(1e-9),
-        mean_secs: stats.mean(),
-        p50_secs: stats.percentile(50.0),
-        p95_secs: stats.percentile(95.0),
-        p99_secs: stats.percentile(99.0),
+        mean_secs: q.mean,
+        p50_secs: q.p50,
+        p95_secs: q.p95,
+        p99_secs: q.p99,
         get_ops: get1 - get0,
         bytes_read: bytes1 - bytes0,
         cache_hits: hits1 - hits0,

@@ -14,11 +14,12 @@
 //! (the acceptance assertions: warm cache-hit reads issue **zero** GETs and
 //! strictly beat the uncached run on throughput and p99).
 
+use super::driver::{self, CacheModeGuard};
 use crate::coordinator::{Coordinator, IngestJob};
 use crate::jsonx::Json;
 use crate::tensor::Slice;
-use crate::util::prng::{Pcg64, Zipf};
-use crate::util::{RunStats, Stopwatch};
+use crate::util::prng::Zipf;
+use crate::util::Stopwatch;
 use crate::Result;
 use anyhow::ensure;
 
@@ -196,20 +197,6 @@ pub fn populate_serve_table(c: &Coordinator, p: &ServeParams) -> Result<Vec<Stri
     Ok(ids)
 }
 
-/// Restores a store's serving-cache mode when dropped, so a `cache: false`
-/// control run never leaks its bypass past the harness (early returns
-/// included).
-struct CacheModeGuard {
-    instance: u64,
-    was_enabled: bool,
-}
-
-impl Drop for CacheModeGuard {
-    fn drop(&mut self) {
-        crate::serving::set_cache_enabled(self.instance, self.was_enabled);
-    }
-}
-
 /// Run the closed loop and report. The coordinator's table must already
 /// hold `ids` (see [`populate_serve_table`]); per-request latencies are
 /// also recorded in the coordinator's `serve.request_secs` histogram. The
@@ -217,13 +204,8 @@ impl Drop for CacheModeGuard {
 /// run and restored afterwards.
 pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<ServeReport> {
     ensure!(!ids.is_empty(), "no tensors to serve");
-    ensure!(p.clients > 0 && p.requests_per_client > 0, "empty serve run");
     let store = c.table().store().clone();
-    let _restore = CacheModeGuard {
-        instance: store.instance_id(),
-        was_enabled: crate::serving::cache_enabled(store.instance_id()),
-    };
-    crate::serving::set_cache_enabled(store.instance_id(), p.cache);
+    let _restore = CacheModeGuard::set(&store, p.cache);
     // Warm the control plane (snapshot cache) so the measured loop is
     // data-plane bound, then optionally the data plane itself.
     let _ = c.list_tensors()?;
@@ -238,41 +220,28 @@ pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<Ser
     let (get0, _, _, bytes0, _) = store.stats().snapshot();
     let hits0 = crate::serving::block_cache().hits();
     let misses0 = crate::serving::block_cache().misses();
-    let sw = Stopwatch::start();
-    let mut latencies: Vec<f64> = Vec::with_capacity(p.clients * p.requests_per_client);
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::with_capacity(p.clients);
-        for client in 0..p.clients {
-            handles.push(scope.spawn(move || -> Result<Vec<f64>> {
-                let mut rng = Pcg64::new(p.seed ^ (0x5EB5_E001 + client as u64));
-                let pick_tensor = Zipf::new(ids.len(), p.zipf_s);
-                let pick_slice = Zipf::new(p.dim0, p.zipf_s);
-                let mut lat = Vec::with_capacity(p.requests_per_client);
-                for _ in 0..p.requests_per_client {
-                    let id = &ids[pick_tensor.sample(&mut rng)];
-                    let d = pick_slice.sample(&mut rng);
-                    let req = Stopwatch::start();
-                    let out = c.read_slice(id, &Slice::index(d))?;
-                    std::hint::black_box(&out);
-                    lat.push(req.secs());
-                }
-                Ok(lat)
-            }));
-        }
-        for h in handles {
-            let lat = h.join().map_err(|_| anyhow::anyhow!("serve client panicked"))??;
-            latencies.extend(lat);
-        }
-        Ok(())
-    })?;
-    let wall = sw.secs();
+    let pick_tensor = Zipf::new(ids.len(), p.zipf_s);
+    let pick_slice = Zipf::new(p.dim0, p.zipf_s);
+    let (latencies, wall) = driver::run_closed_loop(
+        p.clients,
+        p.requests_per_client,
+        p.seed,
+        0x5EB5_E001,
+        |_, _, rng| {
+            let id = &ids[pick_tensor.sample(rng)];
+            let d = pick_slice.sample(rng);
+            let req = Stopwatch::start();
+            let out = c.read_slice(id, &Slice::index(d))?;
+            std::hint::black_box(&out);
+            Ok(req.secs())
+        },
+    )?;
 
     let hist = c.metrics().histogram("serve.request_secs");
-    let mut stats = RunStats::new();
     for &l in &latencies {
-        stats.push(l);
         hist.observe(l);
     }
+    let q = driver::quantiles(&latencies);
     let (get1, _, _, bytes1, _) = store.stats().snapshot();
     let requests = latencies.len() as u64;
     c.metrics().counter("serve.requests").add(requests);
@@ -282,10 +251,10 @@ pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<Ser
         cache_enabled: p.cache,
         wall_secs: wall,
         throughput_rps: requests as f64 / wall.max(1e-9),
-        mean_secs: stats.mean(),
-        p50_secs: stats.percentile(50.0),
-        p95_secs: stats.percentile(95.0),
-        p99_secs: stats.percentile(99.0),
+        mean_secs: q.mean,
+        p50_secs: q.p50,
+        p95_secs: q.p95,
+        p99_secs: q.p99,
         get_ops: get1 - get0,
         bytes_read: bytes1 - bytes0,
         cache_hits: crate::serving::block_cache().hits() - hits0,

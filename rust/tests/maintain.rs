@@ -1,0 +1,253 @@
+//! Maintenance-tier acceptance tests — the behaviors the tier exists to
+//! provide:
+//!
+//! * appending rows to an indexed tensor lands the data, the grown shape
+//!   metadata AND the delta posting segment in exactly ONE atomic commit,
+//!   issues no rebuild, and keeps the index Fresh;
+//! * append-then-search at full `nprobe` returns results identical to
+//!   brute force — and to a from-scratch full rebuild;
+//! * OPTIMIZE of a 2-D FTSF corpus (the case the default 3-D chunk
+//!   geometry used to break) preserves the stored chunk rank, compacts the
+//!   files, folds the delta segments into the main artifacts, and leaves
+//!   the index Fresh with the superseded artifacts vacuum-able;
+//! * `index::status_report` distinguishes a rewrite-in-place (cheap fold)
+//!   from changed data (full rebuild required).
+
+use delta_tensor::coordinator::Coordinator;
+use delta_tensor::formats::{common_parts_count, TensorData};
+use delta_tensor::index::{self, maintain, BuildParams, IvfIndex};
+use delta_tensor::prelude::*;
+use delta_tensor::workload::embedding_like;
+
+/// Store an `n × dim` clustered f32 corpus as FTSF row-chunks with
+/// append-friendly (small) file geometry.
+fn store_corpus(table: &DeltaTable, id: &str, seed: u64, n: usize, dim: usize) {
+    let data: TensorData = embedding_like(seed, n, dim, 8, 0.05).into();
+    let fmt = FtsfFormat { rows_per_group: 8, rows_per_file: 16, ..FtsfFormat::new(1) };
+    fmt.write(table, id, &data).unwrap();
+}
+
+/// Perturbed corpus rows — retrieval-shaped queries.
+fn queries(matrix: &index::Matrix, seed: u64, count: usize) -> Vec<Vec<f32>> {
+    let mut rng = delta_tensor::util::Pcg64::new(seed);
+    (0..count)
+        .map(|_| {
+            let r = rng.below(matrix.rows);
+            matrix.row(r).iter().map(|&v| v + rng.next_gaussian() as f32 * 0.01).collect()
+        })
+        .collect()
+}
+
+fn batch(seed: u64, rows: usize, dim: usize) -> TensorData {
+    embedding_like(seed, rows, dim, 8, 0.05).into()
+}
+
+#[test]
+fn append_lands_data_and_delta_segment_in_one_commit() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 3, 300, 8);
+    index::build(&table, "vecs", &BuildParams { seed: 3, ..Default::default() }).unwrap();
+    let files_before = table.snapshot().unwrap().files_for_tensor("vecs").len();
+    let v0 = table.latest_version().unwrap();
+
+    let out =
+        maintain::append_rows(&table, "vecs", &batch(99, 24, 8), maintain::Upkeep::Incremental)
+            .unwrap();
+    assert_eq!(out.version, v0 + 1, "append must land as ONE atomic commit");
+    assert_eq!(table.latest_version().unwrap(), v0 + 1, "no extra commits");
+    assert!(out.index_maintained, "a fresh index must be maintained");
+    assert_eq!((out.rows_appended, out.rows_total), (24, 324));
+    assert!(out.delta_bytes > 0);
+
+    let snap = table.snapshot().unwrap();
+    let deltas: Vec<&str> = snap
+        .files()
+        .filter(|f| f.path.starts_with("index/vecs/") && f.path.ends_with("-delta.idx"))
+        .map(|f| f.path.as_str())
+        .collect();
+    assert_eq!(deltas.len(), 1, "exactly one delta segment: {deltas:?}");
+    assert!(
+        snap.files_for_tensor("vecs").len() > files_before,
+        "the same commit landed new data parts"
+    );
+    // The commit was an append, not a rebuild.
+    let history = table.history().unwrap();
+    let (_, last_op, _) = history.last().unwrap();
+    assert_eq!(last_op, "APPEND FTSF");
+    assert!(index::status(&table, "vecs").unwrap().is_fresh(), "fingerprint re-pinned in-commit");
+
+    // The appended rows are readable data (shape grew atomically too).
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    assert_eq!(matrix.rows, 324);
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    assert_eq!(ivf.rows, 324, "index row count includes the delta segment");
+    assert_eq!(ivf.delta_segments, 1);
+
+    // An appended row is its own nearest neighbor through the index.
+    let got = ivf.search(matrix.row(310), 3, ivf.k).unwrap();
+    assert_eq!(got[0].row, 310);
+    assert_eq!(got[0].dist, 0.0);
+}
+
+#[test]
+fn append_then_search_equals_full_rebuild_at_full_nprobe() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 11, 500, 16);
+    index::build(&table, "vecs", &BuildParams { k: 16, seed: 11, ..Default::default() }).unwrap();
+    for b in 0..3u64 {
+        let out = maintain::append_rows(
+            &table,
+            "vecs",
+            &batch(100 + b, 40, 16),
+            maintain::Upkeep::Incremental,
+        )
+        .unwrap();
+        assert!(out.index_maintained, "append {b} must ride the maintenance path");
+        assert!(index::status(&table, "vecs").unwrap().is_fresh());
+    }
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    assert_eq!(matrix.rows, 620);
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    assert_eq!(ivf.delta_segments, 3);
+
+    let mut qs = queries(&matrix, 7, 12);
+    qs.push(vec![0.0; 16]);
+    qs.push(vec![10.0; 16]);
+    let incremental: Vec<Vec<index::Neighbor>> =
+        qs.iter().map(|q| ivf.search(q, 10, ivf.k).unwrap()).collect();
+    for (q, got) in qs.iter().zip(&incremental) {
+        let exact = index::exact_topk(&matrix, q, 10);
+        assert_eq!(got.len(), exact.len());
+        for (a, e) in got.iter().zip(&exact) {
+            assert_eq!(a.row, e.row, "row mismatch vs brute force for {q:?}");
+            assert_eq!(a.dist, e.dist, "distance mismatch at row {}", a.row);
+        }
+    }
+
+    // A from-scratch full rebuild returns the same full-nprobe answers.
+    index::build(&table, "vecs", &BuildParams { k: 16, seed: 12, ..Default::default() }).unwrap();
+    let control = IvfIndex::open(&table, "vecs").unwrap();
+    assert_eq!(control.delta_segments, 0, "rebuild folds everything into main artifacts");
+    assert_eq!(control.rows, 620);
+    for (q, got) in qs.iter().zip(&incremental) {
+        let rebuilt = control.search(q, 10, control.k).unwrap();
+        assert_eq!(rebuilt.len(), got.len());
+        for (a, e) in rebuilt.iter().zip(got) {
+            assert_eq!((a.row, a.dist), (e.row, e.dist), "rebuild differs from incremental");
+        }
+    }
+}
+
+#[test]
+fn optimize_preserves_chunk_rank_folds_and_stays_fresh() {
+    let store = ObjectStoreHandle::mem();
+    let table = DeltaTable::create(store, "t").unwrap();
+    store_corpus(&table, "vecs", 21, 200, 8);
+    index::build(&table, "vecs", &BuildParams { seed: 21, ..Default::default() }).unwrap();
+    for b in 0..2u64 {
+        maintain::append_rows(&table, "vecs", &batch(200 + b, 20, 8), maintain::Upkeep::Incremental)
+            .unwrap();
+    }
+    let before_parts = common_parts_count(&table, "vecs", "FTSF").unwrap();
+    assert!(before_parts > 10, "setup should fragment, got {before_parts}");
+    let before = index::load_matrix(&table, "vecs").unwrap();
+
+    // The fix under test: OPTIMIZE of a 2-D FTSF corpus used to fail
+    // (default chunk rank 3 >= rank 2) after already committing the
+    // removes. Now it rewrites with the stored rank and refreshes the
+    // index in the same maintenance pass.
+    let c = Coordinator::new(table.clone(), 1, 1);
+    c.optimize("vecs").unwrap();
+    assert_eq!(c.metrics().counter("optimize.index_folds").get(), 1, "refresh was a fold");
+
+    let after_parts = common_parts_count(&table, "vecs", "FTSF").unwrap();
+    assert!(after_parts < before_parts, "compaction: {after_parts} vs {before_parts}");
+    assert_eq!(FtsfFormat::discover(&table, "vecs").unwrap().chunk_dims, 1, "rank preserved");
+    let after = index::load_matrix(&table, "vecs").unwrap();
+    assert_eq!((after.rows, after.dim), (240, 8));
+    assert_eq!(after.data, before.data, "rewrite preserves content");
+
+    // Index: Fresh, delta segments folded away, old artifacts reclaimable.
+    assert!(index::status(&table, "vecs").unwrap().is_fresh(), "fold re-pins the index");
+    let snap = table.snapshot().unwrap();
+    assert!(
+        !snap.files().any(|f| f.path.ends_with("-delta.idx")),
+        "fold must retire every delta segment from the log"
+    );
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    assert_eq!(ivf.delta_segments, 0);
+    assert_eq!(ivf.rows, 240);
+    let deleted = table.vacuum().unwrap();
+    assert!(deleted > 0, "superseded data parts + index artifacts are vacuum-able");
+
+    // Still exact after the whole maintenance pass + vacuum.
+    for q in queries(&after, 5, 8) {
+        let got = ivf.search(&q, 10, ivf.k).unwrap();
+        let exact = index::exact_topk(&after, &q, 10);
+        for (a, e) in got.iter().zip(&exact) {
+            assert_eq!((a.row, a.dist), (e.row, e.dist));
+        }
+    }
+}
+
+#[test]
+fn optimize_rebuilds_when_index_was_stale_before_the_pass() {
+    // A same-shape content overwrite keeps the row count, so a fold would
+    // pin the OLD vectors as Fresh — optimize must detect that the index
+    // was stale going in and rebuild instead.
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 51, 150, 8);
+    index::build(&table, "vecs", &BuildParams { seed: 51, ..Default::default() }).unwrap();
+    store_corpus(&table, "vecs", 52, 150, 8); // overwrite: same rows, new values
+    assert!(!index::status(&table, "vecs").unwrap().is_fresh());
+
+    let c = Coordinator::new(table.clone(), 1, 1);
+    c.optimize("vecs").unwrap();
+    assert_eq!(c.metrics().counter("optimize.index_rebuilds").get(), 1, "must rebuild");
+    assert_eq!(c.metrics().counter("optimize.index_folds").get(), 0, "fold would be unsound");
+    assert!(index::status(&table, "vecs").unwrap().is_fresh());
+
+    // The refreshed index answers for the NEW content, exactly.
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    for q in queries(&matrix, 9, 6) {
+        let got = ivf.search(&q, 5, ivf.k).unwrap();
+        let exact = index::exact_topk(&matrix, &q, 5);
+        for (a, e) in got.iter().zip(&exact) {
+            assert_eq!((a.row, a.dist), (e.row, e.dist));
+        }
+    }
+}
+
+#[test]
+fn status_report_distinguishes_rewrite_from_changed_data() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 31, 200, 8);
+    index::build(&table, "vecs", &BuildParams { seed: 31, ..Default::default() }).unwrap();
+    assert!(index::status_report(&table, "vecs").unwrap().contains("fresh"));
+
+    // Rewrite in place: same row count, fresh timestamps -> stale, but
+    // recoverable by a fold.
+    store_corpus(&table, "vecs", 32, 200, 8);
+    let report = index::status_report(&table, "vecs").unwrap();
+    assert!(report.contains("STALE"), "{report}");
+    assert!(report.contains("rewritten in place"), "{report}");
+    assert!(report.contains("fold"), "{report}");
+
+    // Grow the data without maintenance: row counts diverge -> the report
+    // demands a full rebuild, and fold refuses.
+    maintain::append_rows(&table, "vecs", &batch(33, 16, 8), maintain::Upkeep::Skip).unwrap();
+    let report = index::status_report(&table, "vecs").unwrap();
+    assert!(report.contains("full rebuild required"), "{report}");
+    let err = maintain::fold(&table, "vecs").unwrap_err();
+    assert!(err.to_string().contains("full rebuild"), "{err:#}");
+
+    // An unindexed tensor appends cleanly with upkeep requested: nothing
+    // to maintain, index stays missing.
+    store_corpus(&table, "other", 40, 50, 8);
+    let out =
+        maintain::append_rows(&table, "other", &batch(41, 10, 8), maintain::Upkeep::Incremental)
+            .unwrap();
+    assert!(!out.index_maintained);
+    assert_eq!(index::status(&table, "other").unwrap(), index::IndexStatus::Missing);
+}
