@@ -1,13 +1,16 @@
 //! Vector-search load bench: the closed-loop Zipfian top-k workload of
-//! `workload::search`, run twice over a fresh simulated cloud store — once
-//! with posting fetches riding the serving tier's block cache, once
-//! straight to the backend — and compared on QPS, latency quantiles,
-//! recall@k, GETs and bytes moved.
+//! `workload::search`, run over a fresh simulated cloud store in four
+//! configurations — Flat and PQ postings, each with posting fetches riding
+//! the serving tier's block cache and straight to the backend — and
+//! compared on QPS, latency quantiles, recall@k, GETs, bytes moved and
+//! posting bytes fetched (the I/O PQ compresses).
 //!
 //! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
-//! `DT_SEED` (workload seed, default 7), `DT_BENCH_OUT` (JSON report path,
-//! default `BENCH_search.json`). CI runs the tiny scale and gates
-//! `cache.throughput_qps` against `bench_baselines/search.json`.
+//! `DT_SEED` (workload seed, default 7), `DT_BENCH_OUT` (Flat JSON report
+//! path, default `BENCH_search.json`), `DT_BENCH_OUT_PQ` (PQ JSON report
+//! path, default `BENCH_search_pq.json`). CI runs the tiny scale and gates
+//! both reports against `bench_baselines/search.json` and
+//! `bench_baselines/search_pq.json`.
 
 use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
 use delta_tensor::prelude::*;
@@ -25,6 +28,30 @@ fn run_once(cache: bool, params: &SearchParams) -> SearchReport {
     run_search(&table, "vectors", &params).expect("search run")
 }
 
+/// Run the cache-on / cache-off pair for one posting encoding, appending a
+/// table row per run.
+fn bench_pair(params: &SearchParams, tag: &str, rows: &mut Vec<Row>) -> Vec<SearchReport> {
+    let mut reports = Vec::new();
+    for cache in [true, false] {
+        let r = run_once(cache, params);
+        rows.push(Row {
+            label: format!("{tag} {}", if cache { "cache" } else { "no-cache" }),
+            cells: vec![
+                format!("{:.0}", r.throughput_qps),
+                fmt_secs(r.p50_secs),
+                fmt_secs(r.p95_secs),
+                fmt_secs(r.p99_secs),
+                format!("{:.4}", r.recall_at_k),
+                r.get_ops.to_string(),
+                human_bytes(r.bytes_read),
+                human_bytes(r.postings_bytes_fetched),
+            ],
+        });
+        reports.push(r);
+    }
+    reports
+}
+
 fn main() {
     let mut params = match benchkit::scale() {
         Scale::Tiny => SearchParams::tiny(),
@@ -35,30 +62,20 @@ fn main() {
         params.seed = seed.parse().expect("DT_SEED must be an integer");
     }
     let mut rows = Vec::new();
-    let mut reports = Vec::new();
-    for cache in [true, false] {
-        let r = run_once(cache, &params);
-        rows.push(Row {
-            label: if cache { "cache" } else { "no-cache" }.to_string(),
-            cells: vec![
-                format!("{:.0}", r.throughput_qps),
-                fmt_secs(r.p50_secs),
-                fmt_secs(r.p95_secs),
-                fmt_secs(r.p99_secs),
-                format!("{:.4}", r.recall_at_k),
-                r.get_ops.to_string(),
-                human_bytes(r.bytes_read),
-            ],
-        });
-        reports.push(r);
-    }
+    let reports = bench_pair(&params, "flat", &mut rows);
+    let pq_params = SearchParams { pq: true, ..params.clone() };
+    let pq_reports = bench_pair(&pq_params, "pq", &mut rows);
     print_table(
-        "search: closed-loop Zipfian top-k queries, serving tier on vs off",
-        &["mode", "q/s", "p50", "p95", "p99", "recall@k", "GETs", "bytes"],
+        "search: closed-loop Zipfian top-k queries — Flat vs PQ postings, serving tier on vs off",
+        &["mode", "q/s", "p50", "p95", "p99", "recall@k", "GETs", "bytes", "posting B"],
         &rows,
     );
     let speedup = reports[0].throughput_qps / reports[1].throughput_qps.max(1e-9);
-    println!("\nthroughput speedup with serving tier: {speedup:.2}x");
+    let pq_speedup = pq_reports[0].throughput_qps / pq_reports[1].throughput_qps.max(1e-9);
+    let compression = reports[0].postings_bytes_fetched as f64
+        / (pq_reports[0].postings_bytes_fetched as f64).max(1.0);
+    println!("\nthroughput speedup with serving tier: flat {speedup:.2}x, pq {pq_speedup:.2}x");
+    println!("posting bytes fetched, flat / pq: {compression:.1}x");
 
     let out = std::env::var("DT_BENCH_OUT").unwrap_or_else(|_| "BENCH_search.json".to_string());
     let json = format!(
@@ -68,4 +85,15 @@ fn main() {
     );
     std::fs::write(&out, json).expect("write bench report");
     println!("wrote {out}");
+
+    let out_pq =
+        std::env::var("DT_BENCH_OUT_PQ").unwrap_or_else(|_| "BENCH_search_pq.json".to_string());
+    let json_pq = format!(
+        "{{\"bench\":\"search_pq\",\"cache\":{},\"no_cache\":{},\"speedup\":{pq_speedup:.4},\
+         \"posting_compression\":{compression:.4}}}",
+        pq_reports[0].to_json(),
+        pq_reports[1].to_json()
+    );
+    std::fs::write(&out_pq, json_pq).expect("write pq bench report");
+    println!("wrote {out_pq}");
 }

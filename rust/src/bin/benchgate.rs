@@ -5,16 +5,27 @@
 //! (`bench_baselines/<name>.json`) and exits non-zero when a gated metric
 //! regresses more than the threshold (default 25%).
 //!
-//! A baseline file pins the metric path and its expected value:
+//! A baseline file pins one or more gated metrics:
 //!
 //! ```text
 //! {"bench": "serve", "metric": "cache.throughput_rps", "value": 40.0}
+//! {"bench": "search", "gates": [
+//!   {"metric": "throughput_qps", "value": 30.0, "direction": "higher"},
+//!   {"metric": "postings_bytes_fetched", "value": 1500000, "direction": "lower"},
+//!   {"metric": "recall_at_k", "floor": 0.8}
+//! ]}
 //! ```
 //!
-//! The metric path is dot-separated into the report's JSON object; the
-//! gate fails when `report[metric] < (1 - threshold) * value`. Refresh a
-//! baseline by copying the measured value from a trusted CI run's artifact
-//! into the committed file (see rust/README.md).
+//! Each metric path is dot-separated into the report's JSON object. A
+//! `value` gate is relative: `direction: "higher"` (the default) fails
+//! when `measured < (1 - threshold) * value`, `direction: "lower"` fails
+//! when `measured > (1 + threshold) * value` — for metrics like bytes
+//! fetched where *growth* is the regression. A `floor` gate is absolute:
+//! it fails when `measured < floor`, with no threshold slack — for
+//! correctness-adjacent metrics like recall that must never drift below a
+//! hard bar. The legacy single `metric`/`value` form is one higher-is-
+//! better gate. Refresh a baseline by copying the measured value from a
+//! trusted CI run's artifact into the committed file (see rust/README.md).
 //!
 //! ```text
 //! cargo run --release --bin benchgate -- \
@@ -40,39 +51,119 @@ fn load(path: &str) -> Result<Json> {
     jsonx::parse(&text).with_context(|| format!("parsing {path}"))
 }
 
+/// How a gated metric is allowed to move.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Direction {
+    /// Regression = falling below `(1 - threshold) * value`.
+    Higher,
+    /// Regression = rising above `(1 + threshold) * value`.
+    Lower,
+    /// Regression = falling below the absolute `floor` (no slack).
+    Floor,
+}
+
+impl Direction {
+    fn label(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Floor => "floor",
+        }
+    }
+}
+
 struct Gate {
     name: String,
     metric: String,
+    direction: Direction,
     measured: f64,
     baseline: f64,
-    floor: f64,
+    bound: f64,
     pass: bool,
 }
 
-fn check(name: &str, report_path: &str, baseline_dir: &str, threshold: f64) -> Result<Gate> {
+/// Turn one baseline gate spec (an object with `metric` plus `value`
+/// and/or `floor`) into concrete gates against the measured report.
+fn gates_of_spec(
+    name: &str,
+    spec: &Json,
+    report: &Json,
+    paths: (&str, &str),
+    threshold: f64,
+) -> Result<Vec<Gate>> {
+    let (baseline_path, report_path) = paths;
+    let metric = spec
+        .get("metric")
+        .and_then(Json::as_str)
+        .with_context(|| format!("{baseline_path}: gate missing \"metric\""))?
+        .to_string();
+    let measured = value_at(report, &metric)
+        .with_context(|| format!("{report_path}: no numeric value at {metric:?}"))?;
+    let mut out = Vec::new();
+    if let Some(expected) = spec.get("value").and_then(Json::as_f64) {
+        let direction = match spec.get("direction").and_then(Json::as_str).unwrap_or("higher") {
+            "higher" => Direction::Higher,
+            "lower" => Direction::Lower,
+            other => bail!("{baseline_path}: unknown direction {other:?} (higher|lower)"),
+        };
+        let (bound, pass) = match direction {
+            Direction::Higher => {
+                let b = expected * (1.0 - threshold);
+                (b, measured >= b)
+            }
+            _ => {
+                let b = expected * (1.0 + threshold);
+                (b, measured <= b)
+            }
+        };
+        out.push(Gate {
+            name: name.to_string(),
+            metric: metric.clone(),
+            direction,
+            measured,
+            baseline: expected,
+            bound,
+            pass,
+        });
+    }
+    if let Some(floor) = spec.get("floor").and_then(Json::as_f64) {
+        out.push(Gate {
+            name: name.to_string(),
+            metric: metric.clone(),
+            direction: Direction::Floor,
+            measured,
+            baseline: floor,
+            bound: floor,
+            pass: measured >= floor,
+        });
+    }
+    if out.is_empty() {
+        bail!("{baseline_path}: gate for {metric:?} needs a numeric \"value\" or \"floor\"");
+    }
+    Ok(out)
+}
+
+fn check(name: &str, report_path: &str, baseline_dir: &str, threshold: f64) -> Result<Vec<Gate>> {
     let report = load(report_path)?;
     let baseline_path = format!("{baseline_dir}/{name}.json");
     let baseline = load(&baseline_path)?;
-    let metric = baseline
-        .get("metric")
-        .and_then(Json::as_str)
-        .with_context(|| format!("{baseline_path}: missing \"metric\""))?
-        .to_string();
-    let expected = baseline
-        .get("value")
-        .and_then(Json::as_f64)
-        .with_context(|| format!("{baseline_path}: missing numeric \"value\""))?;
-    let measured = value_at(&report, &metric)
-        .with_context(|| format!("{report_path}: no numeric value at {metric:?}"))?;
-    let floor = expected * (1.0 - threshold);
-    Ok(Gate {
-        name: name.to_string(),
-        metric,
-        measured,
-        baseline: expected,
-        floor,
-        pass: measured >= floor,
-    })
+    // Modern form: a "gates" array. Legacy form: the top-level object is
+    // itself one higher-is-better value gate.
+    let specs: Vec<&Json> = match baseline.get("gates").and_then(Json::as_arr) {
+        Some(g) => g.iter().collect(),
+        None => vec![&baseline],
+    };
+    let mut gates = Vec::new();
+    for spec in specs {
+        gates.extend(gates_of_spec(
+            name,
+            spec,
+            &report,
+            (&baseline_path, report_path),
+            threshold,
+        )?);
+    }
+    Ok(gates)
 }
 
 fn real_main() -> Result<()> {
@@ -110,20 +201,22 @@ fn real_main() -> Result<()> {
 
     let mut failed = false;
     let mut gates = Vec::with_capacity(reports.len());
-    println!("benchgate: threshold {:.0}% below baseline", threshold * 100.0);
+    println!("benchgate: threshold {:.0}% from baseline (floors absolute)", threshold * 100.0);
     for (name, path) in &reports {
-        let g = check(name, path, &baseline_dir, threshold)?;
-        println!(
-            "  {:<8} {:<24} measured {:>10.2}  baseline {:>10.2}  floor {:>10.2}  {}",
-            g.name,
-            g.metric,
-            g.measured,
-            g.baseline,
-            g.floor,
-            if g.pass { "ok" } else { "REGRESSION" },
-        );
-        failed |= !g.pass;
-        gates.push(g);
+        for g in check(name, path, &baseline_dir, threshold)? {
+            println!(
+                "  {:<10} {:<26} {:<6} measured {:>12.2}  baseline {:>12.2}  bound {:>12.2}  {}",
+                g.name,
+                g.metric,
+                g.direction.label(),
+                g.measured,
+                g.baseline,
+                g.bound,
+                if g.pass { "ok" } else { "REGRESSION" },
+            );
+            failed |= !g.pass;
+            gates.push(g);
+        }
     }
     // Inside GitHub Actions, mirror the verdicts into the job's step
     // summary so a regression is readable from the run page without
@@ -136,9 +229,8 @@ fn real_main() -> Result<()> {
     }
     if failed {
         bail!(
-            "throughput regressed more than {:.0}% against bench_baselines/ — \
-             investigate, or refresh the baseline if the change is intended",
-            threshold * 100.0
+            "a gated metric regressed past its bound against bench_baselines/ — \
+             investigate, or refresh the baseline if the change is intended"
         );
     }
     Ok(())
@@ -153,16 +245,17 @@ fn write_step_summary(path: &str, gates: &[Gate], threshold: f64) -> Result<()> 
         "### benchgate — perf regression gate (threshold {:.0}% below baseline)\n\n",
         threshold * 100.0
     ));
-    out.push_str("| report | metric | measured | baseline | floor | status |\n");
-    out.push_str("|---|---|---:|---:|---:|---|\n");
+    out.push_str("| report | metric | direction | measured | baseline | bound | status |\n");
+    out.push_str("|---|---|---|---:|---:|---:|---|\n");
     for g in gates {
         out.push_str(&format!(
-            "| {} | `{}` | {:.2} | {:.2} | {:.2} | {} |\n",
+            "| {} | `{}` | {} | {:.2} | {:.2} | {:.2} | {} |\n",
             g.name,
             g.metric,
+            g.direction.label(),
             g.measured,
             g.baseline,
-            g.floor,
+            g.bound,
             if g.pass { "✅ pass" } else { "❌ REGRESSION" },
         ));
     }

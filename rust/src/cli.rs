@@ -176,10 +176,16 @@ COMMANDS
   vacuum                         delete unreferenced data objects
   index build                    build the IVF ANN index over a 2-D f32/f64 tensor
             [--id NAME] [--k N] [--iters N] [--sample N] [--nprobe N] [--seed N]
-            (--id omitted: picks the single indexable matrix, else lists them)
+            [--pq] [--pq-m M]    (--pq: product-quantized postings — M subspaces
+            of 1-byte codes per vector, exact re-rank at query time; --pq-m 0
+            picks dim/4. --id omitted: picks the single indexable matrix, else
+            lists them)
   index status --id NAME [--version V]    index freshness (fresh/STALE/missing;
-            stale output distinguishes rewritten-in-place from changed data)
+            stale output distinguishes rewritten-in-place from changed data;
+            PQ indexes also report codebook params + posting compression)
   search    --id NAME (--query V1,V2,... | --row N) [--k N] [--nprobe N]
+            [--rerank N]         (--rerank: exact re-rank depth on a PQ index;
+            0 = max(4k, 32), or the DT_RERANK env var when set)
   bench serve                    closed-loop Zipfian serving load harness
             [--clients N] [--requests N] [--tensors N] [--dim0 N]
             [--zipf S] [--no-cache] [--warmup-off] [--layout NAME]
@@ -190,12 +196,13 @@ COMMANDS
   bench search                   closed-loop Zipfian vector-search harness
             [--clients N] [--queries N] [--rows N] [--dim N] [--clusters N]
             [--pool N] [--k N] [--nprobe N] [--zipf S] [--no-cache]
-            [--warmup-off] [--seed N] [--json PATH]
+            [--warmup-off] [--pq] [--pq-m M] [--rerank N] [--seed N]
+            [--json PATH]
   bench maintain                 closed-loop append/search/optimize harness
             [--clients N] [--queries N] [--rounds N] [--append N]
             [--optimize-every N] [--rows N] [--dim N] [--clusters N]
             [--pool N] [--k N] [--nprobe N] [--zipf S] [--rebuild-control]
-            [--no-cache] [--seed N] [--json PATH]
+            [--no-cache] [--pq] [--pq-m M] [--seed N] [--json PATH]
 COMMON FLAGS
   --table NAME                   table root (default: tensors)
   --store mem|fs                 backend (default fs)   --root PATH
@@ -440,6 +447,8 @@ fn cmd_index_build(args: &Args) -> Result<String> {
         sample: args.opt_usize("sample", d.sample)?,
         nprobe: args.opt_usize("nprobe", d.nprobe)?,
         seed: args.opt_usize("seed", d.seed as usize)? as u64,
+        pq: args.has("pq"),
+        pq_m: args.opt_usize("pq-m", d.pq_m)?,
     };
     let summary = crate::index::build(&table, &id, &p)?;
     Ok(format!("{}\n{}", summary.summary(), crate::index::report()))
@@ -482,11 +491,18 @@ fn cmd_search(args: &Args) -> Result<String> {
     };
     let k = args.opt_usize("k", 10)?;
     let nprobe = args.opt_usize("nprobe", 0)?;
+    let rerank = args.opt_usize("rerank", 0)?;
     let sw = crate::util::Stopwatch::start();
-    let hits = ivf.search(&query, k, nprobe)?;
+    let hits = ivf.search_with(&query, k, nprobe, rerank)?;
     let secs = sw.secs();
+    let pq_note = match ivf.pq_params() {
+        Some((m, ksub)) => {
+            format!(", pq m={m} ksub={ksub} rerank {}", ivf.effective_rerank(k, rerank))
+        }
+        None => String::new(),
+    };
     let mut out = format!(
-        "index for {id}: {} — {} centroids over {} vectors (dim {})\n",
+        "index for {id}: {} — {} centroids over {} vectors (dim {}{pq_note})\n",
         ivf.status(),
         ivf.k,
         ivf.rows,
@@ -514,6 +530,9 @@ fn cmd_bench_search(args: &Args) -> Result<String> {
         cache: !args.has("no-cache"),
         warmup: !args.has("warmup-off"),
         seed: args.opt_usize("seed", 7)? as u64,
+        pq: args.has("pq"),
+        pq_m: args.opt_usize("pq-m", 0)?,
+        rerank: args.opt_usize("rerank", 0)?,
     };
     workload::search::populate_search_corpus(&table, "vectors", &params)?;
     let report = workload::search::run_search(&table, "vectors", &params)?;
@@ -542,6 +561,8 @@ fn cmd_bench_maintain(args: &Args) -> Result<String> {
         incremental: !args.has("rebuild-control"),
         cache: !args.has("no-cache"),
         seed: args.opt_usize("seed", 7)? as u64,
+        pq: args.has("pq"),
+        pq_m: args.opt_usize("pq-m", 0)?,
     };
     workload::maintain::populate_maintain_corpus(&table, "vectors", &params)?;
     let report = workload::maintain::run_maintain(&table, "vectors", &params)?;
@@ -729,6 +750,19 @@ mod tests {
     }
 
     #[test]
+    fn bench_search_pq_smoke() {
+        let out = run(&args(&[
+            "bench", "search", "--store", "mem", "--clients", "2", "--queries", "5",
+            "--rows", "200", "--dim", "8", "--clusters", "4", "--pool", "4", "--seed", "3",
+            "--pq",
+        ]))
+        .unwrap();
+        assert!(out.contains("pq rerank"), "{out}");
+        assert!(out.contains("recall@10"), "{out}");
+        assert!(out.contains("index.reranked_rows"), "{out}");
+    }
+
+    #[test]
     fn index_and_search_fs_flow() {
         let root = std::env::temp_dir().join(format!("dt-cli-idx-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&root);
@@ -775,6 +809,26 @@ mod tests {
         v.extend_from_slice(&common);
         let out = run(&args(&v)).unwrap();
         assert!(out.contains("built ivf index"), "{out}");
+
+        // PQ rebuild: 1-byte codes in the postings, exact re-rank at query
+        // time; status reports the codebook, search still puts row 0 first.
+        let mut v = vec!["index", "build", "--seed", "6", "--pq", "--pq-m", "2"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("built ivf index"), "{out}");
+        assert!(out.contains("pq"), "{out}");
+
+        let mut v = vec!["index", "status", "--id", "vectors"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("pq codebook"), "{out}");
+
+        let mut v =
+            vec!["search", "--id", "vectors", "--row", "0", "--k", "3", "--rerank", "50"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("#0   row 0"), "{out}");
+        assert!(out.contains("pq m=2"), "{out}");
 
         let _ = std::fs::remove_dir_all(&root);
     }

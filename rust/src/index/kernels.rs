@@ -1,0 +1,256 @@
+//! Distance kernels shared by every scan in the index tier.
+//!
+//! One squared-L2 kernel serves k-means assignment, centroid ranking, the
+//! Flat posting scan, the exact re-rank and the brute-force control; one
+//! ADC kernel serves the PQ posting scan. The hot loops are written in an
+//! explicitly **lane-structured** form — four independent accumulators
+//! over chunks of four elements, merged in the fixed order
+//! `(s0 + s1) + (s2 + s3)`, with a sequential tail — so the compiler can
+//! keep the lanes in one SSE register, and so the `simd` feature's
+//! hand-written SSE path produces **bit-identical** sums: it accumulates
+//! the same four lanes in one `__m128` and merges them in the same order.
+//!
+//! That bit-equivalence is what keeps "full `nprobe` + full re-rank equals
+//! brute force" an *equality* across build configurations: every path
+//! computes the same f32, whether the crate was built with `--features
+//! simd` or not. `tests/pq.rs` proves it property-style across odd
+//! dimensions.
+
+/// Scalar (but lane-structured) squared Euclidean distance — the reference
+/// every other implementation must match bitwise.
+pub fn dist2_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut s = [0f32; 4];
+    for i in 0..chunks {
+        let base = i * 4;
+        for lane in 0..4 {
+            let d = a[base + lane] - b[base + lane];
+            s[lane] += d * d;
+        }
+    }
+    let mut tail = (s[0] + s[1]) + (s[2] + s[3]);
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        tail += d * d;
+    }
+    tail
+}
+
+/// [`dist2_scalar`] against a little-endian f32 byte payload (a Flat
+/// posting entry's vector), decoding in place to avoid a copy per
+/// candidate. Same lane structure, same merge order — bit-identical to
+/// decoding the bytes first and calling [`dist2_scalar`].
+pub fn dist2_le_scalar(q: &[f32], bytes: &[u8]) -> f32 {
+    let n = q.len().min(bytes.len() / 4);
+    let at = |i: usize| {
+        f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().expect("4-byte f32"))
+    };
+    let chunks = n / 4;
+    let mut s = [0f32; 4];
+    for i in 0..chunks {
+        let base = i * 4;
+        for lane in 0..4 {
+            let d = q[base + lane] - at(base + lane);
+            s[lane] += d * d;
+        }
+    }
+    let mut tail = (s[0] + s[1]) + (s[2] + s[3]);
+    for i in chunks * 4..n {
+        let d = q[i] - at(i);
+        tail += d * d;
+    }
+    tail
+}
+
+/// Squared Euclidean distance between two equal-length vectors.
+///
+/// This is *the* distance of the index tier: training, search, re-rank
+/// and the brute-force control all call it (or its byte-decoding twin
+/// [`dist2_le`]) with the same accumulation order, so full-probe IVF
+/// results are bit-identical to the exact scan.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    dist2_scalar(a, b)
+}
+
+/// [`dist2`] against a little-endian f32 byte payload (a Flat posting
+/// entry's vector).
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn dist2_le(q: &[f32], bytes: &[u8]) -> f32 {
+    dist2_le_scalar(q, bytes)
+}
+
+/// Squared Euclidean distance — explicit SSE lanes, bit-identical to
+/// [`dist2_scalar`] (same four lanes, same `(s0+s1)+(s2+s3)` merge, same
+/// sequential tail).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    // SSE2 is part of the x86_64 baseline — no runtime detection needed.
+    unsafe {
+        let mut acc = _mm_setzero_ps();
+        for i in 0..chunks {
+            let base = i * 4;
+            let va = _mm_loadu_ps(a.as_ptr().add(base));
+            let vb = _mm_loadu_ps(b.as_ptr().add(base));
+            let d = _mm_sub_ps(va, vb);
+            acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+        }
+        let mut s = [0f32; 4];
+        _mm_storeu_ps(s.as_mut_ptr(), acc);
+        let mut tail = (s[0] + s[1]) + (s[2] + s[3]);
+        for i in chunks * 4..n {
+            let d = a[i] - b[i];
+            tail += d * d;
+        }
+        tail
+    }
+}
+
+/// [`dist2`] against a little-endian f32 byte payload — SSE lanes loaded
+/// straight from the (little-endian) entry bytes; bit-identical to
+/// [`dist2_le_scalar`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn dist2_le(q: &[f32], bytes: &[u8]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = q.len().min(bytes.len() / 4);
+    let chunks = n / 4;
+    // x86_64 is little-endian, so the byte payload *is* an unaligned f32
+    // buffer; `_mm_loadu_ps` tolerates the misalignment.
+    unsafe {
+        let mut acc = _mm_setzero_ps();
+        for i in 0..chunks {
+            let base = i * 4;
+            let vq = _mm_loadu_ps(q.as_ptr().add(base));
+            let vb = _mm_loadu_ps(bytes.as_ptr().add(base * 4) as *const f32);
+            let d = _mm_sub_ps(vq, vb);
+            acc = _mm_add_ps(acc, _mm_mul_ps(d, d));
+        }
+        let mut s = [0f32; 4];
+        _mm_storeu_ps(s.as_mut_ptr(), acc);
+        let mut tail = (s[0] + s[1]) + (s[2] + s[3]);
+        for i in chunks * 4..n {
+            let d = q[i]
+                - f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().expect("4-byte f32"));
+            tail += d * d;
+        }
+        tail
+    }
+}
+
+/// Asymmetric-distance computation: sum the per-subspace table entries a
+/// PQ code selects. `lut` is `m * ksub` query-to-centroid squared
+/// distances laid out `[subspace][centroid]`; `codes` holds one u8
+/// centroid id per subspace.
+///
+/// The table gather defeats SSE2 (no hardware gather), so there is one
+/// implementation — lane-structured like the other kernels, which both
+/// keeps the dependency chains short and makes the sum independent of the
+/// `simd` feature.
+pub fn adc(lut: &[f32], ksub: usize, codes: &[u8]) -> f32 {
+    let m = codes.len().min(if ksub == 0 { 0 } else { lut.len() / ksub });
+    let chunks = m / 4;
+    let mut s = [0f32; 4];
+    for i in 0..chunks {
+        let base = i * 4;
+        for lane in 0..4 {
+            let j = base + lane;
+            s[lane] += lut[j * ksub + codes[j] as usize];
+        }
+    }
+    let mut tail = (s[0] + s[1]) + (s[2] + s[3]);
+    for j in chunks * 4..m {
+        tail += lut[j * ksub + codes[j] as usize];
+    }
+    tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn vecs(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dist2_matches_scalar_reference_bitwise() {
+        for dim in [0usize, 1, 2, 3, 4, 5, 7, 8, 17, 64, 100] {
+            let (a, b) = vecs(0xD15_7 + dim as u64, dim);
+            assert_eq!(
+                dist2(&a, &b).to_bits(),
+                dist2_scalar(&a, &b).to_bits(),
+                "dim {dim}"
+            );
+        }
+    }
+
+    #[test]
+    fn dist2_le_matches_decoded_scalar_bitwise() {
+        for dim in [1usize, 3, 17, 64, 100] {
+            let (q, v) = vecs(0xB17E + dim as u64, dim);
+            let mut bytes = Vec::with_capacity(dim * 4);
+            for x in &v {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            let want = dist2_scalar(&q, &v).to_bits();
+            assert_eq!(dist2_le(&q, &bytes).to_bits(), want, "dim {dim}");
+            assert_eq!(dist2_le_scalar(&q, &bytes).to_bits(), want, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn dist2_handles_zero_and_identical_inputs() {
+        assert_eq!(dist2(&[], &[]), 0.0);
+        let (a, _) = vecs(9, 13);
+        assert_eq!(dist2(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn adc_sums_selected_table_entries() {
+        // m = 3 subspaces, ksub = 4: hand-check the gather.
+        let lut = [
+            0.0f32, 1.0, 2.0, 3.0, // subspace 0
+            10.0, 11.0, 12.0, 13.0, // subspace 1
+            20.0, 21.0, 22.0, 23.0, // subspace 2
+        ];
+        assert_eq!(adc(&lut, 4, &[0, 0, 0]), 30.0);
+        assert_eq!(adc(&lut, 4, &[3, 1, 2]), 3.0 + 11.0 + 22.0);
+        assert_eq!(adc(&lut, 4, &[]), 0.0);
+    }
+
+    #[test]
+    fn adc_is_lane_structured_like_dist2() {
+        // With per-subspace dimension 1, ADC over codes selecting the
+        // matching centroids must equal dist2 of the reconstructions —
+        // same lane structure, same merge order, so bit-equal.
+        let mut rng = Pcg64::new(77);
+        for m in [1usize, 3, 5, 8, 17] {
+            let ksub = 4usize;
+            let q: Vec<f32> = (0..m).map(|_| rng.next_gaussian() as f32).collect();
+            let cents: Vec<f32> = (0..m * ksub).map(|_| rng.next_gaussian() as f32).collect();
+            let codes: Vec<u8> = (0..m).map(|_| rng.below(ksub) as u8).collect();
+            let lut: Vec<f32> = (0..m * ksub)
+                .map(|i| {
+                    let (j, c) = (i / ksub, i % ksub);
+                    let d = q[j] - cents[j * ksub + c];
+                    d * d
+                })
+                .collect();
+            let recon: Vec<f32> =
+                (0..m).map(|j| cents[j * ksub + codes[j] as usize]).collect();
+            assert_eq!(
+                adc(&lut, ksub, &codes).to_bits(),
+                dist2_scalar(&q, &recon).to_bits(),
+                "m {m}"
+            );
+        }
+    }
+}

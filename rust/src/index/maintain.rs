@@ -86,6 +86,8 @@ struct UpkeepState {
     rows_before: u64,
     rel_path: String,
     bytes: Vec<u8>,
+    /// Codebook reference to carry through the re-pinned meta (PQ only).
+    pq: Option<super::PqRef>,
 }
 
 /// Append `data` along the leading dimension of FTSF tensor `id`, landing
@@ -132,13 +134,51 @@ pub fn append_rows(
                     new.dim,
                     art.dim
                 );
+                // A v2 index stores PQ codes: encode the new rows against
+                // the **pinned** codebook — delta segments never retrain,
+                // so their codes and the main postings share one table.
+                let codebook = if art.version == super::ARTIFACT_VERSION_PQ {
+                    let pr = meta
+                        .pq
+                        .as_ref()
+                        .with_context(|| format!("v2 index for {id:?} lacks pq metadata"))?;
+                    let cb_add = snap.files.get(&pr.codebook_path).with_context(|| {
+                        format!("index codebook {} not live", pr.codebook_path)
+                    })?;
+                    let cb_key = table.data_key(&cb_add.path);
+                    let cb_blocks = crate::serving::fetch_spans(
+                        table.store(),
+                        &cb_key,
+                        cb_add.size,
+                        cb_add.timestamp,
+                        &[(0, cb_add.size)],
+                    )?;
+                    let cb = super::pq::Codebook::from_bytes(cb_blocks[0].as_slice())?;
+                    ensure!(
+                        cb.dim == art.dim,
+                        "codebook {} has dim {}, index has {}",
+                        pr.codebook_path,
+                        cb.dim,
+                        art.dim
+                    );
+                    Some(cb)
+                } else {
+                    None
+                };
                 let k = art.offsets.len() - 1;
                 let mut lists: Vec<Vec<u32>> = vec![Vec::new(); k];
                 for r in 0..new.rows {
                     let (c, _) = kmeans::nearest(&art.centroids, art.dim, new.row(r));
                     lists[c].push(r as u32);
                 }
-                let bytes = super::encode_delta_segment(&new, &lists, ap.old_rows as u32);
+                let payloads = super::delta_payloads(&new, codebook.as_ref());
+                let bytes = super::encode_delta_segment(
+                    art.version,
+                    new.dim,
+                    &payloads,
+                    &lists,
+                    ap.old_rows as u32,
+                );
                 let nonce = crate::delta::now_ms();
                 let rel_path =
                     format!("{}ivf-{nonce:016x}-delta.idx", super::artifact_prefix(id));
@@ -149,6 +189,7 @@ pub fn append_rows(
                     rows_before: meta.rows.unwrap_or(art.rows),
                     rel_path,
                     bytes,
+                    pq: meta.pq.clone(),
                 });
             }
         }
@@ -205,6 +246,7 @@ pub fn append_rows(
                 fp,
                 &st.postings_path,
                 st.rows_before + rows_appended as u64,
+                st.pq.as_ref(),
             ));
             extra.push(Action::Add(cent));
         }
@@ -298,6 +340,13 @@ pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
         let hdr = super::decode_delta_header(&bytes[..hdr_len], k)?;
         ensure!(hdr.dim == art.dim, "delta segment {} dim mismatch", add.path);
         ensure!(
+            hdr.version == art.version,
+            "delta segment {} is format v{}, index is v{}",
+            add.path,
+            hdr.version,
+            art.version
+        );
+        ensure!(
             bytes.len() as u64 == hdr_len as u64 + *hdr.offsets.last().unwrap(),
             "delta segment {} size does not match its offset table",
             add.path
@@ -332,8 +381,14 @@ pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
         }
         offsets.push(postings.len() as u64);
     }
-    let centroid_bytes =
-        super::encode_centroid_artifact(rows_total, art.dim, art.nprobe, &art.centroids, &offsets);
+    let centroid_bytes = super::encode_centroid_artifact(
+        art.version,
+        rows_total,
+        art.dim,
+        art.nprobe,
+        &art.centroids,
+        &offsets,
+    );
 
     // Upload + commit, exactly like a build: one batched PUT, one version
     // carrying the Adds, the Removes of every superseded artifact, and the
@@ -352,9 +407,12 @@ pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
     ])?;
 
     let ts = crate::delta::now_ms();
+    // A PQ index's codebook survives the fold untouched: the merged
+    // postings are the same codes, so the same table decodes them.
+    let keep_cb: Option<&str> = meta.pq.as_ref().map(|p| p.codebook_path.as_str());
     let mut actions: Vec<Action> = snap
         .files()
-        .filter(|f| f.path.starts_with(&prefix))
+        .filter(|f| f.path.starts_with(&prefix) && Some(f.path.as_str()) != keep_cb)
         .map(|f| Action::Remove { path: f.path.clone(), timestamp: ts })
         .collect();
     actions.push(Action::Add(AddFile {
@@ -365,7 +423,14 @@ pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
         min_key: None,
         max_key: None,
         timestamp: ts,
-        meta: Some(super::encode_meta(id, snap.version, fp, &rel_post, rows_total)),
+        meta: Some(super::encode_meta(
+            id,
+            snap.version,
+            fp,
+            &rel_post,
+            rows_total,
+            meta.pq.as_ref(),
+        )),
     }));
     actions.push(Action::Add(AddFile {
         path: rel_post,

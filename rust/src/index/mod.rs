@@ -3,10 +3,11 @@
 //!
 //! The paper's premise is storing *vector* data for AI/ML workloads in
 //! Delta Lake; this module answers the query those vectors exist for —
-//! "which stored vectors are closest to this one?" — with an **IVF-Flat**
-//! index whose artifacts live *inside* the Delta log, versioned and atomic
-//! with the data they cover (the NeurStore/Deep Lake arrangement, rather
-//! than a sidecar file that can silently drift from the table):
+//! "which stored vectors are closest to this one?" — with an **IVF**
+//! index (Flat or product-quantized postings) whose artifacts live
+//! *inside* the Delta log, versioned and atomic with the data they cover
+//! (the NeurStore/Deep Lake arrangement, rather than a sidecar file that
+//! can silently drift from the table):
 //!
 //! * **Build** ([`build`]): the rows of a stored 2-D f32/f64 tensor are
 //!   read through the existing read engine ([`load_matrix`]), `k` centroids
@@ -16,6 +17,11 @@
 //!   offsets) and a posting file (concatenated `(row_id, vector)` entries)
 //!   — upload in one batched PUT and land in **one atomic Delta commit**
 //!   together with `Remove` actions for any previous build's artifacts.
+//!   With `BuildParams::pq` a third artifact joins the same PUT and
+//!   commit: a product-quantization codebook ([`pq`]), and the posting
+//!   entries shrink to `(row_id, code)` — artifact format **v2**, ~16x
+//!   smaller postings at the default `m = dim/4`. v1 (Flat) artifacts
+//!   keep opening unchanged.
 //! * **Staleness**: the commit pins the index to a fingerprint of the
 //!   tensor's live data files (path, size, timestamp). Opening the table at
 //!   any version recomputes the fingerprint from that snapshot:
@@ -31,18 +37,25 @@
 //!   top-k by squared L2. Posting lists are fetched as byte spans through
 //!   [`crate::serving::fetch_spans`], so hot centroids are served from the
 //!   block cache (a warmed query stream issues zero GETs) and identical
-//!   concurrent probes collapse via single-flight. Probing all `k` lists
-//!   returns exactly the brute-force answer ([`exact_search`], the
-//!   correctness control) — both paths share one distance function and one
-//!   `(distance, row)` tie-break order.
+//!   concurrent probes collapse via single-flight. A PQ index scans by
+//!   asymmetric distance (one lookup table per query, a table-gather sum
+//!   per candidate) and re-ranks the best candidates against exact
+//!   vectors read back through the read engine
+//!   ([`IvfIndex::search_with`]). Probing all `k` lists (with full
+//!   re-rank, for PQ) returns exactly the brute-force answer
+//!   ([`exact_search`], the correctness control) — every path shares the
+//!   [`kernels`] distance functions and one `(distance, row)` tie-break
+//!   order, whether or not the crate was built with `--features simd`.
 //!
 //! Build/search counters are exported through [`report`], which
 //! `Coordinator::report` appends to its output. The closed-loop load
 //! harness lives in [`crate::workload::search`]; the CLI surface is
 //! `index build` / `index status` / `search` / `bench search`.
 
+pub mod kernels;
 pub mod kmeans;
 pub mod maintain;
+pub mod pq;
 
 use crate::delta::{Action, AddFile, DeltaTable, Snapshot};
 use crate::jsonx::{self, Json};
@@ -52,40 +65,19 @@ use anyhow::{bail, ensure, Context};
 use once_cell::sync::Lazy;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Artifact magic ("DTIX") + format version.
+pub use kernels::dist2;
+use kernels::{adc, dist2_le};
+
+/// Artifact magic ("DTIX") + format versions: v1 postings hold raw f32
+/// vectors (IVF-Flat), v2 postings hold PQ codes against a codebook
+/// artifact (IVF-PQ). Readers accept both.
 const MAGIC: [u8; 4] = *b"DTIX";
 const ARTIFACT_VERSION: u32 = 1;
+const ARTIFACT_VERSION_PQ: u32 = 2;
 /// Centroid-artifact header bytes before the centroid matrix.
 const HEADER_BYTES: usize = 32;
 /// Largest automatic centroid count (`k = sqrt(rows)` is clamped to this).
 const MAX_AUTO_K: usize = 256;
-
-/// Squared Euclidean distance between two equal-length vectors.
-///
-/// This is *the* distance of the index tier: training, search and the
-/// brute-force control all call it (or its byte-decoding twin) with the
-/// same accumulation order, so full-probe IVF results are bit-identical to
-/// the exact scan.
-pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
-    let mut s = 0f32;
-    for (x, y) in a.iter().zip(b) {
-        let d = x - y;
-        s += d * d;
-    }
-    s
-}
-
-/// [`dist2`] against a little-endian f32 byte payload (a posting entry's
-/// vector), decoding in place to avoid a copy per candidate.
-fn dist2_le(q: &[f32], bytes: &[u8]) -> f32 {
-    let mut s = 0f32;
-    for (x, b) in q.iter().zip(bytes.chunks_exact(4)) {
-        let y = f32::from_le_bytes(b.try_into().expect("chunks_exact(4)"));
-        let d = x - y;
-        s += d * d;
-    }
-    s
-}
 
 /// One search hit: stored row id and squared L2 distance to the query.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -199,12 +191,12 @@ pub fn load_matrix(table: &DeltaTable, id: &str) -> Result<Matrix> {
     Ok(Matrix { rows: shape[0], dim: shape[1], data })
 }
 
-/// Load one row of tensor `id` as an f32 vector via a first-dimension
+/// Load rows `lo..hi` of tensor `id` as f32 values via a first-dimension
 /// slice read — one pruned ranged fetch instead of downloading the whole
-/// matrix (the CLI's `search --row N` path). Out-of-bounds rows error
+/// matrix (the PQ re-rank's fetch path). Out-of-bounds ranges error
 /// exactly as executing the slice would.
-pub fn load_row(table: &DeltaTable, id: &str, row: usize) -> Result<Vec<f32>> {
-    let slice = crate::tensor::Slice::dim0(row, row + 1);
+pub fn load_rows(table: &DeltaTable, id: &str, lo: usize, hi: usize) -> Result<Vec<f32>> {
+    let slice = crate::tensor::Slice::dim0(lo, hi);
     let dense = crate::query::execute(table, id, Some(&slice))?.to_dense()?;
     ensure!(
         dense.shape().len() == 2,
@@ -216,6 +208,12 @@ pub fn load_row(table: &DeltaTable, id: &str, row: usize) -> Result<Vec<f32>> {
         crate::tensor::DType::F64 => Ok(dense.as_f64()?.into_iter().map(|v| v as f32).collect()),
         other => bail!("tensor {id:?} has dtype {} — the index needs f32/f64", other.name()),
     }
+}
+
+/// Load one row of tensor `id` as an f32 vector (the CLI's `search
+/// --row N` path) — a single-row [`load_rows`].
+pub fn load_row(table: &DeltaTable, id: &str, row: usize) -> Result<Vec<f32>> {
+    load_rows(table, id, row, row + 1)
 }
 
 /// Brute-force top-k over a loaded matrix (the correctness control).
@@ -260,11 +258,18 @@ pub struct BuildParams {
     pub nprobe: usize,
     /// Seed for the k-means initialization (sampling + init picks).
     pub seed: u64,
+    /// Product-quantize the posting lists (artifact format v2): postings
+    /// store `pq_m`-byte codes instead of raw vectors, searches scan by
+    /// ADC and re-rank exact vectors through the read engine.
+    pub pq: bool,
+    /// PQ subspace count; 0 picks `dim/4` clamped to `[1, dim]`. Ignored
+    /// unless `pq` is set.
+    pub pq_m: usize,
 }
 
 impl Default for BuildParams {
     fn default() -> Self {
-        Self { k: 0, iters: 8, sample: 4096, nprobe: 0, seed: 42 }
+        Self { k: 0, iters: 8, sample: 4096, nprobe: 0, seed: 42, pq: false, pq_m: 0 }
     }
 }
 
@@ -289,12 +294,18 @@ pub struct BuildSummary {
     pub centroid_bytes: u64,
     /// Posting-artifact bytes.
     pub posting_bytes: u64,
+    /// PQ subspace count (0 = Flat postings).
+    pub pq_m: usize,
+    /// PQ centroids per subspace (0 = Flat postings).
+    pub pq_ksub: usize,
+    /// PQ codebook-artifact bytes (0 = Flat postings).
+    pub codebook_bytes: u64,
 }
 
 impl BuildSummary {
     /// Human-readable one-build summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut out = format!(
             "built ivf index: {} vectors x {} dims -> {} centroids (nprobe {}) in {} iters\n  \
              artifacts: centroids {} B + postings {} B, committed @ v{} covering v{}",
             self.rows,
@@ -306,7 +317,20 @@ impl BuildSummary {
             self.posting_bytes,
             self.version,
             self.covers_version,
-        )
+        );
+        if self.pq_m > 0 {
+            out.push_str(&format!(
+                "\n  pq: m={} ksub={} codebook {} B — posting entries {} B vs flat {} B \
+                 ({:.1}x smaller)",
+                self.pq_m,
+                self.pq_ksub,
+                self.codebook_bytes,
+                4 + self.pq_m,
+                4 + 4 * self.dim,
+                (4 + 4 * self.dim) as f64 / (4 + self.pq_m) as f64,
+            ));
+        }
+        out
     }
 }
 
@@ -372,6 +396,14 @@ pub struct IndexStats {
     pub probes: AtomicU64,
     /// Posting entries scanned.
     pub postings_scanned: AtomicU64,
+    /// Posting-list bytes requested through the serving tier by searches
+    /// (main file + delta segments; the I/O the PQ codes shrink).
+    pub postings_bytes_fetched: AtomicU64,
+    /// ADC candidates exactly re-ranked through the read engine.
+    pub reranked_rows: AtomicU64,
+    /// Read-engine slice fetches issued by re-ranking (candidate rows
+    /// coalesce into runs, so this is ≤ `reranked_rows`).
+    pub rerank_fetches: AtomicU64,
     /// Centroid-artifact loads (index opens).
     pub centroid_loads: AtomicU64,
     /// Incremental append-maintenance commits (data + delta segment).
@@ -397,7 +429,9 @@ pub fn report() -> String {
     format!(
         "index.builds {}\nindex.vectors_indexed {}\nindex.kmeans_iters {}\n\
          index.searches {}\nindex.exact_searches {}\nindex.probes {}\n\
-         index.postings_scanned {}\nindex.centroid_loads {}\n\
+         index.postings_scanned {}\nindex.postings_bytes_fetched {}\n\
+         index.reranked_rows {}\nindex.rerank_fetches {}\n\
+         index.centroid_loads {}\n\
          index.appends {}\nindex.rows_appended {}\nindex.delta_segments {}\n\
          index.folds {}\n",
         STATS.builds.load(Ordering::Relaxed),
@@ -407,6 +441,9 @@ pub fn report() -> String {
         STATS.exact_searches.load(Ordering::Relaxed),
         STATS.probes.load(Ordering::Relaxed),
         STATS.postings_scanned.load(Ordering::Relaxed),
+        STATS.postings_bytes_fetched.load(Ordering::Relaxed),
+        STATS.reranked_rows.load(Ordering::Relaxed),
+        STATS.rerank_fetches.load(Ordering::Relaxed),
         STATS.centroid_loads.load(Ordering::Relaxed),
         STATS.appends.load(Ordering::Relaxed),
         STATS.rows_appended.load(Ordering::Relaxed),
@@ -451,6 +488,17 @@ fn artifact_prefix(id: &str) -> String {
     format!("index/{id}/")
 }
 
+/// PQ codebook reference carried by a v2 centroid artifact's meta.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct PqRef {
+    /// Subspace count (bytes per posting code).
+    m: usize,
+    /// Centroids per subspace.
+    ksub: usize,
+    /// Table-relative path of the codebook artifact.
+    codebook_path: String,
+}
+
 /// Parsed `meta` JSON of a centroid-artifact Add action.
 struct ArtifactMeta {
     covers: u64,
@@ -460,18 +508,32 @@ struct ArtifactMeta {
     /// segment's rows (absent on artifacts written before the maintenance
     /// tier existed).
     rows: Option<u64>,
+    /// Codebook reference (v2 / PQ indexes only).
+    pq: Option<PqRef>,
 }
 
-fn encode_meta(id: &str, covers: u64, fp: u64, postings_path: &str, rows: u64) -> String {
-    Json::obj([
+fn encode_meta(
+    id: &str,
+    covers: u64,
+    fp: u64,
+    postings_path: &str,
+    rows: u64,
+    pq: Option<&PqRef>,
+) -> String {
+    let mut pairs: Vec<(&'static str, Json)> = vec![
         ("index", Json::from("ivf")),
         ("tensor", Json::from(id)),
         ("covers", Json::from(covers)),
         ("fp", Json::from(format!("{fp:016x}"))),
         ("postings", Json::from(postings_path)),
         ("rows", Json::from(rows)),
-    ])
-    .dump()
+    ];
+    if let Some(p) = pq {
+        pairs.push(("pq_m", Json::from(p.m)));
+        pairs.push(("pq_ksub", Json::from(p.ksub)));
+        pairs.push(("pq_codebook", Json::from(p.codebook_path.as_str())));
+    }
+    Json::obj(pairs).dump()
 }
 
 fn decode_meta(meta: &str) -> Option<ArtifactMeta> {
@@ -479,11 +541,20 @@ fn decode_meta(meta: &str) -> Option<ArtifactMeta> {
     if j.get("index")?.as_str()? != "ivf" {
         return None;
     }
+    let pq = match (j.get("pq_m"), j.get("pq_ksub"), j.get("pq_codebook")) {
+        (Some(m), Some(ksub), Some(path)) => Some(PqRef {
+            m: m.as_u64()? as usize,
+            ksub: ksub.as_u64()? as usize,
+            codebook_path: path.as_str()?.to_string(),
+        }),
+        _ => None,
+    };
     Some(ArtifactMeta {
         covers: j.get("covers")?.as_u64()?,
         fp: u64::from_str_radix(j.get("fp")?.as_str()?, 16).ok()?,
         postings_path: j.get("postings")?.as_str()?.to_string(),
         rows: j.get("rows").and_then(Json::as_u64),
+        pq,
     })
 }
 
@@ -557,17 +628,26 @@ pub fn status_at(table: &DeltaTable, id: &str, version: u64) -> Result<IndexStat
     Ok(status_of(&table.snapshot_at(version)?, id))
 }
 
+/// The shape the tensor's data files claim via their Add-action metadata.
+/// Appends grow the carrier part's shape in place, but if several files
+/// carry shape metadata (historic layouts, interrupted rewrites) the
+/// **largest** first dimension wins — the grown shape is what searches
+/// and `inspect` must agree on, never a pre-append leftover.
+fn live_shape(snap: &Snapshot, id: &str) -> Option<Vec<u64>> {
+    snap.files_for_tensor(id)
+        .iter()
+        .filter_map(|f| {
+            let j = jsonx::parse(f.meta.as_deref()?).ok()?;
+            let shape = j.get("shape").and_then(Json::to_int_vec)?;
+            Some(shape.into_iter().map(|d| d as u64).collect::<Vec<u64>>())
+        })
+        .max_by_key(|s| s.first().copied().unwrap_or(0))
+}
+
 /// Rows the tensor's data files claim via their Add-action shape metadata
 /// (`shape[0]`), when any file carries it.
 fn live_rows(snap: &Snapshot, id: &str) -> Option<u64> {
-    for f in snap.files_for_tensor(id) {
-        let Some(m) = &f.meta else { continue };
-        let Ok(j) = jsonx::parse(m) else { continue };
-        if let Some(shape) = j.get("shape").and_then(Json::to_int_vec) {
-            return shape.first().map(|&d| d as u64);
-        }
-    }
-    None
+    live_shape(snap, id).and_then(|s| s.first().copied())
 }
 
 /// Human-oriented freshness report for `id` — the `index status` CLI
@@ -580,6 +660,23 @@ pub fn status_report(table: &DeltaTable, id: &str) -> Result<String> {
     let snap = crate::query::engine::snapshot(table)?;
     let status = status_of(&snap, id);
     let mut out = format!("index for {id}: {status}\n");
+    if let Some((_, meta)) = find_centroid_add(&snap, id) {
+        if let Some(p) = &meta.pq {
+            out.push_str(&format!(
+                "  pq codebook: m={} ksub={} ({})",
+                p.m, p.ksub, p.codebook_path
+            ));
+            match live_shape(&snap, id).and_then(|s| s.get(1).copied()) {
+                Some(dim) => out.push_str(&format!(
+                    " — posting entries {} B vs flat {} B ({:.1}x smaller)\n",
+                    4 + p.m,
+                    4 + 4 * dim,
+                    (4 + 4 * dim) as f64 / (4 + p.m) as f64,
+                )),
+                None => out.push('\n'),
+            }
+        }
+    }
     if matches!(status, IndexStatus::Stale { .. }) {
         let indexed = find_centroid_add(&snap, id).and_then(|(_, m)| m.rows);
         let live = live_rows(&snap, id);
@@ -607,6 +704,7 @@ pub fn status_report(table: &DeltaTable, id: &str) -> Result<String> {
 // ---------------------------------------------------------------------------
 
 fn encode_centroid_artifact(
+    version: u32,
     rows: u64,
     dim: usize,
     nprobe: usize,
@@ -616,7 +714,7 @@ fn encode_centroid_artifact(
     let k = offsets.len() - 1;
     let mut out = Vec::with_capacity(HEADER_BYTES + centroids.len() * 4 + offsets.len() * 8);
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(k as u32).to_le_bytes());
     out.extend_from_slice(&(dim as u32).to_le_bytes());
     out.extend_from_slice(&rows.to_le_bytes());
@@ -631,6 +729,8 @@ fn encode_centroid_artifact(
 }
 
 struct CentroidArtifact {
+    /// Artifact format version: 1 = Flat postings, 2 = PQ postings.
+    version: u32,
     rows: u64,
     dim: usize,
     nprobe: usize,
@@ -644,7 +744,10 @@ fn decode_centroid_artifact(bytes: &[u8]) -> Result<CentroidArtifact> {
     let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
     ensure!(bytes[..4] == MAGIC, "bad centroid artifact magic");
     let version = u32_at(4);
-    ensure!(version == ARTIFACT_VERSION, "unsupported index artifact version {version}");
+    ensure!(
+        version == ARTIFACT_VERSION || version == ARTIFACT_VERSION_PQ,
+        "unsupported index artifact version {version}"
+    );
     let k = u32_at(8) as usize;
     let dim = u32_at(12) as usize;
     let rows = u64_at(16);
@@ -664,33 +767,42 @@ fn decode_centroid_artifact(bytes: &[u8]) -> Result<CentroidArtifact> {
         .chunks_exact(8)
         .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
         .collect();
-    Ok(CentroidArtifact { rows, dim, nprobe, centroids, offsets })
+    Ok(CentroidArtifact { version, rows, dim, nprobe, centroids, offsets })
 }
 
 /// Serialize a delta posting segment: the centroid artifact's 32-byte
 /// header (the `nprobe` slot zeroed), a `k+1` offset table **relative to
-/// the payload start**, then per-centroid contiguous `(row, vector)`
-/// entries in the postings file's exact entry format. Self-contained: one
-/// cached header fetch locates any centroid's delta entries. `lists` holds
-/// centroid-assigned *local* row indices into `matrix`; stored row ids are
-/// rebased by `base_row` (the tensor's pre-append row count), so delta
-/// entries and main postings share one global row-id space.
-fn encode_delta_segment(matrix: &Matrix, lists: &[Vec<u32>], base_row: u32) -> Vec<u8> {
+/// the payload start**, then per-centroid contiguous `(row, payload)`
+/// entries in the postings file's exact entry format — `payloads[r]` is a
+/// raw little-endian vector (v1 / Flat) or the row's PQ code bytes (v2),
+/// matching `version`. Self-contained: one cached header fetch locates
+/// any centroid's delta entries. `lists` holds centroid-assigned *local*
+/// row indices into the appended batch; stored row ids are rebased by
+/// `base_row` (the tensor's pre-append row count), so delta entries and
+/// main postings share one global row-id space.
+fn encode_delta_segment(
+    version: u32,
+    dim: usize,
+    payloads: &[Vec<u8>],
+    lists: &[Vec<u32>],
+    base_row: u32,
+) -> Vec<u8> {
     let k = lists.len();
-    let entry_bytes = 4 + 4 * matrix.dim;
-    let total: usize = lists.iter().map(Vec::len).sum();
     let mut offsets = Vec::with_capacity(k + 1);
     let mut acc = 0u64;
     offsets.push(acc);
     for l in lists {
-        acc += (l.len() * entry_bytes) as u64;
+        for &r in l {
+            acc += (4 + payloads[r as usize].len()) as u64;
+        }
         offsets.push(acc);
     }
-    let mut out = Vec::with_capacity(HEADER_BYTES + (k + 1) * 8 + total * entry_bytes);
+    let total: usize = lists.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(HEADER_BYTES + (k + 1) * 8 + acc as usize);
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(k as u32).to_le_bytes());
-    out.extend_from_slice(&(matrix.dim as u32).to_le_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
     out.extend_from_slice(&(total as u64).to_le_bytes());
     out.extend_from_slice(&0u64.to_le_bytes()); // reserved (the nprobe slot)
     for o in &offsets {
@@ -699,16 +811,38 @@ fn encode_delta_segment(matrix: &Matrix, lists: &[Vec<u32>], base_row: u32) -> V
     for l in lists {
         for &r in l {
             out.extend_from_slice(&(base_row + r).to_le_bytes());
-            for v in matrix.row(r as usize) {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
+            out.extend_from_slice(&payloads[r as usize]);
         }
     }
     out
 }
 
+/// Encode a batch of appended vectors as per-row delta payloads: raw
+/// little-endian vectors for a v1 (Flat) index, PQ codes against the
+/// pinned codebook for v2.
+fn delta_payloads(matrix: &Matrix, pq: Option<&pq::Codebook>) -> Vec<Vec<u8>> {
+    (0..matrix.rows)
+        .map(|r| match pq {
+            Some(cb) => {
+                let mut codes = Vec::with_capacity(cb.m);
+                cb.encode_into(matrix.row(r), &mut codes);
+                codes
+            }
+            None => {
+                let mut bytes = Vec::with_capacity(4 * matrix.dim);
+                for v in matrix.row(r) {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                bytes
+            }
+        })
+        .collect()
+}
+
 /// Decoded prefix of a delta segment: geometry + the offset table.
 struct DeltaHeader {
+    /// Artifact format version (must match the centroid artifact's).
+    version: u32,
     dim: usize,
     rows: u64,
     /// `k+1` entry-byte offsets relative to the payload start.
@@ -731,7 +865,10 @@ fn decode_delta_header(bytes: &[u8], expect_k: usize) -> Result<DeltaHeader> {
     let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
     let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
     let version = u32_at(4);
-    ensure!(version == ARTIFACT_VERSION, "unsupported delta segment version {version}");
+    ensure!(
+        version == ARTIFACT_VERSION || version == ARTIFACT_VERSION_PQ,
+        "unsupported delta segment version {version}"
+    );
     let k = u32_at(8) as usize;
     ensure!(k == expect_k, "delta segment has k={k}, index has k={expect_k}");
     let dim = u32_at(12) as usize;
@@ -741,7 +878,7 @@ fn decode_delta_header(bytes: &[u8], expect_k: usize) -> Result<DeltaHeader> {
         .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
         .collect();
     ensure!(offsets.len() == k + 1, "delta offset table size");
-    Ok(DeltaHeader { dim, rows, offsets })
+    Ok(DeltaHeader { version, dim, rows, offsets })
 }
 
 // ---------------------------------------------------------------------------
@@ -777,21 +914,48 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
         lists[c].push(r as u32);
     }
 
-    // Serialize postings: per centroid, contiguous (row_id, vector) entries.
-    let entry_bytes = 4 + 4 * matrix.dim;
+    // PQ mode: train the codebook (one k-means per subspace, salted from
+    // the same seed) and quantize every row up front.
+    let pq_state: Option<(pq::Codebook, Vec<u8>)> = if p.pq {
+        let m = if p.pq_m > 0 {
+            ensure!(p.pq_m <= matrix.dim, "pq m {} exceeds dim {}", p.pq_m, matrix.dim);
+            p.pq_m
+        } else {
+            (matrix.dim / 4).clamp(1, matrix.dim)
+        };
+        let cb = pq::Codebook::train(&matrix, m, p.iters, p.sample, p.seed)?;
+        let codes = cb.encode_rows(&matrix);
+        Some((cb, codes))
+    } else {
+        None
+    };
+    let art_version = if pq_state.is_some() { ARTIFACT_VERSION_PQ } else { ARTIFACT_VERSION };
+
+    // Serialize postings: per centroid, contiguous (row_id, payload)
+    // entries — raw vectors (v1) or PQ codes (v2).
+    let entry_bytes = 4 + pq_state.as_ref().map_or(4 * matrix.dim, |(cb, _)| cb.m);
     let mut postings = Vec::with_capacity(matrix.rows * entry_bytes);
     let mut offsets = Vec::with_capacity(k + 1);
     offsets.push(0u64);
     for list in &lists {
         for &r in list {
             postings.extend_from_slice(&r.to_le_bytes());
-            for v in matrix.row(r as usize) {
-                postings.extend_from_slice(&v.to_le_bytes());
+            match &pq_state {
+                Some((cb, codes)) => {
+                    let at = r as usize * cb.m;
+                    postings.extend_from_slice(&codes[at..at + cb.m]);
+                }
+                None => {
+                    for v in matrix.row(r as usize) {
+                        postings.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
             }
         }
         offsets.push(postings.len() as u64);
     }
     let centroid_bytes = encode_centroid_artifact(
+        art_version,
         matrix.rows as u64,
         matrix.dim,
         nprobe,
@@ -799,17 +963,29 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
         &offsets,
     );
 
-    // Upload both artifacts in one batched PUT, then commit atomically.
+    // Upload every artifact in one batched PUT, then commit atomically.
     let nonce = crate::delta::now_ms();
     let rel_cent = format!("{}ivf-{nonce:016x}-centroids.idx", artifact_prefix(id));
     let rel_post = format!("{}ivf-{nonce:016x}-postings.idx", artifact_prefix(id));
+    let rel_cb = format!("{}ivf-{nonce:016x}-codebook.idx", artifact_prefix(id));
     let key_cent = table.data_key(&rel_cent);
     let key_post = table.data_key(&rel_post);
-    table.store().put_many(&[
+    let key_cb = table.data_key(&rel_cb);
+    let codebook_bytes = pq_state.as_ref().map(|(cb, _)| cb.to_bytes());
+    let mut puts: Vec<(&str, &[u8])> = vec![
         (key_cent.as_str(), centroid_bytes.as_slice()),
         (key_post.as_str(), postings.as_slice()),
-    ])?;
+    ];
+    if let Some(cb_bytes) = &codebook_bytes {
+        puts.push((key_cb.as_str(), cb_bytes.as_slice()));
+    }
+    table.store().put_many(&puts)?;
 
+    let pq_ref = pq_state.as_ref().map(|(cb, _)| PqRef {
+        m: cb.m,
+        ksub: cb.ksub,
+        codebook_path: rel_cb.clone(),
+    });
     let ts = crate::delta::now_ms();
     let prefix = artifact_prefix(id);
     let mut actions: Vec<Action> = snap
@@ -825,7 +1001,14 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
         min_key: None,
         max_key: None,
         timestamp: ts,
-        meta: Some(encode_meta(id, covers_version, fp, &rel_post, matrix.rows as u64)),
+        meta: Some(encode_meta(
+            id,
+            covers_version,
+            fp,
+            &rel_post,
+            matrix.rows as u64,
+            pq_ref.as_ref(),
+        )),
     }));
     actions.push(Action::Add(AddFile {
         path: rel_post,
@@ -839,6 +1022,21 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
             Json::obj([("index", Json::from("ivf-postings")), ("tensor", Json::from(id))]).dump(),
         ),
     }));
+    if let Some(cb_bytes) = &codebook_bytes {
+        actions.push(Action::Add(AddFile {
+            path: rel_cb,
+            size: cb_bytes.len() as u64,
+            rows: pq_ref.as_ref().map_or(0, |p| p.ksub as u64),
+            tensor_id: String::new(),
+            min_key: None,
+            max_key: None,
+            timestamp: ts,
+            meta: Some(
+                Json::obj([("index", Json::from("ivf-codebook")), ("tensor", Json::from(id))])
+                    .dump(),
+            ),
+        }));
+    }
     actions.push(Action::CommitInfo { operation: "BUILD INDEX".into(), timestamp: ts });
     let version = table.commit(actions)?;
 
@@ -855,6 +1053,9 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
         train_iters: trained.iters_run,
         centroid_bytes: centroid_bytes.len() as u64,
         posting_bytes: postings.len() as u64,
+        pq_m: pq_state.as_ref().map_or(0, |(cb, _)| cb.m),
+        pq_ksub: pq_state.as_ref().map_or(0, |(cb, _)| cb.ksub),
+        codebook_bytes: codebook_bytes.as_ref().map_or(0, |b| b.len() as u64),
     })
 }
 
@@ -874,9 +1075,9 @@ struct DeltaSeg {
     base: u64,
 }
 
-/// An opened IVF index: centroids resident, posting lists (main file plus
-/// any append-time delta segments) fetched on demand through the serving
-/// tier.
+/// An opened IVF index: centroids (and, for PQ indexes, the codebook)
+/// resident, posting lists (main file plus any append-time delta
+/// segments) fetched on demand through the serving tier.
 pub struct IvfIndex {
     /// Tensor the index covers.
     pub tensor_id: String,
@@ -898,6 +1099,11 @@ pub struct IvfIndex {
     postings_size: u64,
     postings_stamp: i64,
     deltas: Vec<DeltaSeg>,
+    /// Resident PQ codebook (v2 indexes); `None` = Flat postings.
+    pq: Option<pq::Codebook>,
+    /// The owning table — the exact re-rank reads candidate vectors back
+    /// through the read engine (row-slice fetches ride the block cache).
+    table: DeltaTable,
 }
 
 impl std::fmt::Debug for IvfIndex {
@@ -947,6 +1153,39 @@ impl IvfIndex {
         let status = staleness(snap, id, &meta);
         let k = art.offsets.len() - 1;
 
+        // A v2 artifact's postings are PQ codes: load the codebook (one
+        // cached span, like the centroids) and pin its geometry.
+        let pq_cb = if art.version == ARTIFACT_VERSION_PQ {
+            let pr = meta
+                .pq
+                .as_ref()
+                .with_context(|| format!("v2 index for {id:?} lacks pq metadata"))?;
+            let cb_add = snap
+                .files
+                .get(&pr.codebook_path)
+                .with_context(|| format!("index codebook {} not live", pr.codebook_path))?;
+            let cb_key = table.data_key(&cb_add.path);
+            let cb_blocks = crate::serving::fetch_spans(
+                table.store(),
+                &cb_key,
+                cb_add.size,
+                cb_add.timestamp,
+                &[(0, cb_add.size)],
+            )?;
+            let cb = pq::Codebook::from_bytes(cb_blocks[0].as_slice())?;
+            ensure!(
+                cb.dim == art.dim && cb.m == pr.m && cb.ksub == pr.ksub,
+                "codebook {} geometry (m={}, ksub={}, dim={}) does not match the index meta",
+                pr.codebook_path,
+                cb.m,
+                cb.ksub,
+                cb.dim
+            );
+            Some(cb)
+        } else {
+            None
+        };
+
         // Attach delta posting segments (appended rows assigned to these
         // centroids). Their headers ride the serving tier too — a hot
         // re-open costs zero GETs.
@@ -970,6 +1209,13 @@ impl IvfIndex {
                 add.path,
                 hdr.dim,
                 art.dim
+            );
+            ensure!(
+                hdr.version == art.version,
+                "delta segment {} is format v{}, index is v{}",
+                add.path,
+                hdr.version,
+                art.version
             );
             ensure!(
                 add.size == hdr_len + *hdr.offsets.last().unwrap(),
@@ -1000,6 +1246,8 @@ impl IvfIndex {
             postings_size: post_add.size,
             postings_stamp: post_add.timestamp,
             deltas,
+            pq: pq_cb,
+            table: table.clone(),
         })
     }
 
@@ -1008,12 +1256,52 @@ impl IvfIndex {
         self.status
     }
 
+    /// Whether the posting lists hold PQ codes (artifact format v2).
+    pub fn is_pq(&self) -> bool {
+        self.pq.is_some()
+    }
+
+    /// PQ `(m, ksub)` — subspace count and centroids per subspace — when
+    /// this is a PQ index.
+    pub fn pq_params(&self) -> Option<(usize, usize)> {
+        self.pq.as_ref().map(|cb| (cb.m, cb.ksub))
+    }
+
+    /// The re-rank depth a PQ search with these arguments will actually
+    /// use (after defaulting and clamping); `0` for a Flat index, which
+    /// never re-ranks. Lets callers report the effective depth.
+    pub fn effective_rerank(&self, k: usize, rerank: usize) -> usize {
+        if self.pq.is_none() || k == 0 {
+            return 0;
+        }
+        let depth = if rerank > 0 { rerank } else { default_rerank(k) };
+        depth.max(k).min(self.rows as usize)
+    }
+
     /// Top-`k` nearest stored vectors to `query`, probing the `nprobe`
     /// nearest posting lists (`0` = the build's default; values ≥ the
-    /// centroid count scan everything and equal the brute-force answer).
-    /// Posting spans are fetched through the serving tier, so hot lists
-    /// cost zero GETs.
+    /// centroid count scan everything — for a Flat index that equals the
+    /// brute-force answer). Posting spans are fetched through the serving
+    /// tier, so hot lists cost zero GETs. PQ indexes re-rank with the
+    /// default candidate depth ([`search_with`](Self::search_with)).
     pub fn search(&self, query: &[f32], k: usize, nprobe: usize) -> Result<Vec<Neighbor>> {
+        self.search_with(query, k, nprobe, 0)
+    }
+
+    /// [`search`](Self::search) with an explicit re-rank depth: a PQ
+    /// index keeps the best `rerank` ADC candidates (clamped to
+    /// `[k, rows]`) and re-ranks them against exact vectors read back
+    /// through the read engine — `rerank = 0` picks the default
+    /// (`DT_RERANK` env var, else `max(4k, 32)`). Probing every list with
+    /// `rerank` ≥ the corpus size equals brute force exactly, bit for
+    /// bit. Flat indexes ignore `rerank` (their scan *is* exact).
+    pub fn search_with(
+        &self,
+        query: &[f32],
+        k: usize,
+        nprobe: usize,
+        rerank: usize,
+    ) -> Result<Vec<Neighbor>> {
         ensure!(
             query.len() == self.dim,
             "query has {} dims, index {:?} has {}",
@@ -1043,14 +1331,30 @@ impl IvfIndex {
         STATS.searches.fetch_add(1, Ordering::Relaxed);
         STATS.probes.fetch_add(spans.len() as u64, Ordering::Relaxed);
 
-        let entry_bytes = 4 + 4 * self.dim;
-        let mut top = TopK::new(k);
+        // PQ: scan by ADC into a deeper candidate heap, then re-rank; Flat:
+        // scan exact distances straight into the answer heap.
+        let ksub = self.pq.as_ref().map_or(0, |cb| cb.ksub);
+        let lut = self.pq.as_ref().map(|cb| cb.lut(query));
+        let cand = match &self.pq {
+            Some(_) => {
+                let depth = if rerank > 0 { rerank } else { default_rerank(k) };
+                depth.max(k).min(self.rows as usize)
+            }
+            None => k,
+        };
+        let entry_bytes = 4 + self.pq.as_ref().map_or(4 * self.dim, |cb| cb.m);
+        let mut top = TopK::new(cand);
         let mut scanned = 0u64;
+        let mut fetched = spans.iter().map(|s| s.1).sum::<u64>();
         let mut scan = |blocks: &[crate::serving::Block], top: &mut TopK| {
             for block in blocks {
                 for entry in block.chunks_exact(entry_bytes) {
                     let row = u32::from_le_bytes(entry[..4].try_into().expect("entry header"));
-                    top.push(dist2_le(query, &entry[4..]), row);
+                    let d = match &lut {
+                        Some(lut) => adc(lut, ksub, &entry[4..]),
+                        None => dist2_le(query, &entry[4..]),
+                    };
+                    top.push(d, row);
                     scanned += 1;
                 }
             }
@@ -1078,13 +1382,59 @@ impl IvfIndex {
                 continue;
             }
             STATS.probes.fetch_add(spans.len() as u64, Ordering::Relaxed);
+            fetched += spans.iter().map(|s| s.1).sum::<u64>();
             let blocks =
                 crate::serving::fetch_spans(&self.store, &seg.key, seg.size, seg.stamp, &spans)?;
             scan(&blocks, &mut top);
         }
         STATS.postings_scanned.fetch_add(scanned, Ordering::Relaxed);
+        STATS.postings_bytes_fetched.fetch_add(fetched, Ordering::Relaxed);
+        let cands = top.into_sorted();
+        if self.pq.is_none() {
+            return Ok(cands);
+        }
+        self.rerank_exact(query, &cands, k)
+    }
+
+    /// Exactly re-rank ADC candidates: read their true vectors back
+    /// through the read engine (candidate rows sort and coalesce into
+    /// first-dimension slice fetches, which ride the block cache) and
+    /// keep the top-`k` by the exact kernel — the same distance and
+    /// `(dist, row)` tie order as the brute-force control, which is what
+    /// makes full-probe + full-rerank PQ search *equal* brute force.
+    fn rerank_exact(&self, query: &[f32], cands: &[Neighbor], k: usize) -> Result<Vec<Neighbor>> {
+        // Adjacent candidates within this many rows share one slice read.
+        const RUN_GAP: u32 = 32;
+        let mut rows: Vec<u32> = cands.iter().map(|n| n.row).collect();
+        rows.sort_unstable();
+        rows.dedup();
+        let mut top = TopK::new(k);
+        let mut i = 0usize;
+        while i < rows.len() {
+            let mut j = i;
+            while j + 1 < rows.len() && rows[j + 1] - rows[j] <= RUN_GAP {
+                j += 1;
+            }
+            let (lo, hi) = (rows[i] as usize, rows[j] as usize);
+            let vals = load_rows(&self.table, &self.tensor_id, lo, hi + 1)?;
+            for &r in &rows[i..=j] {
+                let off = (r as usize - lo) * self.dim;
+                top.push(dist2(query, &vals[off..off + self.dim]), r);
+            }
+            STATS.rerank_fetches.fetch_add(1, Ordering::Relaxed);
+            i = j + 1;
+        }
+        STATS.reranked_rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
         Ok(top.into_sorted())
     }
+}
+
+/// Re-rank depth used when a PQ search passes `rerank = 0`: the
+/// `DT_RERANK` env var when set, else `max(4k, 32)`.
+fn default_rerank(k: usize) -> usize {
+    static ENV: Lazy<Option<usize>> =
+        Lazy::new(|| std::env::var("DT_RERANK").ok().and_then(|v| v.parse().ok()));
+    ENV.unwrap_or_else(|| (4 * k).max(32))
 }
 
 #[cfg(test)]
@@ -1121,37 +1471,48 @@ mod tests {
     fn centroid_artifact_roundtrips() {
         let centroids = vec![0.5f32, -1.25, 3.0, 4.5, 0.0, 9.75];
         let offsets = vec![0u64, 16, 16, 48];
-        let bytes = encode_centroid_artifact(7, 2, 2, &centroids, &offsets);
-        let art = decode_centroid_artifact(&bytes).unwrap();
-        assert_eq!(art.rows, 7);
-        assert_eq!(art.dim, 2);
-        assert_eq!(art.nprobe, 2);
-        assert_eq!(art.centroids, centroids);
-        assert_eq!(art.offsets, offsets);
-        // Corruption is rejected.
-        assert!(decode_centroid_artifact(&bytes[..10]).is_err());
-        let mut bad = bytes.clone();
-        bad[0] = b'X';
-        assert!(decode_centroid_artifact(&bad).is_err());
-        let mut short = bytes;
-        short.pop();
-        assert!(decode_centroid_artifact(&short).is_err());
+        for version in [ARTIFACT_VERSION, ARTIFACT_VERSION_PQ] {
+            let bytes = encode_centroid_artifact(version, 7, 2, 2, &centroids, &offsets);
+            let art = decode_centroid_artifact(&bytes).unwrap();
+            assert_eq!(art.version, version);
+            assert_eq!(art.rows, 7);
+            assert_eq!(art.dim, 2);
+            assert_eq!(art.nprobe, 2);
+            assert_eq!(art.centroids, centroids);
+            assert_eq!(art.offsets, offsets);
+            // Corruption is rejected.
+            assert!(decode_centroid_artifact(&bytes[..10]).is_err());
+            let mut bad = bytes.clone();
+            bad[0] = b'X';
+            assert!(decode_centroid_artifact(&bad).is_err());
+            let mut short = bytes;
+            short.pop();
+            assert!(decode_centroid_artifact(&short).is_err());
+        }
+        // Unknown versions are rejected.
+        let v9 = encode_centroid_artifact(9, 7, 2, 2, &centroids, &offsets);
+        assert!(decode_centroid_artifact(&v9).is_err());
     }
 
     #[test]
     fn meta_roundtrips() {
-        let m = encode_meta("vecs", 12, 0xDEAD_BEEF_0123_4567, "index/vecs/p.idx", 4096);
+        let m = encode_meta("vecs", 12, 0xDEAD_BEEF_0123_4567, "index/vecs/p.idx", 4096, None);
         let back = decode_meta(&m).unwrap();
         assert_eq!(back.covers, 12);
         assert_eq!(back.fp, 0xDEAD_BEEF_0123_4567);
         assert_eq!(back.postings_path, "index/vecs/p.idx");
         assert_eq!(back.rows, Some(4096));
+        assert_eq!(back.pq, None, "flat meta carries no codebook");
         assert!(decode_meta("{\"shape\":[2,2]}").is_none(), "tensor meta is not index meta");
         // Delta-segment meta is its own tag: invisible to centroid lookup.
         let d = encode_delta_meta("vecs", 64);
         assert!(decode_meta(&d).is_none());
         assert_eq!(decode_delta_meta(&d), Some(64));
         assert_eq!(decode_delta_meta(&m), None);
+        // PQ meta rides the same object and roundtrips.
+        let pq = PqRef { m: 16, ksub: 256, codebook_path: "index/vecs/cb.idx".into() };
+        let m2 = encode_meta("vecs", 12, 1, "index/vecs/p.idx", 4096, Some(&pq));
+        assert_eq!(decode_meta(&m2).unwrap().pq, Some(pq));
     }
 
     #[test]
@@ -1164,9 +1525,13 @@ mod tests {
         // k = 3 centroids; rows 0 and 2 in list 0, row 1 in list 2, list 1
         // empty; global ids rebase by 100.
         let lists = vec![vec![0u32, 2], vec![], vec![1, 3]];
-        let bytes = encode_delta_segment(&matrix, &lists, 100);
+        let payloads = delta_payloads(&matrix, None);
+        assert_eq!(payloads.len(), 4);
+        assert!(payloads.iter().all(|p| p.len() == 4 * 2), "v1 payloads are raw vectors");
+        let bytes = encode_delta_segment(ARTIFACT_VERSION, matrix.dim, &payloads, &lists, 100);
         let hdr_len = delta_header_len(3) as usize;
         let hdr = decode_delta_header(&bytes[..hdr_len], 3).unwrap();
+        assert_eq!(hdr.version, ARTIFACT_VERSION);
         assert_eq!(hdr.dim, 2);
         assert_eq!(hdr.rows, 4);
         let entry = 4 + 4 * 2;
@@ -1182,6 +1547,15 @@ mod tests {
         let mut bad = bytes[..hdr_len].to_vec();
         bad[0] = b'X';
         assert!(decode_delta_header(&bad, 3).is_err());
+        // v2 segments carry code payloads: shorter entries, same layout.
+        let codes: Vec<Vec<u8>> = vec![vec![1, 2], vec![3, 4], vec![5, 6], vec![7, 8]];
+        let v2 = encode_delta_segment(ARTIFACT_VERSION_PQ, matrix.dim, &codes, &lists, 100);
+        let hdr2 = decode_delta_header(&v2[..hdr_len], 3).unwrap();
+        assert_eq!(hdr2.version, ARTIFACT_VERSION_PQ);
+        assert_eq!(*hdr2.offsets.last().unwrap(), 4 * (4 + 2) as u64);
+        let e0 = &v2[hdr_len..hdr_len + 6];
+        assert_eq!(u32::from_le_bytes(e0[..4].try_into().unwrap()), 100);
+        assert_eq!(&e0[4..], &[1, 2], "row 0's code bytes");
     }
 
     #[test]
@@ -1260,6 +1634,9 @@ mod tests {
             "index.exact_searches",
             "index.probes",
             "index.postings_scanned",
+            "index.postings_bytes_fetched",
+            "index.reranked_rows",
+            "index.rerank_fetches",
             "index.centroid_loads",
             "index.appends",
             "index.rows_appended",

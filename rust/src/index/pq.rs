@@ -1,0 +1,321 @@
+//! Product quantization for the IVF index's posting lists.
+//!
+//! A [`Codebook`] splits the vector space into `m` contiguous subspaces
+//! and trains `ksub ≤ 256` centroids per subspace with the same seeded
+//! k-means the coarse quantizer uses ([`super::kmeans`]). A vector is then
+//! stored as `m` one-byte centroid ids — a posting entry shrinks from
+//! `4 + 4·dim` bytes to `4 + m` bytes (16x at the default `m = dim/4`) —
+//! and queries scan postings by **asymmetric distance** (ADC): one
+//! `m × ksub` lookup table of exact query-to-subcentroid distances per
+//! query, then a table-gather sum per candidate ([`super::kernels::adc`]).
+//! ADC distances are approximate, so the search keeps a margin of
+//! candidates and re-ranks them against exact vectors read back through
+//! the read engine (see `IvfIndex::search_with`).
+//!
+//! Codebooks serialize to their own artifact object (magic `DTPQ`) that
+//! lands in the same atomic commit as the centroid and posting artifacts,
+//! and appends encode new rows against the **pinned** codebook — delta
+//! segments never retrain, so their codes and the main postings share one
+//! decode table.
+
+use super::{kernels, kmeans, Matrix};
+use crate::Result;
+use anyhow::ensure;
+
+/// Codebook artifact magic.
+const PQ_MAGIC: [u8; 4] = *b"DTPQ";
+/// Codebook serialization version.
+const PQ_VERSION: u32 = 1;
+/// Codebook header bytes before the subspace-bounds table.
+const PQ_HEADER_BYTES: usize = 24;
+/// Hardest centroid-count cap a one-byte code can address.
+const MAX_KSUB: usize = 256;
+
+/// A trained product quantizer: `m` subspaces over a `dim`-dimensional
+/// space, `ksub` centroids per subspace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    /// Subspace count — bytes per stored code.
+    pub m: usize,
+    /// Centroids per subspace (`≤ 256`, so codes fit one byte).
+    pub ksub: usize,
+    /// Dimensionality of the quantized vector space.
+    pub dim: usize,
+    /// `m + 1` subspace boundaries: subspace `j` covers dims
+    /// `bounds[j]..bounds[j+1]`. When `dim % m != 0` the first `dim % m`
+    /// subspaces are one dimension wider.
+    bounds: Vec<u32>,
+    /// Concatenated per-subspace centroid matrices: subspace `j` holds
+    /// `ksub` rows of `sub_dim(j)` values starting at `ksub * bounds[j]`.
+    codewords: Vec<f32>,
+}
+
+impl Codebook {
+    /// Train a codebook over `matrix` with `m` subspaces: one seeded
+    /// k-means run per subspace (salted from `seed`, so subspaces train
+    /// independently but the whole codebook is deterministic in the
+    /// seed). `ksub` is 256 clamped to the row count.
+    pub fn train(
+        matrix: &Matrix,
+        m: usize,
+        iters: usize,
+        sample: usize,
+        seed: u64,
+    ) -> Result<Codebook> {
+        ensure!(matrix.rows > 0 && matrix.dim > 0, "cannot train a codebook on an empty matrix");
+        ensure!(
+            m >= 1 && m <= matrix.dim,
+            "pq m {m} must be in [1, dim {}]",
+            matrix.dim
+        );
+        let ksub = MAX_KSUB.min(matrix.rows);
+        let bounds = split_bounds(matrix.dim, m);
+        let mut codewords = Vec::with_capacity(ksub * matrix.dim);
+        for j in 0..m {
+            let (b0, b1) = (bounds[j] as usize, bounds[j + 1] as usize);
+            let sd = b1 - b0;
+            // Gather the subspace's columns into a contiguous rows×sd block.
+            let mut sub = Vec::with_capacity(matrix.rows * sd);
+            for r in 0..matrix.rows {
+                sub.extend_from_slice(&matrix.row(r)[b0..b1]);
+            }
+            let salt = (j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let trained = kmeans::train(&sub, sd, ksub, iters, sample, seed.wrapping_add(salt));
+            codewords.extend_from_slice(&trained.centroids);
+        }
+        Ok(Codebook { m, ksub, dim: matrix.dim, bounds, codewords })
+    }
+
+    /// Width of subspace `j`.
+    fn sub_dim(&self, j: usize) -> usize {
+        (self.bounds[j + 1] - self.bounds[j]) as usize
+    }
+
+    /// Subspace `j`'s centroid matrix (`ksub × sub_dim(j)` row-major).
+    fn sub_centroids(&self, j: usize) -> &[f32] {
+        let start = self.ksub * self.bounds[j] as usize;
+        &self.codewords[start..start + self.ksub * self.sub_dim(j)]
+    }
+
+    /// Quantize one vector: the nearest subcentroid id per subspace,
+    /// appended to `out` as `m` bytes.
+    pub fn encode_into(&self, v: &[f32], out: &mut Vec<u8>) {
+        for j in 0..self.m {
+            let (b0, b1) = (self.bounds[j] as usize, self.bounds[j + 1] as usize);
+            let (c, _) = kmeans::nearest(self.sub_centroids(j), b1 - b0, &v[b0..b1]);
+            out.push(c as u8);
+        }
+    }
+
+    /// Quantize every row of `matrix` (`rows * m` code bytes).
+    pub fn encode_rows(&self, matrix: &Matrix) -> Vec<u8> {
+        let mut out = Vec::with_capacity(matrix.rows * self.m);
+        for r in 0..matrix.rows {
+            self.encode_into(matrix.row(r), &mut out);
+        }
+        out
+    }
+
+    /// Reconstruct the vector a code addresses, appended to `out` (the
+    /// quantization-error side of every ADC distance; tests use it to
+    /// bound that error).
+    pub fn decode_into(&self, codes: &[u8], out: &mut Vec<f32>) {
+        for j in 0..self.m {
+            let sd = self.sub_dim(j);
+            let cents = self.sub_centroids(j);
+            let c = codes[j] as usize;
+            out.extend_from_slice(&cents[c * sd..(c + 1) * sd]);
+        }
+    }
+
+    /// Build the query's ADC lookup table: `m * ksub` exact squared
+    /// distances from the query's subvectors to every subcentroid, laid
+    /// out `[subspace][centroid]` — the layout [`kernels::adc`] gathers.
+    pub fn lut(&self, q: &[f32]) -> Vec<f32> {
+        let mut lut = Vec::with_capacity(self.m * self.ksub);
+        for j in 0..self.m {
+            let (b0, b1) = (self.bounds[j] as usize, self.bounds[j + 1] as usize);
+            let sd = b1 - b0;
+            let cents = self.sub_centroids(j);
+            let qsub = &q[b0..b1];
+            for c in 0..self.ksub {
+                lut.push(kernels::dist2(qsub, &cents[c * sd..(c + 1) * sd]));
+            }
+        }
+        lut
+    }
+
+    /// Serialize: header (magic, version, `m`, `ksub`, `dim`), the
+    /// `m + 1` bounds table, then the codewords as little-endian f32.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(PQ_HEADER_BYTES + self.bounds.len() * 4 + self.codewords.len() * 4);
+        out.extend_from_slice(&PQ_MAGIC);
+        out.extend_from_slice(&PQ_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.m as u32).to_le_bytes());
+        out.extend_from_slice(&(self.ksub as u32).to_le_bytes());
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes()); // reserved
+        for b in &self.bounds {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+        for v in &self.codewords {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize a [`to_bytes`](Self::to_bytes) artifact, validating
+    /// magic, version, geometry and exact length.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Codebook> {
+        ensure!(bytes.len() >= PQ_HEADER_BYTES, "pq codebook truncated ({} B)", bytes.len());
+        ensure!(bytes[..4] == PQ_MAGIC, "bad pq codebook magic");
+        let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let version = u32_at(4);
+        ensure!(version == PQ_VERSION, "unsupported pq codebook version {version}");
+        let m = u32_at(8) as usize;
+        let ksub = u32_at(12) as usize;
+        let dim = u32_at(16) as usize;
+        ensure!(m >= 1 && m <= dim, "pq codebook has m={m}, dim={dim}");
+        ensure!(ksub >= 1 && ksub <= MAX_KSUB, "pq codebook has ksub={ksub}");
+        // Total codewords across subspaces is always ksub * dim.
+        let want = PQ_HEADER_BYTES + (m + 1) * 4 + ksub * dim * 4;
+        ensure!(
+            bytes.len() == want,
+            "pq codebook is {} B, geometry (m={m}, ksub={ksub}, dim={dim}) needs {want}",
+            bytes.len()
+        );
+        let bounds_end = PQ_HEADER_BYTES + (m + 1) * 4;
+        let bounds: Vec<u32> = bytes[PQ_HEADER_BYTES..bounds_end]
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        ensure!(
+            bounds == split_bounds(dim, m),
+            "pq codebook bounds table does not split dim={dim} into m={m} subspaces"
+        );
+        let codewords: Vec<f32> = bytes[bounds_end..]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Codebook { m, ksub, dim, bounds, codewords })
+    }
+}
+
+/// The `m + 1` subspace boundaries splitting `dim` dimensions into `m`
+/// near-equal contiguous runs (the first `dim % m` runs one wider).
+fn split_bounds(dim: usize, m: usize) -> Vec<u32> {
+    let (base, extra) = (dim / m, dim % m);
+    let mut bounds = Vec::with_capacity(m + 1);
+    let mut at = 0u32;
+    bounds.push(at);
+    for j in 0..m {
+        at += base as u32 + u32::from(j < extra);
+        bounds.push(at);
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::embedding_like;
+
+    fn corpus(rows: usize, dim: usize) -> Matrix {
+        let t = embedding_like(17, rows, dim, 8, 0.05);
+        let shape = t.shape().to_vec();
+        Matrix { rows: shape[0], dim: shape[1], data: t.as_f32().unwrap() }
+    }
+
+    #[test]
+    fn bounds_split_evenly_and_with_remainder() {
+        assert_eq!(split_bounds(8, 4), vec![0, 2, 4, 6, 8]);
+        assert_eq!(split_bounds(10, 4), vec![0, 3, 6, 8, 10]);
+        assert_eq!(split_bounds(3, 3), vec![0, 1, 2, 3]);
+        assert_eq!(split_bounds(5, 1), vec![0, 5]);
+    }
+
+    #[test]
+    fn train_encode_decode_shrinks_error() {
+        let matrix = corpus(300, 16);
+        let cb = Codebook::train(&matrix, 4, 8, 1024, 9).unwrap();
+        assert_eq!(cb.m, 4);
+        assert_eq!(cb.ksub, 256);
+        assert_eq!(cb.dim, 16);
+        let codes = cb.encode_rows(&matrix);
+        assert_eq!(codes.len(), matrix.rows * cb.m);
+        // Reconstruction error is small relative to the data's own spread.
+        let mut recon = Vec::new();
+        let mut err = 0f64;
+        let mut spread = 0f64;
+        for r in 0..matrix.rows {
+            recon.clear();
+            cb.decode_into(&codes[r * cb.m..(r + 1) * cb.m], &mut recon);
+            err += kernels::dist2(matrix.row(r), &recon) as f64;
+            spread += kernels::dist2(matrix.row(r), matrix.row(0)) as f64;
+        }
+        assert!(err < spread * 0.05, "quantization error {err} vs spread {spread}");
+    }
+
+    #[test]
+    fn lut_gather_equals_reconstructed_subspace_distances() {
+        let matrix = corpus(120, 12);
+        let cb = Codebook::train(&matrix, 3, 6, 512, 3).unwrap();
+        let q = matrix.row(5);
+        let lut = cb.lut(q);
+        assert_eq!(lut.len(), cb.m * cb.ksub);
+        let mut codes = Vec::new();
+        cb.encode_into(matrix.row(17), &mut codes);
+        // adc = sum of the selected per-subspace exact distances.
+        let mut want = 0f32;
+        for j in 0..cb.m {
+            want += lut[j * cb.ksub + codes[j] as usize];
+        }
+        let got = kernels::adc(&lut, cb.ksub, &codes);
+        assert!((got - want).abs() <= want.abs() * 1e-6 + 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn ksub_clamps_to_tiny_corpora() {
+        let matrix = corpus(10, 8);
+        let cb = Codebook::train(&matrix, 2, 4, 64, 1).unwrap();
+        assert_eq!(cb.ksub, 10);
+        // Every row's reconstruction is exact: with ksub = rows, each
+        // subvector is its own codeword.
+        let codes = cb.encode_rows(&matrix);
+        let mut recon = Vec::new();
+        for r in 0..matrix.rows {
+            recon.clear();
+            cb.decode_into(&codes[r * cb.m..(r + 1) * cb.m], &mut recon);
+            assert_eq!(kernels::dist2(matrix.row(r), &recon), 0.0, "row {r}");
+        }
+    }
+
+    #[test]
+    fn codebook_roundtrips_and_rejects_corruption() {
+        let matrix = corpus(50, 10);
+        let cb = Codebook::train(&matrix, 4, 4, 256, 5).unwrap();
+        let bytes = cb.to_bytes();
+        let back = Codebook::from_bytes(&bytes).unwrap();
+        assert_eq!(back, cb);
+        assert!(Codebook::from_bytes(&bytes[..10]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Codebook::from_bytes(&bad).is_err());
+        let mut short = bytes;
+        short.pop();
+        assert!(Codebook::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn training_is_deterministic_in_the_seed() {
+        let matrix = corpus(200, 8);
+        let a = Codebook::train(&matrix, 4, 6, 128, 11).unwrap();
+        let b = Codebook::train(&matrix, 4, 6, 128, 11).unwrap();
+        assert_eq!(a, b);
+        let c = Codebook::train(&matrix, 4, 6, 128, 12).unwrap();
+        assert_ne!(a.codewords, c.codewords, "distinct seeds must diverge");
+        assert!(Codebook::train(&matrix, 0, 6, 128, 1).is_err());
+        assert!(Codebook::train(&matrix, 9, 6, 128, 1).is_err());
+    }
+}

@@ -119,8 +119,14 @@ pub fn table_stats(table: &DeltaTable) -> Result<Vec<TensorInfo>> {
                 e.layout = l;
             }
         }
-        if e.dtype.is_empty() {
-            if let Some((shape, dtype)) = meta_geometry(f.meta.as_deref()) {
+        if let Some((shape, dtype)) = meta_geometry(f.meta.as_deref()) {
+            // Prefer the largest leading dimension: index artifacts pin the
+            // geometry they were built against, so after `append` both the
+            // grown tensor shape and the stale pre-append shape appear in
+            // the snapshot. Inspect should report the grown one.
+            let grown = e.shape.is_empty()
+                || shape.first().copied().unwrap_or(0) > e.shape.first().copied().unwrap_or(0);
+            if e.dtype.is_empty() || grown {
                 e.shape = shape;
                 e.dtype = dtype;
             }

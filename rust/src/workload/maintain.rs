@@ -65,6 +65,12 @@ pub struct MaintainParams {
     /// Workload seed (corpus, appended rows, queries, Zipf draws and the
     /// k-means init all derive from it).
     pub seed: u64,
+    /// Maintain a PQ index (codes in the delta segments, exact re-rank on
+    /// search) instead of Flat postings.
+    pub pq: bool,
+    /// PQ subspace count (0 = the build's default). Only meaningful with
+    /// `pq`.
+    pub pq_m: usize,
 }
 
 impl MaintainParams {
@@ -86,6 +92,8 @@ impl MaintainParams {
             incremental: true,
             cache: true,
             seed: 7,
+            pq: false,
+            pq_m: 0,
         }
     }
 
@@ -107,6 +115,8 @@ impl MaintainParams {
             incremental: true,
             cache: true,
             seed: 7,
+            pq: false,
+            pq_m: 0,
         }
     }
 
@@ -128,6 +138,8 @@ impl MaintainParams {
             incremental: true,
             cache: true,
             seed: 7,
+            pq: false,
+            pq_m: 0,
         }
     }
 }
@@ -188,6 +200,11 @@ pub struct MaintainReport {
     pub bytes_read: u64,
     /// New log versions the measured phase created.
     pub log_commits: u64,
+    /// Whether the index under maintenance used PQ-compressed postings.
+    pub pq: bool,
+    /// Posting-list bytes the measured phase requested through the serving
+    /// tier (process-global delta).
+    pub postings_bytes_fetched: u64,
 }
 
 impl MaintainReport {
@@ -218,6 +235,8 @@ impl MaintainReport {
             ("get_ops", Json::Int(self.get_ops as i64)),
             ("bytes_read", Json::Int(self.bytes_read as i64)),
             ("log_commits", Json::Int(self.log_commits as i64)),
+            ("pq", Json::Bool(self.pq)),
+            ("postings_bytes_fetched", Json::Int(self.postings_bytes_fetched as i64)),
         ])
         .dump()
     }
@@ -230,7 +249,7 @@ impl MaintainReport {
              append mean {} p50 {} p95 {} p99 {} ({} delta commits, {} full rebuilds)\n  \
              search {:.0} q/s p50 {} p95 {} p99 {}; optimize total {}\n  \
              recall@{}: {:.4} maintained vs {:.4} full rebuild; full-nprobe exact: {}\n  \
-             store: {} GETs, {} bytes; log: {} commits",
+             store: {} GETs, {} bytes ({} posting bytes, {}); log: {} commits",
             if self.incremental { "incremental" } else { "rebuild control" },
             self.rounds,
             self.appended_rows / self.rounds.max(1),
@@ -254,6 +273,8 @@ impl MaintainReport {
             self.exact_full_nprobe,
             self.get_ops,
             self.bytes_read,
+            self.postings_bytes_fetched,
+            if self.pq { "pq" } else { "flat" },
             self.log_commits,
         )
     }
@@ -272,10 +293,19 @@ pub fn populate_maintain_corpus(table: &DeltaTable, id: &str, p: &MaintainParams
         let fmt = FtsfFormat { rows_per_group: 64, rows_per_file: 1024, ..FtsfFormat::new(1) };
         fmt.write(table, id, &data.into())?;
     }
-    if !index::status(table, id)?.is_fresh() {
-        index::build(table, id, &BuildParams { seed: p.seed, ..Default::default() })?;
+    // Rebuild when the index is stale/missing *or* its posting encoding
+    // (Flat vs PQ) doesn't match this run's mode.
+    let fresh = index::status(table, id)?.is_fresh();
+    let mode_matches = fresh && IvfIndex::open(table, id)?.is_pq() == p.pq;
+    if !fresh || !mode_matches {
+        index::build(table, id, &build_params(p))?;
     }
     Ok(())
+}
+
+/// The build knobs a maintain run's (re)builds share.
+fn build_params(p: &MaintainParams) -> BuildParams {
+    BuildParams { seed: p.seed, pq: p.pq, pq_m: p.pq_m, ..Default::default() }
 }
 
 /// Run the closed maintenance loop and report. The table must already hold
@@ -306,8 +336,14 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
         .collect();
     let pick = Zipf::new(pool.len(), p.zipf_s);
 
+    ensure!(
+        IvfIndex::open(table, id)?.is_pq() == p.pq,
+        "index encoding does not match the run's pq mode — repopulate first"
+    );
     let v0 = table.latest_version()?;
     let (get0, _, _, bytes0, _) = store.stats().snapshot();
+    let postings0 =
+        index::stats().postings_bytes_fetched.load(std::sync::atomic::Ordering::Relaxed);
     let sw_total = Stopwatch::start();
     let mut append_lat: Vec<f64> = Vec::with_capacity(p.rounds);
     let mut search_lat: Vec<f64> = Vec::new();
@@ -336,7 +372,7 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
             // Control group: append data only, then pay a full rebuild —
             // the regime this tier exists to retire.
             index::maintain::append_rows(table, id, &data, Upkeep::Skip)?;
-            index::build(table, id, &BuildParams { seed: p.seed, ..Default::default() })?;
+            index::build(table, id, &build_params(p))?;
             full_rebuilds += 1;
         }
         append_lat.push(sw.secs());
@@ -369,6 +405,8 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
     }
     let wall = sw_total.secs();
     let (get1, _, _, bytes1, _) = store.stats().snapshot();
+    let postings1 =
+        index::stats().postings_bytes_fetched.load(std::sync::atomic::Ordering::Relaxed);
     let log_commits = table.latest_version()? - v0;
 
     // Verification, outside the measured phase: exactness at full nprobe,
@@ -380,7 +418,9 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
         let mut exact = true;
         for q in &pool {
             let truth = index::exact_topk(&matrix, q, p.k);
-            let full = ivf.search(q, p.k, ivf.k)?;
+            // Full probe + full re-rank: exact for PQ too (Flat ignores the
+            // rerank argument), so exactness stays an equality either way.
+            let full = ivf.search_with(q, p.k, ivf.k, usize::MAX)?;
             exact &= full.len() == truth.len()
                 && full.iter().zip(&truth).all(|(a, b)| a.row == b.row && a.dist == b.dist);
             let approx = ivf.search(q, p.k, nprobe)?;
@@ -392,7 +432,7 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
     };
     let ivf = IvfIndex::open(table, id)?;
     let (recall_after, exact_ok) = recall_of(&ivf, last_nprobe)?;
-    index::build(table, id, &BuildParams { seed: p.seed, ..Default::default() })?;
+    index::build(table, id, &build_params(p))?;
     let control = IvfIndex::open(table, id)?;
     let control_nprobe =
         if p.nprobe == 0 { control.default_nprobe } else { p.nprobe.min(control.k) };
@@ -425,6 +465,8 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
         get_ops: get1 - get0,
         bytes_read: bytes1 - bytes0,
         log_commits,
+        pq: p.pq,
+        postings_bytes_fetched: postings1 - postings0,
     })
 }
 
@@ -475,6 +517,20 @@ mod tests {
         assert_eq!(j.get("incremental").and_then(|v| v.as_bool()), Some(true));
         assert!(r.summary().contains("q/s"), "{}", r.summary());
         assert!(r.summary().contains("recall@10"), "{}", r.summary());
+    }
+
+    #[test]
+    fn pq_incremental_run_stays_exact() {
+        let t = table();
+        let p = MaintainParams { pq: true, ..tiny_params() };
+        populate_maintain_corpus(&t, "vecs", &p).unwrap();
+        let r = run_maintain(&t, "vecs", &p).unwrap();
+        assert!(r.pq);
+        assert_eq!(r.maintained_appends, 2, "PQ appends carry coded delta segments");
+        assert!(r.exact_full_nprobe, "full nprobe + full re-rank must equal brute force");
+        assert!(r.postings_bytes_fetched > 0);
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("pq").and_then(|v| v.as_bool()), Some(true));
     }
 
     #[test]

@@ -56,6 +56,15 @@ pub struct SearchParams {
     /// Workload seed (corpus, query pool, Zipf draws and the k-means init
     /// all derive from it).
     pub seed: u64,
+    /// Build (and search) the index with PQ-compressed postings instead of
+    /// raw Flat vectors.
+    pub pq: bool,
+    /// PQ subspace count (0 = the build's default of `dim / 4`). Only
+    /// meaningful with `pq`.
+    pub pq_m: usize,
+    /// Exact re-rank depth for PQ searches (0 = the index default of
+    /// `max(4k, 32)`; ignored by Flat indexes).
+    pub rerank: usize,
 }
 
 impl SearchParams {
@@ -74,6 +83,9 @@ impl SearchParams {
             cache: true,
             warmup: true,
             seed: 7,
+            pq: false,
+            pq_m: 0,
+            rerank: 0,
         }
     }
 
@@ -92,6 +104,9 @@ impl SearchParams {
             cache: true,
             warmup: true,
             seed: 7,
+            pq: false,
+            pq_m: 0,
+            rerank: 0,
         }
     }
 
@@ -110,6 +125,9 @@ impl SearchParams {
             cache: true,
             warmup: true,
             seed: 7,
+            pq: false,
+            pq_m: 0,
+            rerank: 0,
         }
     }
 }
@@ -151,6 +169,16 @@ pub struct SearchReport {
     pub cache_hits: u64,
     /// Block-cache misses during the measured phase (process-global delta).
     pub cache_misses: u64,
+    /// Whether the index served PQ-compressed postings.
+    pub pq: bool,
+    /// Effective exact re-rank depth (0 for Flat indexes).
+    pub rerank: usize,
+    /// Posting-list bytes the measured phase requested through the serving
+    /// tier (process-global delta; the I/O PQ compresses).
+    pub postings_bytes_fetched: u64,
+    /// Candidate rows exactly re-ranked during the measured phase
+    /// (process-global delta; 0 for Flat indexes).
+    pub reranked_rows: u64,
 }
 
 impl SearchReport {
@@ -173,6 +201,10 @@ impl SearchReport {
             ("bytes_read", Json::Int(self.bytes_read as i64)),
             ("cache_hits", Json::Int(self.cache_hits as i64)),
             ("cache_misses", Json::Int(self.cache_misses as i64)),
+            ("pq", Json::Bool(self.pq)),
+            ("rerank", Json::Int(self.rerank as i64)),
+            ("postings_bytes_fetched", Json::Int(self.postings_bytes_fetched as i64)),
+            ("reranked_rows", Json::Int(self.reranked_rows as i64)),
         ])
         .dump()
     }
@@ -181,13 +213,16 @@ impl SearchReport {
     pub fn summary(&self) -> String {
         let ms = |s: f64| format!("{:.3}ms", s * 1e3);
         format!(
-            "search: {} clients x {} queries (cache {}, nprobe {}) in {:.3}s -> {:.0} q/s\n  \
+            "search: {} clients x {} queries (cache {}, nprobe {}, postings {}) \
+             in {:.3}s -> {:.0} q/s\n  \
              latency mean {} p50 {} p95 {} p99 {}\n  \
-             recall@{} {:.4}; store: {} GETs, {} bytes; block cache: {} hits / {} misses",
+             recall@{} {:.4}; store: {} GETs, {} bytes; block cache: {} hits / {} misses\n  \
+             postings: {} bytes fetched; reranked {} rows",
             self.clients,
             self.queries / (self.clients.max(1) as u64),
             if self.cache_enabled { "on" } else { "off" },
             self.nprobe,
+            if self.pq { format!("pq rerank {}", self.rerank) } else { "flat".into() },
             self.wall_secs,
             self.throughput_qps,
             ms(self.mean_secs),
@@ -200,6 +235,8 @@ impl SearchReport {
             self.bytes_read,
             self.cache_hits,
             self.cache_misses,
+            self.postings_bytes_fetched,
+            self.reranked_rows,
         )
     }
 }
@@ -235,8 +272,16 @@ pub fn populate_search_corpus(table: &DeltaTable, id: &str, p: &SearchParams) ->
         let fmt = FtsfFormat { rows_per_group: 256, rows_per_file: 4096, ..FtsfFormat::new(1) };
         fmt.write(table, id, &data.into())?;
     }
-    if !index::status(table, id)?.is_fresh() {
-        index::build(table, id, &index::BuildParams { seed: p.seed, ..Default::default() })?;
+    // Rebuild when the index is stale/missing *or* its posting encoding
+    // (Flat vs PQ) doesn't match what this run wants to measure.
+    let fresh = index::status(table, id)?.is_fresh();
+    let mode_matches = fresh && IvfIndex::open(table, id)?.is_pq() == p.pq;
+    if !fresh || !mode_matches {
+        index::build(
+            table,
+            id,
+            &index::BuildParams { seed: p.seed, pq: p.pq, pq_m: p.pq_m, ..Default::default() },
+        )?;
     }
     Ok(())
 }
@@ -254,7 +299,14 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
     let _restore = CacheModeGuard::set(&store, p.cache);
 
     let ivf = IvfIndex::open(table, id)?;
+    ensure!(
+        ivf.is_pq() == p.pq,
+        "index encoding is {} but the run asked for {} — repopulate first",
+        if ivf.is_pq() { "pq" } else { "flat" },
+        if p.pq { "pq" } else { "flat" },
+    );
     let nprobe = if p.nprobe == 0 { ivf.default_nprobe } else { p.nprobe.min(ivf.k) };
+    let rerank_eff = ivf.effective_rerank(p.k, p.rerank);
     // The matrix doubles as query source and exact control.
     let matrix = index::load_matrix(table, id)?;
     ensure!(matrix.dim == ivf.dim, "corpus dims changed under the index");
@@ -275,13 +327,16 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
 
     if p.warmup {
         for q in &pool {
-            let _ = ivf.search(q, p.k, nprobe)?;
+            let _ = ivf.search_with(q, p.k, nprobe, p.rerank)?;
         }
     }
 
     let (get0, _, _, bytes0, _) = store.stats().snapshot();
     let hits0 = crate::serving::block_cache().hits();
     let misses0 = crate::serving::block_cache().misses();
+    let istats = index::stats();
+    let postings0 = istats.postings_bytes_fetched.load(std::sync::atomic::Ordering::Relaxed);
+    let rerank0 = istats.reranked_rows.load(std::sync::atomic::Ordering::Relaxed);
     let pick = Zipf::new(pool.len(), p.zipf_s);
     let (latencies, wall) = driver::run_closed_loop(
         p.clients,
@@ -291,7 +346,7 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
         |_, _, rng| {
             let q = &pool[pick.sample(rng)];
             let req = Stopwatch::start();
-            let out = ivf.search(q, p.k, nprobe)?;
+            let out = ivf.search_with(q, p.k, nprobe, p.rerank)?;
             std::hint::black_box(&out);
             Ok(req.secs())
         },
@@ -299,6 +354,8 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
     let (get1, _, _, bytes1, _) = store.stats().snapshot();
     let hits1 = crate::serving::block_cache().hits();
     let misses1 = crate::serving::block_cache().misses();
+    let postings1 = istats.postings_bytes_fetched.load(std::sync::atomic::Ordering::Relaxed);
+    let rerank1 = istats.reranked_rows.load(std::sync::atomic::Ordering::Relaxed);
 
     // Recall@k over the pool, after measurement so the measured phase sees
     // exactly the cache state the warmup flag dictates. The denominator is
@@ -307,7 +364,7 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
     let mut hit = 0usize;
     let mut truth_total = 0usize;
     for q in &pool {
-        let approx = ivf.search(q, p.k, nprobe)?;
+        let approx = ivf.search_with(q, p.k, nprobe, p.rerank)?;
         let exact = index::exact_topk(&matrix, q, p.k);
         truth_total += exact.len();
         let truth: Vec<u32> = exact.iter().map(|n| n.row).collect();
@@ -334,6 +391,10 @@ pub fn run_search(table: &DeltaTable, id: &str, p: &SearchParams) -> Result<Sear
         bytes_read: bytes1 - bytes0,
         cache_hits: hits1 - hits0,
         cache_misses: misses1 - misses0,
+        pq: p.pq,
+        rerank: rerank_eff,
+        postings_bytes_fetched: postings1 - postings0,
+        reranked_rows: rerank1 - rerank0,
     })
 }
 
@@ -380,6 +441,34 @@ mod tests {
         assert_eq!(j.get("cache_enabled").and_then(|v| v.as_bool()), Some(true));
         assert!(r.summary().contains("q/s"), "{}", r.summary());
         assert!(r.summary().contains("recall@10"), "{}", r.summary());
+    }
+
+    #[test]
+    fn pq_run_reranks_and_a_mode_flip_rebuilds() {
+        let t = table();
+        let p = SearchParams { pq: true, ..tiny_params() };
+        populate_search_corpus(&t, "vecs", &p).unwrap();
+        let r = run_search(&t, "vecs", &p).unwrap();
+        assert!(r.pq);
+        assert!(r.rerank >= p.k, "effective rerank {} < k {}", r.rerank, p.k);
+        assert!(r.reranked_rows > 0 && r.postings_bytes_fetched > 0);
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("pq").and_then(|v| v.as_bool()), Some(true));
+        assert!(r.summary().contains("pq rerank"), "{}", r.summary());
+
+        // Asking for Flat over the same corpus rebuilds the index in place,
+        // and the raw-vector postings cost strictly more fetched bytes than
+        // the 1-byte-per-subspace codes did.
+        let flat = SearchParams { pq: false, ..p };
+        populate_search_corpus(&t, "vecs", &flat).unwrap();
+        let rf = run_search(&t, "vecs", &flat).unwrap();
+        assert!(!rf.pq && rf.reranked_rows == 0 && rf.rerank == 0);
+        assert!(
+            r.postings_bytes_fetched < rf.postings_bytes_fetched,
+            "pq fetched {} bytes, flat {}",
+            r.postings_bytes_fetched,
+            rf.postings_bytes_fetched
+        );
     }
 
     #[test]

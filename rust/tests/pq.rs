@@ -1,0 +1,372 @@
+//! IVF-PQ acceptance and property tests — the behaviors the compressed
+//! posting encoding exists to provide:
+//!
+//! * a PQ build lands centroids + coded postings + codebook in ONE Delta
+//!   commit, and the posting artifact is at least 8× smaller than the
+//!   Flat encoding of the same corpus;
+//! * full `nprobe` + full re-rank returns **exactly** the brute-force
+//!   top-k, distances included — compression never costs exactness when
+//!   asked for all of it;
+//! * recall@10 with the *default* re-rank depth clears 0.9 at the build's
+//!   default `nprobe` on a seeded clustered corpus;
+//! * ADC ranks the true nearest neighbor within the default re-rank
+//!   margin on a Gaussian-mixture corpus, so re-ranked top-1 is exact;
+//! * appends ride delta segments carrying PQ codes against the pinned
+//!   codebook (ONE commit, index stays Fresh), OPTIMIZE folds coded
+//!   segments, and the codebook survives the fold and VACUUM;
+//! * v1 (Flat) artifacts still open and serve unchanged next to the v2
+//!   code path;
+//! * the distance kernels are bit-identical between the scalar and
+//!   `--features simd` builds across awkward dimensions.
+
+use delta_tensor::formats::TensorData;
+use delta_tensor::index::kernels::{adc, dist2, dist2_le, dist2_le_scalar, dist2_scalar};
+use delta_tensor::index::{self, maintain, BuildParams, IvfIndex};
+use delta_tensor::prelude::*;
+use delta_tensor::util::Pcg64;
+use delta_tensor::workload::embedding_like;
+
+/// Store an `n × dim` clustered f32 corpus as FTSF row-chunks.
+fn store_corpus(table: &DeltaTable, id: &str, seed: u64, n: usize, dim: usize, clusters: usize) {
+    let data: TensorData = embedding_like(seed, n, dim, clusters, 0.05).into();
+    let fmt = FtsfFormat { rows_per_group: 64, rows_per_file: 1024, ..FtsfFormat::new(1) };
+    fmt.write(table, id, &data).unwrap();
+}
+
+/// Perturbed corpus rows — retrieval-shaped queries.
+fn queries(matrix: &index::Matrix, seed: u64, count: usize) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::new(seed);
+    (0..count)
+        .map(|_| {
+            let r = rng.below(matrix.rows);
+            matrix.row(r).iter().map(|&v| v + rng.next_gaussian() as f32 * 0.01).collect()
+        })
+        .collect()
+}
+
+/// Total bytes of a tensor's live posting artifacts.
+fn posting_bytes(table: &DeltaTable, id: &str) -> u64 {
+    let prefix = format!("index/{id}/");
+    table
+        .snapshot()
+        .unwrap()
+        .files()
+        .filter(|f| f.path.starts_with(&prefix) && f.path.ends_with("-postings.idx"))
+        .map(|f| f.size)
+        .sum()
+}
+
+#[test]
+fn pq_build_is_one_commit_with_codebook_artifact() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 3, 400, 8, 6);
+    let v0 = table.latest_version().unwrap();
+
+    let summary =
+        index::build(&table, "vecs", &BuildParams { seed: 3, pq: true, ..Default::default() })
+            .unwrap();
+    assert_eq!(summary.version, v0 + 1, "PQ build must land as ONE atomic commit");
+    assert_eq!(summary.pq_m, 2, "default m is dim/4");
+    assert_eq!(summary.pq_ksub, 256.min(400));
+    assert!(summary.codebook_bytes > 0);
+    assert!(summary.summary().contains("pq"), "{}", summary.summary());
+
+    let snap = table.snapshot().unwrap();
+    let artifacts: Vec<&str> = snap
+        .files()
+        .filter(|f| f.path.starts_with("index/vecs/"))
+        .map(|f| f.path.as_str())
+        .collect();
+    assert_eq!(artifacts.len(), 3, "centroids + postings + codebook: {artifacts:?}");
+    assert!(artifacts.iter().any(|p| p.ends_with("-codebook.idx")), "{artifacts:?}");
+    assert!(index::status(&table, "vecs").unwrap().is_fresh());
+
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    assert!(ivf.is_pq());
+    assert_eq!(ivf.pq_params(), Some((summary.pq_m, summary.pq_ksub)));
+
+    // A rebuild replaces all three artifacts; vacuum reclaims the old set.
+    let v1 = table.latest_version().unwrap();
+    index::build(&table, "vecs", &BuildParams { seed: 4, pq: true, ..Default::default() })
+        .unwrap();
+    assert_eq!(table.latest_version().unwrap(), v1 + 1, "rebuild is ONE commit too");
+    let snap = table.snapshot().unwrap();
+    let live: Vec<&str> = snap
+        .files()
+        .filter(|f| f.path.starts_with("index/vecs/"))
+        .map(|f| f.path.as_str())
+        .collect();
+    assert_eq!(live.len(), 3, "rebuild replaces, never accumulates: {live:?}");
+    for a in &artifacts {
+        assert!(!live.contains(a), "old artifact {a} must be removed by the rebuild");
+    }
+    let deleted = table.vacuum().unwrap();
+    assert!(deleted >= 3, "vacuum must reclaim the superseded artifacts, got {deleted}");
+    assert!(IvfIndex::open(&table, "vecs").unwrap().is_pq());
+}
+
+#[test]
+fn pq_full_nprobe_and_full_rerank_equal_brute_force_exactly() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 11, 1200, 16, 10);
+    index::build(
+        &table,
+        "vecs",
+        &BuildParams { k: 24, seed: 11, pq: true, pq_m: 4, ..Default::default() },
+    )
+    .unwrap();
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    assert!(ivf.is_pq());
+
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    let mut qs = queries(&matrix, 99, 16);
+    // Off-manifold queries too — exactness must not depend on the query
+    // being data-like (or well-quantized).
+    qs.push(vec![0.0; 16]);
+    qs.push(vec![10.0; 16]);
+    for q in &qs {
+        let approx = ivf.search_with(q, 10, ivf.k, usize::MAX).unwrap();
+        let exact = index::exact_topk(&matrix, q, 10);
+        assert_eq!(approx.len(), exact.len());
+        for (a, e) in approx.iter().zip(&exact) {
+            assert_eq!(a.row, e.row, "row mismatch for query {q:?}");
+            assert_eq!(a.dist, e.dist, "distance mismatch at row {}", a.row);
+        }
+    }
+}
+
+#[test]
+fn pq_recall_at_10_clears_090_with_default_rerank() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 42, 4000, 32, 32);
+    let summary = index::build(
+        &table,
+        "vecs",
+        &BuildParams { k: 32, sample: 2048, seed: 42, pq: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(summary.pq_m, 8);
+
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    let qs = queries(&matrix, 7, 32);
+    let mut hit = 0usize;
+    for q in &qs {
+        // nprobe 0 = the build default, rerank 0 = the default depth
+        // (max(4k, 32) = 40 exact reads per query).
+        let approx = ivf.search_with(q, 10, 0, 0).unwrap();
+        let truth: Vec<u32> = index::exact_topk(&matrix, q, 10).iter().map(|n| n.row).collect();
+        hit += approx.iter().filter(|n| truth.contains(&n.row)).count();
+    }
+    let recall = hit as f64 / (qs.len() * 10) as f64;
+    assert!(recall >= 0.9, "PQ recall@10 {recall} below 0.9 at default nprobe + rerank");
+}
+
+#[test]
+fn pq_postings_are_at_least_8x_smaller_than_flat() {
+    let flat_t = DeltaTable::create(ObjectStoreHandle::mem(), "flat").unwrap();
+    let pq_t = DeltaTable::create(ObjectStoreHandle::mem(), "pq").unwrap();
+    store_corpus(&flat_t, "vecs", 5, 2000, 32, 8);
+    store_corpus(&pq_t, "vecs", 5, 2000, 32, 8);
+    index::build(&flat_t, "vecs", &BuildParams { k: 16, seed: 5, ..Default::default() }).unwrap();
+    index::build(
+        &pq_t,
+        "vecs",
+        &BuildParams { k: 16, seed: 5, pq: true, ..Default::default() },
+    )
+    .unwrap();
+
+    let flat_bytes = posting_bytes(&flat_t, "vecs");
+    let pq_bytes = posting_bytes(&pq_t, "vecs");
+    assert!(flat_bytes > 0 && pq_bytes > 0);
+    // dim 32: Flat entries are 4 + 128 bytes, PQ entries 4 + 8 — the
+    // acceptance bar is ≤ 1/8 at equal row count.
+    assert!(
+        pq_bytes * 8 <= flat_bytes,
+        "PQ postings {pq_bytes} B not ≤ 1/8 of Flat {flat_bytes} B"
+    );
+}
+
+#[test]
+fn adc_ranks_the_true_neighbor_within_the_default_rerank_margin() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 17, 2000, 32, 8);
+    index::build(
+        &table,
+        "vecs",
+        &BuildParams { k: 16, seed: 17, pq: true, pq_m: 8, ..Default::default() },
+    )
+    .unwrap();
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+
+    // Full probing isolates the quantization error: the only way the true
+    // top-1 can be missed is ADC ranking it below the re-rank depth. With
+    // the default depth for k=10 (40 candidates) it must always survive.
+    for q in &queries(&matrix, 23, 16) {
+        let got = ivf.search_with(q, 1, ivf.k, 40).unwrap();
+        let exact = index::exact_topk(&matrix, q, 1);
+        assert_eq!(got[0].row, exact[0].row, "ADC pushed the true top-1 out of the margin");
+        assert_eq!(got[0].dist, exact[0].dist, "re-rank distances are exact");
+    }
+}
+
+#[test]
+fn pq_append_fold_and_vacuum_keep_the_index_fresh_and_exact() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    // Append-friendly (small) file geometry, like tests/maintain.rs.
+    let data: TensorData = embedding_like(3, 300, 8, 8, 0.05).into();
+    let fmt = FtsfFormat { rows_per_group: 8, rows_per_file: 16, ..FtsfFormat::new(1) };
+    fmt.write(&table, "vecs", &data).unwrap();
+    index::build(
+        &table,
+        "vecs",
+        &BuildParams { k: 12, seed: 3, pq: true, pq_m: 2, ..Default::default() },
+    )
+    .unwrap();
+
+    // Append: data + grown shape + PQ-coded delta segment in ONE commit.
+    let v0 = table.latest_version().unwrap();
+    let batch: TensorData = embedding_like(99, 24, 8, 8, 0.05).into();
+    let out = maintain::append_rows(&table, "vecs", &batch, maintain::Upkeep::Incremental).unwrap();
+    assert_eq!(out.version, v0 + 1, "PQ append must land as ONE atomic commit");
+    assert!(out.index_maintained);
+    assert!(index::status(&table, "vecs").unwrap().is_fresh());
+
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    assert!(ivf.is_pq());
+    assert_eq!(ivf.delta_segments, 1);
+    assert_eq!(ivf.rows, 324, "index row count includes the coded delta segment");
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    // An appended row is its own nearest neighbor through codes + re-rank.
+    let got = ivf.search_with(matrix.row(310), 3, ivf.k, usize::MAX).unwrap();
+    assert_eq!((got[0].row, got[0].dist), (310, 0.0));
+
+    // Full probe + full re-rank over main + delta postings is still exact.
+    for q in &queries(&matrix, 7, 8) {
+        let approx = ivf.search_with(q, 10, ivf.k, usize::MAX).unwrap();
+        let exact = index::exact_topk(&matrix, q, 10);
+        for (a, e) in approx.iter().zip(&exact) {
+            assert_eq!((a.row, a.dist), (e.row, e.dist));
+        }
+    }
+
+    // OPTIMIZE folds the coded segment into the main postings; the pinned
+    // codebook survives the fold and the sweep.
+    let coord = delta_tensor::coordinator::Coordinator::new(table.clone(), 2, 8);
+    coord.optimize("vecs").unwrap();
+    assert!(index::status(&table, "vecs").unwrap().is_fresh(), "fold leaves the index Fresh");
+    table.vacuum().unwrap();
+    let folded = IvfIndex::open(&table, "vecs").unwrap();
+    assert!(folded.is_pq(), "fold must keep the PQ encoding");
+    assert_eq!(folded.pq_params(), ivf.pq_params(), "fold reuses the pinned codebook");
+    assert_eq!(folded.delta_segments, 0, "delta segments folded into the main artifact");
+    assert_eq!(folded.rows, 324);
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    for q in &queries(&matrix, 13, 8) {
+        let approx = folded.search_with(q, 10, folded.k, usize::MAX).unwrap();
+        let exact = index::exact_topk(&matrix, q, 10);
+        for (a, e) in approx.iter().zip(&exact) {
+            assert_eq!((a.row, a.dist), (e.row, e.dist));
+        }
+    }
+}
+
+#[test]
+fn flat_v1_artifacts_still_open_and_serve_unchanged() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_corpus(&table, "vecs", 13, 500, 8, 6);
+    index::build(&table, "vecs", &BuildParams { seed: 13, ..Default::default() }).unwrap();
+    let ivf = IvfIndex::open(&table, "vecs").unwrap();
+    assert!(!ivf.is_pq(), "a default build stays Flat (v1)");
+    assert_eq!(ivf.pq_params(), None);
+    assert_eq!(ivf.effective_rerank(10, 0), 0, "Flat never re-ranks");
+
+    let matrix = index::load_matrix(&table, "vecs").unwrap();
+    for q in &queries(&matrix, 31, 8) {
+        // The rerank argument is ignored by Flat indexes: both entry
+        // points return the identical exact answer at full nprobe.
+        let a = ivf.search(q, 10, ivf.k).unwrap();
+        let b = ivf.search_with(q, 10, ivf.k, usize::MAX).unwrap();
+        let exact = index::exact_topk(&matrix, q, 10);
+        assert_eq!(a.len(), exact.len());
+        for ((x, y), e) in a.iter().zip(&b).zip(&exact) {
+            assert_eq!((x.row, x.dist), (e.row, e.dist));
+            assert_eq!((y.row, y.dist), (e.row, e.dist));
+        }
+    }
+}
+
+#[test]
+fn inspect_reports_the_grown_shape_after_an_indexed_append() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    let data: TensorData = embedding_like(3, 300, 8, 8, 0.05).into();
+    let fmt = FtsfFormat { rows_per_group: 8, rows_per_file: 16, ..FtsfFormat::new(1) };
+    fmt.write(&table, "vecs", &data).unwrap();
+    index::build(
+        &table,
+        "vecs",
+        &BuildParams { k: 12, seed: 3, pq: true, ..Default::default() },
+    )
+    .unwrap();
+
+    let batch: TensorData = embedding_like(99, 24, 8, 8, 0.05).into();
+    maintain::append_rows(&table, "vecs", &batch, maintain::Upkeep::Incremental).unwrap();
+
+    // Regression: with pre-append geometry still present in older Add
+    // actions, inspect must surface the *grown* shape, not the stale one.
+    let stats = delta_tensor::query::table_stats(&table).unwrap();
+    let info = stats.iter().find(|t| t.id == "vecs").unwrap();
+    assert_eq!(info.shape, vec![324, 8], "inspect must report the grown shape");
+    assert_eq!(info.dtype, "f32");
+}
+
+#[test]
+fn kernels_match_the_scalar_reference_bitwise_across_dims() {
+    // Runs identically with and without `--features simd`; CI runs both,
+    // which is what proves the SSE path bit-equal to the scalar one.
+    let mut rng = Pcg64::new(0xD157_BEEF);
+    for dim in [1usize, 3, 17, 64, 100] {
+        for _ in 0..50 {
+            let a: Vec<f32> = (0..dim).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+            let want = dist2_scalar(&a, &b);
+            assert_eq!(dist2(&a, &b).to_bits(), want.to_bits(), "dist2 dim {dim}");
+
+            let bytes: Vec<u8> = b.iter().flat_map(|v| v.to_le_bytes()).collect();
+            assert_eq!(dist2_le(&a, &bytes).to_bits(), want.to_bits(), "dist2_le dim {dim}");
+            assert_eq!(
+                dist2_le_scalar(&a, &bytes).to_bits(),
+                want.to_bits(),
+                "dist2_le_scalar dim {dim}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adc_equals_reconstructed_distances_for_one_dim_subspaces() {
+    // With per-subspace dimension 1, the ADC gather must equal dist2 of
+    // the selected reconstructions bit-for-bit — the same lane structure
+    // and merge order as the main kernel.
+    let mut rng = Pcg64::new(0xADC0);
+    for m in [1usize, 3, 17, 64, 100] {
+        let ksub = 8usize;
+        let q: Vec<f32> = (0..m).map(|_| rng.next_gaussian() as f32).collect();
+        let cents: Vec<f32> = (0..m * ksub).map(|_| rng.next_gaussian() as f32).collect();
+        let codes: Vec<u8> = (0..m).map(|_| rng.below(ksub) as u8).collect();
+        let lut: Vec<f32> = (0..m * ksub)
+            .map(|i| {
+                let (j, c) = (i / ksub, i % ksub);
+                let d = q[j] - cents[j * ksub + c];
+                d * d
+            })
+            .collect();
+        let recon: Vec<f32> = (0..m).map(|j| cents[j * ksub + codes[j] as usize]).collect();
+        assert_eq!(
+            adc(&lut, ksub, &codes).to_bits(),
+            dist2_scalar(&q, &recon).to_bits(),
+            "m {m}"
+        );
+    }
+}
