@@ -8,10 +8,19 @@
 //! `DT_BENCH_OUT` (JSON report path, default `BENCH_serve.json`). CI runs
 //! the tiny scale and uploads the JSON so the perf trajectory accumulates
 //! across commits.
+//!
+//! The bench also measures the telemetry tier's cost: the same warmed
+//! cache-on workload with tracing off vs on (including the harness's
+//! 1-in-`trace_every` forced-trace sampling), reported as `overhead_frac`
+//! in `BENCH_telemetry.json` (`DT_BENCH_TELEMETRY_OUT`) and gated by CI at
+//! an absolute 5% ceiling. The traces the telemetry-on runs sample are
+//! exported as one Chrome trace_event document (`TRACE_serve.json`,
+//! `DT_TRACE_OUT`) — load it in chrome://tracing or Perfetto.
 
 use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
 use delta_tensor::coordinator::Coordinator;
 use delta_tensor::prelude::*;
+use delta_tensor::telemetry;
 use delta_tensor::util::human_bytes;
 use delta_tensor::workload::serve::{populate_serve_table, run_serve, ServeParams, ServeReport};
 
@@ -23,6 +32,18 @@ fn run_once(cache: bool, params: &ServeParams) -> ServeReport {
     let c = Coordinator::new(table, 4, 32);
     let ids = populate_serve_table(&c, &params).expect("populate");
     run_serve(&c, &ids, &params).expect("serve run")
+}
+
+/// One warmed cache-on serving run with the runtime tracing flag forced to
+/// `on`; returns the measured throughput. The flag also gates the
+/// harness's forced-trace sampling, so the `off` control run is completely
+/// trace-free — the delta between the two is exactly what tracing costs.
+fn run_telemetry(on: bool, params: &ServeParams) -> f64 {
+    let was = telemetry::enabled();
+    telemetry::set_enabled(on);
+    let r = run_once(true, params);
+    telemetry::set_enabled(was);
+    r.throughput_rps
 }
 
 fn main() {
@@ -64,4 +85,40 @@ fn main() {
     );
     std::fs::write(&out, json).expect("write bench report");
     println!("wrote {out}");
+
+    // Telemetry overhead: interleaved off/on repeats of the warmed
+    // cache-on workload, best-of-3 per mode to damp scheduler noise.
+    // `overhead_frac` is the QPS the tracing path costs; CI gates it at
+    // the absolute 5% ceiling in bench_baselines/telemetry.json.
+    telemetry::sink().clear();
+    let mut off_rps = 0f64;
+    let mut on_rps = 0f64;
+    for _ in 0..3 {
+        off_rps = off_rps.max(run_telemetry(false, &params));
+        on_rps = on_rps.max(run_telemetry(true, &params));
+    }
+    let overhead_frac = (1.0 - on_rps / off_rps.max(1e-9)).max(0.0);
+    println!(
+        "\ntelemetry overhead: off {off_rps:.0} req/s vs on {on_rps:.0} req/s \
+         ({:.2}% slower traced)",
+        overhead_frac * 100.0
+    );
+    let tel_out = std::env::var("DT_BENCH_TELEMETRY_OUT")
+        .unwrap_or_else(|_| "BENCH_telemetry.json".to_string());
+    let tel_json = format!(
+        "{{\"bench\":\"telemetry\",\"off_rps\":{off_rps:.4},\"on_rps\":{on_rps:.4},\
+         \"overhead_frac\":{overhead_frac:.6}}}"
+    );
+    std::fs::write(&tel_out, tel_json).expect("write telemetry report");
+    println!("wrote {tel_out}");
+
+    // Export the traces the telemetry-on runs sampled as one Chrome
+    // trace_event document — the CI artifact Perfetto loads directly,
+    // structurally validated by the `tracecheck` bin.
+    let traces = telemetry::sink().recent();
+    let trace_out =
+        std::env::var("DT_TRACE_OUT").unwrap_or_else(|_| "TRACE_serve.json".to_string());
+    let doc = telemetry::export::chrome_trace_json(&traces);
+    std::fs::write(&trace_out, doc.dump()).expect("write trace export");
+    println!("wrote {trace_out} ({} sampled traces)", traces.len());
 }

@@ -12,7 +12,8 @@
 //! {"bench": "search", "gates": [
 //!   {"metric": "throughput_qps", "value": 30.0, "direction": "higher"},
 //!   {"metric": "postings_bytes_fetched", "value": 1500000, "direction": "lower"},
-//!   {"metric": "recall_at_k", "floor": 0.8}
+//!   {"metric": "recall_at_k", "floor": 0.8},
+//!   {"metric": "overhead_frac", "ceiling": 0.05}
 //! ]}
 //! ```
 //!
@@ -20,10 +21,12 @@
 //! `value` gate is relative: `direction: "higher"` (the default) fails
 //! when `measured < (1 - threshold) * value`, `direction: "lower"` fails
 //! when `measured > (1 + threshold) * value` — for metrics like bytes
-//! fetched where *growth* is the regression. A `floor` gate is absolute:
-//! it fails when `measured < floor`, with no threshold slack — for
-//! correctness-adjacent metrics like recall that must never drift below a
-//! hard bar. The legacy single `metric`/`value` form is one higher-is-
+//! fetched where *growth* is the regression. `floor` and `ceiling` gates
+//! are absolute, with no threshold slack: a `floor` fails when
+//! `measured < floor` (correctness-adjacent metrics like recall that must
+//! never drift below a hard bar), a `ceiling` fails when
+//! `measured > ceiling` (hard budgets like the telemetry tier's ≤5% QPS
+//! overhead). The legacy single `metric`/`value` form is one higher-is-
 //! better gate. Refresh a baseline by copying the measured value from a
 //! trusted CI run's artifact into the committed file (see rust/README.md).
 //!
@@ -60,6 +63,8 @@ enum Direction {
     Lower,
     /// Regression = falling below the absolute `floor` (no slack).
     Floor,
+    /// Regression = rising above the absolute `ceiling` (no slack).
+    Ceiling,
 }
 
 impl Direction {
@@ -68,6 +73,7 @@ impl Direction {
             Direction::Higher => "higher",
             Direction::Lower => "lower",
             Direction::Floor => "floor",
+            Direction::Ceiling => "ceiling",
         }
     }
 }
@@ -137,8 +143,22 @@ fn gates_of_spec(
             pass: measured >= floor,
         });
     }
+    if let Some(ceiling) = spec.get("ceiling").and_then(Json::as_f64) {
+        out.push(Gate {
+            name: name.to_string(),
+            metric: metric.clone(),
+            direction: Direction::Ceiling,
+            measured,
+            baseline: ceiling,
+            bound: ceiling,
+            pass: measured <= ceiling,
+        });
+    }
     if out.is_empty() {
-        bail!("{baseline_path}: gate for {metric:?} needs a numeric \"value\" or \"floor\"");
+        bail!(
+            "{baseline_path}: gate for {metric:?} needs a numeric \"value\", \
+             \"floor\" or \"ceiling\""
+        );
     }
     Ok(out)
 }

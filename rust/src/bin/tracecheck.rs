@@ -1,0 +1,41 @@
+//! CI trace-artifact validator.
+//!
+//! Loads a Chrome `trace_event` document — the serve bench's
+//! `TRACE_serve.json` export, or anything produced by
+//! [`delta_tensor::telemetry::export::chrome_trace_json`] — and
+//! structurally validates it: spans are well-formed with children nested
+//! inside parents, instant events reference a live span and sit inside
+//! its interval, and every GET event of a read-rooted trace is attributed
+//! under a fetch/plan span (the cache invariant, checked per operation).
+//! Exits non-zero on any violation, so CI fails when the tracing tier
+//! mis-attributes I/O.
+//!
+//! ```text
+//! cargo run --release --bin tracecheck -- TRACE_serve.json
+//! ```
+
+use anyhow::{ensure, Context};
+use delta_tensor::jsonx;
+use delta_tensor::telemetry::export::validate_chrome_trace;
+use delta_tensor::Result;
+
+fn real_main() -> Result<()> {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "TRACE_serve.json".to_string());
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let doc = jsonx::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let sum = validate_chrome_trace(&doc).with_context(|| format!("validating {path}"))?;
+    ensure!(sum.traces > 0, "{path}: document holds no traces — sampling produced nothing");
+    println!(
+        "tracecheck: {path} ok — {} traces, {} spans, {} instant events, \
+         {} GETs nested under fetch/plan spans",
+        sum.traces, sum.spans, sum.instants, sum.gets_under_fetch
+    );
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("tracecheck: {e:#}");
+        std::process::exit(1);
+    }
+}

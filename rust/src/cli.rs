@@ -15,6 +15,8 @@
 //!   index      ANN index over a stored vector matrix     (index build / index status)
 //!   search     top-k nearest stored vectors              (--id, --query | --row)
 //!   bench      load harnesses                            (bench serve|ingest|search|maintain)
+//!   trace      run ONE op force-traced, print its span tree (trace read|slice|search|append)
+//!   stats      metrics registry + tier counters          (--format prometheus|json)
 //! ```
 //!
 //! `bench serve` drives the coordinator with a closed-loop Zipfian hot-set
@@ -38,7 +40,7 @@ use crate::tensor::Slice;
 use crate::util::human_bytes;
 use crate::workload;
 use crate::Result;
-use anyhow::{bail, Context};
+use anyhow::{bail, ensure, Context};
 use std::collections::BTreeMap;
 
 /// Parsed command line: command, optional subcommand, `--key value` flags.
@@ -131,10 +133,10 @@ pub fn store_from_args(args: &Args) -> Result<ObjectStoreHandle> {
 /// Execute a parsed command. Returns the text to print.
 pub fn run(args: &Args) -> Result<String> {
     if let Some(sub) = &args.subcommand {
-        // Only `bench` and `index` (and `help`, which ignores it) take a
-        // subcommand; anywhere else a positional token is a usage error,
-        // not noise.
-        if !matches!(args.command.as_str(), "bench" | "index" | "help") {
+        // Only `bench`, `index` and `trace` (and `help`, which ignores it)
+        // take a subcommand; anywhere else a positional token is a usage
+        // error, not noise.
+        if !matches!(args.command.as_str(), "bench" | "index" | "trace" | "help") {
             bail!("unexpected argument {sub:?} for command {:?}", args.command);
         }
     }
@@ -151,6 +153,8 @@ pub fn run(args: &Args) -> Result<String> {
         "index" => cmd_index(args),
         "search" => cmd_search(args),
         "bench" => cmd_bench(args),
+        "trace" => cmd_trace(args),
+        "stats" => cmd_stats(args),
         "metrics-demo" => cmd_metrics_demo(args),
         other => bail!("unknown command {other:?}; try `delta-tensor help`"),
     }
@@ -203,12 +207,27 @@ COMMANDS
             [--optimize-every N] [--rows N] [--dim N] [--clusters N]
             [--pool N] [--k N] [--nprobe N] [--zipf S] [--rebuild-control]
             [--no-cache] [--pq] [--pq-m M] [--seed N] [--json PATH]
+  trace read|slice|search|append  run ONE operation force-traced (ignores
+            DT_TRACE) and print its span tree with per-span I/O attribution
+            (GET/PUT batches, bytes, cache hits, commit retries); flags
+            follow the underlying verb — --id, [--start/--end], [--row N]
+            [--k N] [--nprobe N] [--rerank N], [--rows N] — plus
+            [--json PATH] to also write a Chrome trace_event document
+            (load in chrome://tracing or https://ui.perfetto.dev)
+  stats     [--format prometheus|json] [--read ID]   metrics registry +
+            tier counters; --read first serves one whole-tensor read so
+            the registry has live values
 COMMON FLAGS
   --table NAME                   table root (default: tensors)
   --store mem|fs                 backend (default fs)   --root PATH
   --net   free|fast|paper|vpc    simulated network cost model (default free)
   --seed N                       reproducibility seed for every bench subcommand
                                  (Zipf draws, generated data, queries, k-means)
+TRACING (runtime-gated, compiled always-on)
+  DT_TRACE=0                     disable tracing (`trace` still forces it)
+  DT_SLOW_MS=N                   slow-op log threshold, ms (default 100)
+  DT_TRACE_KEEP=N                trace ring-buffer capacity (default 64)
+  bench serve --trace-every N    sample every Nth request per client (0 = off)
 
 Benches for the paper's figures: `cargo bench` (see EXPERIMENTS.md).
 "#;
@@ -604,6 +623,7 @@ fn cmd_bench_serve(args: &Args) -> Result<String> {
         warmup: !args.has("warmup-off"),
         seed: args.opt_usize("seed", 7)? as u64,
         layout: args.opt("layout", "COO").to_string(),
+        trace_every: args.opt_usize("trace-every", 8)?,
     };
     let c = Coordinator::new(table, args.opt_usize("workers", 4)?, 32);
     let ids = workload::serve::populate_serve_table(&c, &params)?;
@@ -613,6 +633,107 @@ fn cmd_bench_serve(args: &Args) -> Result<String> {
             .with_context(|| format!("writing serve report to {path}"))?;
     }
     Ok(format!("{}\n{}", report.summary(), c.report()))
+}
+
+/// `trace <op>`: run ONE operation force-traced (ignoring the `DT_TRACE`
+/// runtime flag) and print its span tree with per-span I/O attribution —
+/// the single-operation lens the tier counters cannot provide. With
+/// `--json PATH` the trace is also written as a Chrome `trace_event`
+/// document loadable in `chrome://tracing` or Perfetto.
+fn cmd_trace(args: &Args) -> Result<String> {
+    use crate::telemetry::export;
+    let op = args.subcommand.as_deref().unwrap_or("read");
+    let table = open_table(args)?;
+    let id = args.req("id")?.to_string();
+    let (headline, trace) = match op {
+        "read" => {
+            let c = Coordinator::new(table, 2, 8);
+            let (data, trace) = c.read_traced(&id)?;
+            (format!("read {id}: shape {:?}", data.shape()), trace)
+        }
+        "slice" => {
+            let start = args.opt_usize("start", 0)?;
+            let end = args.opt_usize("end", start + 1)?;
+            let c = Coordinator::new(table, 2, 8);
+            let (data, trace) = c.read_slice_traced(&id, &Slice::dim0(start, end))?;
+            (format!("slice {id}[{start}..{end}]: shape {:?}", data.shape()), trace)
+        }
+        "search" => {
+            // Load the query row BEFORE the trace starts so the span tree
+            // covers exactly the search (probe/scan/rerank), not the
+            // query's own fetch.
+            let row = args.opt_usize("row", 0)?;
+            let k = args.opt_usize("k", 10)?;
+            let query = crate::index::load_row(&table, &id, row)?;
+            let t = crate::telemetry::Trace::start_forced("search");
+            let ivf = crate::index::IvfIndex::open(&table.with_span(t.root()), &id)?;
+            let hits = ivf.search_with(
+                &query,
+                k,
+                args.opt_usize("nprobe", 0)?,
+                args.opt_usize("rerank", 0)?,
+            )?;
+            let trace = t.finish().expect("forced trace always finishes");
+            let best = hits.first().map(|n| n.row).unwrap_or(0);
+            (format!("search {id} row {row}: {} hits, best row {best}", hits.len()), trace)
+        }
+        "append" => {
+            let rows = args.opt_usize("rows", 16)?;
+            let seed = args.opt_usize("seed", 42)? as u64;
+            let stats = crate::query::table_stats(&table)?;
+            let info = stats
+                .iter()
+                .find(|t| t.id == id)
+                .with_context(|| format!("tensor {id:?} not found; see `inspect`"))?;
+            ensure!(
+                info.shape.len() == 2 && info.dtype == "f32",
+                "trace append generates f32 vector rows; tensor {id:?} is {} {:?}",
+                info.dtype,
+                info.shape
+            );
+            let data = workload::embedding_like(seed, rows, info.shape[1], 16, 0.05);
+            let c = Coordinator::new(table, 1, 1);
+            let (v, trace) = c.append_traced(&id, &data.into())?;
+            (format!("append {rows} rows to {id} @ v{v}"), trace)
+        }
+        other => bail!("unknown trace op {other:?} (try `trace read|slice|search|append`)"),
+    };
+    let mut out = format!("{headline}\n{}", export::render_tree(&trace));
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, export::chrome_trace_json(&[trace]).dump())
+            .with_context(|| format!("writing chrome trace to {path}"))?;
+        out.push_str(&format!("wrote chrome trace_event JSON to {path} (load in Perfetto)\n"));
+    }
+    Ok(out)
+}
+
+/// `stats`: the coordinator's metrics registry plus every tier's counters,
+/// rendered as Prometheus exposition text (default) or one JSON document.
+/// `--read ID` first serves one whole-tensor read through the coordinator
+/// so the registry has live counters/histograms to show.
+fn cmd_stats(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let c = Coordinator::new(table, 2, 8);
+    if let Some(id) = args.flags.get("read") {
+        let _ = c.read(id)?;
+    }
+    let tiers = format!(
+        "{}{}{}{}{}",
+        crate::query::engine::report(),
+        crate::serving::report(),
+        crate::ingest::report(),
+        crate::index::report(),
+        crate::telemetry::report()
+    );
+    match args.opt("format", "prometheus") {
+        "prometheus" => Ok(crate::telemetry::export::prometheus_text(c.metrics(), &tiers)),
+        "json" => {
+            let mut s = crate::telemetry::export::stats_json(c.metrics(), &tiers).dump();
+            s.push('\n');
+            Ok(s)
+        }
+        other => bail!("unknown --format {other:?} (prometheus|json)"),
+    }
 }
 
 fn cmd_metrics_demo(args: &Args) -> Result<String> {
@@ -855,6 +976,98 @@ mod tests {
         .unwrap();
         assert!(out.contains("tensors/s"), "{out}");
         assert!(out.contains("ingest.put_batches"), "{out}");
+    }
+
+    #[test]
+    fn trace_and_stats_fs_flow() {
+        let root = std::env::temp_dir().join(format!("dt-cli-trace-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let rootflag = root.to_string_lossy().to_string();
+        let common = ["--store", "fs", "--root", &rootflag, "--table", "t"];
+
+        let mut v = vec!["ingest", "--workload", "generic", "--layout", "COO", "--id", "g1"];
+        v.extend_from_slice(&common);
+        run(&args(&v)).unwrap();
+
+        // `trace slice` prints the span tree and writes a structurally
+        // valid Chrome trace_event document.
+        let json_path = root.join("trace.json");
+        let json_flag = json_path.to_string_lossy().to_string();
+        let mut v = vec![
+            "trace", "slice", "--id", "g1", "--start", "1", "--end", "3", "--json", &json_flag,
+        ];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("TRACE read_slice"), "{out}");
+        assert!(out.contains("fetch"), "{out}");
+        assert!(out.contains("decode"), "{out}");
+        let doc = crate::jsonx::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        crate::telemetry::export::validate_chrome_trace(&doc).unwrap();
+
+        let mut v = vec!["trace", "read", "--id", "g1"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("TRACE read"), "{out}");
+
+        let mut v = vec!["trace", "frobnicate", "--id", "g1"];
+        v.extend_from_slice(&common);
+        assert!(run(&args(&v)).is_err());
+
+        // `stats` renders the registry + tier counters; --read gives the
+        // per-coordinator registry live values.
+        let mut v = vec!["stats", "--format", "prometheus", "--read", "g1"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("# TYPE delta_tensor_read_tensor counter"), "{out}");
+        assert!(out.contains("delta_tensor_read_tensor 1"), "{out}");
+        assert!(out.contains("delta_tensor_engine_part_fetches"), "{out}");
+        assert!(out.contains("delta_tensor_telemetry_enabled"), "{out}");
+
+        let mut v = vec!["stats", "--format", "json"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        let j = crate::jsonx::parse(&out).unwrap();
+        assert!(j.get("tiers").is_some(), "{out}");
+        assert!(j.get("counters").is_some(), "{out}");
+
+        let mut v = vec!["stats", "--format", "xml"];
+        v.extend_from_slice(&common);
+        assert!(run(&args(&v)).is_err());
+
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn trace_search_fs_flow() {
+        let root = std::env::temp_dir().join(format!("dt-cli-trsr-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let rootflag = root.to_string_lossy().to_string();
+        let common = ["--store", "fs", "--root", &rootflag, "--table", "sb"];
+
+        // `bench search` populates a 2-D f32 corpus ("vectors") + index.
+        let mut v = vec![
+            "bench", "search", "--clients", "1", "--queries", "2", "--rows", "150", "--dim",
+            "8", "--clusters", "4", "--pool", "2", "--seed", "5",
+        ];
+        v.extend_from_slice(&common);
+        run(&args(&v)).unwrap();
+
+        let mut v = vec!["trace", "search", "--id", "vectors", "--row", "0", "--k", "3"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("TRACE search"), "{out}");
+        assert!(out.contains("probe"), "{out}");
+        assert!(out.contains("scan"), "{out}");
+        assert!(out.contains("best row 0"), "{out}");
+
+        let mut v = vec!["trace", "append", "--id", "vectors", "--rows", "8", "--seed", "9"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("TRACE append"), "{out}");
+        assert!(out.contains("commit"), "{out}");
+        assert!(out.contains("append 8 rows"), "{out}");
+
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

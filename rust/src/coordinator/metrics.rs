@@ -10,6 +10,12 @@ const BUCKETS: [f64; 12] = [
     1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0,
 ];
 
+/// The histogram bucket upper bounds, in seconds (the last bucket is
+/// `+Inf`). Exposed for exposition-format rendering.
+pub fn bucket_bounds() -> &'static [f64] {
+    &BUCKETS
+}
+
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
 pub struct Counter(AtomicU64);
@@ -30,7 +36,9 @@ impl Counter {
 #[derive(Debug, Default)]
 pub struct Histogram {
     counts: [AtomicU64; 13],
-    sum_micros: AtomicU64,
+    /// Nanosecond accumulator: microseconds truncated sub-µs cache-hit
+    /// latencies to 0, dragging `mean()` toward zero on fast paths.
+    sum_nanos: AtomicU64,
     n: AtomicU64,
 }
 
@@ -39,7 +47,7 @@ impl Histogram {
     pub fn observe(&self, secs: f64) {
         let idx = BUCKETS.iter().position(|&b| secs <= b).unwrap_or(BUCKETS.len());
         self.counts[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_micros.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.sum_nanos.fetch_add((secs * 1e9).round() as u64, Ordering::Relaxed);
         self.n.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -48,13 +56,18 @@ impl Histogram {
         self.n.load(Ordering::Relaxed)
     }
 
+    /// Sum of observations in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
     /// Mean latency in seconds (0 when empty).
     pub fn mean(&self) -> f64 {
         let n = self.count();
         if n == 0 {
             return 0.0;
         }
-        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        self.sum_secs() / n as f64
     }
 
     /// Approximate quantile from bucket boundaries.
@@ -73,6 +86,12 @@ impl Histogram {
         }
         f64::INFINITY
     }
+
+    /// Per-bucket observation counts (one extra overflow bucket past
+    /// [`bucket_bounds`]).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
 }
 
 /// A named registry of counters and histograms.
@@ -85,6 +104,16 @@ pub struct Metrics {
 struct MetricsInner {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+/// A point-in-time copy of a registry's values, for per-phase deltas:
+/// take one after warmup, report [`Metrics::delta_since`] for the
+/// measured phase only.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    counters: BTreeMap<String, u64>,
+    /// Histogram name → (count, sum_secs).
+    histograms: BTreeMap<String, (u64, f64)>,
 }
 
 impl Metrics {
@@ -113,6 +142,64 @@ impl Metrics {
             .entry(name.to_string())
             .or_default()
             .clone()
+    }
+
+    /// All counters, sorted by name.
+    pub fn counters(&self) -> Vec<(String, Arc<Counter>)> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// All histograms, sorted by name.
+    pub fn histograms(&self) -> Vec<(String, Arc<Histogram>)> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Capture current values for a later [`Metrics::delta_since`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self.counters().into_iter().map(|(k, c)| (k, c.get())).collect(),
+            histograms: self
+                .histograms()
+                .into_iter()
+                .map(|(k, h)| (k, (h.count(), h.sum_secs())))
+                .collect(),
+        }
+    }
+
+    /// Plain-text report of growth since `snap` — counters as deltas,
+    /// histograms as `count`/`mean` over the interval (quantiles are
+    /// cumulative-only and intentionally omitted). Output is sorted and
+    /// deterministic; zero-delta entries are skipped.
+    pub fn delta_since(&self, snap: &MetricsSnapshot) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters() {
+            let before = snap.counters.get(&name).copied().unwrap_or(0);
+            let d = c.get().saturating_sub(before);
+            if d > 0 {
+                out.push_str(&format!("{name} +{d}\n"));
+            }
+        }
+        for (name, h) in self.histograms() {
+            let (n0, s0) = snap.histograms.get(&name).copied().unwrap_or((0, 0.0));
+            let dn = h.count().saturating_sub(n0);
+            if dn > 0 {
+                let dsum = (h.sum_secs() - s0).max(0.0);
+                out.push_str(&format!("{name} count=+{dn} mean={:.6}s\n", dsum / dn as f64));
+            }
+        }
+        out
     }
 
     /// Render a plain-text report (sorted, stable).
@@ -158,6 +245,102 @@ mod tests {
         assert!(h.mean() > 0.002 && h.mean() < 0.01);
         assert!(h.quantile(0.5) <= 0.003);
         assert!(h.quantile(0.999) >= 0.5);
+    }
+
+    #[test]
+    fn sub_microsecond_observations_are_not_truncated() {
+        // The old accumulator stored whole microseconds, so a burst of
+        // ~500 ns cache hits averaged to exactly 0.
+        let h = Histogram::default();
+        for _ in 0..1000 {
+            h.observe(5e-7);
+        }
+        assert_eq!(h.count(), 1000);
+        let mean = h.mean();
+        assert!((mean - 5e-7).abs() < 5e-9, "mean should be ~500ns, got {mean}");
+        assert!((h.sum_secs() - 5e-4).abs() < 5e-6);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bucketed() {
+        let h = Histogram::default();
+        // Spread observations across several buckets.
+        for (secs, n) in [(5e-6, 50), (5e-4, 30), (5e-2, 15), (2.0, 5)] {
+            for _ in 0..n {
+                h.observe(secs);
+            }
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!(p50 >= 5e-6 && p50 <= 1e-3, "p50 lands in a low bucket: {p50}");
+        assert!(p99 >= 5e-2, "p99 reflects the tail: {p99}");
+        // Out-of-range observations land in the overflow bucket.
+        h.observe(100.0);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+        assert_eq!(*h.bucket_counts().last().unwrap(), 1);
+        assert_eq!(h.bucket_counts().len(), bucket_bounds().len() + 1);
+    }
+
+    #[test]
+    fn empty_histogram_edge_cases() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.sum_secs(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert!(h.bucket_counts().iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn concurrent_hammering_matches_serial_totals() {
+        let m = Metrics::new();
+        let threads = 8usize;
+        let per_thread = 5_000u64;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let m = m.clone();
+                scope.spawn(move || {
+                    for i in 0..per_thread {
+                        m.counter("ops").add(1);
+                        m.counter(if t % 2 == 0 { "even" } else { "odd" }).add(2);
+                        m.histogram("lat").observe(1e-6 * (1 + i % 3) as f64);
+                    }
+                });
+            }
+        });
+        let total = (threads as u64) * per_thread;
+        assert_eq!(m.counter("ops").get(), total);
+        assert_eq!(m.counter("even").get(), total);
+        assert_eq!(m.counter("odd").get(), total);
+        let h = m.histogram("lat");
+        assert_eq!(h.count(), total);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), total);
+        // sum = n * (1 + 2 + 3)/3 µs exactly (nanosecond accumulator).
+        let expect = total as f64 * 2e-6;
+        assert!((h.sum_secs() - expect).abs() < 1e-9, "{}", h.sum_secs());
+    }
+
+    #[test]
+    fn snapshot_delta_reports_only_phase_growth() {
+        let m = Metrics::new();
+        m.counter("reads").add(10);
+        m.counter("stale").add(3);
+        m.histogram("lat").observe(0.5);
+        let snap = m.snapshot();
+        m.counter("reads").add(5);
+        m.counter("fresh").add(2);
+        m.histogram("lat").observe(0.001);
+        m.histogram("lat").observe(0.003);
+        let d = m.delta_since(&snap);
+        assert!(d.contains("reads +5"), "{d}");
+        assert!(d.contains("fresh +2"), "{d}");
+        assert!(!d.contains("stale"), "zero-delta counters skipped: {d}");
+        // Histogram delta: 2 new observations, mean 2ms — the warmup 0.5s
+        // observation must not leak into the phase mean.
+        assert!(d.contains("lat count=+2 mean=0.002000s"), "{d}");
+        // Deterministic: two identical calls render identically.
+        assert_eq!(d, m.delta_since(&snap));
     }
 
     #[test]

@@ -20,13 +20,14 @@
 mod metrics;
 mod pool;
 
-pub use metrics::{Counter, Histogram, Metrics};
+pub use metrics::{bucket_bounds, Counter, Histogram, Metrics, MetricsSnapshot};
 pub use pool::WorkerPool;
 
 use crate::delta::{Action, DeltaTable};
 use crate::formats::{
     BinaryFormat, BsgsFormat, CooFormat, CsfFormat, CsrFormat, TensorData, TensorStore,
 };
+use crate::telemetry::{FinishedTrace, Trace};
 use crate::tensor::Slice;
 use crate::util::Stopwatch;
 use crate::Result;
@@ -117,13 +118,40 @@ impl Coordinator {
     /// probes, postings scanned).
     pub fn report(&self) -> String {
         format!(
-            "{}{}{}{}{}",
+            "{}{}{}{}{}{}",
             self.metrics.report(),
             crate::query::engine::report(),
             crate::serving::report(),
             crate::ingest::report(),
-            crate::index::report()
+            crate::index::report(),
+            crate::telemetry::report()
         )
+    }
+
+    /// Run `f` under a per-operation [`Trace`]: the table handed to the
+    /// closure carries the trace's root span, so every tier below — read
+    /// engine, serving cache, write engine, index — attributes its spans
+    /// and I/O events to this operation. When tracing is off (and the
+    /// trace was not forced) the closure gets the plain table and the
+    /// overhead is one branch.
+    fn traced<T>(
+        &self,
+        name: &str,
+        forced: bool,
+        f: impl FnOnce(&DeltaTable) -> Result<T>,
+    ) -> Result<(T, Option<Arc<FinishedTrace>>)> {
+        let trace = if forced {
+            Trace::start_forced(name)
+        } else {
+            Trace::start(name)
+        };
+        if !trace.is_enabled() {
+            return Ok((f(&self.table)?, None));
+        }
+        let table = self.table.with_span(trace.root());
+        let out = f(&table);
+        let finished = trace.finish();
+        Ok((out?, finished))
     }
 
     /// Submit an ingestion job (blocks when the queue is full).
@@ -174,17 +202,19 @@ impl Coordinator {
     pub fn ingest_batch(&self, jobs: Vec<IngestJob>) -> Result<u64> {
         let sw = Stopwatch::start();
         let n = jobs.len() as u64;
-        let mut writer = crate::ingest::TensorWriter::new(&self.table);
-        for job in jobs {
-            let fmt: Box<dyn TensorStore + Send + Sync> =
-                if job.layout.eq_ignore_ascii_case("auto") {
-                    crate::formats::auto_format(&job.data)
-                } else {
-                    format_by_name(&job.layout)?
-                };
-            writer.stage(fmt.plan_write(&job.id, &job.data)?);
-        }
-        let version = writer.commit()?;
+        let (version, _) = self.traced("ingest_batch", false, move |table| {
+            let mut writer = crate::ingest::TensorWriter::new(table);
+            for job in jobs {
+                let fmt: Box<dyn TensorStore + Send + Sync> =
+                    if job.layout.eq_ignore_ascii_case("auto") {
+                        crate::formats::auto_format(&job.data)
+                    } else {
+                        format_by_name(&job.layout)?
+                    };
+                writer.stage(fmt.plan_write(&job.id, &job.data)?);
+            }
+            writer.commit()
+        })?;
         // `batch_requests`, not `batch_commits`: these count this
         // coordinator's API calls; the write engine's process-global
         // `ingest.batch_commits`/`ingest.tensors_committed` count every
@@ -197,22 +227,77 @@ impl Coordinator {
 
     /// Serve a whole-tensor read (layout auto-discovered).
     pub fn read(&self, id: &str) -> Result<TensorData> {
+        Ok(self.read_inner(id, false)?.0)
+    }
+
+    /// [`Coordinator::read`], force-traced: returns the operation's
+    /// finished span tree alongside the tensor (harness sampling, CLI
+    /// `trace read`).
+    pub fn read_traced(&self, id: &str) -> Result<(TensorData, Arc<FinishedTrace>)> {
+        let (out, trace) = self.read_inner(id, true)?;
+        Ok((out, trace.expect("forced trace always finishes")))
+    }
+
+    fn read_inner(
+        &self,
+        id: &str,
+        forced: bool,
+    ) -> Result<(TensorData, Option<Arc<FinishedTrace>>)> {
         let sw = Stopwatch::start();
-        let layout = discover_layout(&self.table, id)?;
-        let out = format_by_name(&layout)?.read(&self.table, id);
+        let res = self.traced("read", forced, |table| {
+            // Layout discovery is the "plan" phase: on a cold snapshot
+            // cache it replays the Delta log, and those GETs should not
+            // masquerade as data fetches.
+            let plan = table.store().io_span().child("plan");
+            let layout = if plan.is_enabled() {
+                discover_layout(&table.with_span(&plan), id)?
+            } else {
+                discover_layout(table, id)?
+            };
+            plan.end();
+            format_by_name(&layout)?.read(table, id)
+        });
         self.metrics.histogram("read.tensor_secs").observe(sw.secs());
         self.metrics.counter("read.tensor").add(1);
-        out
+        res
     }
 
     /// Serve a slice read (layout auto-discovered).
     pub fn read_slice(&self, id: &str, slice: &Slice) -> Result<TensorData> {
+        Ok(self.read_slice_inner(id, slice, false)?.0)
+    }
+
+    /// [`Coordinator::read_slice`], force-traced (see
+    /// [`Coordinator::read_traced`]).
+    pub fn read_slice_traced(
+        &self,
+        id: &str,
+        slice: &Slice,
+    ) -> Result<(TensorData, Arc<FinishedTrace>)> {
+        let (out, trace) = self.read_slice_inner(id, slice, true)?;
+        Ok((out, trace.expect("forced trace always finishes")))
+    }
+
+    fn read_slice_inner(
+        &self,
+        id: &str,
+        slice: &Slice,
+        forced: bool,
+    ) -> Result<(TensorData, Option<Arc<FinishedTrace>>)> {
         let sw = Stopwatch::start();
-        let layout = discover_layout(&self.table, id)?;
-        let out = format_by_name(&layout)?.read_slice(&self.table, id, slice);
+        let res = self.traced("read_slice", forced, |table| {
+            let plan = table.store().io_span().child("plan");
+            let layout = if plan.is_enabled() {
+                discover_layout(&table.with_span(&plan), id)?
+            } else {
+                discover_layout(table, id)?
+            };
+            plan.end();
+            format_by_name(&layout)?.read_slice(table, id, slice)
+        });
         self.metrics.histogram("read.slice_secs").observe(sw.secs());
         self.metrics.counter("read.slice").add(1);
-        out
+        res
     }
 
     /// Append `data` along a stored FTSF tensor's leading dimension. The
@@ -222,20 +307,38 @@ impl Coordinator {
     /// [`crate::index::maintain::append_rows`]): the index stays Fresh and
     /// exact with zero rebuild work. Returns the committed version.
     pub fn append(&self, id: &str, data: &TensorData) -> Result<u64> {
+        Ok(self.append_inner(id, data, false)?.0)
+    }
+
+    /// [`Coordinator::append`], force-traced (see
+    /// [`Coordinator::read_traced`]).
+    pub fn append_traced(&self, id: &str, data: &TensorData) -> Result<(u64, Arc<FinishedTrace>)> {
+        let (out, trace) = self.append_inner(id, data, true)?;
+        Ok((out, trace.expect("forced trace always finishes")))
+    }
+
+    fn append_inner(
+        &self,
+        id: &str,
+        data: &TensorData,
+        forced: bool,
+    ) -> Result<(u64, Option<Arc<FinishedTrace>>)> {
         let sw = Stopwatch::start();
-        let out = crate::index::maintain::append_rows(
-            &self.table,
-            id,
-            data,
-            crate::index::maintain::Upkeep::Incremental,
-        )?;
+        let (out, trace) = self.traced("append", forced, |table| {
+            crate::index::maintain::append_rows(
+                table,
+                id,
+                data,
+                crate::index::maintain::Upkeep::Incremental,
+            )
+        })?;
         self.metrics.counter("append.requests").add(1);
         self.metrics.counter("append.rows").add(out.rows_appended as u64);
         if out.index_maintained {
             self.metrics.counter("append.index_maintained").add(1);
         }
         self.metrics.histogram("append.commit_secs").observe(sw.secs());
-        Ok(out.version)
+        Ok((out.version, trace))
     }
 
     /// OPTIMIZE: rewrite a tensor's files with fresh, defaults-sized file
@@ -257,37 +360,40 @@ impl Coordinator {
     /// so it gets a full rebuild instead — folding there could silently
     /// pin wrong vectors as Fresh.
     pub fn optimize(&self, id: &str) -> Result<()> {
-        let layout = discover_layout(&self.table, id)?;
-        let fmt: Box<dyn TensorStore + Send + Sync> = if layout == "FTSF" {
-            Box::new(crate::formats::FtsfFormat::discover(&self.table, id)?)
-        } else {
-            format_by_name(&layout)?
-        };
-        let pre_status = crate::index::status(&self.table, id)?;
-        let data = fmt.read(&self.table, id)?;
-        let snap = self.table.snapshot()?;
-        let ts = crate::delta::now_ms();
-        let mut actions: Vec<Action> = snap
-            .files_for_tensor(id)
-            .into_iter()
-            .map(|f| Action::Remove { path: f.path.clone(), timestamp: ts })
-            .collect();
-        actions.push(Action::CommitInfo { operation: "OPTIMIZE".into(), timestamp: ts });
-        self.table.commit(actions)?;
-        fmt.write(&self.table, id, &data)?;
-        match pre_status {
-            crate::index::IndexStatus::Missing => {}
-            crate::index::IndexStatus::Fresh { .. } => {
-                crate::index::maintain::fold(&self.table, id)?;
-                self.metrics.counter("optimize.index_folds").add(1);
+        let (out, _) = self.traced("optimize", false, |table| {
+            let layout = discover_layout(table, id)?;
+            let fmt: Box<dyn TensorStore + Send + Sync> = if layout == "FTSF" {
+                Box::new(crate::formats::FtsfFormat::discover(table, id)?)
+            } else {
+                format_by_name(&layout)?
+            };
+            let pre_status = crate::index::status(table, id)?;
+            let data = fmt.read(table, id)?;
+            let snap = table.snapshot()?;
+            let ts = crate::delta::now_ms();
+            let mut actions: Vec<Action> = snap
+                .files_for_tensor(id)
+                .into_iter()
+                .map(|f| Action::Remove { path: f.path.clone(), timestamp: ts })
+                .collect();
+            actions.push(Action::CommitInfo { operation: "OPTIMIZE".into(), timestamp: ts });
+            table.commit(actions)?;
+            fmt.write(table, id, &data)?;
+            match pre_status {
+                crate::index::IndexStatus::Missing => {}
+                crate::index::IndexStatus::Fresh { .. } => {
+                    crate::index::maintain::fold(table, id)?;
+                    self.metrics.counter("optimize.index_folds").add(1);
+                }
+                crate::index::IndexStatus::Stale { .. } => {
+                    crate::index::build(table, id, &crate::index::BuildParams::default())?;
+                    self.metrics.counter("optimize.index_rebuilds").add(1);
+                }
             }
-            crate::index::IndexStatus::Stale { .. } => {
-                crate::index::build(&self.table, id, &crate::index::BuildParams::default())?;
-                self.metrics.counter("optimize.index_rebuilds").add(1);
-            }
-        }
+            Ok(())
+        })?;
         self.metrics.counter("optimize.runs").add(1);
-        Ok(())
+        Ok(out)
     }
 
     /// All tensor ids present in the table.

@@ -158,6 +158,14 @@ impl DeltaTable {
         &self.store
     }
 
+    /// A handle to the same table whose store I/O (and commit-retry
+    /// events) is attributed to `span` — how a traced operation threads
+    /// its context through the engines without thread-locals. Cache
+    /// instance id and stats are shared with the original.
+    pub fn with_span(&self, span: &crate::telemetry::Span) -> Self {
+        Self { store: self.store.with_span(span), root: self.root.clone() }
+    }
+
     /// Key for a data object under this table.
     pub fn data_key(&self, rel: &str) -> String {
         format!("{}/{}", self.root, rel)
@@ -235,6 +243,7 @@ impl DeltaTable {
             // every commit that won meanwhile, and re-validate removes
             // against the refreshed snapshot.
             COMMIT_RETRIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.store.io_span().retry();
             if !removes.is_empty() {
                 let snap = self.snapshot()?;
                 for r in &removes {

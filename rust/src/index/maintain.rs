@@ -118,9 +118,19 @@ pub fn append_rows(
     if upkeep == Upkeep::Incremental && ap.new_shape.len() == 2 {
         if let Some((cent_add, meta)) = super::find_centroid_add(&snap, id) {
             if super::staleness(&snap, id, &meta).is_fresh() {
+                // Upkeep planning (artifact header + codebook fetches, row
+                // assignment, segment encode) attributes to its own span.
+                let upkeep_span = table.store().io_span().child("upkeep_plan");
+                let scoped;
+                let plan_store = if upkeep_span.is_enabled() {
+                    scoped = table.store().with_span(&upkeep_span);
+                    &scoped
+                } else {
+                    table.store()
+                };
                 let key = table.data_key(&cent_add.path);
                 let blocks = crate::serving::fetch_spans(
-                    table.store(),
+                    plan_store,
                     &key,
                     cent_add.size,
                     cent_add.timestamp,
@@ -147,7 +157,7 @@ pub fn append_rows(
                     })?;
                     let cb_key = table.data_key(&cb_add.path);
                     let cb_blocks = crate::serving::fetch_spans(
-                        table.store(),
+                        plan_store,
                         &cb_key,
                         cb_add.size,
                         cb_add.timestamp,
@@ -191,6 +201,7 @@ pub fn append_rows(
                     bytes,
                     pq: meta.pq.clone(),
                 });
+                upkeep_span.end();
             }
         }
     }
@@ -298,6 +309,16 @@ pub struct FoldSummary {
 /// overwrite passes it, and folding over one would pin stale vectors as
 /// Fresh. When in doubt, [`super::build`].
 pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
+    // Everything a fold does — artifact reads, the merged upload, the
+    // commit (and its retries) — attributes to one "fold" span.
+    let fold_span = table.store().io_span().child("fold");
+    let scoped;
+    let table = if fold_span.is_enabled() {
+        scoped = table.with_span(&fold_span);
+        &scoped
+    } else {
+        table
+    };
     let snap = crate::query::engine::snapshot(table)?;
     let (cent_add, meta) = super::find_centroid_add(&snap, id)
         .with_context(|| format!("no index to fold for tensor {id:?}"))?;
@@ -450,6 +471,7 @@ pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
     }));
     actions.push(Action::CommitInfo { operation: "FOLD INDEX".into(), timestamp: ts });
     let version = table.commit(actions)?;
+    fold_span.end();
 
     STATS.folds.fetch_add(1, Ordering::Relaxed);
     Ok(FoldSummary {

@@ -906,13 +906,17 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
     };
     let nprobe = if p.nprobe > 0 { p.nprobe.min(k) } else { (k / 8).clamp(1, k) };
 
-    // Train on a seeded sample, then assign every row.
+    // Train on a seeded sample, then assign every row. The span covers
+    // both (pure CPU — any trace events on it would be a bug).
+    let op_span = table.store().io_span().clone();
+    let train_span = op_span.child("train");
     let trained = kmeans::train(&matrix.data, matrix.dim, k, p.iters, p.sample, p.seed);
     let mut lists: Vec<Vec<u32>> = vec![Vec::new(); k];
     for r in 0..matrix.rows {
         let (c, _) = kmeans::nearest(&trained.centroids, matrix.dim, matrix.row(r));
         lists[c].push(r as u32);
     }
+    train_span.end();
 
     // PQ mode: train the codebook (one k-means per subspace, salted from
     // the same seed) and quantize every row up front.
@@ -979,7 +983,16 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
     if let Some(cb_bytes) = &codebook_bytes {
         puts.push((key_cb.as_str(), cb_bytes.as_slice()));
     }
-    table.store().put_many(&puts)?;
+    let upload_span = op_span.child("upload");
+    let scoped;
+    let put_store = if upload_span.is_enabled() {
+        scoped = table.store().with_span(&upload_span);
+        &scoped
+    } else {
+        table.store()
+    };
+    put_store.put_many(&puts)?;
+    upload_span.end();
 
     let pq_ref = pq_state.as_ref().map(|(cb, _)| PqRef {
         m: cb.m,
@@ -1038,7 +1051,13 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
         }));
     }
     actions.push(Action::CommitInfo { operation: "BUILD INDEX".into(), timestamp: ts });
-    let version = table.commit(actions)?;
+    let commit_span = op_span.child("commit");
+    let version = if commit_span.is_enabled() {
+        table.with_span(&commit_span).commit(actions)?
+    } else {
+        table.commit(actions)?
+    };
+    commit_span.end();
 
     STATS.builds.fetch_add(1, Ordering::Relaxed);
     STATS.vectors_indexed.fetch_add(matrix.rows as u64, Ordering::Relaxed);
@@ -1312,8 +1331,12 @@ impl IvfIndex {
         if k == 0 {
             return Ok(Vec::new());
         }
+        // Phase spans hang off whatever span the caller scoped the store
+        // to (the trace root when tracing, the disabled span otherwise).
+        let op_span = self.store.io_span().clone();
         let nprobe = if nprobe == 0 { self.default_nprobe } else { nprobe }.min(self.k);
         // Rank centroids by distance (ties toward the lower centroid id).
+        let probe_span = op_span.child("probe");
         let mut ranked: Vec<(f32, u32)> = self
             .centroids
             .chunks_exact(self.dim)
@@ -1328,6 +1351,7 @@ impl IvfIndex {
                 (hi > lo).then_some((lo, hi - lo))
             })
             .collect();
+        probe_span.end();
         STATS.searches.fetch_add(1, Ordering::Relaxed);
         STATS.probes.fetch_add(spans.len() as u64, Ordering::Relaxed);
 
@@ -1343,6 +1367,17 @@ impl IvfIndex {
             None => k,
         };
         let entry_bytes = 4 + self.pq.as_ref().map_or(4 * self.dim, |cb| cb.m);
+        // The scan span owns the posting-list I/O: fetches route through a
+        // store scoped to it, so its GET / cache events attach here (ADC
+        // table-gather for PQ indexes, exact distances for Flat).
+        let scan_span = op_span.child("scan");
+        let scan_scoped;
+        let scan_store = if scan_span.is_enabled() {
+            scan_scoped = self.store.with_span(&scan_span);
+            &scan_scoped
+        } else {
+            &self.store
+        };
         let mut top = TopK::new(cand);
         let mut scanned = 0u64;
         let mut fetched = spans.iter().map(|s| s.1).sum::<u64>();
@@ -1360,7 +1395,7 @@ impl IvfIndex {
             }
         };
         let blocks = crate::serving::fetch_spans(
-            &self.store,
+            scan_store,
             &self.postings_key,
             self.postings_size,
             self.postings_stamp,
@@ -1384,16 +1419,26 @@ impl IvfIndex {
             STATS.probes.fetch_add(spans.len() as u64, Ordering::Relaxed);
             fetched += spans.iter().map(|s| s.1).sum::<u64>();
             let blocks =
-                crate::serving::fetch_spans(&self.store, &seg.key, seg.size, seg.stamp, &spans)?;
+                crate::serving::fetch_spans(scan_store, &seg.key, seg.size, seg.stamp, &spans)?;
             scan(&blocks, &mut top);
         }
+        scan_span.end();
         STATS.postings_scanned.fetch_add(scanned, Ordering::Relaxed);
         STATS.postings_bytes_fetched.fetch_add(fetched, Ordering::Relaxed);
         let cands = top.into_sorted();
         if self.pq.is_none() {
             return Ok(cands);
         }
-        self.rerank_exact(query, &cands, k)
+        // Re-rank reads exact vectors through the read engine on a table
+        // scoped to its own span, so the slice fetches attribute there.
+        let rerank_span = op_span.child("rerank");
+        let out = if rerank_span.is_enabled() {
+            self.rerank_exact(&self.table.with_span(&rerank_span), query, &cands, k)
+        } else {
+            self.rerank_exact(&self.table, query, &cands, k)
+        };
+        rerank_span.end();
+        out
     }
 
     /// Exactly re-rank ADC candidates: read their true vectors back
@@ -1402,7 +1447,13 @@ impl IvfIndex {
     /// keep the top-`k` by the exact kernel — the same distance and
     /// `(dist, row)` tie order as the brute-force control, which is what
     /// makes full-probe + full-rerank PQ search *equal* brute force.
-    fn rerank_exact(&self, query: &[f32], cands: &[Neighbor], k: usize) -> Result<Vec<Neighbor>> {
+    fn rerank_exact(
+        &self,
+        table: &DeltaTable,
+        query: &[f32],
+        cands: &[Neighbor],
+        k: usize,
+    ) -> Result<Vec<Neighbor>> {
         // Adjacent candidates within this many rows share one slice read.
         const RUN_GAP: u32 = 32;
         let mut rows: Vec<u32> = cands.iter().map(|n| n.row).collect();
@@ -1416,7 +1467,7 @@ impl IvfIndex {
                 j += 1;
             }
             let (lo, hi) = (rows[i] as usize, rows[j] as usize);
-            let vals = load_rows(&self.table, &self.tensor_id, lo, hi + 1)?;
+            let vals = load_rows(table, &self.tensor_id, lo, hi + 1)?;
             for &r in &rows[i..=j] {
                 let off = (r as usize - lo) * self.dim;
                 top.push(dist2(query, &vals[off..off + self.dim]), r);

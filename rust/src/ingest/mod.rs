@@ -30,7 +30,7 @@
 use crate::columnar::{ColumnData, Schema, WriteOptions};
 use crate::coordinator::WorkerPool;
 use crate::delta::{Action, AddFile, DeltaTable};
-use crate::objectstore::ObjectStore;
+use crate::objectstore::{ObjectStore, ObjectStoreHandle};
 use crate::util::env_u64;
 use crate::Result;
 use anyhow::ensure;
@@ -379,18 +379,46 @@ impl<'a> TensorWriter<'a> {
         }
         let n = payloads.len();
         let mut sizes = vec![0u64; n];
+        // Phase spans hang off whatever span the caller scoped the table's
+        // store to (the operation's trace root when tracing is on; the
+        // disabled span otherwise, making every child a no-op).
+        let op_span = table.store().io_span().clone();
 
         if n == 1 {
             // Single-part writes skip the pool round trip and the gate.
+            let encode_span = op_span.child("encode");
             let bytes = encode_payload(payloads.pop().unwrap())?;
+            encode_span.end();
             STATS.parts_encoded.fetch_add(1, Ordering::Relaxed);
             STATS.bytes_staged.fetch_add(bytes.len() as u64, Ordering::Relaxed);
             sizes[0] = bytes.len() as u64;
             let key = table.data_key(&slots[0].rel_path);
-            table.store().put_many(&[(key.as_str(), bytes.as_slice())])?;
+            let upload_span = op_span.child("upload");
+            let scoped;
+            let put_store = if upload_span.is_enabled() {
+                scoped = table.store().with_span(&upload_span);
+                &scoped
+            } else {
+                table.store()
+            };
+            put_store.put_many(&[(key.as_str(), bytes.as_slice())])?;
+            upload_span.end();
             STATS.put_batches.fetch_add(1, Ordering::Relaxed);
             STATS.put_parts.fetch_add(1, Ordering::Relaxed);
         } else {
+            // The parallel path pipelines encode and upload, so the two
+            // phase spans overlap: "encode" covers submission through the
+            // last drained part, "upload" covers every flushed PUT batch
+            // (each batch's GET/PUT events attach to it via `put_store`).
+            let encode_span = op_span.child("encode");
+            let upload_span = op_span.child("upload");
+            let upload_scoped;
+            let put_store = if upload_span.is_enabled() {
+                upload_scoped = table.store().with_span(&upload_span);
+                &upload_scoped
+            } else {
+                table.store()
+            };
             let gate = Arc::new(ByteGate::new(inflight_bytes));
             let (tx, rx) = mpsc::channel::<(usize, Result<Vec<u8>>)>();
             // Submission runs on its own thread: `POOL.submit` blocks when
@@ -446,7 +474,7 @@ impl<'a> TensorWriter<'a> {
                     for (_, b) in batch.drain(..) {
                         gate.release(b.len() as u64);
                     }
-                } else if let Err(e) = flush_batch(table, &slots, batch, &gate) {
+                } else if let Err(e) = flush_batch(table, put_store, &slots, batch, &gate) {
                     *first_err = Some(e);
                     gate.open();
                 }
@@ -499,6 +527,8 @@ impl<'a> TensorWriter<'a> {
                 }
             }
             flush(&mut batch, &mut batch_bytes, &mut first_err);
+            encode_span.end();
+            upload_span.end();
             if let Some(e) = first_err {
                 return Err(e);
             }
@@ -534,7 +564,15 @@ impl<'a> TensorWriter<'a> {
         actions.extend(adds.into_iter().map(Action::Add));
         actions.extend(extra);
         actions.push(Action::CommitInfo { operation, timestamp: ts });
-        let version = table.commit(actions)?;
+        // Scoping the table to a "commit" span attributes the log PUT —
+        // and any Retry events from lost put_if_absent races — to it.
+        let commit_span = op_span.child("commit");
+        let version = if commit_span.is_enabled() {
+            table.with_span(&commit_span).commit(actions)?
+        } else {
+            table.commit(actions)?
+        };
+        commit_span.end();
         STATS.batch_commits.fetch_add(1, Ordering::Relaxed);
         STATS.tensors_committed.fetch_add(n_tensors as u64, Ordering::Relaxed);
         Ok(version)
@@ -543,9 +581,11 @@ impl<'a> TensorWriter<'a> {
 
 /// Upload the staged batch with one `put_many`, releasing its bytes from
 /// the gate whether or not the upload succeeded (a stuck budget would
-/// deadlock the encoders).
+/// deadlock the encoders). `store` is the table's store, possibly scoped
+/// to the batch's "upload" span so the PUT events attribute to it.
 fn flush_batch(
     table: &DeltaTable,
+    store: &ObjectStoreHandle,
     slots: &[PartSlot],
     batch: &mut Vec<(usize, Vec<u8>)>,
     gate: &ByteGate,
@@ -557,7 +597,7 @@ fn flush_batch(
         batch.iter().map(|(i, _)| table.data_key(&slots[*i].rel_path)).collect();
     let objs: Vec<(&str, &[u8])> =
         keys.iter().zip(batch.iter()).map(|(k, (_, b))| (k.as_str(), b.as_slice())).collect();
-    let res = table.store().put_many(&objs);
+    let res = store.put_many(&objs);
     // Count the upload only once it actually happened — a failed PUT must
     // not inflate the very counters incidents are diagnosed with.
     if res.is_ok() {

@@ -39,6 +39,11 @@
 //! * [`coordinator`] — streaming ingestion orchestrator: worker pool,
 //!   backpressure, commit coordination, append and index-aware OPTIMIZE,
 //!   metrics (including the engine's).
+//! * [`telemetry`] — per-operation tracing: explicit span contexts
+//!   threaded through every tier via the object-store handle, GET/PUT and
+//!   cache-hit attribution per span, Chrome-trace/JSONL export, and a
+//!   ring-buffered sink with a slow-op log. Always compiled, runtime
+//!   gated (`DT_TRACE`), overhead CI-gated at ≤5%.
 //! * [`workload`] — synthetic FFHQ-like, Uber-pickups-like and
 //!   embedding-like generators, plus the closed-loop serving, ingest,
 //!   vector-search and maintenance load harnesses ([`workload::serve`],
@@ -58,6 +63,7 @@ pub mod serving;
 pub mod index;
 pub mod runtime;
 pub mod coordinator;
+pub mod telemetry;
 pub mod workload;
 pub mod testing;
 pub mod benchkit;

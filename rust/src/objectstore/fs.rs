@@ -212,6 +212,14 @@ mod tests {
     }
 
     #[test]
+    fn conformance_spanned_handle() {
+        let dir = tmpdir("conf-span");
+        let h = crate::objectstore::ObjectStoreHandle::fs(&dir).unwrap();
+        super::super::conformance::run_spanned(&h);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn rejects_path_traversal() {
         let dir = tmpdir("trav");
         let s = FsStore::new(&dir).unwrap();

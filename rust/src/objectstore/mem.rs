@@ -128,6 +128,12 @@ mod tests {
     }
 
     #[test]
+    fn conformance_spanned_handle() {
+        let h = crate::objectstore::ObjectStoreHandle::mem();
+        super::super::conformance::run_spanned(&h);
+    }
+
+    #[test]
     fn concurrent_put_if_absent_single_winner() {
         let store = Arc::new(MemStore::new());
         let mut handles = Vec::new();

@@ -23,6 +23,7 @@ pub use fs::FsStore;
 pub use mem::MemStore;
 pub use sim::{CostModel, SimStore};
 
+use crate::telemetry::EventKind;
 use crate::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -176,6 +177,11 @@ pub struct ObjectStoreHandle {
     /// caches (snapshots, footers) key on it so entries from different
     /// stores can never alias.
     instance: u64,
+    /// Span every I/O request on this handle is attributed to — the
+    /// telemetry tier's explicit context, threaded by rescoping handles
+    /// ([`ObjectStoreHandle::with_span`]) instead of thread-locals.
+    /// Disabled by default, so untraced handles pay one branch per op.
+    span: crate::telemetry::Span,
 }
 
 impl std::fmt::Debug for ObjectStoreHandle {
@@ -192,7 +198,27 @@ impl ObjectStoreHandle {
             inner,
             stats: Arc::new(StoreStats::default()),
             instance: NEXT_INSTANCE.fetch_add(1, Ordering::Relaxed),
+            span: crate::telemetry::Span::disabled(),
         }
+    }
+
+    /// A clone of this handle whose I/O is attributed to `span`. Backend,
+    /// stats and instance id are shared, so caching and counting behave
+    /// exactly as for the original — only telemetry attribution changes.
+    pub fn with_span(&self, span: &crate::telemetry::Span) -> Self {
+        Self {
+            inner: self.inner.clone(),
+            stats: self.stats.clone(),
+            instance: self.instance,
+            span: span.clone(),
+        }
+    }
+
+    /// The span this handle attributes I/O to (disabled unless the handle
+    /// came from [`ObjectStoreHandle::with_span`] inside a traced
+    /// operation).
+    pub fn io_span(&self) -> &crate::telemetry::Span {
+        &self.span
     }
 
     /// New in-memory store.
@@ -241,29 +267,47 @@ impl ObjectStore for ObjectStoreHandle {
     fn put(&self, key: &str, data: &[u8]) -> Result<()> {
         self.stats.put_ops.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
-        self.inner.put(key, data)
+        let t0 = self.span.is_enabled().then(std::time::Instant::now);
+        self.inner.put(key, data)?;
+        if let Some(t0) = t0 {
+            self.span.io_event(EventKind::Put, 1, data.len() as u64, t0.elapsed());
+        }
+        Ok(())
     }
 
     fn put_if_absent(&self, key: &str, data: &[u8]) -> Result<bool> {
         self.stats.put_ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = self.span.is_enabled().then(std::time::Instant::now);
         let ok = self.inner.put_if_absent(key, data)?;
         if ok {
             self.stats.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
+        }
+        if let Some(t0) = t0 {
+            let bytes = if ok { data.len() as u64 } else { 0 };
+            self.span.io_event(EventKind::Put, 1, bytes, t0.elapsed());
         }
         Ok(ok)
     }
 
     fn get(&self, key: &str) -> Result<Vec<u8>> {
         self.stats.get_ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = self.span.is_enabled().then(std::time::Instant::now);
         let data = self.inner.get(key)?;
         self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            self.span.io_event(EventKind::Get, 1, data.len() as u64, t0.elapsed());
+        }
         Ok(data)
     }
 
     fn get_range(&self, key: &str, off: u64, len: u64) -> Result<Vec<u8>> {
         self.stats.get_ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = self.span.is_enabled().then(std::time::Instant::now);
         let data = self.inner.get_range(key, off, len)?;
         self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            self.span.io_event(EventKind::Get, 1, data.len() as u64, t0.elapsed());
+        }
         Ok(data)
     }
 
@@ -282,8 +326,12 @@ impl ObjectStore for ObjectStoreHandle {
 
     fn get_tail(&self, key: &str, n: u64) -> Result<Vec<u8>> {
         self.stats.get_ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = self.span.is_enabled().then(std::time::Instant::now);
         let data = self.inner.get_tail(key, n)?;
         self.stats.bytes_read.fetch_add(data.len() as u64, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            self.span.io_event(EventKind::Get, 1, data.len() as u64, t0.elapsed());
+        }
         Ok(data)
     }
 
@@ -295,9 +343,14 @@ impl ObjectStore for ObjectStoreHandle {
         self.stats.get_ops.fetch_add(1, Ordering::Relaxed);
         self.stats.batch_ops.fetch_add(1, Ordering::Relaxed);
         self.stats.batched_ranges.fetch_add(ranges.len() as u64, Ordering::Relaxed);
+        let t0 = self.span.is_enabled().then(std::time::Instant::now);
         let data = self.inner.get_ranges(key, ranges)?;
         let total: u64 = data.iter().map(|b| b.len() as u64).sum();
         self.stats.bytes_read.fetch_add(total, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            // One event carrying the whole batch, mirroring the op count.
+            self.span.io_event(EventKind::Get, ranges.len() as u64, total, t0.elapsed());
+        }
         Ok(data)
     }
 
@@ -312,7 +365,12 @@ impl ObjectStore for ObjectStoreHandle {
         self.stats.batched_puts.fetch_add(objs.len() as u64, Ordering::Relaxed);
         let total: u64 = objs.iter().map(|(_, d)| d.len() as u64).sum();
         self.stats.bytes_written.fetch_add(total, Ordering::Relaxed);
-        self.inner.put_many(objs)
+        let t0 = self.span.is_enabled().then(std::time::Instant::now);
+        self.inner.put_many(objs)?;
+        if let Some(t0) = t0 {
+            self.span.io_event(EventKind::Put, objs.len() as u64, total, t0.elapsed());
+        }
+        Ok(())
     }
 }
 
@@ -374,6 +432,39 @@ pub(crate) mod conformance {
         store.put("empty", b"").unwrap();
         assert_eq!(store.get("empty").unwrap(), b"");
         assert_eq!(store.head("empty").unwrap(), Some(0));
+    }
+
+    /// Backend-independent check of the telemetry hook: a span-rescoped
+    /// handle must return identical data to the plain handle while
+    /// attributing every GET/PUT (with batch counts and bytes) to the
+    /// span, and must share the plain handle's stats and instance id.
+    pub fn run_spanned(handle: &ObjectStoreHandle) {
+        use crate::telemetry::{EventKind, Trace};
+        let trace = Trace::start_forced("conformance");
+        let spanned = handle.with_span(trace.root());
+        assert_eq!(spanned.instance_id(), handle.instance_id());
+        assert!(spanned.io_span().is_enabled());
+        assert!(!handle.io_span().is_enabled());
+
+        spanned.put("sp/one", b"0123456789").unwrap();
+        spanned.put_many(&[("sp/two", &b"abc"[..]), ("sp/three", &b"defgh"[..])]).unwrap();
+        assert_eq!(spanned.get("sp/one").unwrap(), handle.get("sp/one").unwrap());
+        let bufs = spanned.get_ranges("sp/one", &[(0, 4), (6, 4)]).unwrap();
+        assert_eq!(bufs, handle.get_ranges("sp/one", &[(0, 4), (6, 4)]).unwrap());
+        assert_eq!(spanned.get_tail("sp/three", 2).unwrap(), b"gh");
+        assert!(!spanned.put_if_absent("sp/one", b"x").unwrap());
+
+        let t = trace.finish().unwrap();
+        // PUTs: put(1) + put_many batch(2) + failed put_if_absent(1).
+        assert_eq!(t.event_count(EventKind::Put), 4);
+        assert_eq!(t.event_bytes(EventKind::Put), 10 + 3 + 5);
+        // GETs: get(1) + get_ranges batch(2) + get_tail(1). The plain
+        // handle's identical requests must NOT have recorded events.
+        assert_eq!(t.event_count(EventKind::Get), 4);
+        assert_eq!(t.event_bytes(EventKind::Get), 10 + 8 + 2);
+        for key in ["sp/one", "sp/two", "sp/three"] {
+            spanned.delete(key).unwrap();
+        }
     }
 }
 

@@ -223,6 +223,12 @@ mod tests {
     }
 
     #[test]
+    fn conformance_spanned_handle_under_free_model() {
+        let h = crate::objectstore::ObjectStoreHandle::sim_mem(CostModel::free());
+        super::super::conformance::run_spanned(&h);
+    }
+
+    #[test]
     fn latency_is_charged() {
         let s = sim(CostModel {
             first_byte_latency: Duration::from_millis(20),

@@ -205,13 +205,17 @@ pub fn part_footer(table: &DeltaTable, part: &AddFile) -> Result<Arc<Footer>> {
 pub fn fetch_object(table: &DeltaTable, add: &AddFile) -> Result<Vec<u8>> {
     STATS.object_fetches.fetch_add(1, Ordering::Relaxed);
     let key = table.data_key(&add.path);
-    let blocks = crate::serving::fetch_spans(
-        table.store(),
-        &key,
-        add.size,
-        add.timestamp,
-        &[(0, add.size)],
-    )?;
+    let fetch_span = table.store().io_span().child("fetch");
+    let scoped;
+    let store = if fetch_span.is_enabled() {
+        scoped = table.store().with_span(&fetch_span);
+        &scoped
+    } else {
+        table.store()
+    };
+    let blocks =
+        crate::serving::fetch_spans(store, &key, add.size, add.timestamp, &[(0, add.size)])?;
+    fetch_span.end();
     Ok(blocks.into_iter().next().map(|b| b.as_ref().clone()).unwrap_or_default())
 }
 
@@ -262,6 +266,19 @@ fn fetch_one(
     read_index: usize,
     read: &PartRead,
 ) -> Result<PartData> {
+    // Everything up to having the raw bodies in hand is the "fetch" phase;
+    // rescoping the store attributes the footer GET and the coalesced
+    // batched GET (or its cache hits) to that span. Untraced reads skip
+    // the rescope entirely.
+    let parent = store.io_span().clone();
+    let fetch_span = parent.child("fetch");
+    let scoped;
+    let store = if fetch_span.is_enabled() {
+        scoped = store.with_span(&fetch_span);
+        &scoped
+    } else {
+        store
+    };
     let footer =
         FOOTERS.get(store, store.instance_id(), key, read.part.size, read.part.timestamp)?;
     let cols: Vec<usize> = read
@@ -300,7 +317,9 @@ fn fetch_one(
     STATS.ranges_coalesced.fetch_add(spans.len() as u64, Ordering::Relaxed);
     let bodies =
         crate::serving::fetch_spans(store, key, read.part.size, read.part.timestamp, &spans)?;
+    fetch_span.end();
 
+    let decode_span = parent.child("decode");
     let mut columns = Vec::with_capacity(groups.len());
     for &g in &groups {
         let mut row = Vec::with_capacity(cols.len());
@@ -319,6 +338,7 @@ fn fetch_one(
         }
         columns.push(row);
     }
+    decode_span.end();
     STATS.part_fetches.fetch_add(1, Ordering::Relaxed);
     Ok(PartData { read_index, groups, columns })
 }

@@ -119,6 +119,19 @@ pub fn fetch_spans(
             None => missing.push((i, (off, len))),
         }
     }
+    // Attribute this probe's hit/miss split to the operation's span (the
+    // GETs for the misses attribute themselves via the store handle).
+    let span = store.io_span();
+    if span.is_enabled() {
+        let hits = (spans.len() - missing.len()) as u64;
+        if hits > 0 {
+            let hit_bytes: u64 = out.iter().flatten().map(|b| b.len() as u64).sum();
+            span.cache_hits(hits, hit_bytes);
+        }
+        if !missing.is_empty() {
+            span.cache_misses(missing.len() as u64);
+        }
+    }
     if !missing.is_empty() {
         let miss_spans: Vec<(u64, u64)> = missing.iter().map(|&(_, span)| span).collect();
         let fkey: FlightKey = (instance, key.to_string(), size, stamp, miss_spans.clone());

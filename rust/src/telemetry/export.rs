@@ -1,0 +1,520 @@
+//! Trace and metrics exporters: Chrome `trace_event` JSON (Perfetto /
+//! `chrome://tracing`), a JSONL event log, the CLI span-tree renderer,
+//! and Prometheus / JSON renderings of the metrics registry.
+
+use crate::coordinator::{bucket_bounds, Metrics};
+use crate::jsonx::Json;
+use crate::telemetry::{Event, EventKind, FinishedTrace};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Nesting slack for trace validation, microseconds. Span intervals are
+/// all offsets of one `Instant`, so nesting is exact in practice; the
+/// slack only absorbs µs rounding in the export.
+const NEST_SLACK_US: f64 = 1.0;
+
+fn event_args(trace_idx: usize, span: u64, e: &Event) -> Json {
+    Json::obj([
+        ("trace", Json::from(trace_idx)),
+        ("span", Json::from(span)),
+        ("count", Json::from(e.count)),
+        ("bytes", Json::from(e.bytes)),
+        ("dur_us", Json::Float(e.dur_ns as f64 / 1e3)),
+    ])
+}
+
+/// Render traces as one Chrome `trace_event` JSON document: spans become
+/// `"X"` complete events, I/O attribution becomes `"i"` instant events
+/// tagged with their span via `args`. Load the file in
+/// `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn chrome_trace_json(traces: &[Arc<FinishedTrace>]) -> Json {
+    let mut events = Vec::new();
+    for (idx, t) in traces.iter().enumerate() {
+        // Wall-clock anchor keeps concurrent traces ordered; fall back to
+        // a synthetic per-trace offset when the clock was unavailable.
+        let base_us = if t.start_unix_us > 0 {
+            t.start_unix_us as f64
+        } else {
+            idx as f64 * 1e7
+        };
+        for s in &t.spans {
+            let ts = base_us + s.start_ns as f64 / 1e3;
+            let dur = s.dur_ns() as f64 / 1e3;
+            events.push(Json::obj([
+                ("name", Json::from(s.name.as_str())),
+                ("ph", Json::from("X")),
+                ("ts", Json::Float(ts)),
+                ("dur", Json::Float(dur)),
+                ("pid", Json::Int(1)),
+                ("tid", Json::from(s.tid % 1_000_000)),
+                (
+                    "args",
+                    Json::obj([
+                        ("trace", Json::from(idx)),
+                        ("span", Json::from(s.id)),
+                        ("parent", Json::from(s.parent)),
+                        ("op", Json::from(t.name.as_str())),
+                    ]),
+                ),
+            ]));
+            for e in &s.events {
+                events.push(Json::obj([
+                    ("name", Json::from(e.kind.label())),
+                    ("ph", Json::from("i")),
+                    ("s", Json::from("t")),
+                    ("ts", Json::Float(base_us + e.at_ns as f64 / 1e3)),
+                    ("pid", Json::Int(1)),
+                    ("tid", Json::from(s.tid % 1_000_000)),
+                    ("args", event_args(idx, s.id, e)),
+                ]));
+            }
+        }
+    }
+    Json::obj([
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+/// Render traces as a JSONL event log: one line per span, carrying its
+/// trace context and attributed I/O events.
+pub fn jsonl(traces: &[Arc<FinishedTrace>]) -> String {
+    let mut out = String::new();
+    for (idx, t) in traces.iter().enumerate() {
+        for s in &t.spans {
+            let events: Vec<Json> = s
+                .events
+                .iter()
+                .map(|e| {
+                    Json::obj([
+                        ("kind", Json::from(e.kind.label())),
+                        ("at_us", Json::Float(e.at_ns as f64 / 1e3)),
+                        ("dur_us", Json::Float(e.dur_ns as f64 / 1e3)),
+                        ("count", Json::from(e.count)),
+                        ("bytes", Json::from(e.bytes)),
+                    ])
+                })
+                .collect();
+            let line = Json::obj([
+                ("trace", Json::from(idx)),
+                ("op", Json::from(t.name.as_str())),
+                ("start_unix_us", Json::from(t.start_unix_us)),
+                ("span", Json::from(s.id)),
+                ("parent", Json::from(s.parent)),
+                ("name", Json::from(s.name.as_str())),
+                ("start_us", Json::Float(s.start_ns as f64 / 1e3)),
+                ("dur_us", Json::Float(s.dur_ns() as f64 / 1e3)),
+                ("events", Json::Arr(events)),
+            ]);
+            out.push_str(&line.dump());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn human_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Aggregate a span's events into a compact attribution suffix, e.g.
+/// `[GET x1 (3 ranges) 12.0 KiB 0.42ms] [cache 2 hit / 1 miss]`.
+fn event_summary(events: &[Event]) -> String {
+    let mut per: BTreeMap<&'static str, (u64, u64, u64, u64)> = BTreeMap::new();
+    for e in events {
+        let agg = per.entry(e.kind.label()).or_insert((0, 0, 0, 0));
+        agg.0 += 1;
+        agg.1 += e.count;
+        agg.2 += e.bytes;
+        agg.3 += e.dur_ns;
+    }
+    let mut parts = Vec::new();
+    for kind in ["GET", "PUT"] {
+        if let Some(&(evs, count, bytes, dur)) = per.get(kind) {
+            parts.push(format!(
+                "[{kind} x{evs} ({count} ranges) {} {:.2}ms]",
+                human_bytes(bytes),
+                dur as f64 / 1e6
+            ));
+        }
+    }
+    let hits = per.get("CACHE_HIT").copied().unwrap_or_default();
+    let misses = per.get("CACHE_MISS").copied().unwrap_or_default();
+    if hits.1 + misses.1 > 0 {
+        parts.push(format!("[cache {} hit ({}) / {} miss]", hits.1, human_bytes(hits.2), misses.1));
+    }
+    if let Some(&(_, count, _, _)) = per.get("RETRY") {
+        parts.push(format!("[retry x{count}]"));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("  {}", parts.join(" "))
+    }
+}
+
+/// Render one finished trace as an indented span tree with timings and
+/// I/O attribution — the CLI `trace <op>` output.
+pub fn render_tree(t: &FinishedTrace) -> String {
+    let mut children: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, s) in t.spans.iter().enumerate() {
+        children.entry(s.parent).or_default().push(i);
+    }
+    let mut out = format!(
+        "TRACE {} — {:.3} ms, {} spans, {} GET ranges ({}), {} PUT objects ({})\n",
+        t.name,
+        t.dur_ns as f64 / 1e6,
+        t.spans.len(),
+        t.event_count(EventKind::Get),
+        human_bytes(t.event_bytes(EventKind::Get)),
+        t.event_count(EventKind::Put),
+        human_bytes(t.event_bytes(EventKind::Put)),
+    );
+    // Iterative DFS in creation order.
+    let mut stack: Vec<(usize, usize)> = children
+        .get(&0)
+        .map(|roots| roots.iter().rev().map(|&i| (i, 0)).collect())
+        .unwrap_or_default();
+    while let Some((i, depth)) = stack.pop() {
+        let s = &t.spans[i];
+        out.push_str(&format!(
+            "{:indent$}{:<width$} {:>9.3} ms{}\n",
+            "",
+            s.name,
+            s.dur_ns() as f64 / 1e6,
+            event_summary(&s.events),
+            indent = 2 + depth * 2,
+            width = 24usize.saturating_sub(depth * 2),
+        ));
+        if let Some(kids) = children.get(&s.id) {
+            for &k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+    }
+    out
+}
+
+/// What [`validate_chrome_trace`] measured while checking.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TraceCheckSummary {
+    /// Distinct traces in the document.
+    pub traces: usize,
+    /// Span (`"X"`) events checked.
+    pub spans: usize,
+    /// Instant (`"i"`) events checked.
+    pub instants: usize,
+    /// GET instant events checked for fetch-span nesting.
+    pub gets_under_fetch: usize,
+}
+
+/// Structurally validate a Chrome trace document produced by
+/// [`chrome_trace_json`]: spans are well-formed (numeric `ts`, `dur >= 0`,
+/// unique ids, children nested inside parents), instant events reference
+/// a live span and sit inside its interval, and — the cache invariant
+/// made checkable — every GET event in a `read`/`read_slice` trace hangs
+/// off a span whose ancestry includes a `fetch` (or `plan`) span.
+pub fn validate_chrome_trace(doc: &Json) -> Result<TraceCheckSummary> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("document has no traceEvents array")?;
+    // (trace, span) -> (name, parent, start_us, end_us)
+    let mut spans: BTreeMap<(u64, u64), (String, u64, f64, f64)> = BTreeMap::new();
+    let mut summary = TraceCheckSummary::default();
+    let mut roots: BTreeMap<u64, String> = BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).context("event missing ph")?;
+        if ph != "X" {
+            continue;
+        }
+        let name = ev.get("name").and_then(Json::as_str).context("span missing name")?;
+        let ts = ev.get("ts").and_then(Json::as_f64).context("span missing ts")?;
+        let dur = ev.get("dur").and_then(Json::as_f64).context("span missing dur")?;
+        if dur < 0.0 {
+            bail!("span {name:?} has negative duration {dur}");
+        }
+        let args = ev.get("args").context("span missing args")?;
+        let trace = args.get("trace").and_then(Json::as_u64).context("span missing args.trace")?;
+        let id = args.get("span").and_then(Json::as_u64).context("span missing args.span")?;
+        let parent = args.get("parent").and_then(Json::as_u64).unwrap_or(0);
+        if spans.insert((trace, id), (name.to_string(), parent, ts, ts + dur)).is_some() {
+            bail!("duplicate span id {id} in trace {trace}");
+        }
+        if parent == 0 {
+            roots.insert(trace, name.to_string());
+        }
+        summary.spans += 1;
+    }
+    summary.traces = roots.len();
+    // Parent linkage + nesting.
+    for (&(trace, id), &(ref name, parent, start, end)) in &spans {
+        if parent == 0 {
+            continue;
+        }
+        let &(_, _, pstart, pend) = spans.get(&(trace, parent)).with_context(|| {
+            format!("span {id} ({name}) in trace {trace}: parent {parent} missing")
+        })?;
+        if start < pstart - NEST_SLACK_US || end > pend + NEST_SLACK_US {
+            bail!(
+                "span {id} ({name}) in trace {trace} escapes parent {parent}: \
+                 [{start:.1}, {end:.1}] vs [{pstart:.1}, {pend:.1}] µs"
+            );
+        }
+    }
+    // Walk a span's ancestry looking for a fetch phase. `plan` also
+    // counts: layout discovery legitimately GETs the Delta log on a cold
+    // snapshot cache, and those are planning I/O, not data fetches.
+    let under_fetch = |trace: u64, mut id: u64| -> bool {
+        for _ in 0..1024 {
+            match spans.get(&(trace, id)) {
+                Some((name, parent, _, _)) => {
+                    if name == "fetch" || name == "plan" {
+                        return true;
+                    }
+                    if *parent == 0 {
+                        return false;
+                    }
+                    id = *parent;
+                }
+                None => return false,
+            }
+        }
+        false
+    };
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) != Some("i") {
+            continue;
+        }
+        let name = ev.get("name").and_then(Json::as_str).context("instant missing name")?;
+        let ts = ev.get("ts").and_then(Json::as_f64).context("instant missing ts")?;
+        let args = ev.get("args").context("instant missing args")?;
+        let trace = args.get("trace").and_then(Json::as_u64).context("instant missing args.trace")?;
+        let id = args.get("span").and_then(Json::as_u64).context("instant missing args.span")?;
+        let &(_, _, start, end) = spans.get(&(trace, id)).with_context(|| {
+            format!("instant {name:?} references missing span {id} in trace {trace}")
+        })?;
+        if ts < start - NEST_SLACK_US || ts > end + NEST_SLACK_US {
+            bail!(
+                "instant {name:?} at {ts:.1}µs outside span {id} [{start:.1}, {end:.1}] in trace {trace}"
+            );
+        }
+        summary.instants += 1;
+        let root = roots.get(&trace).map(String::as_str);
+        let root_is_read = matches!(root, Some("read" | "read_slice"));
+        if name == "GET" && root_is_read {
+            if !under_fetch(trace, id) {
+                bail!("GET event in trace {trace} (span {id}) does not nest under a fetch span");
+            }
+            summary.gets_under_fetch += 1;
+        }
+    }
+    Ok(summary)
+}
+
+fn sanitize_metric(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 13);
+    out.push_str("delta_tensor_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Parse the tiers' `name value` report lines (engine/serving/ingest/
+/// index/telemetry) into metric pairs, skipping anything non-numeric.
+fn tier_pairs(tier_lines: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in tier_lines.lines() {
+        let mut it = line.split_whitespace();
+        if let (Some(name), Some(val), None) = (it.next(), it.next(), it.next()) {
+            if let Ok(v) = val.parse::<f64>() {
+                out.push((name.to_string(), v));
+            }
+        }
+    }
+    out
+}
+
+/// Render the registry plus the tiers' counter reports in Prometheus
+/// exposition format: counters as `counter`, tier lines as `gauge`, and
+/// histograms as summaries with p50/p95/p99 quantiles plus cumulative
+/// buckets.
+pub fn prometheus_text(metrics: &Metrics, tier_lines: &str) -> String {
+    let mut out = String::new();
+    for (name, c) in metrics.counters() {
+        let m = sanitize_metric(&name);
+        out.push_str(&format!("# TYPE {m} counter\n{m} {}\n", c.get()));
+    }
+    for (name, v) in tier_pairs(tier_lines) {
+        let m = sanitize_metric(&name);
+        out.push_str(&format!("# TYPE {m} gauge\n{m} {v}\n"));
+    }
+    for (name, h) in metrics.histograms() {
+        let m = sanitize_metric(&name);
+        out.push_str(&format!("# TYPE {m} summary\n"));
+        for q in [0.5, 0.95, 0.99] {
+            out.push_str(&format!("{m}{{quantile=\"{q}\"}} {}\n", h.quantile(q)));
+        }
+        out.push_str(&format!("{m}_sum {}\n", h.sum_secs()));
+        out.push_str(&format!("{m}_count {}\n", h.count()));
+        let counts = h.bucket_counts();
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            let le = bucket_bounds()
+                .get(i)
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "+Inf".to_string());
+            out.push_str(&format!("{m}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+    }
+    out
+}
+
+/// The same surface as [`prometheus_text`] as a JSON document.
+pub fn stats_json(metrics: &Metrics, tier_lines: &str) -> Json {
+    let counters: BTreeMap<String, Json> = metrics
+        .counters()
+        .into_iter()
+        .map(|(k, c)| (k, Json::from(c.get())))
+        .collect();
+    let histograms: BTreeMap<String, Json> = metrics
+        .histograms()
+        .into_iter()
+        .map(|(k, h)| {
+            (
+                k,
+                Json::obj([
+                    ("count", Json::from(h.count())),
+                    ("sum_secs", Json::Float(h.sum_secs())),
+                    ("mean_secs", Json::Float(h.mean())),
+                    ("p50_secs", Json::Float(h.quantile(0.5))),
+                    ("p95_secs", Json::Float(h.quantile(0.95))),
+                    ("p99_secs", Json::Float(h.quantile(0.99))),
+                ]),
+            )
+        })
+        .collect();
+    let tiers: BTreeMap<String, Json> = tier_pairs(tier_lines)
+        .into_iter()
+        .map(|(k, v)| (k, Json::from(v)))
+        .collect();
+    Json::obj([
+        ("counters", Json::Obj(counters)),
+        ("histograms", Json::Obj(histograms)),
+        ("tiers", Json::Obj(tiers)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Trace;
+    use std::time::Duration;
+
+    fn sample_trace(name: &str) -> Arc<FinishedTrace> {
+        let t = Trace::start_forced(name);
+        let fetch = t.root().child("fetch");
+        fetch.io_event(EventKind::Get, 3, 4096, Duration::from_micros(40));
+        fetch.cache_hits(2, 8192);
+        fetch.end();
+        let decode = t.root().child("decode");
+        decode.end();
+        t.finish().unwrap()
+    }
+
+    #[test]
+    fn chrome_export_validates_and_roundtrips() {
+        let traces = vec![sample_trace("read_slice"), sample_trace("read")];
+        let doc = chrome_trace_json(&traces);
+        let back = crate::jsonx::parse(&doc.dump()).unwrap();
+        let sum = validate_chrome_trace(&back).unwrap();
+        assert_eq!(sum.traces, 2);
+        assert_eq!(sum.spans, 6);
+        assert!(sum.instants >= 4);
+        assert_eq!(sum.gets_under_fetch, 2);
+    }
+
+    #[test]
+    fn validation_rejects_orphan_gets() {
+        let t = Trace::start_forced("read");
+        let s = t.root().child("decode");
+        s.io_event(EventKind::Get, 1, 10, Duration::ZERO);
+        s.end();
+        let f = t.finish().unwrap();
+        let doc = chrome_trace_json(&[f]);
+        let err = validate_chrome_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("does not nest under a fetch span"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_broken_nesting() {
+        let doc = crate::jsonx::parse(
+            r#"{"traceEvents":[
+              {"name":"root","ph":"X","ts":1000.0,"dur":10.0,"pid":1,"tid":1,
+               "args":{"trace":0,"span":1,"parent":0}},
+              {"name":"child","ph":"X","ts":1500.0,"dur":10.0,"pid":1,"tid":1,
+               "args":{"trace":0,"span":2,"parent":1}}
+            ]}"#,
+        )
+        .unwrap();
+        let err = validate_chrome_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("escapes parent"), "{err}");
+    }
+
+    #[test]
+    fn jsonl_and_tree_render() {
+        let f = sample_trace("read_slice");
+        let lines = jsonl(&[f.clone()]);
+        assert_eq!(lines.trim().lines().count(), 3, "one line per span");
+        for line in lines.trim().lines() {
+            crate::jsonx::parse(line).unwrap();
+        }
+        let tree = render_tree(&f);
+        assert!(tree.contains("TRACE read_slice"), "{tree}");
+        assert!(tree.contains("fetch"), "{tree}");
+        assert!(tree.contains("GET x1 (3 ranges)"), "{tree}");
+        assert!(tree.contains("cache 2 hit"), "{tree}");
+        // fetch/decode indent deeper than the root span line.
+        let root_line = tree.lines().find(|l| l.trim_start().starts_with("read_slice")).unwrap();
+        let fetch_line = tree.lines().find(|l| l.trim_start().starts_with("fetch")).unwrap();
+        let indent = |l: &str| l.len() - l.trim_start().len();
+        assert!(indent(fetch_line) > indent(root_line));
+    }
+
+    #[test]
+    fn prometheus_and_json_stats() {
+        let m = Metrics::new();
+        m.counter("read.tensor").add(4);
+        for _ in 0..10 {
+            m.histogram("read.tensor_secs").observe(0.002);
+        }
+        let tiers = "engine.part_fetches 7\nserving.block_cache_hits 3\nbad line here\n";
+        let text = prometheus_text(&m, tiers);
+        assert!(text.contains("delta_tensor_read_tensor 4"), "{text}");
+        assert!(text.contains("delta_tensor_engine_part_fetches 7"), "{text}");
+        assert!(text.contains("delta_tensor_read_tensor_secs{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("delta_tensor_read_tensor_secs_count 10"), "{text}");
+        assert!(text.contains("_bucket{le=\"+Inf\"} 10"), "{text}");
+        assert!(!text.contains("bad"), "unparsable tier lines skipped: {text}");
+        let j = stats_json(&m, tiers);
+        assert_eq!(j.get("counters").unwrap().get("read.tensor").unwrap().as_u64(), Some(4));
+        let h = j.get("histograms").unwrap().get("read.tensor_secs").unwrap();
+        assert_eq!(h.get("count").unwrap().as_u64(), Some(10));
+        assert!(h.get("p50_secs").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("tiers").unwrap().get("engine.part_fetches").unwrap().as_f64(), Some(7.0));
+    }
+}

@@ -1,0 +1,636 @@
+//! Per-operation tracing: explicit span contexts, I/O attribution, and a
+//! ring-buffered trace sink.
+//!
+//! The tiers' global counters (`Coordinator::report`) prove invariants in
+//! aggregate — "warm reads issue zero GETs" — but cannot attribute cost to
+//! an individual read, search or append, or explain a p99 outlier. This
+//! module closes that gap with a deliberately small tracing model:
+//!
+//! * A [`Trace`] is one operation (a read, a search, an append). Its root
+//!   [`Span`] is threaded **explicitly** — no thread-locals — by rescoping
+//!   the operation's [`crate::objectstore::ObjectStoreHandle`] /
+//!   [`crate::delta::DeltaTable`] with [`Span::child`] contexts
+//!   (`store.with_span(..)`, `table.with_span(..)`), so spans survive the
+//!   worker-pool hops of the read and write engines unchanged.
+//! * Each span accumulates [`Event`]s — GET/PUT batches with byte counts
+//!   and durations, cache hits/misses, commit retries — recorded by the
+//!   object-store handle and the serving tier as I/O happens. That makes
+//!   per-operation statements like "this fetch span issued one batched GET
+//!   of 3 ranges, 12 KiB, 140 µs" directly observable.
+//! * A finished trace lands in the process-wide [`TraceSink`]: a ring
+//!   buffer of the last `DT_TRACE_KEEP` traces plus a slow-op log of
+//!   operations exceeding `DT_SLOW_MS` milliseconds.
+//!
+//! Tracing is compiled always-on and gated by a **runtime** flag
+//! ([`set_enabled`], initial value from `DT_TRACE`, default on): a
+//! disabled trace is a `None` — creating spans and recording events costs
+//! one branch. The `bench serve` harness measures exactly that delta and
+//! CI gates it at ≤5% QPS (`bench_baselines/telemetry.json`).
+//!
+//! Exports live in [`export`]: Chrome `trace_event` JSON (loadable in
+//! Perfetto / `chrome://tracing`), a JSONL event log, the CLI's span-tree
+//! renderer, and Prometheus/JSON renderings of the metrics registry.
+
+pub mod export;
+
+use once_cell::sync::Lazy;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Runtime switch: `DT_TRACE` (default on; `0`/`false`/`off` disable).
+static ENABLED: Lazy<AtomicBool> = Lazy::new(|| {
+    let on = match std::env::var("DT_TRACE") {
+        Ok(v) => !matches!(v.trim(), "0" | "false" | "off" | "no"),
+        Err(_) => true,
+    };
+    AtomicBool::new(on)
+});
+
+/// Whether [`Trace::start`] currently produces live traces.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip the runtime tracing flag (the bench harness's off/on control;
+/// [`Trace::start_forced`] ignores it).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// What one I/O event was.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A GET / range-GET / batched `get_ranges` request.
+    Get,
+    /// A PUT / conditional-PUT / batched `put_many` request.
+    Put,
+    /// Block-cache hits inside one `fetch_spans` call.
+    CacheHit,
+    /// Block-cache misses inside one `fetch_spans` call.
+    CacheMiss,
+    /// A lost `put_if_absent` commit race (optimistic-concurrency retry).
+    Retry,
+}
+
+impl EventKind {
+    /// Stable label used by every export format.
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Get => "GET",
+            EventKind::Put => "PUT",
+            EventKind::CacheHit => "CACHE_HIT",
+            EventKind::CacheMiss => "CACHE_MISS",
+            EventKind::Retry => "RETRY",
+        }
+    }
+}
+
+/// One I/O event attributed to a span.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Event kind.
+    pub kind: EventKind,
+    /// Offset from the trace start, nanoseconds.
+    pub at_ns: u64,
+    /// Duration of the underlying request (0 for instantaneous events).
+    pub dur_ns: u64,
+    /// Ranges / objects / hits carried by the event (a batched GET of 5
+    /// ranges is ONE event with `count = 5`, mirroring the op counters).
+    pub count: u64,
+    /// Bytes moved (downloaded for GETs, uploaded for PUTs, served for
+    /// cache hits).
+    pub bytes: u64,
+}
+
+/// One finished (or snapshot) span.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Span id, unique within the trace (root = 1).
+    pub id: u64,
+    /// Parent span id (0 for the root).
+    pub parent: u64,
+    /// Phase name ("fetch", "decode", "commit", ...).
+    pub name: String,
+    /// Start offset from the trace start, nanoseconds.
+    pub start_ns: u64,
+    /// End offset (>= `start_ns`; unfinished spans are closed at the
+    /// trace's finish time).
+    pub end_ns: u64,
+    /// Tag of the thread that opened the span (stable within a process).
+    pub tid: u64,
+    /// I/O events recorded on the span.
+    pub events: Vec<Event>,
+}
+
+impl SpanRecord {
+    /// Span duration in nanoseconds.
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// Shared state of one in-flight trace.
+struct TraceBody {
+    name: String,
+    start: Instant,
+    /// Wall-clock anchor (µs since the Unix epoch) so multiple traces
+    /// order correctly in one Chrome export.
+    start_unix_us: u64,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl TraceBody {
+    fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    fn new_span(self: &Arc<Self>, parent: u64, name: &str) -> Span {
+        let start_ns = self.now_ns();
+        let tid = thread_tag();
+        let mut spans = self.spans.lock().unwrap();
+        let id = spans.len() as u64 + 1;
+        spans.push(SpanRecord {
+            id,
+            parent,
+            name: name.to_string(),
+            start_ns,
+            end_ns: 0,
+            tid,
+            events: Vec::new(),
+        });
+        drop(spans);
+        Span { inner: Some(Arc::new(SpanInner { body: self.clone(), id })) }
+    }
+
+    fn end_span(&self, id: u64) {
+        let end = self.now_ns();
+        let mut spans = self.spans.lock().unwrap();
+        let rec = &mut spans[(id - 1) as usize];
+        if rec.end_ns == 0 {
+            rec.end_ns = end.max(rec.start_ns);
+        }
+    }
+
+    fn record_event(&self, id: u64, mut ev: Event) {
+        ev.at_ns = self.now_ns().saturating_sub(ev.dur_ns);
+        let mut spans = self.spans.lock().unwrap();
+        spans[(id - 1) as usize].events.push(ev);
+    }
+}
+
+/// Stable per-thread tag (a hash of the thread id) used as the exported
+/// `tid` — explicit state, not a thread-local counter.
+fn thread_tag() -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    std::thread::current().id().hash(&mut h);
+    h.finish()
+}
+
+/// The span half of [`Trace`]: a named interval that accumulates I/O
+/// events and spawns children. Cloning a span shares it (clones record
+/// into the same interval); the interval closes on [`Span::end`] or, as a
+/// fallback, when the last clone drops. A *disabled* span (every span of a
+/// disabled trace, and [`Span::disabled`]) makes all of this a no-op
+/// branch — the handle the object store carries by default.
+#[derive(Clone)]
+pub struct Span {
+    inner: Option<Arc<SpanInner>>,
+}
+
+struct SpanInner {
+    body: Arc<TraceBody>,
+    id: u64,
+}
+
+impl Drop for SpanInner {
+    fn drop(&mut self) {
+        // Last clone gone without an explicit end: close at the current
+        // offset (end_span is idempotent).
+        self.body.end_span(self.id);
+    }
+}
+
+impl std::fmt::Debug for Span {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            Some(i) => write!(f, "Span({})", i.id),
+            None => write!(f, "Span(disabled)"),
+        }
+    }
+}
+
+impl Span {
+    /// The no-op span: children are disabled, events vanish.
+    pub fn disabled() -> Span {
+        Span { inner: None }
+    }
+
+    /// Whether this span records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a child span. On a disabled span this returns a disabled span
+    /// — the single branch that keeps tracing-off runs at full speed.
+    pub fn child(&self, name: &str) -> Span {
+        match &self.inner {
+            Some(i) => i.body.new_span(i.id, name),
+            None => Span::disabled(),
+        }
+    }
+
+    /// Close the span at the current trace offset (idempotent; dropping
+    /// the last clone does the same).
+    pub fn end(&self) {
+        if let Some(i) = &self.inner {
+            i.body.end_span(i.id);
+        }
+    }
+
+    /// Record an I/O event with an explicit request duration.
+    pub fn io_event(&self, kind: EventKind, count: u64, bytes: u64, dur: Duration) {
+        if let Some(i) = &self.inner {
+            i.body.record_event(
+                i.id,
+                Event { kind, at_ns: 0, dur_ns: dur.as_nanos() as u64, count, bytes },
+            );
+        }
+    }
+
+    /// Record block-cache hits (`served` bytes) inside this span.
+    pub fn cache_hits(&self, count: u64, bytes: u64) {
+        self.io_event(EventKind::CacheHit, count, bytes, Duration::ZERO);
+    }
+
+    /// Record block-cache misses inside this span.
+    pub fn cache_misses(&self, count: u64) {
+        self.io_event(EventKind::CacheMiss, count, 0, Duration::ZERO);
+    }
+
+    /// Record one lost commit race.
+    pub fn retry(&self) {
+        self.io_event(EventKind::Retry, 1, 0, Duration::ZERO);
+    }
+}
+
+/// One traced operation. Create with [`Trace::start`] (honors the runtime
+/// flag) or [`Trace::start_forced`] (always traces — the CLI `trace` verb
+/// and the harnesses' sampled requests), thread [`Trace::root`] through
+/// the operation, then [`Trace::finish`] to snapshot and register it.
+pub struct Trace {
+    body: Option<Arc<TraceBody>>,
+    root: Span,
+}
+
+impl Trace {
+    /// Start a trace if the runtime flag is on; otherwise a no-op trace.
+    pub fn start(name: &str) -> Trace {
+        if enabled() {
+            Trace::start_forced(name)
+        } else {
+            Trace { body: None, root: Span::disabled() }
+        }
+    }
+
+    /// Start a trace unconditionally.
+    pub fn start_forced(name: &str) -> Trace {
+        let start_unix_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        let body = Arc::new(TraceBody {
+            name: name.to_string(),
+            start: Instant::now(),
+            start_unix_us,
+            spans: Mutex::new(Vec::new()),
+        });
+        let root = body.new_span(0, name);
+        Trace { body: Some(body), root }
+    }
+
+    /// Whether this trace records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.body.is_some()
+    }
+
+    /// The root span — rescope the operation's store/table with it.
+    pub fn root(&self) -> &Span {
+        &self.root
+    }
+
+    /// Close the trace: end the root, snapshot every span (unfinished
+    /// spans are closed at the finish offset), register the result in the
+    /// global [`sink`], and return it. `None` for a disabled trace.
+    pub fn finish(self) -> Option<Arc<FinishedTrace>> {
+        let Trace { body, root } = self;
+        let body = body?;
+        root.end();
+        drop(root);
+        let dur_ns = body.now_ns();
+        let mut spans = body.spans.lock().unwrap().clone();
+        for rec in &mut spans {
+            if rec.end_ns == 0 {
+                rec.end_ns = dur_ns.max(rec.start_ns);
+            }
+        }
+        let finished = Arc::new(FinishedTrace {
+            name: body.name.clone(),
+            start_unix_us: body.start_unix_us,
+            dur_ns,
+            spans,
+        });
+        sink().record(finished.clone());
+        Some(finished)
+    }
+}
+
+/// An immutable, finished trace: the unit the sink stores and the
+/// exporters consume.
+#[derive(Debug)]
+pub struct FinishedTrace {
+    /// Operation name (the root span's name).
+    pub name: String,
+    /// Wall-clock start, µs since the Unix epoch.
+    pub start_unix_us: u64,
+    /// Total duration, nanoseconds.
+    pub dur_ns: u64,
+    /// Every span, in creation order (root first).
+    pub spans: Vec<SpanRecord>,
+}
+
+impl FinishedTrace {
+    /// Total `count` of events of `kind` across all spans.
+    pub fn event_count(&self, kind: EventKind) -> u64 {
+        self.spans
+            .iter()
+            .flat_map(|s| &s.events)
+            .filter(|e| e.kind == kind)
+            .map(|e| e.count)
+            .sum()
+    }
+
+    /// Total `count` of events of `kind` on spans named `span_name` — the
+    /// per-operation form of the cache invariants ("zero GET events under
+    /// the fetch spans of a warm read").
+    pub fn event_count_under(&self, span_name: &str, kind: EventKind) -> u64 {
+        self.spans
+            .iter()
+            .filter(|s| s.name == span_name)
+            .flat_map(|s| &s.events)
+            .filter(|e| e.kind == kind)
+            .map(|e| e.count)
+            .sum()
+    }
+
+    /// Total bytes moved by events of `kind` across all spans.
+    pub fn event_bytes(&self, kind: EventKind) -> u64 {
+        self.spans
+            .iter()
+            .flat_map(|s| &s.events)
+            .filter(|e| e.kind == kind)
+            .map(|e| e.bytes)
+            .sum()
+    }
+}
+
+/// Ring-buffered trace store: the last `keep` finished traces, a slow-op
+/// log of operations over the `DT_SLOW_MS` threshold, and the
+/// worst-latency trace since the last [`TraceSink::take_worst`] (the
+/// harnesses' p99-outlier dump).
+pub struct TraceSink {
+    keep: usize,
+    slow_ns: u64,
+    traces: AtomicU64,
+    slow_ops: AtomicU64,
+    inner: Mutex<SinkInner>,
+}
+
+#[derive(Default)]
+struct SinkInner {
+    recent: VecDeque<Arc<FinishedTrace>>,
+    slow: VecDeque<String>,
+    worst: Option<Arc<FinishedTrace>>,
+}
+
+/// Slow-op log capacity (lines).
+const SLOW_LOG_CAP: usize = 128;
+
+impl TraceSink {
+    fn new(keep: usize, slow_ms: u64) -> TraceSink {
+        TraceSink {
+            keep: keep.max(1),
+            slow_ns: slow_ms.saturating_mul(1_000_000),
+            traces: AtomicU64::new(0),
+            slow_ops: AtomicU64::new(0),
+            inner: Mutex::new(SinkInner::default()),
+        }
+    }
+
+    fn record(&self, t: Arc<FinishedTrace>) {
+        self.traces.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.recent.len() >= self.keep {
+            inner.recent.pop_front();
+        }
+        inner.recent.push_back(t.clone());
+        if self.slow_ns > 0 && t.dur_ns >= self.slow_ns {
+            self.slow_ops.fetch_add(1, Ordering::Relaxed);
+            if inner.slow.len() >= SLOW_LOG_CAP {
+                inner.slow.pop_front();
+            }
+            inner.slow.push_back(format!(
+                "SLOW {} {:.3}ms: {} spans, {} GETs / {} bytes",
+                t.name,
+                t.dur_ns as f64 / 1e6,
+                t.spans.len(),
+                t.event_count(EventKind::Get),
+                t.event_bytes(EventKind::Get),
+            ));
+        }
+        let worse = match &inner.worst {
+            Some(w) => t.dur_ns > w.dur_ns,
+            None => true,
+        };
+        if worse {
+            inner.worst = Some(t);
+        }
+    }
+
+    /// The last traces, oldest first (at most the ring capacity).
+    pub fn recent(&self) -> Vec<Arc<FinishedTrace>> {
+        self.inner.lock().unwrap().recent.iter().cloned().collect()
+    }
+
+    /// The slow-op log, oldest first.
+    pub fn slow_log(&self) -> Vec<String> {
+        self.inner.lock().unwrap().slow.iter().cloned().collect()
+    }
+
+    /// The slowest trace since the last take, clearing it — harnesses call
+    /// this once per measured phase for the outlier dump.
+    pub fn take_worst(&self) -> Option<Arc<FinishedTrace>> {
+        self.inner.lock().unwrap().worst.take()
+    }
+
+    /// Drop all stored traces and logs (counters keep accumulating).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.recent.clear();
+        inner.slow.clear();
+        inner.worst = None;
+    }
+
+    /// Traces recorded since process start.
+    pub fn traces_recorded(&self) -> u64 {
+        self.traces.load(Ordering::Relaxed)
+    }
+
+    /// Traces that exceeded the slow threshold.
+    pub fn slow_op_count(&self) -> u64 {
+        self.slow_ops.load(Ordering::Relaxed)
+    }
+}
+
+static SINK: Lazy<TraceSink> = Lazy::new(|| {
+    TraceSink::new(
+        crate::util::env_u64("DT_TRACE_KEEP", 64) as usize,
+        crate::util::env_u64("DT_SLOW_MS", 100),
+    )
+});
+
+/// The process-wide trace sink.
+pub fn sink() -> &'static TraceSink {
+    &SINK
+}
+
+/// Plain-text telemetry counters, in the same `name value` format as the
+/// other tier reports.
+pub fn report() -> String {
+    format!(
+        "telemetry.enabled {}\ntelemetry.traces_recorded {}\ntelemetry.slow_ops {}\n",
+        enabled() as u64,
+        SINK.traces_recorded(),
+        SINK.slow_op_count(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_free_noops() {
+        let s = Span::disabled();
+        assert!(!s.is_enabled());
+        let c = s.child("x");
+        assert!(!c.is_enabled());
+        c.io_event(EventKind::Get, 1, 10, Duration::from_micros(5));
+        c.end();
+        let t = Trace { body: None, root: Span::disabled() };
+        assert!(t.finish().is_none());
+    }
+
+    #[test]
+    fn trace_records_span_tree_and_events() {
+        let t = Trace::start_forced("op");
+        assert!(t.is_enabled());
+        let fetch = t.root().child("fetch");
+        fetch.io_event(EventKind::Get, 3, 1024, Duration::from_micros(50));
+        fetch.cache_hits(2, 512);
+        fetch.end();
+        let decode = t.root().child("decode");
+        decode.end();
+        let f = t.finish().unwrap();
+        assert_eq!(f.name, "op");
+        assert_eq!(f.spans.len(), 3, "root + fetch + decode");
+        assert_eq!(f.spans[0].parent, 0);
+        assert_eq!(f.spans[1].parent, f.spans[0].id);
+        assert_eq!(f.event_count(EventKind::Get), 3);
+        assert_eq!(f.event_bytes(EventKind::Get), 1024);
+        assert_eq!(f.event_count_under("fetch", EventKind::Get), 3);
+        assert_eq!(f.event_count_under("decode", EventKind::Get), 0);
+        assert_eq!(f.event_count_under("fetch", EventKind::CacheHit), 2);
+        for s in &f.spans {
+            assert!(s.end_ns >= s.start_ns, "no negative durations");
+        }
+    }
+
+    #[test]
+    fn unfinished_and_cloned_spans_close_at_finish() {
+        let t = Trace::start_forced("op");
+        let a = t.root().child("a");
+        let a2 = a.clone();
+        a2.io_event(EventKind::Put, 1, 9, Duration::ZERO);
+        drop(a);
+        // `a2` still open when the trace finishes: closed at the snapshot.
+        std::mem::forget(a2.clone());
+        let f = t.finish().unwrap();
+        let rec = f.spans.iter().find(|s| s.name == "a").unwrap();
+        assert!(rec.end_ns >= rec.start_ns);
+        assert_eq!(rec.events.len(), 1);
+    }
+
+    #[test]
+    fn runtime_flag_gates_start_but_not_forced() {
+        let was = enabled();
+        set_enabled(false);
+        assert!(!Trace::start("gated").is_enabled());
+        assert!(Trace::start_forced("forced").is_enabled());
+        set_enabled(true);
+        assert!(Trace::start("gated").is_enabled());
+        set_enabled(was);
+    }
+
+    #[test]
+    fn sink_keeps_a_bounded_ring_and_tracks_worst() {
+        let sink = TraceSink::new(2, 0);
+        for i in 0..4u64 {
+            sink.record(Arc::new(FinishedTrace {
+                name: format!("t{i}"),
+                start_unix_us: 0,
+                dur_ns: 100 - i, // first is the slowest
+                spans: Vec::new(),
+            }));
+        }
+        let recent = sink.recent();
+        assert_eq!(recent.len(), 2, "ring capacity enforced");
+        assert_eq!(recent[0].name, "t2");
+        assert_eq!(recent[1].name, "t3");
+        assert_eq!(sink.traces_recorded(), 4);
+        let worst = sink.take_worst().unwrap();
+        assert_eq!(worst.name, "t0");
+        assert!(sink.take_worst().is_none(), "take clears");
+    }
+
+    #[test]
+    fn slow_log_applies_the_threshold() {
+        let sink = TraceSink::new(8, 1); // 1 ms
+        let mk = |name: &str, dur_ns: u64| {
+            Arc::new(FinishedTrace {
+                name: name.into(),
+                start_unix_us: 0,
+                dur_ns,
+                spans: Vec::new(),
+            })
+        };
+        sink.record(mk("fast", 10_000));
+        sink.record(mk("slow", 5_000_000));
+        let log = sink.slow_log();
+        assert_eq!(log.len(), 1, "{log:?}");
+        assert!(log[0].contains("slow"), "{log:?}");
+        assert_eq!(sink.slow_op_count(), 1);
+        sink.clear();
+        assert!(sink.recent().is_empty() && sink.slow_log().is_empty());
+    }
+
+    #[test]
+    fn report_lists_counters() {
+        let r = report();
+        for key in ["telemetry.enabled", "telemetry.traces_recorded", "telemetry.slow_ops"] {
+            assert!(r.contains(key), "{r}");
+        }
+    }
+}

@@ -16,10 +16,12 @@
 //!   `cache: false` control run never leaks its bypass past the harness.
 
 use crate::objectstore::ObjectStoreHandle;
+use crate::telemetry::FinishedTrace;
 use crate::util::prng::Pcg64;
 use crate::util::{RunStats, Stopwatch};
 use crate::Result;
 use anyhow::ensure;
+use std::sync::{Arc, Mutex};
 
 /// Run `clients` closed-loop threads for `iters_per_client` operations
 /// each. Every call gets a per-client RNG seeded `seed ^ (salt + client)`
@@ -86,6 +88,46 @@ pub fn quantiles(latencies: &[f64]) -> Quantiles {
         p50: stats.percentile(50.0),
         p95: stats.percentile(95.0),
         p99: stats.percentile(99.0),
+    }
+}
+
+/// Deterministic per-client trace sampling: client `client` traces its
+/// iteration `iter` when `(iter + client) % every == 0`. The `client`
+/// offset staggers the samples so concurrent clients never all pay the
+/// (forced) trace on the same iteration; `every = 0` disables sampling.
+pub fn sample_trace(client: usize, iter: usize, every: usize) -> bool {
+    every > 0 && (iter + client) % every == 0
+}
+
+/// Slowest-sampled-trace tracker shared across closed-loop clients: each
+/// client offers its sampled `(latency, trace)` pairs and the worst one
+/// survives for the harness's p99-outlier dump.
+#[derive(Default)]
+pub struct WorstTrace {
+    slot: Mutex<Option<(f64, Arc<FinishedTrace>)>>,
+}
+
+impl WorstTrace {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Keep `trace` if it is the slowest offered so far.
+    pub fn offer(&self, secs: f64, trace: Arc<FinishedTrace>) {
+        let mut slot = self.slot.lock().unwrap();
+        let worse = match &*slot {
+            Some((best, _)) => secs > *best,
+            None => true,
+        };
+        if worse {
+            *slot = Some((secs, trace));
+        }
+    }
+
+    /// The slowest `(latency, trace)` pair offered, clearing the tracker.
+    pub fn take(&self) -> Option<(f64, Arc<FinishedTrace>)> {
+        self.slot.lock().unwrap().take()
     }
 }
 
@@ -162,6 +204,37 @@ mod tests {
         assert!((q.mean - 50.5).abs() < 1e-9);
         let empty = quantiles(&[]);
         assert_eq!(empty.p99, 0.0);
+    }
+
+    #[test]
+    fn trace_sampling_is_staggered_and_gated() {
+        assert!(sample_trace(0, 0, 4));
+        assert!(!sample_trace(1, 0, 4), "clients stagger");
+        assert!(sample_trace(1, 3, 4));
+        assert!(!sample_trace(0, 0, 0), "every = 0 disables sampling");
+        let hits = (0..40).filter(|&i| sample_trace(2, i, 8)).count();
+        assert_eq!(hits, 5, "one sample per `every` iterations");
+    }
+
+    #[test]
+    fn worst_trace_keeps_the_slowest() {
+        let w = WorstTrace::new();
+        assert!(w.take().is_none());
+        let t = |ns: u64| {
+            std::sync::Arc::new(crate::telemetry::FinishedTrace {
+                name: "op".into(),
+                start_unix_us: 0,
+                dur_ns: ns,
+                spans: Vec::new(),
+            })
+        };
+        w.offer(0.5, t(1));
+        w.offer(0.1, t(2));
+        w.offer(0.9, t(3));
+        let (secs, trace) = w.take().expect("one survives");
+        assert_eq!(secs, 0.9);
+        assert_eq!(trace.dur_ns, 3);
+        assert!(w.take().is_none(), "take clears the slot");
     }
 
     #[test]

@@ -17,11 +17,14 @@
 use super::driver::{self, CacheModeGuard};
 use crate::coordinator::{Coordinator, IngestJob};
 use crate::jsonx::Json;
+use crate::telemetry::FinishedTrace;
 use crate::tensor::Slice;
 use crate::util::prng::Zipf;
 use crate::util::Stopwatch;
 use crate::Result;
 use anyhow::ensure;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Knobs for one serve run.
 #[derive(Debug, Clone)]
@@ -48,6 +51,12 @@ pub struct ServeParams {
     pub seed: u64,
     /// Storage layout for the served tensors.
     pub layout: String,
+    /// Force-trace one request per client every this many iterations
+    /// (staggered across clients); the slowest sampled trace survives
+    /// into the report for the p99-outlier dump. `0` disables sampling;
+    /// sampling is also skipped entirely while tracing is runtime-off,
+    /// so the telemetry-off control run stays pure.
+    pub trace_every: usize,
 }
 
 impl ServeParams {
@@ -63,6 +72,7 @@ impl ServeParams {
             warmup: true,
             seed: 7,
             layout: "COO".into(),
+            trace_every: 8,
         }
     }
 
@@ -78,6 +88,7 @@ impl ServeParams {
             warmup: true,
             seed: 7,
             layout: "COO".into(),
+            trace_every: 8,
         }
     }
 
@@ -93,6 +104,7 @@ impl ServeParams {
             warmup: true,
             seed: 7,
             layout: "COO".into(),
+            trace_every: 16,
         }
     }
 }
@@ -127,6 +139,17 @@ pub struct ServeReport {
     pub cache_hits: u64,
     /// Block-cache misses during the measured phase (process-global delta).
     pub cache_misses: u64,
+    /// Requests force-traced during the measured phase (see
+    /// [`ServeParams::trace_every`]).
+    pub traces_sampled: u64,
+    /// Latency of the slowest sampled request (0 when none was sampled).
+    pub worst_trace_secs: f64,
+    /// Span tree of the slowest sampled request.
+    pub worst_trace: Option<Arc<FinishedTrace>>,
+    /// Measured-phase growth of the coordinator's metrics registry
+    /// ([`crate::coordinator::Metrics::delta_since`]) — warmup activity
+    /// excluded, deterministic line order.
+    pub metrics_delta: String,
 }
 
 impl ServeReport {
@@ -146,14 +169,19 @@ impl ServeReport {
             ("bytes_read", Json::Int(self.bytes_read as i64)),
             ("cache_hits", Json::Int(self.cache_hits as i64)),
             ("cache_misses", Json::Int(self.cache_misses as i64)),
+            ("traces_sampled", Json::Int(self.traces_sampled as i64)),
+            ("worst_trace_secs", Json::from(self.worst_trace_secs)),
         ])
         .dump()
     }
 
-    /// Human-readable one-run summary.
+    /// Human-readable one-run summary. When the measured p99 is a true
+    /// outlier (> 3x p50) and a sampled trace is available, the slowest
+    /// request's span tree is appended — the "why was p99 bad" answer
+    /// without re-running anything.
     pub fn summary(&self) -> String {
         let ms = |s: f64| format!("{:.3}ms", s * 1e3);
-        format!(
+        let mut out = format!(
             "serve: {} clients x {} req (cache {}) in {:.3}s -> {:.0} req/s\n  \
              latency mean {} p50 {} p95 {} p99 {}\n  \
              store: {} GETs, {} bytes; block cache: {} hits / {} misses",
@@ -170,7 +198,28 @@ impl ServeReport {
             self.bytes_read,
             self.cache_hits,
             self.cache_misses,
-        )
+        );
+        if !self.metrics_delta.is_empty() {
+            out.push_str("\n  measured-phase metrics delta:");
+            for line in self.metrics_delta.lines() {
+                out.push_str("\n    ");
+                out.push_str(line);
+            }
+        }
+        if let Some(trace) = &self.worst_trace {
+            if self.p50_secs > 0.0 && self.p99_secs > 3.0 * self.p50_secs {
+                out.push_str(&format!(
+                    "\n  p99 outlier ({} > 3x p50 {}): slowest sampled request",
+                    ms(self.p99_secs),
+                    ms(self.p50_secs)
+                ));
+                for line in crate::telemetry::export::render_tree(trace).lines() {
+                    out.push_str("\n    ");
+                    out.push_str(line);
+                }
+            }
+        }
+        out
     }
 }
 
@@ -220,20 +269,36 @@ pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<Ser
     let (get0, _, _, bytes0, _) = store.stats().snapshot();
     let hits0 = crate::serving::block_cache().hits();
     let misses0 = crate::serving::block_cache().misses();
+    // Registry snapshot after warmup: the report's delta is the measured
+    // phase only, however much the warmup loop above moved the counters.
+    let metrics0 = c.metrics().snapshot();
     let pick_tensor = Zipf::new(ids.len(), p.zipf_s);
     let pick_slice = Zipf::new(p.dim0, p.zipf_s);
+    let worst = driver::WorstTrace::new();
+    let sampled = AtomicU64::new(0);
     let (latencies, wall) = driver::run_closed_loop(
         p.clients,
         p.requests_per_client,
         p.seed,
         0x5EB5_E001,
-        |_, _, rng| {
+        |client, iter, rng| {
             let id = &ids[pick_tensor.sample(rng)];
             let d = pick_slice.sample(rng);
             let req = Stopwatch::start();
-            let out = c.read_slice(id, &Slice::index(d))?;
-            std::hint::black_box(&out);
-            Ok(req.secs())
+            // Sampled requests force a trace; the gate on the runtime
+            // flag keeps the telemetry-off control run trace-free.
+            if crate::telemetry::enabled() && driver::sample_trace(client, iter, p.trace_every) {
+                let (out, trace) = c.read_slice_traced(id, &Slice::index(d))?;
+                std::hint::black_box(&out);
+                let secs = req.secs();
+                sampled.fetch_add(1, Ordering::Relaxed);
+                worst.offer(secs, trace);
+                Ok(secs)
+            } else {
+                let out = c.read_slice(id, &Slice::index(d))?;
+                std::hint::black_box(&out);
+                Ok(req.secs())
+            }
         },
     )?;
 
@@ -245,6 +310,11 @@ pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<Ser
     let (get1, _, _, bytes1, _) = store.stats().snapshot();
     let requests = latencies.len() as u64;
     c.metrics().counter("serve.requests").add(requests);
+    let metrics_delta = c.metrics().delta_since(&metrics0);
+    let (worst_trace_secs, worst_trace) = match worst.take() {
+        Some((secs, trace)) => (secs, Some(trace)),
+        None => (0.0, None),
+    };
     Ok(ServeReport {
         clients: p.clients,
         requests,
@@ -259,6 +329,10 @@ pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<Ser
         bytes_read: bytes1 - bytes0,
         cache_hits: crate::serving::block_cache().hits() - hits0,
         cache_misses: crate::serving::block_cache().misses() - misses0,
+        traces_sampled: sampled.load(Ordering::Relaxed),
+        worst_trace_secs,
+        worst_trace,
+        metrics_delta,
     })
 }
 
@@ -303,10 +377,22 @@ mod tests {
         assert!(r.p50_secs <= r.p95_secs && r.p95_secs <= r.p99_secs);
         assert_eq!(c.metrics().counter("serve.requests").get(), 20);
         assert_eq!(c.metrics().histogram("serve.request_secs").count(), 20);
+        // The metrics delta covers exactly the measured phase — the 20
+        // requests counted above, never the warmup's reads.
+        assert!(r.metrics_delta.contains("serve.requests +20"), "{}", r.metrics_delta);
+        assert!(r.metrics_delta.contains("serve.request_secs count=+20"), "{}", r.metrics_delta);
+        // Sampling is bounded by the request count (it may be zero if a
+        // concurrent test briefly flipped the runtime tracing flag off).
+        assert!(r.traces_sampled <= r.requests);
+        if r.traces_sampled > 0 {
+            assert!(r.worst_trace.is_some());
+            assert!(r.worst_trace_secs > 0.0);
+        }
         // JSON report round-trips through the crate's own parser.
         let j = crate::jsonx::parse(&r.to_json()).unwrap();
         assert_eq!(j.get("requests").and_then(|v| v.as_i64()), Some(20));
         assert_eq!(j.get("cache_enabled").and_then(|v| v.as_bool()), Some(true));
+        assert!(j.get("traces_sampled").and_then(|v| v.as_i64()).is_some());
         assert!(r.summary().contains("req/s"));
     }
 

@@ -1,0 +1,134 @@
+//! Telemetry-tier acceptance tests: per-operation span trees make the
+//! serving invariants checkable **per request**, not just in aggregate —
+//!
+//! * a cold sliced read pays GETs attributed under its fetch/plan spans;
+//!   the same request warm shows ZERO GET events under its fetch spans
+//!   and cache hits instead;
+//! * a cold search pays posting-list GETs under its scan span; warm, the
+//!   scan is served from the block cache;
+//! * an append's trace attributes encode, upload (with its PUT batches)
+//!   and commit to their own spans;
+//! * the Chrome trace_event export of real operations validates
+//!   structurally (nesting, span references, GET-under-fetch).
+
+use delta_tensor::coordinator::{Coordinator, IngestJob};
+use delta_tensor::formats::TensorData;
+use delta_tensor::index::{self, BuildParams, IvfIndex};
+use delta_tensor::prelude::*;
+use delta_tensor::telemetry::{export, EventKind, Trace};
+use delta_tensor::workload;
+
+fn sparse_corpus() -> Coordinator {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    let c = Coordinator::new(table, 2, 8);
+    let data = workload::generic_sparse(3, &[16, 10, 10], 0.05).unwrap();
+    c.submit(IngestJob { id: "x".into(), layout: "COO".into(), data: data.into() });
+    assert!(c.drain().is_empty());
+    c
+}
+
+/// Store an `n × dim` clustered f32 matrix as FTSF row-chunks.
+fn store_matrix(table: &DeltaTable, id: &str, seed: u64, n: usize, dim: usize) {
+    let data: TensorData = workload::embedding_like(seed, n, dim, 4, 0.05).into();
+    let fmt = FtsfFormat { rows_per_group: 64, rows_per_file: 256, ..FtsfFormat::new(1) };
+    fmt.write(table, id, &data).unwrap();
+}
+
+#[test]
+fn cold_read_pays_gets_under_fetch_warm_read_pays_none() {
+    let c = sparse_corpus();
+    let (cold_out, cold) = c.read_slice_traced("x", &Slice::index(2)).unwrap();
+    let (warm_out, warm) = c.read_slice_traced("x", &Slice::index(2)).unwrap();
+    assert_eq!(cold_out.to_dense().unwrap(), warm_out.to_dense().unwrap());
+
+    // The trace names its phases: plan (layout discovery), fetch, decode.
+    assert_eq!(cold.name, "read_slice");
+    for name in ["plan", "fetch", "decode"] {
+        assert!(cold.spans.iter().any(|s| s.name == name), "no {name:?} span: {cold:#?}");
+    }
+
+    // Cold: the data rides the wire, attributed under the fetch spans.
+    assert!(cold.event_count(EventKind::Get) >= 1, "cold read must GET: {cold:#?}");
+    assert!(
+        cold.event_count_under("fetch", EventKind::Get) >= 1,
+        "cold data GETs attribute to fetch spans: {cold:#?}"
+    );
+    assert!(cold.event_bytes(EventKind::Get) > 0);
+
+    // Warm: the identical request is served entirely from cache — zero
+    // GET events under the fetch spans (the acceptance invariant), zero
+    // anywhere, and the same blocks attributed as cache hits.
+    assert_eq!(
+        warm.event_count_under("fetch", EventKind::Get),
+        0,
+        "warm fetch spans must show zero GETs: {warm:#?}"
+    );
+    assert_eq!(warm.event_count(EventKind::Get), 0, "{warm:#?}");
+    assert!(
+        warm.event_count_under("fetch", EventKind::CacheHit) >= 1,
+        "warm blocks attribute as cache hits: {warm:#?}"
+    );
+
+    // The Chrome export of both real traces validates structurally.
+    let doc = export::chrome_trace_json(&[cold, warm]);
+    let back = delta_tensor::jsonx::parse(&doc.dump()).unwrap();
+    let sum = export::validate_chrome_trace(&back).unwrap();
+    assert_eq!(sum.traces, 2);
+    assert!(sum.spans >= 6, "{sum:?}");
+    assert!(sum.gets_under_fetch >= 1, "{sum:?}");
+}
+
+#[test]
+fn search_trace_attributes_cold_scan_gets_and_warm_cache_hits() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_matrix(&table, "vecs", 11, 600, 8);
+    index::build(&table, "vecs", &BuildParams { k: 8, seed: 11, ..Default::default() }).unwrap();
+    let query = index::load_row(&table, "vecs", 0).unwrap();
+
+    let run = |q: &[f32]| {
+        let t = Trace::start_forced("search");
+        let ivf = IvfIndex::open(&table.with_span(t.root()), "vecs").unwrap();
+        let hits = ivf.search_with(q, 5, 0, 0).unwrap();
+        (hits, t.finish().unwrap())
+    };
+    let (cold_hits, cold) = run(&query);
+    let (warm_hits, warm) = run(&query);
+    assert_eq!(cold_hits[0].row, 0, "query row ranks first");
+    assert_eq!(cold_hits.len(), warm_hits.len());
+
+    for name in ["probe", "scan"] {
+        assert!(cold.spans.iter().any(|s| s.name == name), "no {name:?} span: {cold:#?}");
+    }
+    assert!(
+        cold.event_count_under("scan", EventKind::Get) >= 1,
+        "cold posting lists ride the wire under the scan span: {cold:#?}"
+    );
+    assert_eq!(
+        warm.event_count_under("scan", EventKind::Get),
+        0,
+        "warm posting lists come from the block cache: {warm:#?}"
+    );
+    assert!(
+        warm.event_count_under("scan", EventKind::CacheHit) >= 1,
+        "warm scan attributes cache hits: {warm:#?}"
+    );
+}
+
+#[test]
+fn append_trace_attributes_encode_upload_commit() {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "t").unwrap();
+    store_matrix(&table, "vecs", 7, 200, 8);
+    let c = Coordinator::new(table, 2, 8);
+    let rows: TensorData = workload::embedding_like(9, 8, 8, 4, 0.05).into();
+    let (version, trace) = c.append_traced("vecs", &rows).unwrap();
+    assert!(version > 0);
+    assert_eq!(trace.name, "append");
+    for name in ["encode", "upload", "commit"] {
+        assert!(trace.spans.iter().any(|s| s.name == name), "no {name:?} span: {trace:#?}");
+    }
+    assert!(
+        trace.event_count_under("upload", EventKind::Put) >= 1,
+        "part uploads attribute PUT events to the upload span: {trace:#?}"
+    );
+    assert!(trace.event_bytes(EventKind::Put) > 0);
+}
