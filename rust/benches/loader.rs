@@ -1,0 +1,55 @@
+//! Training-loader bench: the closed-loop shuffled-epoch workload of
+//! `workload::loader`, streamed twice over a fresh simulated cloud store —
+//! once through the planning + prefetching `DataLoader`, once through a
+//! naive per-sample sequential reader visiting the same shuffled order —
+//! and compared on samples/s, time-to-first-batch, stall fraction, and
+//! cold/warm-epoch GET counts.
+//!
+//! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
+//! `DT_BENCH_OUT` (JSON report path, default `BENCH_loader.json`). CI runs
+//! the tiny scale and gates `loader.samples_per_sec` (relative floor),
+//! `loader.time_to_first_batch_ms` (absolute ceiling) and `speedup`
+//! (absolute floor) against `bench_baselines/loader.json`.
+
+use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
+use delta_tensor::coordinator::Coordinator;
+use delta_tensor::prelude::*;
+use delta_tensor::workload::loader::{run_loader_bench, LoaderParams, LoaderReport};
+
+fn row(r: &LoaderReport) -> Row {
+    Row {
+        label: r.mode.clone(),
+        cells: vec![
+            format!("{:.0}", r.samples_per_sec),
+            format!("{:.1}ms", r.time_to_first_batch_ms),
+            fmt_secs(r.batch_mean_secs),
+            fmt_secs(r.batch_p95_secs),
+            format!("{:.0}%", r.stall_frac * 100.0),
+            r.gets_cold.to_string(),
+            r.gets_warm.to_string(),
+        ],
+    }
+}
+
+fn main() {
+    let params = match benchkit::scale() {
+        Scale::Tiny => LoaderParams::tiny(),
+        Scale::Small => LoaderParams::small(),
+        Scale::Paper => LoaderParams::paper(),
+    };
+    let store = ObjectStoreHandle::sim_mem(benchkit::net());
+    let table = DeltaTable::create(store, "loader").expect("fresh table");
+    let c = Coordinator::new(table, 4, 32);
+    let cmp = run_loader_bench(&c, &params).expect("loader bench");
+
+    print_table(
+        "loader: shuffled epoch streaming, DataLoader vs naive sequential reads",
+        &["mode", "samples/s", "first batch", "mean", "p95", "stalls", "cold GETs", "warm GETs"],
+        &[row(&cmp.loader), row(&cmp.naive)],
+    );
+    println!("\n{}", cmp.summary());
+
+    let out = std::env::var("DT_BENCH_OUT").unwrap_or_else(|_| "BENCH_loader.json".to_string());
+    std::fs::write(&out, cmp.to_json()).expect("write bench report");
+    println!("wrote {out}");
+}

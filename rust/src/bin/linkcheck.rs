@@ -1,0 +1,249 @@
+//! CI docs validator: checks the repo's markdown files for broken
+//! **relative** links and heading anchors.
+//!
+//! ```text
+//! cargo run --release --bin linkcheck -- ../ARCHITECTURE.md README.md
+//! ```
+//!
+//! For every `[text](target)` outside fenced code blocks:
+//!
+//! * `http(s)://` and `mailto:` targets are skipped (CI runs offline);
+//! * a relative path target must exist on disk, resolved against the
+//!   linking file's directory;
+//! * a `#anchor` (own-file or on a linked `.md` file) must match a
+//!   GitHub-style slug of one of that file's headings.
+//!
+//! Prints every broken link and exits non-zero if any. Exercised by the
+//! CI docs job next to `cargo doc`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// One extracted link: 1-based source line and the raw target.
+#[derive(Debug, PartialEq)]
+struct Link {
+    line: usize,
+    target: String,
+}
+
+/// Extract `[text](target)` targets outside ``` fences. Good enough for
+/// the repo's docs — images (`![..](..)`) are checked like any link, and
+/// angle-bracketed targets (`<...>`) are unwrapped.
+fn extract_links(src: &str) -> Vec<Link> {
+    let mut out = Vec::new();
+    let mut fenced = false;
+    for (i, line) in src.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            fenced = !fenced;
+            continue;
+        }
+        if fenced {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut j = 0;
+        while let Some(k) = line[j..].find("](") {
+            let start = j + k + 2;
+            let Some(rel_end) = line[start..].find(')') else { break };
+            // Only count it when the `](` closes a real `[text` opener.
+            let opens = line[..j + k].rfind('[').is_some();
+            let raw = line[start..start + rel_end].trim();
+            let target = if let Some(t) = raw.strip_prefix('<') {
+                // Angle-bracketed targets may contain spaces.
+                t.strip_suffix('>').unwrap_or(t)
+            } else if let Some(sp) = raw.find(char::is_whitespace) {
+                // Drop an optional `"title"` suffix.
+                &raw[..sp]
+            } else {
+                raw
+            };
+            if opens && !target.is_empty() {
+                out.push(Link { line: i + 1, target: target.to_string() });
+            }
+            j = start + rel_end;
+            if j >= bytes.len() {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// GitHub-style heading slug: lowercase, backticks/punctuation stripped,
+/// spaces become hyphens (hyphens and underscores survive).
+fn slugify(heading: &str) -> String {
+    let mut s = String::new();
+    for ch in heading.trim().chars() {
+        if ch.is_alphanumeric() {
+            s.extend(ch.to_lowercase());
+        } else if ch == ' ' || ch == '-' {
+            s.push('-');
+        } else if ch == '_' {
+            s.push('_');
+        }
+        // Everything else (backticks, punctuation, emoji) is dropped.
+    }
+    s
+}
+
+/// Anchor set of one markdown document: every ATX heading's slug, with
+/// GitHub's `-1`, `-2` suffixes for duplicates.
+fn heading_anchors(src: &str) -> Vec<String> {
+    let mut seen: HashMap<String, usize> = HashMap::new();
+    let mut out = Vec::new();
+    let mut fenced = false;
+    for line in src.lines() {
+        if line.trim_start().starts_with("```") {
+            fenced = !fenced;
+            continue;
+        }
+        if fenced || !line.starts_with('#') {
+            continue;
+        }
+        let text = line.trim_start_matches('#');
+        if !line[..line.len() - text.len()].chars().all(|c| c == '#') || !text.starts_with(' ') {
+            continue;
+        }
+        let slug = slugify(text);
+        let n = seen.entry(slug.clone()).or_insert(0);
+        out.push(if *n == 0 { slug.clone() } else { format!("{slug}-{n}") });
+        *n += 1;
+    }
+    out
+}
+
+/// Check every link of `file`; push `file:line: message` errors.
+fn check_file(file: &Path, errors: &mut Vec<String>) {
+    let src = match std::fs::read_to_string(file) {
+        Ok(s) => s,
+        Err(e) => {
+            errors.push(format!("{}: unreadable: {e}", file.display()));
+            return;
+        }
+    };
+    let dir = file.parent().unwrap_or_else(|| Path::new("."));
+    for link in extract_links(&src) {
+        let t = &link.target;
+        if t.starts_with("http://") || t.starts_with("https://") || t.starts_with("mailto:") {
+            continue;
+        }
+        let (path_part, anchor) = match t.split_once('#') {
+            Some((p, a)) => (p, Some(a)),
+            None => (t.as_str(), None),
+        };
+        let target_file: PathBuf =
+            if path_part.is_empty() { file.to_path_buf() } else { dir.join(path_part) };
+        if !target_file.exists() {
+            errors.push(format!(
+                "{}:{}: broken link {t:?}: {} does not exist",
+                file.display(),
+                link.line,
+                target_file.display()
+            ));
+            continue;
+        }
+        if let Some(anchor) = anchor {
+            if target_file.extension().and_then(|e| e.to_str()) != Some("md") {
+                continue;
+            }
+            let target_src = if target_file == file {
+                src.clone()
+            } else {
+                match std::fs::read_to_string(&target_file) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        errors.push(format!(
+                            "{}:{}: {t:?}: unreadable target: {e}",
+                            file.display(),
+                            link.line
+                        ));
+                        continue;
+                    }
+                }
+            };
+            if !heading_anchors(&target_src).iter().any(|a| a == anchor) {
+                errors.push(format!(
+                    "{}:{}: broken anchor {t:?}: no heading slugs to #{anchor} in {}",
+                    file.display(),
+                    link.line,
+                    target_file.display()
+                ));
+            }
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let files: Vec<String> = std::env::args().skip(1).collect();
+    if files.is_empty() {
+        eprintln!("usage: linkcheck FILE.md [FILE.md ...]");
+        return ExitCode::from(2);
+    }
+    let mut errors = Vec::new();
+    for f in &files {
+        check_file(Path::new(f), &mut errors);
+    }
+    if errors.is_empty() {
+        println!("linkcheck: {} file(s) clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        for e in &errors {
+            eprintln!("{e}");
+        }
+        eprintln!("linkcheck: {} broken link(s)", errors.len());
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_links_outside_fences() {
+        let src = "see [a](x.md) and [b](y.md#sec \"title\")\n\
+                   ```\n[ignored](gone.md)\n```\n\
+                   ![img](d.png) and [angled](<z path.md>)\n";
+        let links: Vec<String> = extract_links(src).into_iter().map(|l| l.target).collect();
+        assert_eq!(links, ["x.md", "y.md#sec", "d.png", "z path.md"]);
+        assert_eq!(extract_links("no links here ]( nope").len(), 0);
+    }
+
+    #[test]
+    fn slugs_match_github_style() {
+        assert_eq!(slugify("Life of a read"), "life-of-a-read");
+        assert_eq!(slugify("The `DataLoader` API"), "the-dataloader-api");
+        assert_eq!(slugify("DT_* configuration"), "dt_-configuration");
+        assert_eq!(slugify("Read engine (PR 1)"), "read-engine-pr-1");
+    }
+
+    #[test]
+    fn duplicate_headings_get_suffixes() {
+        let src = "# One\n## Two\n## Two\ntext\n```\n# not a heading\n```\n#also not\n";
+        assert_eq!(heading_anchors(src), ["one", "two", "two-1"]);
+    }
+
+    #[test]
+    fn check_file_reports_broken_targets() {
+        let dir = std::env::temp_dir().join(format!("dt-linkcheck-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let other = dir.join("other.md");
+        std::fs::write(&other, "# Real Section\n").unwrap();
+        let doc = dir.join("doc.md");
+        std::fs::write(
+            &doc,
+            "# Doc\n[ok](other.md#real-section) [self](#doc)\n\
+             [gone](missing.md) [bad](other.md#nope)\n\
+             [web](https://example.com/x)\n",
+        )
+        .unwrap();
+        let mut errors = Vec::new();
+        check_file(&doc, &mut errors);
+        assert_eq!(errors.len(), 2, "{errors:?}");
+        assert!(errors[0].contains("missing.md"), "{errors:?}");
+        assert!(errors[1].contains("#nope"), "{errors:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

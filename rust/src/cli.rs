@@ -14,7 +14,8 @@
 //!   vacuum     delete unreferenced data objects
 //!   index      ANN index over a stored vector matrix     (index build / index status)
 //!   search     top-k nearest stored vectors              (--id, --query | --row)
-//!   bench      load harnesses                            (bench serve|ingest|search|maintain)
+//!   load       stream shuffled training batches          (--id | --populate N, --epochs)
+//!   bench      load harnesses                  (bench serve|ingest|search|maintain|loader)
 //!   trace      run ONE op force-traced, print its span tree (trace read|slice|search|append)
 //!   stats      metrics registry + tier counters          (--format prometheus|json)
 //! ```
@@ -152,6 +153,7 @@ pub fn run(args: &Args) -> Result<String> {
         "vacuum" => cmd_vacuum(args),
         "index" => cmd_index(args),
         "search" => cmd_search(args),
+        "load" => cmd_load(args),
         "bench" => cmd_bench(args),
         "trace" => cmd_trace(args),
         "stats" => cmd_stats(args),
@@ -190,6 +192,14 @@ COMMANDS
   search    --id NAME (--query V1,V2,... | --row N) [--k N] [--nprobe N]
             [--rerank N]         (--rerank: exact re-rank depth on a PQ index;
             0 = max(4k, 32), or the DT_RERANK env var when set)
+  load      stream shuffled training batches from a stored 2-D+ tensor
+            (--id NAME | --populate N [--dim D])  [--batch N] [--epochs N]
+            [--seed N] [--depth N] [--gap N] [--checkpoint-at N]
+            (seeded epoch shuffle + coalesced slice reads + prefetch;
+            --populate writes a demo f32 corpus first; --checkpoint-at N
+            stops epoch 0 after N batches, then resumes from the
+            checkpoint to demonstrate mid-epoch recovery;
+            DT_PREFETCH_MB bounds decoded prefetch bytes, default 64)
   bench serve                    closed-loop Zipfian serving load harness
             [--clients N] [--requests N] [--tensors N] [--dim0 N]
             [--zipf S] [--no-cache] [--warmup-off] [--layout NAME]
@@ -207,6 +217,10 @@ COMMANDS
             [--optimize-every N] [--rows N] [--dim N] [--clusters N]
             [--pool N] [--k N] [--nprobe N] [--zipf S] [--rebuild-control]
             [--no-cache] [--pq] [--pq-m M] [--seed N] [--json PATH]
+  bench loader                   shuffled-epoch streaming harness: the
+            prefetching DataLoader vs a naive per-sample sequential reader
+            [--samples N] [--dim N] [--batch N] [--epochs N] [--depth N]
+            [--gap N] [--seed N] [--json PATH]
   trace read|slice|search|append  run ONE operation force-traced (ignores
             DT_TRACE) and print its span tree with per-span I/O attribution
             (GET/PUT batches, bytes, cache hits, commit retries); flags
@@ -416,10 +430,11 @@ fn cmd_bench(args: &Args) -> Result<String> {
         "ingest" => cmd_bench_ingest(args),
         "search" => cmd_bench_search(args),
         "maintain" => cmd_bench_maintain(args),
+        "loader" => cmd_bench_loader(args),
         other => {
             bail!(
-                "unknown bench {other:?} (try `bench serve`, `bench ingest`, `bench search` \
-                 or `bench maintain`; figure benches run via `cargo bench`)"
+                "unknown bench {other:?} (try `bench serve`, `bench ingest`, `bench search`, \
+                 `bench maintain` or `bench loader`; figure benches run via `cargo bench`)"
             )
         }
     }
@@ -532,6 +547,94 @@ fn cmd_search(args: &Args) -> Result<String> {
     }
     out.push_str(&format!("searched in {:.3}ms\n", secs * 1e3));
     Ok(out)
+}
+
+/// `load`: stream shuffled training batches from a stored 2-D+ tensor
+/// through the loader tier and print the achieved samples/s. With
+/// `--populate N` a demo `[N, dim]` f32 corpus is written first (so the
+/// verb is self-contained on a fresh store); with `--checkpoint-at N`
+/// epoch 0 stops after N batches and resumes from the checkpoint — the
+/// mid-epoch recovery path a restarted training job takes.
+fn cmd_load(args: &Args) -> Result<String> {
+    let table = open_table_named(args, "loader-bench")?;
+    let c = Coordinator::new(table, args.opt_usize("workers", 4)?, 32);
+    let id = if args.has("populate") {
+        let p = workload::loader::LoaderParams {
+            samples: args.opt_usize("populate", 256)?,
+            dim: args.opt_usize("dim", 64)?,
+            batch_size: args.opt_usize("batch", 32)?,
+            seed: args.opt_usize("seed", 7)? as u64,
+            ..workload::loader::LoaderParams::tiny()
+        };
+        workload::loader::populate_loader_corpus(&c, &p)?
+    } else {
+        args.req("id")?.to_string()
+    };
+    let opts = crate::loader::LoaderOptions {
+        batch_size: args.opt_usize("batch", 32)?,
+        seed: args.opt_usize("seed", 7)? as u64,
+        depth: args.opt_usize("depth", 2)?,
+        prefetch_bytes: None,
+        coalesce_gap: args.opt_usize("gap", 8)?,
+    };
+    let loader = c.loader(&id, opts)?;
+    let epochs = args.opt_usize("epochs", 1)?.max(1);
+    let stop_at = args.opt_usize("checkpoint-at", 0)?;
+    let sw = crate::util::Stopwatch::start();
+    let (mut batches, mut samples) = (0u64, 0u64);
+    let mut resumed = String::new();
+    for e in 0..epochs {
+        let mut it = loader.epoch(e as u64)?;
+        if e == 0 && stop_at > 0 {
+            // Demonstrate mid-epoch recovery: stop, checkpoint, resume.
+            for _ in 0..stop_at {
+                let Some(b) = it.next_batch()? else { break };
+                batches += 1;
+                samples += b.rows.len() as u64;
+            }
+            let ckpt = it.checkpoint();
+            resumed = format!(
+                "checkpointed epoch {} at cursor {} and resumed\n",
+                ckpt.epoch, ckpt.cursor
+            );
+            it = loader.resume(ckpt)?;
+        }
+        while let Some(b) = it.next_batch()? {
+            batches += 1;
+            samples += b.rows.len() as u64;
+        }
+    }
+    let secs = sw.secs();
+    Ok(format!(
+        "streamed {epochs} epoch(s) of {id} ({} samples x {:?}): {batches} batches, \
+         {samples} samples in {secs:.3}s -> {:.0} samples/s\n{resumed}{}",
+        loader.n_samples(),
+        loader.sample_shape(),
+        samples as f64 / secs.max(1e-9),
+        c.report()
+    ))
+}
+
+fn cmd_bench_loader(args: &Args) -> Result<String> {
+    let table = open_table_named(args, "loader-bench")?;
+    let c = Coordinator::new(table, args.opt_usize("workers", 4)?, 32);
+    let d = workload::loader::LoaderParams::tiny();
+    let params = workload::loader::LoaderParams {
+        samples: args.opt_usize("samples", d.samples)?,
+        dim: args.opt_usize("dim", d.dim)?,
+        batch_size: args.opt_usize("batch", d.batch_size)?,
+        epochs: args.opt_usize("epochs", d.epochs)?,
+        depth: args.opt_usize("depth", d.depth)?,
+        coalesce_gap: args.opt_usize("gap", d.coalesce_gap)?,
+        prefetch_bytes: None,
+        seed: args.opt_usize("seed", d.seed as usize)? as u64,
+    };
+    let report = workload::loader::run_loader_bench(&c, &params)?;
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing loader report to {path}"))?;
+    }
+    Ok(format!("{}\n{}", report.summary(), c.report()))
 }
 
 fn cmd_bench_search(args: &Args) -> Result<String> {
@@ -965,6 +1068,36 @@ mod tests {
         assert!(out.contains("maintain (incremental)"), "{out}");
         assert!(out.contains("index.appends"), "{out}");
         assert!(out.contains("index.folds"), "{out}");
+    }
+
+    #[test]
+    fn load_smoke() {
+        // Self-contained on a fresh mem store: --populate writes the demo
+        // corpus, --checkpoint-at exercises the mid-epoch resume path.
+        let out = run(&args(&[
+            "load", "--store", "mem", "--populate", "48", "--dim", "8", "--batch", "8",
+            "--epochs", "2", "--checkpoint-at", "2", "--seed", "5",
+        ]))
+        .unwrap();
+        assert!(out.contains("96 samples"), "{out}");
+        assert!(out.contains("12 batches"), "{out}");
+        assert!(out.contains("checkpointed epoch 0 at cursor 16"), "{out}");
+        assert!(out.contains("loader.batches"), "{out}");
+        // Without --populate the tensor must exist.
+        assert!(run(&args(&["load", "--store", "mem", "--id", "nope"])).is_err());
+    }
+
+    #[test]
+    fn bench_loader_smoke() {
+        let out = run(&args(&[
+            "bench", "loader", "--store", "mem", "--samples", "32", "--dim", "8", "--batch",
+            "8", "--epochs", "2", "--seed", "3",
+        ]))
+        .unwrap();
+        assert!(out.contains("samples/s"), "{out}");
+        assert!(out.contains("naive"), "{out}");
+        assert!(out.contains("loader is"), "{out}");
+        assert!(out.contains("loader.samples"), "{out}");
     }
 
     #[test]

@@ -110,12 +110,35 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// The shared worker pool. Ingestion and the training loader's
+    /// prefetcher both run on it, so loader backpressure and ingest
+    /// backpressure meet in one bounded queue.
+    pub(crate) fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Open a streaming [`DataLoader`](crate::loader::DataLoader) over a
+    /// stored 2-D+ tensor (leading dimension = sample axis). Convenience
+    /// for [`crate::loader::DataLoader::open`]; loader counters
+    /// (`loader.batches`, `loader.samples`, `loader.prefetch_hits`,
+    /// `loader.stalls`, `loader.bytes_prefetched`) land in this
+    /// coordinator's metrics registry.
+    pub fn loader(
+        &self,
+        id: &str,
+        opts: crate::loader::LoaderOptions,
+    ) -> Result<crate::loader::DataLoader<'_>> {
+        crate::loader::DataLoader::open(self, id, opts)
+    }
+
     /// Full metrics report: coordinator counters/histograms plus the read
     /// engine's counters (ranges coalesced, files pruned, cache hits), the
     /// serving tier's (block cache, single-flight, admission gate), the
     /// write engine's (parts encoded in parallel, PUT batches, staged
-    /// bytes, commit retries) and the index tier's (builds, searches,
-    /// probes, postings scanned).
+    /// bytes, commit retries), the index tier's (builds, searches,
+    /// probes, postings scanned) and — once a loader has run — the
+    /// training-loader tier's `loader.*` counters, which live in this
+    /// registry.
     pub fn report(&self) -> String {
         format!(
             "{}{}{}{}{}{}",

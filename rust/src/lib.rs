@@ -44,11 +44,16 @@
 //!   cache-hit attribution per span, Chrome-trace/JSONL export, and a
 //!   ring-buffered sink with a slow-op log. Always compiled, runtime
 //!   gated (`DT_TRACE`), overhead CI-gated at ≤5%.
+//! * [`loader`] — the streaming training-loader tier: epoch-oriented
+//!   shuffled batch streaming from stored tensors (seeded resumable
+//!   shuffle, chunk-coalescing read plans, double-buffered prefetch under
+//!   a `DT_PREFETCH_MB` byte budget with blocking backpressure).
 //! * [`workload`] — synthetic FFHQ-like, Uber-pickups-like and
 //!   embedding-like generators, plus the closed-loop serving, ingest,
-//!   vector-search and maintenance load harnesses ([`workload::serve`],
-//!   [`workload::ingest`], [`workload::search`], [`workload::maintain`])
-//!   over the shared [`workload::driver`] skeleton.
+//!   vector-search, maintenance and training-loader load harnesses
+//!   ([`workload::serve`], [`workload::ingest`], [`workload::search`],
+//!   [`workload::maintain`], [`workload::loader`]) over the shared
+//!   [`workload::driver`] skeleton.
 
 pub mod util;
 pub mod jsonx;
@@ -64,6 +69,7 @@ pub mod index;
 pub mod runtime;
 pub mod coordinator;
 pub mod telemetry;
+pub mod loader;
 pub mod workload;
 pub mod testing;
 pub mod benchkit;
@@ -78,6 +84,7 @@ pub mod prelude {
     };
     pub use crate::index::{IvfIndex, Neighbor};
     pub use crate::ingest::{TensorWriter, WritePlan};
+    pub use crate::loader::{Batch, Checkpoint, DataLoader, LoaderOptions};
     pub use crate::objectstore::{CostModel, ObjectStore, ObjectStoreHandle};
     pub use crate::tensor::{DType, DenseTensor, Slice, SparseCoo};
 }

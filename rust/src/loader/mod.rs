@@ -1,0 +1,418 @@
+//! The streaming training-loader tier: epoch-oriented shuffled batch
+//! streaming from stored tensors.
+//!
+//! This is the consumer-side tier every tier below it was built to serve —
+//! the paper's storage efficiency only pays off if stored tensors can feed
+//! a training loop at device speed. A [`DataLoader`] streams shuffled
+//! sample batches from any stored 2-D+ tensor (leading dimension = sample
+//! axis) in three stages, each riding an existing tier:
+//!
+//! 1. **Shuffle** ([`shuffle`]): a seeded Fisher–Yates permutation per
+//!    `(seed, epoch)` — bit-identical across runs and resumable mid-epoch
+//!    from a two-integer [`Checkpoint`].
+//! 2. **Plan** ([`plan`]): the permutation is grouped into per-batch read
+//!    plans whose sorted sample indices coalesce into contiguous dim-0
+//!    runs, so one [`read_slice`](crate::formats::TensorStore::read_slice)
+//!    through the PR 1 read engine serves many samples landing in the same
+//!    chunk or row group.
+//! 3. **Prefetch** ([`prefetch`]): a double-buffered prefetcher on the
+//!    shared [`WorkerPool`](crate::coordinator::WorkerPool) decodes up to
+//!    `depth` batches ahead of the consumer under a decoded-byte budget
+//!    (`DT_PREFETCH_MB`, default 64 MiB) with blocking backpressure, so
+//!    prefetch never blows the serving tier's memory budget.
+//!
+//! Every fetch rides the serving tier's block cache, so the second epoch
+//! of a corpus that fits in `DT_CACHE_MB` issues strictly fewer GETs than
+//! the first. Counters land in the coordinator's registry
+//! (`loader.{batches,samples,prefetch_hits,stalls,bytes_prefetched}`) and
+//! each phase is traced (`loader_epoch`: `shuffle`/`plan`; `loader_batch`:
+//! `fetch`/`decode`; `loader_yield`: consumer-side wait).
+//!
+//! ```no_run
+//! use delta_tensor::loader::{DataLoader, LoaderOptions};
+//! # fn run(c: &delta_tensor::coordinator::Coordinator) -> delta_tensor::Result<()> {
+//! let loader = DataLoader::open(c, "corpus", LoaderOptions::default())?;
+//! let mut epoch = loader.epoch(0)?;
+//! while let Some(batch) = epoch.next_batch()? {
+//!     // batch.data is [batch, ...sample dims] in shuffled order
+//!     println!("batch {}: {} samples", batch.index, batch.rows.len());
+//! }
+//! // Persist `epoch.checkpoint()` anywhere; resume with:
+//! let mut tail = loader.resume(epoch.checkpoint())?;
+//! assert!(tail.next_batch()?.is_none(), "that epoch was finished");
+//! # Ok(()) }
+//! ```
+//!
+//! See `examples/train_loop.rs` for the full write → load → checkpoint →
+//! resume walkthrough, and `ARCHITECTURE.md` ("life of a batch") for how a
+//! batch moves through the tiers.
+
+#![warn(missing_docs)]
+
+pub mod plan;
+pub mod prefetch;
+pub mod shuffle;
+
+pub use plan::BatchPlan;
+pub use shuffle::Checkpoint;
+
+use crate::coordinator::{discover_layout, format_by_name, Coordinator};
+use crate::formats::TensorStore;
+use crate::telemetry::Trace;
+use crate::tensor::{DType, DenseTensor};
+use crate::util::env_u64;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use prefetch::{BatchJob, PrefetchShared};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Default decoded-byte prefetch budget in MiB (`DT_PREFETCH_MB`).
+pub const DEFAULT_PREFETCH_MB: u64 = 64;
+
+/// Knobs for one [`DataLoader`].
+#[derive(Debug, Clone)]
+pub struct LoaderOptions {
+    /// Samples per yielded batch (the last batch of an epoch may be
+    /// short).
+    pub batch_size: usize,
+    /// Shuffle seed: same seed ⇒ bit-identical batch order.
+    pub seed: u64,
+    /// Batches fetched ahead of the consumer (2 = double-buffered).
+    pub depth: usize,
+    /// Decoded-byte prefetch budget; `None` reads `DT_PREFETCH_MB`
+    /// (default 64 MiB). At least one batch is always admitted, so a
+    /// budget below one batch degrades to synchronous fetching rather
+    /// than deadlocking.
+    pub prefetch_bytes: Option<u64>,
+    /// Bridge gaps of fewer than this many absent rows when coalescing a
+    /// batch's sorted sample indices into contiguous read runs (surplus
+    /// rows are fetched and dropped). `0` disables bridging.
+    pub coalesce_gap: usize,
+}
+
+impl Default for LoaderOptions {
+    fn default() -> Self {
+        Self { batch_size: 32, seed: 0, depth: 2, prefetch_bytes: None, coalesce_gap: 8 }
+    }
+}
+
+/// One yielded batch: `rows.len()` samples in shuffled order.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Epoch this batch belongs to.
+    pub epoch: u64,
+    /// Batch number within the epoch (stable across resume).
+    pub index: usize,
+    /// Global sample ids, in the order their rows appear in `data`.
+    pub rows: Vec<usize>,
+    /// `[rows.len(), ...sample dims]` tensor holding the samples.
+    pub data: DenseTensor,
+}
+
+/// An epoch-oriented streaming loader over one stored tensor.
+///
+/// Open with [`DataLoader::open`], then iterate epochs with
+/// [`DataLoader::epoch`] / [`DataLoader::resume`]. The loader resolves the
+/// tensor's layout and geometry once; every batch fetch then goes straight
+/// through the format's slice reader (read engine + serving tier) from
+/// pool workers.
+pub struct DataLoader<'a> {
+    coord: &'a Coordinator,
+    id: String,
+    fmt: Arc<dyn TensorStore + Send + Sync>,
+    dtype: DType,
+    shape: Vec<usize>,
+    sample_bytes: usize,
+    opts: LoaderOptions,
+    budget: u64,
+    peak_buffered: Arc<AtomicU64>,
+}
+
+impl<'a> DataLoader<'a> {
+    /// Open a loader over tensor `id`: discovers the layout, checks the
+    /// tensor is 2-D+ (leading dimension = sample axis), and resolves the
+    /// prefetch budget.
+    pub fn open(coord: &'a Coordinator, id: &str, opts: LoaderOptions) -> Result<Self> {
+        ensure!(opts.batch_size > 0, "loader batch_size must be positive");
+        ensure!(opts.depth > 0, "loader depth must be positive");
+        let layout = discover_layout(coord.table(), id)?;
+        let fmt: Arc<dyn TensorStore + Send + Sync> = Arc::from(format_by_name(&layout)?);
+        let info = crate::query::table_stats(coord.table())?
+            .into_iter()
+            .find(|t| t.id == id)
+            .ok_or_else(|| anyhow!("tensor {id:?} not found"))?;
+        ensure!(
+            info.shape.len() >= 2,
+            "loader needs a 2-D+ tensor (leading dim = sample axis); {id:?} has shape {:?}",
+            info.shape
+        );
+        let dtype = DType::parse(&info.dtype)?;
+        let sample_numel: usize = info.shape[1..].iter().product();
+        let sample_bytes = sample_numel * dtype.size();
+        ensure!(sample_bytes > 0, "{id:?} has zero-sized samples: shape {:?}", info.shape);
+        let budget = opts
+            .prefetch_bytes
+            .unwrap_or_else(|| env_u64("DT_PREFETCH_MB", DEFAULT_PREFETCH_MB) * 1024 * 1024);
+        Ok(Self {
+            coord,
+            id: id.to_string(),
+            fmt,
+            dtype,
+            shape: info.shape,
+            sample_bytes,
+            opts,
+            budget,
+            peak_buffered: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// Samples in the tensor (its leading-dimension extent).
+    pub fn n_samples(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Shape of one sample (the trailing dimensions).
+    pub fn sample_shape(&self) -> &[usize] {
+        &self.shape[1..]
+    }
+
+    /// Bytes per decoded sample.
+    pub fn sample_bytes(&self) -> usize {
+        self.sample_bytes
+    }
+
+    /// Batches per full epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n_samples().div_ceil(self.opts.batch_size)
+    }
+
+    /// The resolved decoded-byte prefetch budget.
+    pub fn prefetch_budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// High-water mark of decoded bytes parked in the prefetch buffer
+    /// across every epoch served so far — the backpressure invariant is
+    /// `max_buffered_bytes() <= max(prefetch_budget(), one batch)`.
+    pub fn max_buffered_bytes(&self) -> u64 {
+        self.peak_buffered.load(Ordering::Relaxed)
+    }
+
+    /// Start epoch `epoch` from its first batch.
+    pub fn epoch(&self, epoch: u64) -> Result<EpochIter<'_>> {
+        self.resume(Checkpoint::epoch_start(epoch))
+    }
+
+    /// Resume an epoch from a [`Checkpoint`]: regenerates that epoch's
+    /// permutation and continues with the exact batch the checkpoint
+    /// points at. Prefetching starts immediately.
+    pub fn resume(&self, ckpt: Checkpoint) -> Result<EpochIter<'_>> {
+        let n = self.n_samples();
+        ensure!(ckpt.cursor <= n, "checkpoint cursor {} past {} samples", ckpt.cursor, n);
+        ensure!(
+            ckpt.cursor % self.opts.batch_size == 0 || ckpt.cursor == n,
+            "checkpoint cursor {} is not a batch boundary (batch_size {})",
+            ckpt.cursor,
+            self.opts.batch_size
+        );
+        let trace = Trace::start("loader_epoch");
+        let shuffle_span = trace.root().child("shuffle");
+        let perm = shuffle::epoch_permutation(self.opts.seed, ckpt.epoch, n);
+        shuffle_span.end();
+        let plan_span = trace.root().child("plan");
+        let plans =
+            plan::plan_epoch(&perm, self.opts.batch_size, ckpt.cursor, self.opts.coalesce_gap);
+        plan_span.end();
+        let _ = trace.finish();
+        let mut it = EpochIter {
+            loader: self,
+            epoch: ckpt.epoch,
+            start_cursor: ckpt.cursor,
+            plans,
+            next: 0,
+            scheduled: 0,
+            reserved: 0,
+            yielded_samples: 0,
+            shared: Arc::new(PrefetchShared::new(self.peak_buffered.clone())),
+        };
+        it.pump();
+        Ok(it)
+    }
+}
+
+/// A live epoch (or epoch tail, after [`DataLoader::resume`]): yields
+/// batches in shuffled order while the prefetcher runs ahead.
+pub struct EpochIter<'a> {
+    loader: &'a DataLoader<'a>,
+    epoch: u64,
+    start_cursor: usize,
+    plans: Vec<BatchPlan>,
+    /// Next plan (local index) to yield.
+    next: usize,
+    /// Next plan (local index) to schedule.
+    scheduled: usize,
+    /// Decoded bytes reserved by scheduled-but-not-yet-yielded batches.
+    reserved: u64,
+    yielded_samples: usize,
+    shared: Arc<PrefetchShared>,
+}
+
+impl EpochIter<'_> {
+    /// The epoch being iterated.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Batches remaining (including any in flight).
+    pub fn batches_left(&self) -> usize {
+        self.plans.len() - self.next
+    }
+
+    /// Where this iterator stands: feed to [`DataLoader::resume`] to
+    /// continue from the next unyielded batch.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint { epoch: self.epoch, cursor: self.start_cursor + self.yielded_samples }
+    }
+
+    /// Schedule fetch jobs up to the depth and byte budget. The first
+    /// outstanding batch is always admitted (so progress never deadlocks
+    /// on a budget smaller than one batch); beyond that, a batch is
+    /// scheduled only while its decoded bytes fit under the budget.
+    fn pump(&mut self) {
+        while self.scheduled < self.plans.len() {
+            let in_flight = self.scheduled - self.next;
+            if in_flight >= self.loader.opts.depth {
+                break;
+            }
+            let plan = &self.plans[self.scheduled];
+            let cost = (plan.rows.len() * self.loader.sample_bytes) as u64;
+            if in_flight > 0 && self.reserved + cost > self.loader.budget {
+                break;
+            }
+            let job = BatchJob {
+                table: self.loader.coord.table().clone(),
+                fmt: self.loader.fmt.clone(),
+                id: self.loader.id.clone(),
+                plan: plan.clone(),
+                sample_bytes: self.loader.sample_bytes,
+                sample_shape: self.loader.sample_shape().to_vec(),
+                slot: self.scheduled,
+                shared: self.shared.clone(),
+                metrics: self.loader.coord.metrics().clone(),
+            };
+            self.reserved += cost;
+            self.scheduled += 1;
+            self.loader.coord.pool().submit(move || job.run());
+        }
+    }
+
+    /// Yield the next batch, blocking on its fetch job if it has not
+    /// landed yet. Returns `Ok(None)` once the epoch is exhausted.
+    pub fn next_batch(&mut self) -> Result<Option<Batch>> {
+        if self.next >= self.plans.len() {
+            return Ok(None);
+        }
+        self.pump();
+        let idx = self.next;
+        // The consumer-side wait is the `yield` phase: a stall here means
+        // the prefetcher could not stay ahead of the training loop.
+        let trace = Trace::start("loader_yield");
+        let (res, was_ready) = self.shared.wait_take(idx);
+        let _ = trace.finish();
+        let m = self.loader.coord.metrics();
+        m.counter(if was_ready { "loader.prefetch_hits" } else { "loader.stalls" }).add(1);
+        let rows: Vec<usize> = self.plans[idx].rows.iter().map(|&r| r as usize).collect();
+        let index = self.plans[idx].index;
+        self.reserved -= (rows.len() * self.loader.sample_bytes) as u64;
+        self.next += 1;
+        self.yielded_samples += rows.len();
+        self.pump();
+        let data = res.map_err(|e| anyhow!("loader batch {index} failed: {e}"))?;
+        debug_assert_eq!(data.dtype(), self.loader.dtype);
+        m.counter("loader.batches").add(1);
+        m.counter("loader.samples").add(rows.len() as u64);
+        Ok(Some(Batch { epoch: self.epoch, index, rows, data }))
+    }
+}
+
+impl Iterator for EpochIter<'_> {
+    type Item = Result<Batch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_batch().transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::DeltaTable;
+    use crate::formats::{FtsfFormat, TensorData};
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn corpus(n: usize, dim: usize) -> (Coordinator, String) {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "loader-t").unwrap();
+        let c = Coordinator::new(table, 2, 16);
+        let data: TensorData = crate::workload::embedding_like(11, n, dim, 4, 0.1).into();
+        // 2-D corpora need chunk rank 1 (one chunk per sample row).
+        let fmt = FtsfFormat { rows_per_group: 8, rows_per_file: 64, ..FtsfFormat::new(1) };
+        fmt.write(c.table(), "emb", &data).unwrap();
+        (c, "emb".into())
+    }
+
+    #[test]
+    fn open_validates_geometry() {
+        let (c, id) = corpus(16, 8);
+        let l = DataLoader::open(&c, &id, LoaderOptions::default()).unwrap();
+        assert_eq!(l.n_samples(), 16);
+        assert_eq!(l.sample_shape(), &[8]);
+        assert_eq!(l.sample_bytes(), 32);
+        assert!(DataLoader::open(&c, "missing", LoaderOptions::default()).is_err());
+        let bad = LoaderOptions { batch_size: 0, ..Default::default() };
+        assert!(DataLoader::open(&c, &id, bad).is_err());
+    }
+
+    #[test]
+    fn epoch_streams_every_sample_once() {
+        let (c, id) = corpus(37, 8);
+        let opts = LoaderOptions { batch_size: 8, seed: 3, ..Default::default() };
+        let l = DataLoader::open(&c, &id, opts).unwrap();
+        assert_eq!(l.batches_per_epoch(), 5);
+        let mut seen: Vec<usize> = Vec::new();
+        let mut it = l.epoch(0).unwrap();
+        while let Some(b) = it.next_batch().unwrap() {
+            assert_eq!(b.data.shape(), &[b.rows.len(), 8]);
+            seen.extend(&b.rows);
+        }
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..37).collect::<Vec<usize>>());
+        assert_ne!(seen, sorted, "order is shuffled");
+        assert_eq!(c.metrics().counter("loader.samples").get(), 37);
+        assert_eq!(c.metrics().counter("loader.batches").get(), 5);
+    }
+
+    #[test]
+    fn checkpoint_rejects_mid_batch_cursor() {
+        let (c, id) = corpus(16, 4);
+        let l = DataLoader::open(&c, &id, LoaderOptions { batch_size: 4, ..Default::default() })
+            .unwrap();
+        assert!(l.resume(Checkpoint { epoch: 0, cursor: 3 }).is_err());
+        assert!(l.resume(Checkpoint { epoch: 0, cursor: 20 }).is_err());
+        let tail = l.resume(Checkpoint { epoch: 0, cursor: 12 }).unwrap();
+        assert_eq!(tail.batches_left(), 1);
+    }
+
+    #[test]
+    fn exhausted_epoch_returns_none_forever() {
+        let (c, id) = corpus(8, 4);
+        let l = DataLoader::open(&c, &id, LoaderOptions { batch_size: 8, ..Default::default() })
+            .unwrap();
+        let mut it = l.epoch(0).unwrap();
+        assert!(it.next_batch().unwrap().is_some());
+        assert!(it.next_batch().unwrap().is_none());
+        assert!(it.next_batch().unwrap().is_none());
+        assert_eq!(it.checkpoint(), Checkpoint { epoch: 0, cursor: 8 });
+    }
+}

@@ -1,0 +1,141 @@
+//! Slice-granular read planning over a shuffled permutation.
+//!
+//! A shuffled batch names scattered sample indices, but the read engine is
+//! fastest when asked for contiguous leading-dimension ranges: one
+//! `read_slice` per range rides PR 1's coalesced, pruned, parallel fetch
+//! path, and samples that land in the same chunk or row group come back in
+//! the same GET. The planner therefore sorts each batch's indices and
+//! merges them into `[start, end)` **runs**, bridging gaps smaller than
+//! `coalesce_gap` rows — the surplus rows decode and are dropped, which is
+//! cheaper than paying another round trip when the gap sits inside one row
+//! group anyway.
+
+/// One batch's read plan: the samples it yields (in shuffled order) and
+/// the coalesced dim-0 runs that cover them.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// Batch number within the epoch (global, so a resumed epoch keeps the
+    /// original numbering).
+    pub index: usize,
+    /// Global sample ids in yield order (a contiguous window of the epoch
+    /// permutation).
+    pub rows: Vec<u32>,
+    /// Sorted, disjoint `[start, end)` dim-0 runs covering `rows`; each
+    /// run becomes one `read_slice`. Runs may span small gaps (rows the
+    /// batch does not need) when bridging merges reads landing in the same
+    /// chunk — surplus rows are dropped after decode.
+    pub runs: Vec<(u32, u32)>,
+}
+
+impl BatchPlan {
+    /// Rows this plan fetches, including coalescing surplus.
+    pub fn rows_fetched(&self) -> u64 {
+        self.runs.iter().map(|&(s, e)| (e - s) as u64).sum()
+    }
+
+    /// Rows this plan yields.
+    pub fn rows_yielded(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Group the epoch permutation's tail (`perm[first_sample..]`) into
+/// batches of `batch_size` (the last batch may be short) and coalesce each
+/// batch's indices into runs. `first_sample` must sit on a batch boundary
+/// so batch numbering matches the un-resumed epoch.
+pub fn plan_epoch(
+    perm: &[u32],
+    batch_size: usize,
+    first_sample: usize,
+    coalesce_gap: usize,
+) -> Vec<BatchPlan> {
+    assert!(batch_size > 0, "batch_size must be positive");
+    assert!(
+        first_sample % batch_size == 0 || first_sample >= perm.len(),
+        "resume cursor must sit on a batch boundary"
+    );
+    let mut plans = Vec::new();
+    let mut start = first_sample;
+    while start < perm.len() {
+        let end = (start + batch_size).min(perm.len());
+        let rows = perm[start..end].to_vec();
+        plans.push(BatchPlan {
+            index: start / batch_size,
+            runs: coalesce(&rows, coalesce_gap),
+            rows,
+        });
+        start = end;
+    }
+    plans
+}
+
+/// Merge sorted copies of `rows` into `[start, end)` runs, bridging gaps
+/// of fewer than `gap` absent rows.
+fn coalesce(rows: &[u32], gap: usize) -> Vec<(u32, u32)> {
+    let mut sorted = rows.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut runs: Vec<(u32, u32)> = Vec::new();
+    for &r in &sorted {
+        match runs.last_mut() {
+            Some(&mut (_, ref mut end)) if (r as usize) <= *end as usize + gap => {
+                *end = r + 1;
+            }
+            _ => runs.push((r, r + 1)),
+        }
+    }
+    runs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_rows_share_a_run() {
+        let runs = coalesce(&[5, 3, 4, 9], 0);
+        assert_eq!(runs, vec![(3, 6), (9, 10)]);
+    }
+
+    #[test]
+    fn gap_bridging_merges_nearby_rows() {
+        assert_eq!(coalesce(&[0, 4], 0), vec![(0, 1), (4, 5)]);
+        assert_eq!(coalesce(&[0, 4], 4), vec![(0, 5)], "gap of 3 absent rows bridged");
+        assert_eq!(coalesce(&[0, 5], 4), vec![(0, 1), (5, 6)], "gap of 4 not bridged");
+    }
+
+    #[test]
+    fn plans_cover_the_permutation_exactly() {
+        let perm: Vec<u32> = vec![7, 2, 9, 0, 4, 1, 8, 3, 6, 5];
+        let plans = plan_epoch(&perm, 4, 0, 2);
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[2].rows.len(), 2, "last batch is short");
+        let flat: Vec<u32> = plans.iter().flat_map(|p| p.rows.clone()).collect();
+        assert_eq!(flat, perm, "yield order is the permutation, verbatim");
+        for p in &plans {
+            for &r in &p.rows {
+                assert!(
+                    p.runs.iter().any(|&(s, e)| s <= r && r < e),
+                    "row {r} uncovered in {:?}",
+                    p.runs
+                );
+            }
+            assert!(p.rows_fetched() >= p.rows_yielded() as u64);
+        }
+    }
+
+    #[test]
+    fn resume_keeps_global_batch_numbering() {
+        let perm: Vec<u32> = (0..10).rev().collect();
+        let plans = plan_epoch(&perm, 4, 8, 0);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].index, 2);
+        assert_eq!(plans[0].rows, vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch boundary")]
+    fn mid_batch_cursor_rejected() {
+        plan_epoch(&[3, 1, 0, 2], 2, 1, 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Double-buffered prefetching on the shared [`WorkerPool`].
+//!
+//! The consumer (the training loop calling
+//! [`EpochIter::next_batch`](super::EpochIter::next_batch)) schedules up
+//! to `depth` batch-fetch jobs ahead of itself, bounded by the decoded
+//! byte budget (`DT_PREFETCH_MB`). Each job runs the batch's read plan
+//! through the read engine + serving tier, scatters the decoded rows back
+//! into shuffled order, and parks the finished batch in a slot table the
+//! consumer blocks on. Backpressure is structural: a batch is only
+//! *scheduled* once its bytes fit under the budget, and the shared pool's
+//! bounded queue blocks the scheduler when ingestion has the workers busy.
+
+use super::plan::BatchPlan;
+use crate::coordinator::Metrics;
+use crate::delta::DeltaTable;
+use crate::formats::TensorStore;
+use crate::telemetry::Trace;
+use crate::tensor::{DenseTensor, Slice};
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A decoded batch (or the error that produced it), parked for the
+/// consumer. Errors cross the pool as strings: `anyhow::Error` is not
+/// `Clone` and the consumer re-wraps with batch context anyway.
+pub(crate) type SlotResult = std::result::Result<DenseTensor, String>;
+
+/// Slot table shared between the consumer and in-flight fetch jobs.
+pub(crate) struct PrefetchShared {
+    slots: Mutex<HashMap<usize, SlotResult>>,
+    ready: Condvar,
+    /// Decoded bytes currently parked in `slots`.
+    buffered: AtomicU64,
+    /// High-water mark of `buffered`, shared with the owning
+    /// [`DataLoader`](super::DataLoader) so it spans epochs.
+    peak: Arc<AtomicU64>,
+}
+
+impl PrefetchShared {
+    pub(crate) fn new(peak: Arc<AtomicU64>) -> Self {
+        Self {
+            slots: Mutex::new(HashMap::new()),
+            ready: Condvar::new(),
+            buffered: AtomicU64::new(0),
+            peak,
+        }
+    }
+
+    /// Park a finished batch and wake the consumer.
+    pub(crate) fn insert(&self, idx: usize, res: SlotResult) {
+        let bytes = res.as_ref().map(|t| t.byte_len() as u64).unwrap_or(0);
+        let mut slots = self.slots.lock().unwrap();
+        let now = self.buffered.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        slots.insert(idx, res);
+        self.ready.notify_all();
+    }
+
+    /// Take batch `idx`, blocking until its job delivers. The flag reports
+    /// whether the batch was already parked (a prefetch hit) or the
+    /// consumer had to stall.
+    pub(crate) fn wait_take(&self, idx: usize) -> (SlotResult, bool) {
+        let mut slots = self.slots.lock().unwrap();
+        let was_ready = slots.contains_key(&idx);
+        while !slots.contains_key(&idx) {
+            slots = self.ready.wait(slots).unwrap();
+        }
+        let res = slots.remove(&idx).unwrap();
+        if let Ok(t) = &res {
+            self.buffered.fetch_sub(t.byte_len() as u64, Ordering::Relaxed);
+        }
+        (res, was_ready)
+    }
+}
+
+/// Everything one batch-fetch job needs, owned (`WorkerPool` jobs are
+/// `'static`): a table handle, the resolved format, and the plan.
+pub(crate) struct BatchJob {
+    pub table: DeltaTable,
+    pub fmt: Arc<dyn TensorStore + Send + Sync>,
+    pub id: String,
+    pub plan: BatchPlan,
+    pub sample_bytes: usize,
+    pub sample_shape: Vec<usize>,
+    pub slot: usize,
+    pub shared: Arc<PrefetchShared>,
+    pub metrics: Metrics,
+}
+
+impl BatchJob {
+    /// Run the plan: fetch every run through the read engine, scatter the
+    /// rows back into shuffled order, park the result. Called on a pool
+    /// worker; never panics across the pool boundary.
+    pub(crate) fn run(self) {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.fetch_decode()))
+            .unwrap_or_else(|_| Err(anyhow!("loader batch job panicked")));
+        match res {
+            Ok(t) => {
+                self.metrics.counter("loader.bytes_prefetched").add(t.byte_len() as u64);
+                self.shared.insert(self.slot, Ok(t));
+            }
+            Err(e) => self.shared.insert(self.slot, Err(format!("{e:#}"))),
+        }
+    }
+
+    /// The traced fetch + decode body: a `loader_batch` trace whose
+    /// `fetch` child owns the engine's GET/cache events and whose `decode`
+    /// child owns the scatter.
+    fn fetch_decode(&self) -> Result<DenseTensor> {
+        let trace = Trace::start("loader_batch");
+        let out = (|| {
+            let fetch = trace.root().child("fetch");
+            let table =
+                if fetch.is_enabled() { self.table.with_span(&fetch) } else { self.table.clone() };
+            let mut runs: Vec<DenseTensor> = Vec::with_capacity(self.plan.runs.len());
+            for &(s, e) in &self.plan.runs {
+                let td =
+                    self.fmt.read_slice(&table, &self.id, &Slice::dim0(s as usize, e as usize))?;
+                runs.push(td.to_dense()?);
+            }
+            fetch.end();
+            let decode = trace.root().child("decode");
+            let batch = self.scatter(&runs);
+            decode.end();
+            batch
+        })();
+        let _ = trace.finish();
+        out
+    }
+
+    /// Gather each yielded row's bytes out of the decoded runs into a
+    /// batch tensor ordered like `plan.rows` (the shuffled order).
+    fn scatter(&self, runs: &[DenseTensor]) -> Result<DenseTensor> {
+        ensure!(runs.len() == self.plan.runs.len(), "one decoded tensor per run");
+        for (t, &(s, e)) in runs.iter().zip(&self.plan.runs) {
+            ensure!(
+                t.byte_len() == (e - s) as usize * self.sample_bytes,
+                "run [{s},{e}) decoded {} bytes, want {}",
+                t.byte_len(),
+                (e - s) as usize * self.sample_bytes
+            );
+        }
+        let mut out = vec![0u8; self.plan.rows.len() * self.sample_bytes];
+        for (pos, &row) in self.plan.rows.iter().enumerate() {
+            // Runs are sorted and disjoint: the last run starting at or
+            // before `row` is the one that covers it.
+            let ri = self.plan.runs.partition_point(|&(s, _)| s <= row) - 1;
+            let (s, e) = self.plan.runs[ri];
+            ensure!(row < e, "row {row} uncovered by plan runs");
+            let src = (row - s) as usize * self.sample_bytes;
+            let dst = pos * self.sample_bytes;
+            out[dst..dst + self.sample_bytes]
+                .copy_from_slice(&runs[ri].bytes()[src..src + self.sample_bytes]);
+        }
+        let mut shape = Vec::with_capacity(1 + self.sample_shape.len());
+        shape.push(self.plan.rows.len());
+        shape.extend_from_slice(&self.sample_shape);
+        let dtype = runs.first().map(|t| t.dtype()).unwrap_or(crate::tensor::DType::F32);
+        DenseTensor::from_bytes(dtype, &shape, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_take_reports_hits_and_stalls() {
+        let shared = Arc::new(PrefetchShared::new(Arc::new(AtomicU64::new(0))));
+        let t = DenseTensor::from_f32(&[1, 2], &[1.0, 2.0]).unwrap();
+        shared.insert(0, Ok(t));
+        let (res, hit) = shared.wait_take(0);
+        assert!(res.is_ok());
+        assert!(hit, "parked batch is a prefetch hit");
+        let s2 = shared.clone();
+        let h = std::thread::spawn(move || s2.wait_take(1));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        shared.insert(1, Err("boom".into()));
+        let (res, hit) = h.join().unwrap();
+        assert!(res.is_err());
+        assert!(!hit, "late batch is a stall");
+    }
+
+    #[test]
+    fn buffered_accounting_tracks_peak() {
+        let peak = Arc::new(AtomicU64::new(0));
+        let shared = PrefetchShared::new(peak.clone());
+        let t = || DenseTensor::from_f32(&[2, 2], &[0.0; 4]).unwrap();
+        shared.insert(0, Ok(t()));
+        shared.insert(1, Ok(t()));
+        assert_eq!(peak.load(Ordering::Relaxed), 32, "two 16-byte batches parked");
+        shared.wait_take(0);
+        shared.insert(2, Ok(t()));
+        assert_eq!(peak.load(Ordering::Relaxed), 32, "take released before insert");
+    }
+}

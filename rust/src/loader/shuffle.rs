@@ -1,0 +1,80 @@
+//! Seeded, resumable epoch shuffling.
+//!
+//! Every epoch visits each sample exactly once in a pseudo-random order
+//! derived from `(seed, epoch)` alone — no hidden state — so the order is
+//! bit-identical across runs, machines, and mid-epoch resumes. The epoch
+//! stream position is a plain [`Checkpoint`] value: persist it anywhere
+//! (it is two integers) and hand it back to
+//! [`DataLoader::resume`](super::DataLoader::resume) to continue training
+//! from the exact next batch.
+
+use crate::util::prng::{Pcg64, SplitMix64};
+
+/// A position in a loader's epoch stream: which epoch, and how many
+/// samples of that epoch have already been consumed.
+///
+/// `cursor` always sits on a batch boundary (it is what
+/// [`EpochIter::checkpoint`](super::EpochIter::checkpoint) returns after a
+/// whole number of batches); `resume` rejects mid-batch cursors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Checkpoint {
+    /// Epoch number (0-based).
+    pub epoch: u64,
+    /// Samples of this epoch already consumed.
+    pub cursor: usize,
+}
+
+impl Checkpoint {
+    /// The start of an epoch.
+    pub fn epoch_start(epoch: u64) -> Self {
+        Self { epoch, cursor: 0 }
+    }
+}
+
+/// Derive the per-epoch PRNG seed: a SplitMix64 finalizer over
+/// `seed + epoch * golden_gamma`, so adjacent epochs of the same loader
+/// seed land in statistically unrelated Pcg64 streams.
+fn epoch_seed(seed: u64, epoch: u64) -> u64 {
+    SplitMix64::new(seed.wrapping_add(epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15))).next_u64()
+}
+
+/// The shuffled visit order for `n` samples in one epoch: a Fisher–Yates
+/// permutation of `0..n` drawn from the `(seed, epoch)` stream.
+pub fn epoch_permutation(seed: u64, epoch: u64, n: usize) -> Vec<u32> {
+    debug_assert!(n <= u32::MAX as usize, "loader indexes samples with u32");
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    Pcg64::new(epoch_seed(seed, epoch)).shuffle(&mut perm);
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutation_is_deterministic() {
+        let a = epoch_permutation(7, 3, 100);
+        let b = epoch_permutation(7, 3, 100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn permutation_visits_every_sample_once() {
+        let mut p = epoch_permutation(1, 0, 257);
+        p.sort_unstable();
+        assert_eq!(p, (0..257).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn epochs_and_seeds_differ() {
+        let base = epoch_permutation(7, 0, 64);
+        assert_ne!(base, epoch_permutation(7, 1, 64), "epochs reshuffle");
+        assert_ne!(base, epoch_permutation(8, 0, 64), "seeds reshuffle");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert!(epoch_permutation(0, 0, 0).is_empty());
+        assert_eq!(epoch_permutation(0, 0, 1), vec![0]);
+    }
+}

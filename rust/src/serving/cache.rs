@@ -165,6 +165,28 @@ impl BlockCache {
         self.budget
     }
 
+    /// Drop every cached block belonging to one store instance (counters
+    /// are monotonic and keep their values). Harness use: benches
+    /// comparing modes over one store clear between runs so each mode's
+    /// first epoch is genuinely cold — per-instance, so concurrent tests
+    /// over other stores keep their warmth.
+    pub fn clear_instance(&self, instance: u64) {
+        for shard in &self.shards {
+            let mut guard = shard.lock().unwrap();
+            let shard = &mut *guard;
+            let keys: Vec<BlockKey> =
+                shard.map.keys().filter(|k| k.instance == instance).cloned().collect();
+            for k in keys {
+                if let Some(e) = shard.map.remove(&k) {
+                    let len = e.data.len() as u64;
+                    shard.order.remove(&e.seq);
+                    shard.bytes -= len;
+                    self.bytes.fetch_sub(len, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
     /// Bytes currently held.
     pub fn bytes(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
@@ -226,6 +248,25 @@ mod tests {
         let mut stale = key("a", 0);
         stale.stamp = 2;
         assert!(c.get(&stale).is_none());
+    }
+
+    #[test]
+    fn clear_instance_is_scoped_and_keeps_counters() {
+        let c = BlockCache::new(1024, 4);
+        c.insert(key("a", 0), block(10));
+        let mut other = key("b", 0);
+        other.instance = 2;
+        c.insert(other.clone(), block(10));
+        assert!(c.get(&key("a", 0)).is_some());
+        let hits = c.hits();
+        c.clear_instance(1);
+        assert_eq!(c.bytes(), 10, "only instance 1's bytes freed");
+        assert!(c.get(&key("a", 0)).is_none(), "cleared entries are gone");
+        assert!(c.get(&other).is_some(), "other instances keep their blocks");
+        assert_eq!(c.hits(), hits + 1, "monotonic counters survive clear");
+        assert_eq!(c.inserts(), 2);
+        c.insert(key("a", 0), block(10));
+        assert!(c.get(&key("a", 0)).is_some(), "cache is usable after clear");
     }
 
     #[test]

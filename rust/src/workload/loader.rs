@@ -1,0 +1,434 @@
+//! Closed-loop training-loader harness.
+//!
+//! Drives the [`crate::loader`] tier the way a training loop would: one
+//! consumer iterating shuffled epochs over an [`super::embedding_like`]
+//! corpus, closed-loop (the next batch is requested only after the
+//! previous one is consumed). The control group is a **naive sequential
+//! reader**: the same shuffled visit order, but one per-sample
+//! `read_slice` at a time with no coalescing and no prefetch — the gap
+//! between the two is exactly what the planner + prefetcher buy.
+//!
+//! Reported per mode: samples/s, time-to-first-batch, per-batch latency
+//! quantiles, stall fraction, and the GET counts of the first (cold) and
+//! last (warm) epochs — the warm epoch rides the serving tier's block
+//! cache. Used by the `bench loader` CLI subcommand, `benches/loader.rs`
+//! (`BENCH_loader.json`, CI-gated via `bench_baselines/loader.json`) and
+//! `tests/loader.rs`.
+
+use super::driver;
+use crate::coordinator::Coordinator;
+use crate::jsonx::Json;
+use crate::loader::{shuffle, LoaderOptions};
+use crate::tensor::{DenseTensor, Slice};
+use crate::util::Stopwatch;
+use crate::Result;
+use anyhow::ensure;
+
+/// Knobs for one loader run.
+#[derive(Debug, Clone)]
+pub struct LoaderParams {
+    /// Samples in the corpus (leading-dimension extent).
+    pub samples: usize,
+    /// Embedding dimension (columns per sample).
+    pub dim: usize,
+    /// Samples per batch.
+    pub batch_size: usize,
+    /// Epochs to stream (≥ 2 exercises the warm-cache path).
+    pub epochs: usize,
+    /// Prefetch depth in batches.
+    pub depth: usize,
+    /// Coalescing gap (see [`LoaderOptions::coalesce_gap`]).
+    pub coalesce_gap: usize,
+    /// Decoded-byte prefetch budget override (`None` = `DT_PREFETCH_MB`).
+    pub prefetch_bytes: Option<u64>,
+    /// Corpus content + shuffle seed.
+    pub seed: u64,
+}
+
+impl LoaderParams {
+    /// CI-smoke scale (sub-second on the fast sim model).
+    pub fn tiny() -> Self {
+        Self {
+            samples: 96,
+            dim: 64,
+            batch_size: 16,
+            epochs: 2,
+            depth: 2,
+            coalesce_gap: 8,
+            prefetch_bytes: None,
+            seed: 7,
+        }
+    }
+
+    /// Default bench scale (seconds on the fast sim model).
+    pub fn small() -> Self {
+        Self { samples: 768, dim: 128, batch_size: 32, ..Self::tiny() }
+    }
+
+    /// Paper-regime scale (minutes on the 1 Gbps model).
+    pub fn paper() -> Self {
+        Self { samples: 4096, dim: 256, batch_size: 64, ..Self::tiny() }
+    }
+}
+
+/// Result of one streaming run (loader or naive control).
+#[derive(Debug, Clone)]
+pub struct LoaderReport {
+    /// `"loader"` or `"naive"`.
+    pub mode: String,
+    /// Epochs streamed.
+    pub epochs: usize,
+    /// Batches yielded.
+    pub batches: u64,
+    /// Samples yielded.
+    pub samples: u64,
+    /// Total wall time across every epoch.
+    pub wall_secs: f64,
+    /// Samples per second over the whole run.
+    pub samples_per_sec: f64,
+    /// Milliseconds from run start to the first yielded batch.
+    pub time_to_first_batch_ms: f64,
+    /// Mean per-batch latency (seconds).
+    pub batch_mean_secs: f64,
+    /// 95th-percentile per-batch latency (seconds).
+    pub batch_p95_secs: f64,
+    /// Fraction of batches the consumer had to stall on (0 for naive).
+    pub stall_frac: f64,
+    /// Batches already decoded when requested (0 for naive).
+    pub prefetch_hits: u64,
+    /// Batches the consumer blocked on (0 for naive).
+    pub stalls: u64,
+    /// GETs issued over the whole run.
+    pub get_ops: u64,
+    /// Bytes fetched over the whole run.
+    pub bytes_read: u64,
+    /// GETs issued by the first (cold-cache) epoch.
+    pub gets_cold: u64,
+    /// GETs issued by the last (warm-cache) epoch.
+    pub gets_warm: u64,
+}
+
+impl LoaderReport {
+    /// Compact JSON object (nested under `loader`/`naive` in
+    /// `BENCH_loader.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("mode", Json::from(self.mode.as_str())),
+            ("epochs", Json::Int(self.epochs as i64)),
+            ("batches", Json::Int(self.batches as i64)),
+            ("samples", Json::Int(self.samples as i64)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("samples_per_sec", Json::from(self.samples_per_sec)),
+            ("time_to_first_batch_ms", Json::from(self.time_to_first_batch_ms)),
+            ("batch_mean_secs", Json::from(self.batch_mean_secs)),
+            ("batch_p95_secs", Json::from(self.batch_p95_secs)),
+            ("stall_frac", Json::from(self.stall_frac)),
+            ("prefetch_hits", Json::Int(self.prefetch_hits as i64)),
+            ("stalls", Json::Int(self.stalls as i64)),
+            ("get_ops", Json::Int(self.get_ops as i64)),
+            ("bytes_read", Json::Int(self.bytes_read as i64)),
+            ("gets_cold", Json::Int(self.gets_cold as i64)),
+            ("gets_warm", Json::Int(self.gets_warm as i64)),
+        ])
+    }
+
+    /// Human-readable one-run summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} epochs x {} samples in {:.3}s -> {:.0} samples/s\n  \
+             first batch {:.1}ms; batch mean {:.3}ms p95 {:.3}ms; \
+             stalls {}/{} ({:.0}%)\n  \
+             store: {} GETs ({} cold epoch, {} warm epoch), {} bytes",
+            self.mode,
+            self.epochs,
+            self.samples / (self.epochs.max(1) as u64),
+            self.wall_secs,
+            self.samples_per_sec,
+            self.time_to_first_batch_ms,
+            self.batch_mean_secs * 1e3,
+            self.batch_p95_secs * 1e3,
+            self.stalls,
+            self.batches,
+            self.stall_frac * 100.0,
+            self.get_ops,
+            self.gets_cold,
+            self.gets_warm,
+            self.bytes_read,
+        )
+    }
+}
+
+/// Loader vs naive-control comparison (the `bench loader` payload).
+#[derive(Debug, Clone)]
+pub struct LoaderComparison {
+    /// The prefetching, plan-coalescing loader run.
+    pub loader: LoaderReport,
+    /// The per-sample sequential control run.
+    pub naive: LoaderReport,
+    /// `loader.samples_per_sec / naive.samples_per_sec`.
+    pub speedup: f64,
+}
+
+impl LoaderComparison {
+    /// The `BENCH_loader.json` object.
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("bench", Json::from("loader")),
+            ("loader", self.loader.to_json()),
+            ("naive", self.naive.to_json()),
+            ("speedup", Json::from(self.speedup)),
+        ])
+        .dump()
+    }
+
+    /// Two-run summary plus the verdict line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}\n{}\n  loader is {:.2}x the naive sequential reader",
+            self.loader.summary(),
+            self.naive.summary(),
+            self.speedup
+        )
+    }
+}
+
+/// Ingest the loader corpus: one `[samples, dim]` f32 FTSF tensor named
+/// `loader-corpus`, chunk rank 1 (one chunk per sample row) with small row
+/// groups so coalesced run reads have pruning to exploit. Idempotent.
+pub fn populate_loader_corpus(c: &Coordinator, p: &LoaderParams) -> Result<String> {
+    ensure!(p.samples > 0 && p.dim > 0, "loader corpus needs samples and dim");
+    ensure!(p.batch_size > 0, "loader needs a positive batch size");
+    ensure!(p.epochs > 0, "loader needs at least one epoch");
+    let id = "loader-corpus".to_string();
+    if !c.list_tensors()?.contains(&id) {
+        use crate::formats::TensorStore;
+        let data: crate::formats::TensorData =
+            super::embedding_like(p.seed, p.samples, p.dim, 8, 0.05).into();
+        let fmt = crate::formats::FtsfFormat {
+            rows_per_group: 16,
+            rows_per_file: 128,
+            ..crate::formats::FtsfFormat::new(1)
+        };
+        fmt.write(c.table(), &id, &data)?;
+    }
+    Ok(id)
+}
+
+/// Stream `p.epochs` epochs through the [`DataLoader`](crate::loader::DataLoader)
+/// and report. The first epoch runs cold (fresh store ⇒ empty block
+/// cache); later epochs re-read the same blocks warm.
+pub fn run_loader(c: &Coordinator, id: &str, p: &LoaderParams) -> Result<LoaderReport> {
+    let opts = LoaderOptions {
+        batch_size: p.batch_size,
+        seed: p.seed,
+        depth: p.depth,
+        prefetch_bytes: p.prefetch_bytes,
+        coalesce_gap: p.coalesce_gap,
+    };
+    let loader = c.loader(id, opts)?;
+    let store = c.table().store().clone();
+    let _ = c.list_tensors()?; // control-plane warm: measure the data plane
+    let hits0 = c.metrics().counter("loader.prefetch_hits").get();
+    let stalls0 = c.metrics().counter("loader.stalls").get();
+    let (get0, _, _, bytes0, _) = store.stats().snapshot();
+    let mut lat: Vec<f64> = Vec::new();
+    let (mut gets_cold, mut gets_warm) = (0u64, 0u64);
+    let (mut batches, mut samples) = (0u64, 0u64);
+    let mut ttfb_ms = 0.0f64;
+    let sw = Stopwatch::start();
+    for e in 0..p.epochs {
+        let eg0 = store.stats().snapshot().0;
+        let mut it = loader.epoch(e as u64)?;
+        loop {
+            let bsw = Stopwatch::start();
+            let Some(b) = it.next_batch()? else { break };
+            lat.push(bsw.secs());
+            if batches == 0 {
+                ttfb_ms = sw.secs() * 1e3;
+            }
+            std::hint::black_box(&b.data);
+            batches += 1;
+            samples += b.rows.len() as u64;
+        }
+        let eg = store.stats().snapshot().0 - eg0;
+        if e == 0 {
+            gets_cold = eg;
+        }
+        if e + 1 == p.epochs {
+            gets_warm = eg;
+        }
+    }
+    let wall = sw.secs();
+    let q = driver::quantiles(&lat);
+    let (get1, _, _, bytes1, _) = store.stats().snapshot();
+    let hits = c.metrics().counter("loader.prefetch_hits").get() - hits0;
+    let stalls = c.metrics().counter("loader.stalls").get() - stalls0;
+    Ok(LoaderReport {
+        mode: "loader".into(),
+        epochs: p.epochs,
+        batches,
+        samples,
+        wall_secs: wall,
+        samples_per_sec: samples as f64 / wall.max(1e-9),
+        time_to_first_batch_ms: ttfb_ms,
+        batch_mean_secs: q.mean,
+        batch_p95_secs: q.p95,
+        stall_frac: stalls as f64 / (batches.max(1) as f64),
+        prefetch_hits: hits,
+        stalls,
+        get_ops: get1 - get0,
+        bytes_read: bytes1 - bytes0,
+        gets_cold,
+        gets_warm,
+    })
+}
+
+/// The control group: visit the **same** shuffled order, but read one
+/// sample per `read_slice` through the coordinator, synchronously, and
+/// assemble batches by concatenation — no run coalescing, no prefetch.
+pub fn run_naive(c: &Coordinator, id: &str, p: &LoaderParams) -> Result<LoaderReport> {
+    let info = crate::query::table_stats(c.table())?
+        .into_iter()
+        .find(|t| t.id == id)
+        .ok_or_else(|| anyhow::anyhow!("tensor {id:?} not found"))?;
+    ensure!(info.shape.len() >= 2, "naive reader needs a 2-D+ tensor");
+    let n = info.shape[0];
+    let store = c.table().store().clone();
+    let _ = c.list_tensors()?;
+    let (get0, _, _, bytes0, _) = store.stats().snapshot();
+    let mut lat: Vec<f64> = Vec::new();
+    let (mut gets_cold, mut gets_warm) = (0u64, 0u64);
+    let (mut batches, mut samples) = (0u64, 0u64);
+    let mut ttfb_ms = 0.0f64;
+    let sw = Stopwatch::start();
+    for e in 0..p.epochs {
+        let eg0 = store.stats().snapshot().0;
+        let perm = shuffle::epoch_permutation(p.seed, e as u64, n);
+        for chunk in perm.chunks(p.batch_size) {
+            let bsw = Stopwatch::start();
+            let mut buf: Vec<u8> = Vec::new();
+            let mut dtype = None;
+            let mut sample_dims: Vec<usize> = Vec::new();
+            for &i in chunk {
+                let d = c.read_slice(id, &Slice::dim0(i as usize, i as usize + 1))?.to_dense()?;
+                if dtype.is_none() {
+                    dtype = Some(d.dtype());
+                    sample_dims = d.shape()[1..].to_vec();
+                }
+                buf.extend_from_slice(d.bytes());
+            }
+            let mut shape = vec![chunk.len()];
+            shape.extend_from_slice(&sample_dims);
+            let t = DenseTensor::from_bytes(dtype.expect("non-empty batch"), &shape, buf)?;
+            std::hint::black_box(&t);
+            lat.push(bsw.secs());
+            if batches == 0 {
+                ttfb_ms = sw.secs() * 1e3;
+            }
+            batches += 1;
+            samples += chunk.len() as u64;
+        }
+        let eg = store.stats().snapshot().0 - eg0;
+        if e == 0 {
+            gets_cold = eg;
+        }
+        if e + 1 == p.epochs {
+            gets_warm = eg;
+        }
+    }
+    let wall = sw.secs();
+    let q = driver::quantiles(&lat);
+    let (get1, _, _, bytes1, _) = store.stats().snapshot();
+    Ok(LoaderReport {
+        mode: "naive".into(),
+        epochs: p.epochs,
+        batches,
+        samples,
+        wall_secs: wall,
+        samples_per_sec: samples as f64 / wall.max(1e-9),
+        time_to_first_batch_ms: ttfb_ms,
+        batch_mean_secs: q.mean,
+        batch_p95_secs: q.p95,
+        stall_frac: 0.0,
+        prefetch_hits: 0,
+        stalls: 0,
+        get_ops: get1 - get0,
+        bytes_read: bytes1 - bytes0,
+        gets_cold,
+        gets_warm,
+    })
+}
+
+/// Populate the corpus, run the naive control, then the loader (each from
+/// a cold data plane when the store is fresh; the control runs first so
+/// the loader never inherits its cache warmth unfairly — both see the
+/// corpus cached only within their own run).
+pub fn run_loader_bench(c: &Coordinator, p: &LoaderParams) -> Result<LoaderComparison> {
+    let id = populate_loader_corpus(c, p)?;
+    // Each mode gets a cold block cache for its own first epoch; the clear
+    // is scoped to this store instance, so nothing else is disturbed.
+    let instance = c.table().store().instance_id();
+    crate::serving::block_cache().clear_instance(instance);
+    let naive = run_naive(c, &id, p)?;
+    crate::serving::block_cache().clear_instance(instance);
+    let loader = run_loader(c, &id, p)?;
+    let speedup = loader.samples_per_sec / naive.samples_per_sec.max(1e-9);
+    Ok(LoaderComparison { loader, naive, speedup })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::DeltaTable;
+    use crate::objectstore::ObjectStoreHandle;
+
+    fn coordinator() -> Coordinator {
+        let table = DeltaTable::create(ObjectStoreHandle::mem(), "loader-w").unwrap();
+        Coordinator::new(table, 2, 16)
+    }
+
+    #[test]
+    fn populate_is_idempotent() {
+        let c = coordinator();
+        let p = LoaderParams { samples: 12, dim: 8, ..LoaderParams::tiny() };
+        let id = populate_loader_corpus(&c, &p).unwrap();
+        assert_eq!(populate_loader_corpus(&c, &p).unwrap(), id);
+        assert_eq!(c.list_tensors().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn loader_and_naive_agree_on_totals() {
+        let c = coordinator();
+        let p = LoaderParams {
+            samples: 24,
+            dim: 8,
+            batch_size: 8,
+            epochs: 2,
+            ..LoaderParams::tiny()
+        };
+        let cmp = run_loader_bench(&c, &p).unwrap();
+        assert_eq!(cmp.loader.samples, 48);
+        assert_eq!(cmp.naive.samples, 48);
+        assert_eq!(cmp.loader.batches, 6);
+        assert_eq!(cmp.naive.batches, 6);
+        assert!(cmp.loader.samples_per_sec > 0.0);
+        assert!(cmp.speedup > 0.0);
+        assert!(cmp.loader.time_to_first_batch_ms >= 0.0);
+        assert!(cmp.summary().contains("samples/s"));
+        let j = crate::jsonx::parse(&cmp.to_json()).unwrap();
+        assert_eq!(
+            j.get("loader").and_then(|l| l.get("samples")).and_then(|v| v.as_i64()),
+            Some(48)
+        );
+        assert!(j.get("speedup").and_then(|v| v.as_f64()).is_some());
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let c = coordinator();
+        let bad = LoaderParams { samples: 0, ..LoaderParams::tiny() };
+        assert!(populate_loader_corpus(&c, &bad).is_err());
+        let bad = LoaderParams { batch_size: 0, ..LoaderParams::tiny() };
+        assert!(populate_loader_corpus(&c, &bad).is_err());
+    }
+}

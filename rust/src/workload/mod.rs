@@ -22,13 +22,18 @@
 //! control, fed by the [`embedding_like`] clustered-vector generator. The
 //! [`maintain`] submodule closes the loop over the maintenance tier: an
 //! append/search/optimize mix measuring upkeep latency and
-//! recall-after-append against a full-rebuild control. All four are built
-//! on one skeleton — [`driver`]: closed-loop clients, per-client seeded
-//! RNG streams, latency quantiles and the scoped cache-mode guard —
-//! extracted once so future tiers get a harness for free.
+//! recall-after-append against a full-rebuild control. The [`loader`]
+//! submodule drives the training-loader tier: epoch streaming over an
+//! [`embedding_like`] corpus, reporting samples/s, time-to-first-batch and
+//! stall fraction against a naive per-sample sequential reader across
+//! cold/warm cache. All five are built on one skeleton — [`driver`]:
+//! closed-loop clients, per-client seeded RNG streams, latency quantiles
+//! and the scoped cache-mode guard — extracted once so future tiers get a
+//! harness for free.
 
 pub mod driver;
 pub mod ingest;
+pub mod loader;
 pub mod maintain;
 pub mod search;
 pub mod serve;

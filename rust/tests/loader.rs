@@ -1,0 +1,189 @@
+//! Loader-tier acceptance tests — the four invariants the streaming
+//! training loader exists to provide:
+//!
+//! * the same seed yields a **bit-identical** batch sequence across
+//!   independent runs, and a mid-epoch checkpoint/resume reproduces the
+//!   exact remaining batches;
+//! * a full epoch yields every sample exactly once, and each yielded row
+//!   is byte-identical to the corresponding row of a full `read()`;
+//! * the prefetcher's decoded buffer never exceeds its byte budget
+//!   (counter-asserted via the loader's high-water mark), even when
+//!   `depth` alone would allow far more in flight;
+//! * a warm second epoch issues strictly fewer backend GETs than the
+//!   cold first one, because every batch fetch rides the block cache.
+//!
+//! Plus a documented-defaults check: the `DT_*` values the README's
+//! configuration table claims are asserted against the code.
+
+use delta_tensor::coordinator::Coordinator;
+use delta_tensor::loader::DEFAULT_PREFETCH_MB;
+use delta_tensor::prelude::*;
+use delta_tensor::workload;
+
+/// A fresh in-memory table holding one deterministic `n x dim` f32 corpus
+/// (chunk rank 1: 2-D tensors slice along the sample axis).
+fn corpus(n: usize, dim: usize) -> (Coordinator, String) {
+    let table = DeltaTable::create(ObjectStoreHandle::mem(), "loader-accept").unwrap();
+    let c = Coordinator::new(table, 2, 16);
+    let data: TensorData = workload::embedding_like(42, n, dim, 4, 0.1).into();
+    let fmt = FtsfFormat { rows_per_group: 8, rows_per_file: 64, ..FtsfFormat::new(1) };
+    fmt.write(c.table(), "emb", &data).unwrap();
+    (c, "emb".into())
+}
+
+/// Drain an epoch iterator into `(rows, bytes)` pairs.
+fn drain(mut it: delta_tensor::loader::EpochIter<'_>) -> Vec<(Vec<usize>, Vec<u8>)> {
+    let mut out = Vec::new();
+    while let Some(b) = it.next_batch().unwrap() {
+        out.push((b.rows.clone(), b.data.bytes().to_vec()));
+    }
+    out
+}
+
+#[test]
+fn same_seed_is_bit_identical_across_runs() {
+    // Two fully independent stores + coordinators, same corpus seed, same
+    // loader seed: every batch must match rows AND bytes.
+    let opts = LoaderOptions { batch_size: 16, seed: 9, ..Default::default() };
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let (c, id) = corpus(100, 16);
+        let l = DataLoader::open(&c, &id, opts.clone()).unwrap();
+        let mut batches = drain(l.epoch(0).unwrap());
+        batches.extend(drain(l.epoch(1).unwrap()));
+        runs.push(batches);
+    }
+    assert_eq!(runs[0].len(), 2 * 7, "7 batches per epoch, 2 epochs");
+    assert_eq!(runs[0], runs[1], "same seed => bit-identical batch stream");
+    // Different seeds (and different epochs of one seed) actually differ.
+    let (c, id) = corpus(100, 16);
+    let other = DataLoader::open(&c, &id, LoaderOptions { seed: 10, ..opts }).unwrap();
+    let other_batches = drain(other.epoch(0).unwrap());
+    assert_ne!(runs[0][..7], other_batches[..], "a different seed shuffles differently");
+}
+
+#[test]
+fn mid_epoch_resume_reproduces_remaining_batches() {
+    let (c, id) = corpus(96, 8);
+    let opts = LoaderOptions { batch_size: 8, seed: 5, ..Default::default() };
+    let l = DataLoader::open(&c, &id, opts.clone()).unwrap();
+    let full = drain(l.epoch(3).unwrap());
+    assert_eq!(full.len(), 12);
+
+    // Consume 5 batches, checkpoint, then resume through a *new* loader
+    // (as a restarted process would).
+    let mut head = l.epoch(3).unwrap();
+    for _ in 0..5 {
+        head.next_batch().unwrap().unwrap();
+    }
+    let ckpt = head.checkpoint();
+    assert_eq!(ckpt, Checkpoint { epoch: 3, cursor: 40 });
+    drop(head);
+    drop(l);
+
+    let l2 = DataLoader::open(&c, &id, opts).unwrap();
+    let tail = drain(l2.resume(ckpt).unwrap());
+    assert_eq!(tail.len(), 7, "12 batches minus the 5 already consumed");
+    assert_eq!(tail[..], full[5..], "resume is bit-identical to the uninterrupted run");
+}
+
+#[test]
+fn epoch_is_a_permutation_of_full_read_rows() {
+    let (c, id) = corpus(53, 8);
+    let dense = c.read(&id).unwrap().to_dense().unwrap();
+    let row_bytes = 8 * std::mem::size_of::<f32>();
+    let l = DataLoader::open(
+        &c,
+        &id,
+        LoaderOptions { batch_size: 8, seed: 1, coalesce_gap: 4, ..Default::default() },
+    )
+    .unwrap();
+    let mut seen = Vec::new();
+    let mut it = l.epoch(0).unwrap();
+    while let Some(b) = it.next_batch().unwrap() {
+        for (pos, &row) in b.rows.iter().enumerate() {
+            let got = &b.data.bytes()[pos * row_bytes..(pos + 1) * row_bytes];
+            let want = &dense.bytes()[row * row_bytes..(row + 1) * row_bytes];
+            assert_eq!(got, want, "batch {} row {row} differs from read()", b.index);
+            seen.push(row);
+        }
+    }
+    let mut sorted = seen.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..53).collect::<Vec<usize>>(), "every sample exactly once");
+    assert_ne!(seen, sorted, "order is shuffled");
+}
+
+#[test]
+fn prefetch_buffer_never_exceeds_byte_budget() {
+    // 128-byte samples, 8-sample batches (1 KiB each). A 2.5 KiB budget
+    // admits at most two batches in flight even though depth 8 would allow
+    // eight — the budget, not the depth, must bind.
+    let (c, id) = corpus(64, 32);
+    let batch_bytes: u64 = 8 * 128;
+    let budget: u64 = 2 * batch_bytes + batch_bytes / 2;
+    let opts = LoaderOptions {
+        batch_size: 8,
+        seed: 2,
+        depth: 8,
+        prefetch_bytes: Some(budget),
+        ..Default::default()
+    };
+    let l = DataLoader::open(&c, &id, opts).unwrap();
+    assert_eq!(l.prefetch_budget(), budget);
+    for epoch in 0..2 {
+        let mut it = l.epoch(epoch).unwrap();
+        while let Some(b) = it.next_batch().unwrap() {
+            // A slow consumer maximises buffered bytes between takes.
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            assert_eq!(b.data.shape()[0], b.rows.len());
+        }
+    }
+    let peak = l.max_buffered_bytes();
+    assert!(peak > 0, "prefetcher actually buffered something");
+    assert!(peak <= budget, "decoded buffer peaked at {peak} bytes, budget {budget}");
+    // Strictly below what depth alone would admit: the budget bound bit.
+    assert!(peak <= 2 * batch_bytes, "budget admits two 1 KiB batches, saw {peak} buffered");
+}
+
+#[test]
+fn warm_epoch_issues_fewer_gets_than_cold() {
+    let (c, id) = corpus(128, 16);
+    let l = DataLoader::open(
+        &c,
+        &id,
+        LoaderOptions { batch_size: 16, seed: 7, ..Default::default() },
+    )
+    .unwrap();
+    let gets = |c: &Coordinator| c.table().store().stats().snapshot().0;
+
+    let before = gets(&c);
+    drain(l.epoch(0).unwrap());
+    let cold = gets(&c) - before;
+
+    let before = gets(&c);
+    drain(l.epoch(1).unwrap());
+    let warm = gets(&c) - before;
+
+    assert!(cold > 0, "the cold epoch pays the backend");
+    assert!(warm < cold, "warm epoch must ride the block cache: {warm} GETs vs {cold} cold");
+}
+
+#[test]
+fn documented_defaults_match_code() {
+    // Spot checks for rust/README.md's configuration table: if one of
+    // these fails, fix the table (or the code) — they drifted.
+    assert_eq!(DEFAULT_PREFETCH_MB, 64, "DT_PREFETCH_MB default (README table)");
+    let opts = LoaderOptions::default();
+    assert_eq!(opts.batch_size, 32);
+    assert_eq!(opts.depth, 2);
+    assert_eq!(opts.coalesce_gap, 8);
+    assert!(opts.prefetch_bytes.is_none(), "default budget comes from the env");
+    if std::env::var("DT_CACHE_MB").is_err() {
+        assert_eq!(
+            delta_tensor::serving::block_cache().budget(),
+            256 * 1024 * 1024,
+            "DT_CACHE_MB default (README table)"
+        );
+    }
+}
