@@ -7,22 +7,30 @@
 //!
 //! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
 //! `DT_SEED` (workload seed, default 7), `DT_BENCH_OUT` (JSON report path,
-//! default `BENCH_maintain.json`). CI runs the tiny scale and gates
+//! default `BENCH_maintain.json`), `DT_HEALTH_OUT` (doctor report path,
+//! default `HEALTH_maintain.json`). CI runs the tiny scale and gates
 //! `incremental.search_qps` against `bench_baselines/maintain.json`.
+//!
+//! Each run samples the health gauges once per round (the trajectory rides
+//! the BENCH JSON), and after the incremental run the table doctor audits
+//! the mutated table deep — the `HEALTH_maintain.json` artifact CI's
+//! `tablecheck` bin fails on any corrupt finding.
 
 use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
+use delta_tensor::health::{doctor, DoctorOptions};
 use delta_tensor::prelude::*;
 use delta_tensor::workload::maintain::{
     populate_maintain_corpus, run_maintain, MaintainParams, MaintainReport,
 };
 
-fn run_once(incremental: bool, base: &MaintainParams) -> MaintainReport {
+fn run_once(incremental: bool, base: &MaintainParams) -> (MaintainReport, DeltaTable) {
     let mut params = base.clone();
     params.incremental = incremental;
     let store = ObjectStoreHandle::sim_mem(benchkit::net());
     let table = DeltaTable::create(store, "maintain").expect("fresh table");
     populate_maintain_corpus(&table, "vectors", &params).expect("populate");
-    run_maintain(&table, "vectors", &params).expect("maintain run")
+    let report = run_maintain(&table, "vectors", &params).expect("maintain run");
+    (report, table)
 }
 
 fn main() {
@@ -36,8 +44,10 @@ fn main() {
     }
     let mut rows = Vec::new();
     let mut reports = Vec::new();
+    let mut tables = Vec::new();
     for incremental in [true, false] {
-        let r = run_once(incremental, &params);
+        let (r, table) = run_once(incremental, &params);
+        tables.push(table);
         assert!(r.exact_full_nprobe, "full-nprobe search must equal brute force");
         rows.push(Row {
             label: if incremental { "incremental" } else { "rebuild" }.to_string(),
@@ -79,4 +89,25 @@ fn main() {
     );
     std::fs::write(&out, json).expect("write bench report");
     println!("wrote {out}");
+
+    // Deep doctor audit of the incrementally-maintained table: every chunk
+    // crc-verified, every index artifact decoded. Any corrupt finding here
+    // means the maintenance tier wrote state the log can't vouch for.
+    let health = doctor(&tables[0], &DoctorOptions { deep: true }).expect("doctor run");
+    assert_eq!(
+        health.corrupts(),
+        0,
+        "maintained table must audit clean: {:?}",
+        health.findings
+    );
+    let health_out =
+        std::env::var("DT_HEALTH_OUT").unwrap_or_else(|_| "HEALTH_maintain.json".to_string());
+    std::fs::write(&health_out, health.to_json().dump()).expect("write health report");
+    println!(
+        "wrote {health_out} ({} objects, {} checks, {} warn / {} corrupt)",
+        health.objects,
+        health.checks,
+        health.warns(),
+        health.corrupts()
+    );
 }

@@ -5,9 +5,17 @@
 //! bytes moved.
 //!
 //! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
-//! `DT_BENCH_OUT` (JSON report path, default `BENCH_serve.json`). CI runs
-//! the tiny scale and uploads the JSON so the perf trajectory accumulates
-//! across commits.
+//! `DT_BENCH_OUT` (JSON report path, default `BENCH_serve.json`),
+//! `DT_HEALTH_OUT` (doctor report path, default `HEALTH_serve.json`). CI
+//! runs the tiny scale and uploads the JSON so the perf trajectory
+//! accumulates across commits.
+//!
+//! Every run probes the health gauges each iteration of client 0
+//! (`probe_every = 1` — the trajectory rides the BENCH JSON, and the
+//! telemetry-overhead runs below probe too, so the ≤5% ceiling CI gates
+//! also bounds the probe's cost). After the measured runs the table doctor
+//! audits the served table deep; `HEALTH_serve.json` feeds CI's
+//! `tablecheck` bin, which fails on any corrupt finding.
 //!
 //! The bench also measures the telemetry tier's cost: the same warmed
 //! cache-on workload with tracing off vs on (including the harness's
@@ -19,19 +27,21 @@
 
 use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
 use delta_tensor::coordinator::Coordinator;
+use delta_tensor::health::{doctor, DoctorOptions};
 use delta_tensor::prelude::*;
 use delta_tensor::telemetry;
 use delta_tensor::util::human_bytes;
 use delta_tensor::workload::serve::{populate_serve_table, run_serve, ServeParams, ServeReport};
 
-fn run_once(cache: bool, params: &ServeParams) -> ServeReport {
+fn run_once(cache: bool, params: &ServeParams) -> (ServeReport, Coordinator) {
     let mut params = params.clone();
     params.cache = cache;
     let store = ObjectStoreHandle::sim_mem(benchkit::net());
     let table = DeltaTable::create(store, "serve").expect("fresh table");
     let c = Coordinator::new(table, 4, 32);
     let ids = populate_serve_table(&c, &params).expect("populate");
-    run_serve(&c, &ids, &params).expect("serve run")
+    let report = run_serve(&c, &ids, &params).expect("serve run");
+    (report, c)
 }
 
 /// One warmed cache-on serving run with the runtime tracing flag forced to
@@ -41,21 +51,27 @@ fn run_once(cache: bool, params: &ServeParams) -> ServeReport {
 fn run_telemetry(on: bool, params: &ServeParams) -> f64 {
     let was = telemetry::enabled();
     telemetry::set_enabled(on);
-    let r = run_once(true, params);
+    let (r, _) = run_once(true, params);
     telemetry::set_enabled(was);
     r.throughput_rps
 }
 
 fn main() {
-    let params = match benchkit::scale() {
+    let mut params = match benchkit::scale() {
         Scale::Tiny => ServeParams::tiny(),
         Scale::Small => ServeParams::small(),
         Scale::Paper => ServeParams::paper(),
     };
+    // Per-iteration health probing on client 0: the acceptance bar for the
+    // probe's cost — the telemetry runs below inherit it, so the ≤5%
+    // overhead ceiling CI gates covers probing too.
+    params.probe_every = 1;
     let mut rows = Vec::new();
     let mut reports = Vec::new();
+    let mut coords = Vec::new();
     for cache in [true, false] {
-        let r = run_once(cache, &params);
+        let (r, c) = run_once(cache, &params);
+        coords.push(c);
         rows.push(Row {
             label: if cache { "cache" } else { "no-cache" }.to_string(),
             cells: vec![
@@ -85,6 +101,26 @@ fn main() {
     );
     std::fs::write(&out, json).expect("write bench report");
     println!("wrote {out}");
+
+    // Deep doctor audit of the cache-on run's table: sizes, footers, chunk
+    // crcs, grids and orphans all cross-checked against the log.
+    let health = doctor(coords[0].table(), &DoctorOptions { deep: true }).expect("doctor run");
+    assert_eq!(
+        health.corrupts(),
+        0,
+        "served table must audit clean: {:?}",
+        health.findings
+    );
+    let health_out =
+        std::env::var("DT_HEALTH_OUT").unwrap_or_else(|_| "HEALTH_serve.json".to_string());
+    std::fs::write(&health_out, health.to_json().dump()).expect("write health report");
+    println!(
+        "wrote {health_out} ({} objects, {} checks, {} warn / {} corrupt)",
+        health.objects,
+        health.checks,
+        health.warns(),
+        health.corrupts()
+    );
 
     // Telemetry overhead: interleaved off/on repeats of the warmed
     // cache-on workload, best-of-3 per mode to damp scheduler noise.

@@ -1,0 +1,56 @@
+//! CI table-health validator.
+//!
+//! Loads one or more `HEALTH_*.json` doctor reports — the documents the
+//! serve/maintain benches (and `doctor --json`) write via
+//! [`delta_tensor::health::HealthReport::to_json`] — prints a one-line
+//! summary per report, and exits non-zero when any report carries a
+//! corrupt-severity finding, so CI fails the moment a bench table's log
+//! and objects disagree. Warn-severity findings (vacuum-able orphans, a
+//! stale index) are printed but do not fail the run.
+//!
+//! ```text
+//! cargo run --release --bin tablecheck -- HEALTH_serve.json HEALTH_maintain.json
+//! ```
+
+use anyhow::{bail, Context};
+use delta_tensor::health::HealthReport;
+use delta_tensor::jsonx;
+use delta_tensor::Result;
+
+fn real_main() -> Result<()> {
+    let mut paths: Vec<String> = std::env::args().skip(1).collect();
+    if paths.is_empty() {
+        paths = vec!["HEALTH_serve.json".to_string(), "HEALTH_maintain.json".to_string()];
+    }
+    let mut corrupt = 0usize;
+    for path in &paths {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = jsonx::parse(&text).with_context(|| format!("parsing {path}"))?;
+        let report = HealthReport::from_json(&doc).with_context(|| format!("validating {path}"))?;
+        println!(
+            "tablecheck: {path} — table {:?} @ v{}, {} objects / {} checks{}: {} corrupt, {} warn",
+            report.table,
+            report.version,
+            report.objects,
+            report.checks,
+            if report.deep { " (deep)" } else { "" },
+            report.corrupts(),
+            report.warns()
+        );
+        for f in &report.findings {
+            println!("  {}", f.render());
+        }
+        corrupt += report.corrupts();
+    }
+    if corrupt > 0 {
+        bail!("{corrupt} corrupt finding(s) across {} report(s)", paths.len());
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("tablecheck: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -5,10 +5,11 @@
 //! [`delta_tensor::telemetry::export::chrome_trace_json`] — and
 //! structurally validates it: spans are well-formed with children nested
 //! inside parents, instant events reference a live span and sit inside
-//! its interval, and every GET event of a read-rooted trace is attributed
-//! under a fetch/plan span (the cache invariant, checked per operation).
-//! Exits non-zero on any violation, so CI fails when the tracing tier
-//! mis-attributes I/O.
+//! its interval, and every GET event of a read-rooted trace — including
+//! the loader vocabulary (`loader_epoch`/`loader_batch`/`loader_yield`) —
+//! is attributed under a fetch/plan span (the cache invariant, checked
+//! per operation). Exits non-zero on any violation, so CI fails when the
+//! tracing tier mis-attributes I/O.
 //!
 //! ```text
 //! cargo run --release --bin tracecheck -- TRACE_serve.json
@@ -26,9 +27,9 @@ fn real_main() -> Result<()> {
     let sum = validate_chrome_trace(&doc).with_context(|| format!("validating {path}"))?;
     ensure!(sum.traces > 0, "{path}: document holds no traces — sampling produced nothing");
     println!(
-        "tracecheck: {path} ok — {} traces, {} spans, {} instant events, \
+        "tracecheck: {path} ok — {} traces ({} loader), {} spans, {} instant events, \
          {} GETs nested under fetch/plan spans",
-        sum.traces, sum.spans, sum.instants, sum.gets_under_fetch
+        sum.traces, sum.loader_traces, sum.spans, sum.instants, sum.gets_under_fetch
     );
     Ok(())
 }

@@ -18,6 +18,7 @@
 //!   bench      load harnesses                  (bench serve|ingest|search|maintain|loader)
 //!   trace      run ONE op force-traced, print its span tree (trace read|slice|search|append)
 //!   stats      metrics registry + tier counters          (--format prometheus|json)
+//!   doctor     read-only consistency audit               (--deep, --probe, --json PATH)
 //! ```
 //!
 //! `bench serve` drives the coordinator with a closed-loop Zipfian hot-set
@@ -157,6 +158,7 @@ pub fn run(args: &Args) -> Result<String> {
         "bench" => cmd_bench(args),
         "trace" => cmd_trace(args),
         "stats" => cmd_stats(args),
+        "doctor" => cmd_doctor(args),
         "metrics-demo" => cmd_metrics_demo(args),
         other => bail!("unknown command {other:?}; try `delta-tensor help`"),
     }
@@ -177,6 +179,9 @@ COMMANDS
   slice     --id NAME --start A --end B    read X[A:B, ...]
   inspect                        per-tensor stats (dtype, shape) and read plans
   history                        commit log (version, operation, timestamp)
+            [--journal [--json]]  render this process's structured event
+            journal (op, adds/removes, bytes, retries, duration, outcome)
+            instead; --json emits JSONL
   optimize  --id NAME            compact a tensor's part files (chunk rank
                                  preserved) and fold/refresh its index
   vacuum                         delete unreferenced data objects
@@ -204,6 +209,8 @@ COMMANDS
             [--clients N] [--requests N] [--tensors N] [--dim0 N]
             [--zipf S] [--no-cache] [--warmup-off] [--layout NAME]
             [--seed N] [--workers N] [--json PATH]
+            [--probe-every N]    sample the health gauges every N
+            iterations of client 0 (trajectory lands in the report)
   bench ingest                   closed-loop batched-write load harness
             [--writers N] [--batches N] [--batch N] [--dim0 N]
             [--density F] [--layout NAME] [--seed N] [--json PATH]
@@ -231,6 +238,13 @@ COMMANDS
   stats     [--format prometheus|json] [--read ID]   metrics registry +
             tier counters; --read first serves one whole-tensor read so
             the registry has live values
+  doctor    read-only consistency audit: replays the Delta log and
+            cross-checks object sizes, DTPQ footers + chunk bounds, FTSF
+            chunk grids, index artifact geometry/codebooks/row counts, and
+            vacuum-able orphans; findings carry severity (warn/corrupt) and
+            byte locations.  [--deep] also crc-verifies every chunk;
+            [--probe] appends the cheap O(snapshot) health gauges;
+            [--json PATH] writes the machine-readable HealthReport
 COMMON FLAGS
   --table NAME                   table root (default: tensors)
   --store mem|fs                 backend (default fs)   --root PATH
@@ -242,6 +256,9 @@ TRACING (runtime-gated, compiled always-on)
   DT_SLOW_MS=N                   slow-op log threshold, ms (default 100)
   DT_TRACE_KEEP=N                trace ring-buffer capacity (default 64)
   bench serve --trace-every N    sample every Nth request per client (0 = off)
+HEALTH (see `doctor` and `history --journal`)
+  DT_JOURNAL_KEEP=N              event-journal ring capacity (default 256)
+  DT_PROBE_TOPK=N                cache-heatmap entries per probe (default 8)
 
 Benches for the paper's figures: `cargo bench` (see EXPERIMENTS.md).
 "#;
@@ -397,9 +414,45 @@ fn cmd_inspect(args: &Args) -> Result<String> {
 
 fn cmd_history(args: &Args) -> Result<String> {
     let table = open_table(args)?;
+    if args.has("journal") {
+        // The structured event journal: this process's commit-shaped
+        // operations against this table, not the persisted log. Filter by
+        // table root only — every CLI invocation opens a fresh store
+        // handle, so instance ids differ between the op and the query.
+        let events = crate::health::journal::events(None, Some(table.root()));
+        if args.has("json") {
+            return Ok(crate::health::journal::to_jsonl(&events));
+        }
+        if events.is_empty() {
+            return Ok("journal empty (events are in-process; run an operation first)\n".into());
+        }
+        let mut out = String::new();
+        for e in &events {
+            out.push_str(&e.render());
+            out.push('\n');
+        }
+        return Ok(out);
+    }
     let mut out = String::new();
     for (v, op, ts) in table.history()? {
         out.push_str(&format!("v{v:<6} {op:<16} ts={ts}\n"));
+    }
+    Ok(out)
+}
+
+/// The `doctor` verb: run the read-only table audit, optionally deep
+/// (crc-verify every chunk) and with the cheap probe gauges appended.
+fn cmd_doctor(args: &Args) -> Result<String> {
+    let table = open_table(args)?;
+    let opts = crate::health::DoctorOptions { deep: args.has("deep") };
+    let report = crate::health::doctor(&table, &opts)?;
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, format!("{}\n", report.to_json().dump()))
+            .with_context(|| format!("writing {path}"))?;
+    }
+    let mut out = report.render();
+    if args.has("probe") {
+        out.push_str(&crate::health::probe(&table)?.render());
     }
     Ok(out)
 }
@@ -727,6 +780,7 @@ fn cmd_bench_serve(args: &Args) -> Result<String> {
         seed: args.opt_usize("seed", 7)? as u64,
         layout: args.opt("layout", "COO").to_string(),
         trace_every: args.opt_usize("trace-every", 8)?,
+        probe_every: args.opt_usize("probe-every", 0)?,
     };
     let c = Coordinator::new(table, args.opt_usize("workers", 4)?, 32);
     let ids = workload::serve::populate_serve_table(&c, &params)?;
@@ -821,12 +875,13 @@ fn cmd_stats(args: &Args) -> Result<String> {
         let _ = c.read(id)?;
     }
     let tiers = format!(
-        "{}{}{}{}{}",
+        "{}{}{}{}{}{}",
         crate::query::engine::report(),
         crate::serving::report(),
         crate::ingest::report(),
         crate::index::report(),
-        crate::telemetry::report()
+        crate::telemetry::report(),
+        crate::health::report()
     );
     match args.opt("format", "prometheus") {
         "prometheus" => Ok(crate::telemetry::export::prometheus_text(c.metrics(), &tiers)),
@@ -1201,6 +1256,83 @@ mod tests {
         assert!(out.contains("append 8 rows"), "{out}");
 
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn doctor_and_journal_fs_flow() {
+        let root = std::env::temp_dir().join(format!("dt-cli-doc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let rootflag = root.to_string_lossy().to_string();
+        // Unique table name: the journal is process-global and other tests
+        // in this binary also journal against tables named "t".
+        let common = ["--store", "fs", "--root", &rootflag, "--table", "doc9"];
+
+        let mut v = vec!["ingest", "--workload", "ffhq", "--layout", "FTSF", "--id", "g1"];
+        v.extend_from_slice(&common);
+        run(&args(&v)).unwrap();
+
+        // A clean table audits clean, shallow and deep, and --json writes
+        // a HealthReport document that parses back.
+        let json_path = root.join("health.json");
+        let json_flag = json_path.to_string_lossy().to_string();
+        let mut v = vec!["doctor", "--deep", "--probe", "--json", &json_flag];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("healthy: zero findings"), "{out}");
+        assert!(out.contains("probe:"), "{out}");
+        let doc = crate::jsonx::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        let report = crate::health::HealthReport::from_json(&doc).unwrap();
+        assert!(report.is_healthy(), "{:?}", report.findings);
+        assert!(report.deep && report.objects > 0 && report.checks > 0);
+
+        // The ingest commits journaled; `history --journal` renders them
+        // and --json emits one JSON object per line.
+        let mut v = vec!["history", "--journal"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("CREATE TABLE"), "{out}");
+        assert!(out.contains("WRITE"), "{out}");
+        let mut v = vec!["history", "--journal", "--json"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        for line in out.lines() {
+            let j = crate::jsonx::parse(line).unwrap();
+            assert_eq!(j.get("table").and_then(crate::jsonx::Json::as_str), Some("doc9"));
+        }
+
+        // `stats` now carries the health tier gauges.
+        let mut v = vec!["stats"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("health_doctor_runs"), "{out}");
+
+        // A truncated part file is detected as corrupt.
+        let part = find_one_dtpq(&root.join("doc9"));
+        let full = std::fs::read(&part).unwrap();
+        std::fs::write(&part, &full[..full.len() - 4]).unwrap();
+        let mut v = vec!["doctor"];
+        v.extend_from_slice(&common);
+        let out = run(&args(&v)).unwrap();
+        assert!(out.contains("corrupt"), "{out}");
+        assert!(out.contains("object.size"), "{out}");
+
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// First `.dtpq` object under a table's fs root (test helper).
+    fn find_one_dtpq(dir: &std::path::Path) -> std::path::PathBuf {
+        let mut stack = vec![dir.to_path_buf()];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap() {
+                let p = e.unwrap().path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if p.extension().is_some_and(|x| x == "dtpq") {
+                    return p;
+                }
+            }
+        }
+        panic!("no .dtpq under {dir:?}");
     }
 
     #[test]

@@ -125,6 +125,7 @@ impl DeltaTable {
         let body = commit_to_ndjson(&actions);
         let ok = t.store.put_if_absent(&t.commit_key(0), body.as_bytes())?;
         ensure!(ok, "table already exists at {root}");
+        t.journal("CREATE TABLE", Some(0), 0, 0, 0, 0, 0.0, "ok");
         Ok(t)
     }
 
@@ -171,20 +172,33 @@ impl DeltaTable {
         format!("{}/{}", self.root, rel)
     }
 
-    fn log_prefix(&self) -> String {
+    pub(crate) fn log_prefix(&self) -> String {
         format!("{}/_delta_log/", self.root)
     }
 
-    fn commit_key(&self, version: u64) -> String {
+    pub(crate) fn commit_key(&self, version: u64) -> String {
         format!("{}{:020}.json", self.log_prefix(), version)
     }
 
-    fn checkpoint_key(&self, version: u64) -> String {
+    pub(crate) fn checkpoint_key(&self, version: u64) -> String {
         format!("{}{:020}.checkpoint.json", self.log_prefix(), version)
     }
 
     fn last_checkpoint_key(&self) -> String {
         format!("{}_last_checkpoint", self.log_prefix())
+    }
+
+    /// Version of the newest checkpoint per the `_last_checkpoint` hint
+    /// (`None` when no checkpoint was written yet). One HEAD + one GET —
+    /// the health probe's "log length since checkpoint" gauge reads this.
+    pub fn last_checkpoint_version(&self) -> Result<Option<u64>> {
+        if self.store.head(&self.last_checkpoint_key())?.is_none() {
+            return Ok(None);
+        }
+        let body = self.store.get(&self.last_checkpoint_key())?;
+        Ok(jsonx::parse(std::str::from_utf8(&body).unwrap_or(""))
+            .ok()
+            .and_then(|j| j.get("version").and_then(Json::as_u64)))
     }
 
     /// Latest committed version.
@@ -213,6 +227,38 @@ impl DeltaTable {
     /// are still live and fail otherwise (the caller must re-plan, as
     /// Delta does for conflicting OPTIMIZE).
     pub fn commit(&self, actions: Vec<Action>) -> Result<u64> {
+        let started = std::time::Instant::now();
+        let op = actions
+            .iter()
+            .rev()
+            .find_map(|a| match a {
+                Action::CommitInfo { operation, .. } => Some(operation.clone()),
+                _ => None,
+            })
+            .unwrap_or_else(|| "COMMIT".to_string());
+        let adds = actions.iter().filter(|a| matches!(a, Action::Add(_))).count();
+        let add_bytes: u64 = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Add(f) => Some(f.size),
+                _ => None,
+            })
+            .sum();
+        let mut retries = 0u64;
+        // One journal entry per outcome path, so failed commits are as
+        // visible post-hoc as landed ones.
+        let journal = |version: Option<u64>, retries: u64, outcome: &str| {
+            self.journal(
+                &op,
+                version,
+                adds,
+                actions.iter().filter(|a| matches!(a, Action::Remove { .. })).count(),
+                add_bytes,
+                retries,
+                started.elapsed().as_secs_f64() * 1e3,
+                outcome,
+            );
+        };
         let removes: Vec<String> = actions
             .iter()
             .filter_map(|a| match a {
@@ -236,6 +282,7 @@ impl DeltaTable {
                     // Best-effort checkpoint; failure must not fail the commit.
                     let _ = self.write_checkpoint(version);
                 }
+                journal(Some(version), retries, "ok");
                 return Ok(version);
             }
             // Conflict: someone won this version. Refresh instead of
@@ -243,18 +290,51 @@ impl DeltaTable {
             // every commit that won meanwhile, and re-validate removes
             // against the refreshed snapshot.
             COMMIT_RETRIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            retries += 1;
             self.store.io_span().retry();
             if !removes.is_empty() {
                 let snap = self.snapshot()?;
                 for r in &removes {
                     if !snap.files.contains_key(r) {
+                        journal(None, retries, "conflict");
                         bail!("commit conflict: {r} was removed concurrently");
                     }
                 }
             }
             version = (self.latest_version()? + 1).max(version + 1);
         }
+        journal(None, retries, "conflict");
         bail!("giving up after {MAX_COMMIT_RETRIES} commit conflicts")
+    }
+
+    /// Record one [`crate::health::journal`] event for an operation against
+    /// this table.
+    #[allow(clippy::too_many_arguments)]
+    fn journal(
+        &self,
+        op: &str,
+        version: Option<u64>,
+        adds: usize,
+        removes: usize,
+        bytes: u64,
+        retries: u64,
+        duration_ms: f64,
+        outcome: &str,
+    ) {
+        crate::health::journal::record(crate::health::journal::JournalEvent {
+            seq: 0,
+            timestamp_ms: 0,
+            instance: self.store.instance_id(),
+            table: self.root.clone(),
+            op: op.to_string(),
+            version,
+            adds,
+            removes,
+            bytes,
+            retries,
+            duration_ms,
+            outcome: outcome.to_string(),
+        });
     }
 
     /// Snapshot at the latest version.
@@ -388,21 +468,36 @@ impl DeltaTable {
     /// under `index/`, and whatever future tiers add — is reclaimed
     /// without this list needing maintenance.
     pub fn vacuum(&self) -> Result<usize> {
+        let started = std::time::Instant::now();
         let snap = self.snapshot()?;
         let live: std::collections::HashSet<&str> =
             snap.files.keys().map(|s| s.as_str()).collect();
         let log = self.log_prefix();
         let mut deleted = 0usize;
+        let mut freed = 0u64;
         for key in self.store.list(&format!("{}/", self.root))? {
             if key.starts_with(&log) {
                 continue;
             }
             let rel = key.strip_prefix(&format!("{}/", self.root)).unwrap_or(&key);
             if !live.contains(rel) {
+                freed += self.store.head(&key)?.unwrap_or(0);
                 self.store.delete(&key)?;
                 deleted += 1;
             }
         }
+        // VACUUM never commits, so it journals directly: `removes` counts
+        // swept objects, `bytes` the storage they occupied.
+        self.journal(
+            "VACUUM",
+            Some(snap.version),
+            0,
+            deleted,
+            freed,
+            0,
+            started.elapsed().as_secs_f64() * 1e3,
+            "ok",
+        );
         Ok(deleted)
     }
 }

@@ -1,0 +1,522 @@
+//! The table doctor: a deep, read-only consistency audit.
+//!
+//! [`doctor`] replays the Delta log to a ground-truth snapshot (no cache)
+//! and cross-checks every layer the log claims against what the object
+//! store actually holds:
+//!
+//! * every live Add's object exists and is exactly the recorded size;
+//! * every DTPQ part's footer parses, and every column chunk it describes
+//!   lies inside the file ([`DoctorOptions::deep`] additionally fetches
+//!   each chunk and verifies its crc32);
+//! * FTSF tensors' chunk grids are complete — the live parts' chunk-index
+//!   ranges tile `[0, n_chunks)` with no gap or overlap;
+//! * index artifacts decode (magic, version, geometry), postings and
+//!   codebooks are pinned and sized to the offset table, delta segments
+//!   match the pinned geometry and their journaled row counts add up, and
+//!   the build fingerprint still matches the live data files
+//!   (via [`crate::index`]'s audit hook, so artifact formats stay private
+//!   to the index tier);
+//! * unreferenced objects under the table root are reported as
+//!   vacuum-able orphans.
+//!
+//! Findings carry a severity ([`Severity::Warn`] for recoverable drift,
+//! [`Severity::Corrupt`] for log/object disagreement) and, where one
+//! exists, the byte range implicated. The report serializes to JSON for
+//! the `tablecheck` CI bin and renders as text for the `doctor` CLI verb.
+
+use crate::delta::DeltaTable;
+use crate::jsonx::Json;
+use crate::objectstore::ObjectStore;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+/// How bad one finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Informational; nothing wrong.
+    Ok,
+    /// Recoverable drift: vacuum-able orphans, a stale index.
+    Warn,
+    /// The log and the store disagree; reads through this state can fail
+    /// or lie.
+    Corrupt,
+}
+
+impl Severity {
+    /// Lowercase wire name (`ok`/`warn`/`corrupt`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Ok => "ok",
+            Severity::Warn => "warn",
+            Severity::Corrupt => "corrupt",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ok" => Some(Severity::Ok),
+            "warn" => Some(Severity::Warn),
+            "corrupt" => Some(Severity::Corrupt),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One failed (or noteworthy) check.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Severity of the finding.
+    pub severity: Severity,
+    /// Check identifier, dotted (`object.size`, `part.footer`,
+    /// `index.delta`, `orphan.data`, ...).
+    pub check: String,
+    /// Table-relative object path the finding is about.
+    pub path: String,
+    /// Byte range `(offset, len)` implicated, when the check localizes one.
+    pub location: Option<(u64, u64)>,
+    /// Human explanation: expected vs found.
+    pub detail: String,
+}
+
+impl Finding {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("severity", Json::from(self.severity.name())),
+            ("check", Json::from(self.check.as_str())),
+            ("path", Json::from(self.path.as_str())),
+        ];
+        if let Some((off, len)) = self.location {
+            pairs.push(("offset", Json::from(off)));
+            pairs.push(("len", Json::from(len)));
+        }
+        pairs.push(("detail", Json::from(self.detail.as_str())));
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let sev = j.get("severity").and_then(Json::as_str).context("finding severity")?;
+        Ok(Self {
+            severity: Severity::parse(sev).with_context(|| format!("bad severity {sev:?}"))?,
+            check: j.get("check").and_then(Json::as_str).context("finding check")?.to_string(),
+            path: j.get("path").and_then(Json::as_str).context("finding path")?.to_string(),
+            location: match (
+                j.get("offset").and_then(Json::as_u64),
+                j.get("len").and_then(Json::as_u64),
+            ) {
+                (Some(o), Some(l)) => Some((o, l)),
+                _ => None,
+            },
+            detail: j.get("detail").and_then(Json::as_str).unwrap_or("").to_string(),
+        })
+    }
+
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        let loc = match self.location {
+            Some((off, len)) => format!(" @ bytes [{off}, {})", off + len),
+            None => String::new(),
+        };
+        format!("{:>7}  {:<20} {}{}  — {}", self.severity, self.check, self.path, loc, self.detail)
+    }
+}
+
+/// Knobs for one doctor run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DoctorOptions {
+    /// Also fetch every DTPQ column chunk and verify its crc32 (full data
+    /// read; the default audit reads only footers and index headers).
+    pub deep: bool,
+}
+
+/// What one doctor run found.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    /// Table root audited.
+    pub table: String,
+    /// Log version the audit replayed to.
+    pub version: u64,
+    /// Store instance the table lives on.
+    pub instance: u64,
+    /// Whether chunk payloads were crc-verified.
+    pub deep: bool,
+    /// Objects cross-checked against the store.
+    pub objects: u64,
+    /// Bytes whose integrity was vouched for (sizes, headers, footers;
+    /// chunk payloads in deep mode).
+    pub bytes: u64,
+    /// Individual checks executed.
+    pub checks: u64,
+    /// Wall milliseconds the audit took.
+    pub elapsed_ms: f64,
+    /// Everything that wasn't clean.
+    pub findings: Vec<Finding>,
+}
+
+impl HealthReport {
+    /// Warn-severity finding count.
+    pub fn warns(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
+    }
+
+    /// Corrupt-severity finding count.
+    pub fn corrupts(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Corrupt).count()
+    }
+
+    /// True when no finding rose above [`Severity::Ok`].
+    pub fn is_healthy(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// JSON document (the `HEALTH_*.json` artifact format).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("report", Json::from("doctor")),
+            ("table", Json::from(self.table.as_str())),
+            ("version", Json::from(self.version)),
+            ("instance", Json::from(self.instance)),
+            ("deep", Json::from(self.deep)),
+            ("objects", Json::from(self.objects)),
+            ("bytes", Json::from(self.bytes)),
+            ("checks", Json::from(self.checks)),
+            ("elapsed_ms", Json::Float(self.elapsed_ms)),
+            ("warn", Json::from(self.warns())),
+            ("corrupt", Json::from(self.corrupts())),
+            ("findings", Json::Arr(self.findings.iter().map(Finding::to_json).collect())),
+        ])
+    }
+
+    /// Parse a `HEALTH_*.json` document back (the `tablecheck` bin).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        ensure!(
+            j.get("report").and_then(Json::as_str) == Some("doctor"),
+            "not a doctor report (missing report=doctor)"
+        );
+        let findings = j
+            .get("findings")
+            .and_then(Json::as_arr)
+            .context("findings missing")?
+            .iter()
+            .map(Finding::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            table: j.get("table").and_then(Json::as_str).context("table")?.to_string(),
+            version: j.get("version").and_then(Json::as_u64).context("version")?,
+            instance: j.get("instance").and_then(Json::as_u64).unwrap_or(0),
+            deep: j.get("deep").and_then(Json::as_bool).unwrap_or(false),
+            objects: j.get("objects").and_then(Json::as_u64).unwrap_or(0),
+            bytes: j.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+            checks: j.get("checks").and_then(Json::as_u64).unwrap_or(0),
+            elapsed_ms: j.get("elapsed_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            findings,
+        })
+    }
+
+    /// Multi-line human rendering (the `doctor` CLI output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "doctor: {} @ v{} — {} objects, {} bytes vouched, {} checks in {:.1} ms\n",
+            self.table, self.version, self.objects, self.bytes, self.checks, self.elapsed_ms
+        );
+        if self.findings.is_empty() {
+            out.push_str("  healthy: zero findings\n");
+        } else {
+            out.push_str(&format!(
+                "  {} finding(s): {} corrupt, {} warn\n",
+                self.findings.len(),
+                self.corrupts(),
+                self.warns()
+            ));
+            for f in &self.findings {
+                out.push_str("  ");
+                out.push_str(&f.render());
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Run the audit against the table's latest version.
+pub fn doctor(table: &DeltaTable, opts: &DoctorOptions) -> Result<HealthReport> {
+    let started = std::time::Instant::now();
+    // Ground truth: replay the log directly rather than trusting the
+    // engine's snapshot cache — the doctor is what you run when caches
+    // might be lying.
+    let snap = table.snapshot()?;
+    let store = table.store();
+    let mut findings = Vec::new();
+    let mut objects = 0u64;
+    let mut bytes = 0u64;
+    let mut checks = 0u64;
+
+    // -- Pillar 1: every live Add vs the object it names. --------------
+    for add in snap.files() {
+        let key = table.data_key(&add.path);
+        checks += 1;
+        let Some(size) = store.head(&key)? else {
+            findings.push(Finding {
+                severity: Severity::Corrupt,
+                check: "object.missing".into(),
+                path: add.path.clone(),
+                location: None,
+                detail: format!(
+                    "log pins {} B at v{} but the object is gone",
+                    add.size, snap.version
+                ),
+            });
+            continue;
+        };
+        objects += 1;
+        if size != add.size {
+            let lo = size.min(add.size);
+            findings.push(Finding {
+                severity: Severity::Corrupt,
+                check: "object.size".into(),
+                path: add.path.clone(),
+                location: Some((lo, size.max(add.size) - lo)),
+                detail: format!("log pins {} B, object holds {size} B", add.size),
+            });
+            continue; // size lies ⇒ every offset below would too
+        }
+        bytes += 8; // the (size, existence) pair just vouched for
+        if add.path.ends_with(".dtpq") {
+            audit_dtpq(store, &key, add, size, opts, &mut findings, &mut bytes, &mut checks)?;
+        }
+    }
+
+    // -- Pillar 2: FTSF chunk-grid completeness. ------------------------
+    audit_ftsf_grids(&snap, &mut findings, &mut checks);
+
+    // -- Pillar 3: index artifacts (formats stay private to the tier). --
+    let (io, ib, ic) = crate::index::doctor_audit(table, &snap, &mut findings)?;
+    objects += io;
+    bytes += ib;
+    checks += ic;
+
+    // -- Pillar 4: orphans — vacuum-able debris under the root. ---------
+    let prefix = format!("{}/", table.root());
+    let log = table.log_prefix();
+    for key in store.list(&prefix)? {
+        if key.starts_with(&log) {
+            continue;
+        }
+        checks += 1;
+        let rel = key.strip_prefix(&prefix).unwrap_or(&key);
+        if !snap.files.contains_key(rel) {
+            let sz = store.head(&key)?.unwrap_or(0);
+            let under_index = rel.starts_with("index/");
+            findings.push(Finding {
+                severity: Severity::Warn,
+                check: if under_index { "orphan.index" } else { "orphan.data" }.into(),
+                path: rel.to_string(),
+                location: Some((0, sz)),
+                detail: format!("{sz} B unreferenced at v{} (vacuum reclaims it)", snap.version),
+            });
+        }
+    }
+
+    crate::health::note_doctor(&findings);
+    Ok(HealthReport {
+        table: table.root().to_string(),
+        version: snap.version,
+        instance: store.instance_id(),
+        deep: opts.deep,
+        objects,
+        bytes,
+        checks,
+        elapsed_ms: started.elapsed().as_secs_f64() * 1e3,
+        findings,
+    })
+}
+
+/// Footer + chunk-bounds (and, deep, chunk-crc) audit of one DTPQ part.
+#[allow(clippy::too_many_arguments)]
+fn audit_dtpq(
+    store: &dyn ObjectStore,
+    key: &str,
+    add: &crate::delta::AddFile,
+    size: u64,
+    opts: &DoctorOptions,
+    findings: &mut Vec<Finding>,
+    bytes: &mut u64,
+    checks: &mut u64,
+) -> Result<()> {
+    *checks += 1;
+    let footer = match crate::columnar::read_footer(store, key) {
+        Ok(f) => f,
+        Err(e) => {
+            // The footer machinery lives in the file's tail: length word +
+            // trailing magic occupy the last 10 bytes.
+            findings.push(Finding {
+                severity: Severity::Corrupt,
+                check: "part.footer".into(),
+                path: add.path.clone(),
+                location: Some((size.saturating_sub(10), size.min(10))),
+                detail: format!("footer unreadable: {e:#}"),
+            });
+            return Ok(());
+        }
+    };
+    *bytes += 10; // tail magic + length word verified by the parse
+    for (gi, g) in footer.row_groups.iter().enumerate() {
+        for (ci, c) in g.columns.iter().enumerate() {
+            *checks += 1;
+            if c.offset < 6 || c.offset + c.len > size {
+                findings.push(Finding {
+                    severity: Severity::Corrupt,
+                    check: "part.chunk_bounds".into(),
+                    path: add.path.clone(),
+                    location: Some((c.offset, c.len)),
+                    detail: format!(
+                        "group {gi} col {ci} claims bytes [{}, {}) in a {size} B file",
+                        c.offset,
+                        c.offset + c.len
+                    ),
+                });
+                continue;
+            }
+            if opts.deep {
+                *checks += 1;
+                let body = store.get_range(key, c.offset, c.len)?;
+                if crc32fast::hash(&body) != c.crc32 {
+                    findings.push(Finding {
+                        severity: Severity::Corrupt,
+                        check: "part.chunk_crc".into(),
+                        path: add.path.clone(),
+                        location: Some((c.offset, c.len)),
+                        detail: format!("group {gi} col {ci}: crc32 mismatch"),
+                    });
+                } else {
+                    *bytes += c.len;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// FTSF completeness: for every tensor whose Add metadata carries the FTSF
+/// geometry (`shape` + `cdims`), the live parts' chunk-index ranges must
+/// tile `[0, n_chunks)` exactly.
+fn audit_ftsf_grids(
+    snap: &crate::delta::Snapshot,
+    findings: &mut Vec<Finding>,
+    checks: &mut u64,
+) {
+    use std::collections::BTreeMap;
+    // tensor id -> (expected chunk count, carrier path)
+    let mut grids: BTreeMap<&str, (u64, &str)> = BTreeMap::new();
+    for f in snap.files() {
+        let Some(meta) = f.meta.as_deref() else { continue };
+        let Ok(j) = crate::jsonx::parse(meta) else { continue };
+        let (Some(shape), Some(cd)) = (
+            j.get("shape").and_then(Json::to_int_vec),
+            j.get("cdims").and_then(Json::as_u64),
+        ) else {
+            continue;
+        };
+        let cd = cd as usize;
+        if cd >= shape.len() {
+            continue; // geometry() rejects this; read path reports it
+        }
+        let lead = &shape[..shape.len() - cd];
+        let n_chunks: u64 = lead.iter().map(|&d| d.max(0) as u64).product();
+        grids.insert(f.tensor_id.as_str(), (n_chunks, f.path.as_str()));
+    }
+    for (id, (n_chunks, carrier)) in grids {
+        *checks += 1;
+        let mut ranges: Vec<(i64, i64)> = snap
+            .files_for_tensor(id)
+            .iter()
+            .filter(|f| f.path.ends_with(".dtpq"))
+            .filter_map(|f| Some((f.min_key?, f.max_key?)))
+            .collect();
+        ranges.sort_unstable();
+        let mut next = 0i64;
+        let mut problem = None;
+        for &(lo, hi) in &ranges {
+            if lo > next {
+                problem = Some(format!("chunks [{next}, {lo}) missing"));
+                break;
+            }
+            if lo < next {
+                problem = Some(format!("chunks [{lo}, {next}) covered twice"));
+                break;
+            }
+            next = hi + 1;
+        }
+        if problem.is_none() && next != n_chunks as i64 {
+            problem = Some(format!("chunks [{next}, {n_chunks}) missing"));
+        }
+        if let Some(p) = problem {
+            findings.push(Finding {
+                severity: Severity::Corrupt,
+                check: "ftsf.grid".into(),
+                path: carrier.to_string(),
+                location: None,
+                detail: format!("tensor {id:?}: grid of {n_chunks} chunks incomplete — {p}"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_and_names() {
+        assert!(Severity::Ok < Severity::Warn && Severity::Warn < Severity::Corrupt);
+        assert_eq!(Severity::parse("corrupt"), Some(Severity::Corrupt));
+        assert_eq!(Severity::parse("weird"), None);
+        assert_eq!(Severity::Warn.name(), "warn");
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let r = HealthReport {
+            table: "t".into(),
+            version: 9,
+            instance: 4,
+            deep: true,
+            objects: 12,
+            bytes: 34_567,
+            checks: 88,
+            elapsed_ms: 2.25,
+            findings: vec![
+                Finding {
+                    severity: Severity::Corrupt,
+                    check: "object.size".into(),
+                    path: "data/p.dtpq".into(),
+                    location: Some((100, 28)),
+                    detail: "log pins 128 B, object holds 100 B".into(),
+                },
+                Finding {
+                    severity: Severity::Warn,
+                    check: "orphan.data".into(),
+                    path: "data/dead.dtpq".into(),
+                    location: Some((0, 64)),
+                    detail: "64 B unreferenced".into(),
+                },
+            ],
+        };
+        let text = r.to_json().dump();
+        let back = HealthReport::from_json(&crate::jsonx::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.table, "t");
+        assert_eq!(back.version, 9);
+        assert!(back.deep);
+        assert_eq!(back.findings.len(), 2);
+        assert_eq!(back.corrupts(), 1);
+        assert_eq!(back.warns(), 1);
+        assert_eq!(back.findings[0].location, Some((100, 28)));
+        assert!(!back.is_healthy());
+        assert!(back.render().contains("object.size"));
+    }
+}

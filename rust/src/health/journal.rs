@@ -1,0 +1,233 @@
+//! Structured event journal: one typed record per commit-shaped operation.
+//!
+//! Every commit that lands (or fails) through [`crate::delta::DeltaTable`]
+//! — writes, appends, index builds and folds, OPTIMIZE — plus VACUUM
+//! sweeps append a [`JournalEvent`] to a process-wide ring buffer, so
+//! "what happened to this table" has an answer after the fact without
+//! replaying span trees: the version it landed as, the operation name,
+//! files added/removed, bytes, commit retries, wall duration and outcome.
+//!
+//! The ring is bounded by `DT_JOURNAL_KEEP` (default
+//! [`DEFAULT_JOURNAL_KEEP`]); old events drop off the front and are
+//! counted in [`dropped`]. Events carry the store instance id and table
+//! root, so one process journaling many tables stays filterable. The
+//! JSONL exporter ([`to_jsonl`]) renders one event per line for the
+//! `history --journal --json` CLI surface and post-hoc tooling.
+
+use crate::jsonx::Json;
+use once_cell::sync::Lazy;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default ring capacity (events kept) when `DT_JOURNAL_KEEP` is unset.
+pub const DEFAULT_JOURNAL_KEEP: usize = 256;
+
+/// One journaled operation: the commit-shaped footprint of a write,
+/// append, index build/fold, OPTIMIZE or VACUUM against one table.
+#[derive(Debug, Clone)]
+pub struct JournalEvent {
+    /// Monotonic sequence number (process-wide, assigned at record time).
+    pub seq: u64,
+    /// Wall-clock milliseconds since the epoch at record time.
+    pub timestamp_ms: i64,
+    /// Store instance the table lives on.
+    pub instance: u64,
+    /// Table root prefix.
+    pub table: String,
+    /// Operation name (the CommitInfo operation, or `VACUUM`).
+    pub op: String,
+    /// Log version the operation landed as (`None` when it failed).
+    pub version: Option<u64>,
+    /// Add actions carried by the commit.
+    pub adds: usize,
+    /// Remove actions carried by the commit (or objects VACUUM deleted).
+    pub removes: usize,
+    /// Bytes referenced by the commit's Add actions.
+    pub bytes: u64,
+    /// `put_if_absent` races lost before the commit landed (or gave up).
+    pub retries: u64,
+    /// Wall milliseconds from first attempt to outcome.
+    pub duration_ms: f64,
+    /// `ok`, `conflict` (remove raced away / retry budget exhausted) or
+    /// `error`.
+    pub outcome: String,
+}
+
+impl JournalEvent {
+    /// JSON object form (one JSONL line's worth).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("seq", Json::from(self.seq)),
+            ("ts_ms", Json::Int(self.timestamp_ms)),
+            ("instance", Json::from(self.instance)),
+            ("table", Json::from(self.table.as_str())),
+            ("op", Json::from(self.op.as_str())),
+        ];
+        if let Some(v) = self.version {
+            pairs.push(("version", Json::from(v)));
+        }
+        pairs.push(("adds", Json::from(self.adds)));
+        pairs.push(("removes", Json::from(self.removes)));
+        pairs.push(("bytes", Json::from(self.bytes)));
+        pairs.push(("retries", Json::from(self.retries)));
+        pairs.push(("duration_ms", Json::Float(self.duration_ms)));
+        pairs.push(("outcome", Json::from(self.outcome.as_str())));
+        Json::obj(pairs)
+    }
+
+    /// One-line human rendering (the `history --journal` row format).
+    pub fn render(&self) -> String {
+        let v = match self.version {
+            Some(v) => format!("v{v}"),
+            None => "-".to_string(),
+        };
+        format!(
+            "{:>6}  {:<5} {:<14} {:>3}+ {:>3}- {:>10} B  {:>2} retries  {:>8.2} ms  {}",
+            self.seq,
+            v,
+            self.op,
+            self.adds,
+            self.removes,
+            self.bytes,
+            self.retries,
+            self.duration_ms,
+            self.outcome
+        )
+    }
+}
+
+struct Journal {
+    ring: Mutex<VecDeque<JournalEvent>>,
+    cap: usize,
+    seq: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+static JOURNAL: Lazy<Journal> = Lazy::new(|| Journal {
+    ring: Mutex::new(VecDeque::new()),
+    cap: keep_from_env(),
+    seq: AtomicU64::new(0),
+    recorded: AtomicU64::new(0),
+    dropped: AtomicU64::new(0),
+});
+
+fn keep_from_env() -> usize {
+    std::env::var("DT_JOURNAL_KEEP")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_JOURNAL_KEEP)
+}
+
+/// Append an event to the ring. `seq` and `timestamp_ms` are assigned
+/// here; the caller fills everything else.
+pub fn record(mut ev: JournalEvent) {
+    let j = &*JOURNAL;
+    ev.seq = j.seq.fetch_add(1, Ordering::Relaxed);
+    ev.timestamp_ms = crate::delta::now_ms();
+    j.recorded.fetch_add(1, Ordering::Relaxed);
+    let mut ring = j.ring.lock().unwrap();
+    while ring.len() >= j.cap {
+        ring.pop_front();
+        j.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+    ring.push_back(ev);
+}
+
+/// Events currently in the ring, oldest first, optionally filtered to one
+/// store instance and/or one table root.
+pub fn events(instance: Option<u64>, table: Option<&str>) -> Vec<JournalEvent> {
+    JOURNAL
+        .ring
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|e| instance.map_or(true, |i| e.instance == i))
+        .filter(|e| table.map_or(true, |t| e.table == t))
+        .cloned()
+        .collect()
+}
+
+/// Render events as JSONL: one `JournalEvent::to_json` document per line.
+pub fn to_jsonl(events: &[JournalEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Events recorded so far, process-wide (including ones since evicted).
+pub fn recorded() -> u64 {
+    JOURNAL.recorded.load(Ordering::Relaxed)
+}
+
+/// Events evicted off the ring's front so far.
+pub fn dropped() -> u64 {
+    JOURNAL.dropped.load(Ordering::Relaxed)
+}
+
+/// Ring capacity in effect (`DT_JOURNAL_KEEP`).
+pub fn keep() -> usize {
+    JOURNAL.cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(table: &str, op: &str) -> JournalEvent {
+        JournalEvent {
+            seq: 0,
+            timestamp_ms: 0,
+            instance: 1,
+            table: table.to_string(),
+            op: op.to_string(),
+            version: Some(3),
+            adds: 2,
+            removes: 1,
+            bytes: 4096,
+            retries: 0,
+            duration_ms: 1.5,
+            outcome: "ok".to_string(),
+        }
+    }
+
+    #[test]
+    fn record_assigns_sequence_and_filters_by_table() {
+        record(ev("jr-a", "WRITE"));
+        record(ev("jr-b", "OPTIMIZE"));
+        record(ev("jr-a", "VACUUM"));
+        let a = events(None, Some("jr-a"));
+        assert_eq!(a.len(), 2);
+        assert!(a[0].seq < a[1].seq, "sequence must be monotonic");
+        assert_eq!(a[0].op, "WRITE");
+        assert_eq!(a[1].op, "VACUUM");
+        assert!(events(Some(999), Some("jr-a")).is_empty(), "instance filter");
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        record(ev("jr-jsonl", "BUILD INDEX"));
+        let evs = events(None, Some("jr-jsonl"));
+        let text = to_jsonl(&evs);
+        assert_eq!(text.lines().count(), evs.len());
+        for line in text.lines() {
+            let j = crate::jsonx::parse(line).expect("journal line must be valid JSON");
+            assert_eq!(j.get("table").and_then(Json::as_str), Some("jr-jsonl"));
+            assert_eq!(j.get("op").and_then(Json::as_str), Some("BUILD INDEX"));
+            assert_eq!(j.get("version").and_then(Json::as_u64), Some(3));
+            assert_eq!(j.get("outcome").and_then(Json::as_str), Some("ok"));
+        }
+    }
+
+    #[test]
+    fn render_mentions_op_and_outcome() {
+        let e = ev("jr-render", "WRITE");
+        let line = e.render();
+        assert!(line.contains("WRITE") && line.contains("ok"), "{line}");
+    }
+}

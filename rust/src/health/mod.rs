@@ -1,0 +1,134 @@
+//! Storage-health observability: the *state* counterpart to the telemetry
+//! tier's *operation* spans.
+//!
+//! Three pillars, three modules:
+//!
+//! * [`mod@doctor`] — a deep, read-only consistency audit that replays the
+//!   Delta log and cross-checks every layer (object sizes, DTPQ footers
+//!   and chunk bounds, FTSF chunk grids, index artifact geometry and
+//!   row continuity, orphans) into a [`HealthReport`] with per-check
+//!   severity and byte locations. CLI verb `doctor`; CI bin `tablecheck`.
+//! * [`journal`] — a ring-buffered, typed event log of every commit-shaped
+//!   operation (who landed what at which version, with retries, bytes and
+//!   duration), exported as JSONL and rendered by `history --journal`.
+//! * [`mod@probe`] — cheap per-table gauges (space amplification, delta
+//!   fan-out, index staleness age, log-replay debt, cache heatmap) sampled
+//!   in-loop by the workload harnesses so BENCH reports carry health
+//!   trajectories.
+//!
+//! The last doctor/probe outcome parks in process-wide statics rendered by
+//! [`report`] in the same `name value` tier format as the other engines,
+//! so `stats` (and its Prometheus rendering) always shows the most recent
+//! health picture without re-running anything.
+
+pub mod doctor;
+pub mod journal;
+pub mod probe;
+
+pub use doctor::{doctor, DoctorOptions, Finding, HealthReport, Severity};
+pub use probe::{probe, ProbeReport};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide health-tier counters and last-outcome gauges.
+#[derive(Default)]
+pub struct HealthStats {
+    /// Doctor audits run.
+    pub doctor_runs: AtomicU64,
+    /// Warn-severity findings in the most recent audit.
+    pub last_warn: AtomicU64,
+    /// Corrupt-severity findings in the most recent audit.
+    pub last_corrupt: AtomicU64,
+    /// Probes run.
+    pub probes: AtomicU64,
+    /// Last probe's space amplification, in thousandths (1000 = 1.0x).
+    pub space_amp_milli: AtomicU64,
+    /// Last probe's live delta-segment count.
+    pub delta_segments: AtomicU64,
+    /// Last probe's stale-index count.
+    pub stale_indexes: AtomicU64,
+    /// Last probe's max index staleness age in versions.
+    pub staleness_age: AtomicU64,
+    /// Last probe's commits-since-checkpoint count.
+    pub log_since_checkpoint: AtomicU64,
+}
+
+static STATS: once_cell::sync::Lazy<HealthStats> =
+    once_cell::sync::Lazy::new(HealthStats::default);
+
+/// Health-tier counters.
+pub fn stats() -> &'static HealthStats {
+    &STATS
+}
+
+/// Park a finished audit's finding counts for [`report`].
+pub(crate) fn note_doctor(findings: &[Finding]) {
+    STATS.doctor_runs.fetch_add(1, Ordering::Relaxed);
+    let warn = findings.iter().filter(|f| f.severity == Severity::Warn).count() as u64;
+    let corrupt = findings.iter().filter(|f| f.severity == Severity::Corrupt).count() as u64;
+    STATS.last_warn.store(warn, Ordering::Relaxed);
+    STATS.last_corrupt.store(corrupt, Ordering::Relaxed);
+}
+
+/// Park a finished probe's gauges for [`report`].
+pub(crate) fn note_probe(r: &ProbeReport) {
+    STATS.probes.fetch_add(1, Ordering::Relaxed);
+    STATS.space_amp_milli.store((r.space_amp * 1000.0).round() as u64, Ordering::Relaxed);
+    STATS.delta_segments.store(r.delta_segments, Ordering::Relaxed);
+    STATS.stale_indexes.store(r.stale_indexes, Ordering::Relaxed);
+    STATS.staleness_age.store(r.staleness_age, Ordering::Relaxed);
+    STATS.log_since_checkpoint.store(r.log_since_checkpoint, Ordering::Relaxed);
+}
+
+/// Plain-text health-tier metrics report, in the same `name value` format
+/// as the other engines' reports (rendered as Prometheus gauges by the
+/// telemetry exporter).
+pub fn report() -> String {
+    format!(
+        "health.doctor_runs {}\nhealth.doctor_warn {}\nhealth.doctor_corrupt {}\n\
+         health.probes {}\nhealth.space_amp_milli {}\nhealth.delta_segments {}\n\
+         health.stale_indexes {}\nhealth.staleness_age {}\n\
+         health.log_since_checkpoint {}\n\
+         health.journal_recorded {}\nhealth.journal_dropped {}\n",
+        STATS.doctor_runs.load(Ordering::Relaxed),
+        STATS.last_warn.load(Ordering::Relaxed),
+        STATS.last_corrupt.load(Ordering::Relaxed),
+        STATS.probes.load(Ordering::Relaxed),
+        STATS.space_amp_milli.load(Ordering::Relaxed),
+        STATS.delta_segments.load(Ordering::Relaxed),
+        STATS.stale_indexes.load(Ordering::Relaxed),
+        STATS.staleness_age.load(Ordering::Relaxed),
+        STATS.log_since_checkpoint.load(Ordering::Relaxed),
+        journal::recorded(),
+        journal::dropped(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_lists_all_gauges() {
+        let text = report();
+        for name in [
+            "health.doctor_runs",
+            "health.doctor_warn",
+            "health.doctor_corrupt",
+            "health.probes",
+            "health.space_amp_milli",
+            "health.delta_segments",
+            "health.stale_indexes",
+            "health.staleness_age",
+            "health.log_since_checkpoint",
+            "health.journal_recorded",
+            "health.journal_dropped",
+        ] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        for line in text.lines() {
+            let mut parts = line.split_whitespace();
+            assert!(parts.next().is_some() && parts.next().is_some(), "bad line {line:?}");
+        }
+    }
+}

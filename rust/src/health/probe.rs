@@ -1,0 +1,210 @@
+//! Fleet health probe: cheap per-table gauges, no data reads.
+//!
+//! [`probe`] costs O(snapshot) — the engine's cached snapshot, two
+//! metadata sweeps (`list` + `head`, no GETs) for byte totals, and a walk
+//! of the resident block cache — so the closed-loop harnesses can sample
+//! it per round and BENCH reports can carry health *trajectories*:
+//!
+//! * **space amplification** — bytes physically under the table (outside
+//!   the log) over bytes the snapshot references; OPTIMIZE/VACUUM debt;
+//! * **delta-segment fan-out** and **index staleness age** in versions —
+//!   the auto-fold trigger inputs;
+//! * **log length since the last checkpoint** — replay cost on a cold
+//!   open;
+//! * the **cache heatmap**: the top-K hottest resident blocks for this
+//!   store instance.
+//!
+//! The last probe's gauges park in [`crate::health`]'s statics so the
+//! `stats` tier report renders them without re-probing.
+
+use crate::delta::DeltaTable;
+use crate::jsonx::Json;
+use crate::Result;
+use once_cell::sync::Lazy;
+
+/// Default cache-heatmap depth when `DT_PROBE_TOPK` is unset.
+pub const DEFAULT_PROBE_TOPK: usize = 8;
+
+/// Heatmap depth in effect (`DT_PROBE_TOPK`, default
+/// [`DEFAULT_PROBE_TOPK`]).
+pub fn top_k() -> usize {
+    static ENV: Lazy<usize> = Lazy::new(|| {
+        std::env::var("DT_PROBE_TOPK")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_PROBE_TOPK)
+    });
+    *ENV
+}
+
+/// One probe's gauges for one table.
+#[derive(Debug, Clone)]
+pub struct ProbeReport {
+    /// Table root probed.
+    pub table: String,
+    /// Snapshot version the gauges describe.
+    pub version: u64,
+    /// Store instance the table lives on.
+    pub instance: u64,
+    /// Bytes the snapshot references (live data + index artifacts).
+    pub live_bytes: u64,
+    /// Bytes physically under the root outside `_delta_log/`.
+    pub physical_bytes: u64,
+    /// Bytes under `_delta_log/`.
+    pub log_bytes: u64,
+    /// `physical_bytes / live_bytes` (1.0 when the table is empty):
+    /// OPTIMIZE/VACUUM debt. Healthy tables sit at 1.0; orphans and
+    /// un-vacuumed rewrites push it up.
+    pub space_amp: f64,
+    /// Live files in the snapshot.
+    pub live_files: u64,
+    /// Live delta posting segments across all indexes.
+    pub delta_segments: u64,
+    /// Indexes whose fingerprint no longer matches the live data.
+    pub stale_indexes: u64,
+    /// Max versions elapsed since a stale index's build (0 when all fresh).
+    pub staleness_age: u64,
+    /// Commits since the last checkpoint (cold-open replay cost).
+    pub log_since_checkpoint: u64,
+    /// Hottest resident cache blocks for this instance:
+    /// `(path, off, len, hits)`.
+    pub hot_blocks: Vec<(String, u64, u64, u64)>,
+    /// Wall milliseconds the probe took.
+    pub elapsed_ms: f64,
+}
+
+impl ProbeReport {
+    /// JSON object form (embedded in BENCH/HEALTH documents).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("table", Json::from(self.table.as_str())),
+            ("version", Json::from(self.version)),
+            ("live_bytes", Json::from(self.live_bytes)),
+            ("physical_bytes", Json::from(self.physical_bytes)),
+            ("log_bytes", Json::from(self.log_bytes)),
+            ("space_amp", Json::Float(self.space_amp)),
+            ("live_files", Json::from(self.live_files)),
+            ("delta_segments", Json::from(self.delta_segments)),
+            ("stale_indexes", Json::from(self.stale_indexes)),
+            ("staleness_age", Json::from(self.staleness_age)),
+            ("log_since_checkpoint", Json::from(self.log_since_checkpoint)),
+            (
+                "hot_blocks",
+                Json::Arr(
+                    self.hot_blocks
+                        .iter()
+                        .map(|(p, off, len, hits)| {
+                            Json::obj([
+                                ("path", Json::from(p.as_str())),
+                                ("off", Json::from(*off)),
+                                ("len", Json::from(*len)),
+                                ("hits", Json::from(*hits)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("elapsed_ms", Json::Float(self.elapsed_ms)),
+        ])
+    }
+
+    /// Multi-line human rendering (the `stats`/`doctor` CLI surface).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "probe: {} @ v{} — {} live files, {} live B / {} physical B (amp {:.3}), \
+             log {} B, {} commits since checkpoint\n\
+               index: {} delta segment(s), {} stale (max age {} versions)\n",
+            self.table,
+            self.version,
+            self.live_files,
+            self.live_bytes,
+            self.physical_bytes,
+            self.space_amp,
+            self.log_bytes,
+            self.log_since_checkpoint,
+            self.delta_segments,
+            self.stale_indexes,
+            self.staleness_age,
+        );
+        if !self.hot_blocks.is_empty() {
+            out.push_str("  cache heatmap:\n");
+            for (p, off, len, hits) in &self.hot_blocks {
+                out.push_str(&format!("    {hits:>6} hits  {p} [{off}, {})\n", off + len));
+            }
+        }
+        out
+    }
+}
+
+/// Probe the table at its latest version. O(snapshot) + two metadata
+/// sweeps; zero data GETs.
+pub fn probe(table: &DeltaTable) -> Result<ProbeReport> {
+    let started = std::time::Instant::now();
+    let snap = crate::query::engine::snapshot(table)?;
+    let store = table.store();
+    let root_prefix = format!("{}/", table.root());
+    let total = store.usage(&root_prefix)?;
+    let log_bytes = store.usage(&table.log_prefix())?;
+    let physical_bytes = total.saturating_sub(log_bytes);
+    let live_bytes = snap.total_bytes();
+    let space_amp = if live_bytes == 0 { 1.0 } else { physical_bytes as f64 / live_bytes as f64 };
+    let (delta_segments, stale_indexes, staleness_age) = crate::index::health_gauges(&snap);
+    let log_since_checkpoint = match table.last_checkpoint_version()? {
+        Some(v) => snap.version.saturating_sub(v),
+        None => snap.version + 1, // every commit since CREATE replays
+    };
+    let instance = store.instance_id();
+    let report = ProbeReport {
+        table: table.root().to_string(),
+        version: snap.version,
+        instance,
+        live_bytes,
+        physical_bytes,
+        log_bytes,
+        space_amp,
+        live_files: snap.files.len() as u64,
+        delta_segments,
+        stale_indexes,
+        staleness_age,
+        log_since_checkpoint,
+        hot_blocks: crate::serving::block_cache().hottest(instance, top_k()),
+        elapsed_ms: started.elapsed().as_secs_f64() * 1e3,
+    };
+    crate::health::note_probe(&report);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_carries_every_gauge() {
+        let r = ProbeReport {
+            table: "t".into(),
+            version: 7,
+            instance: 3,
+            live_bytes: 1000,
+            physical_bytes: 1500,
+            log_bytes: 90,
+            space_amp: 1.5,
+            live_files: 4,
+            delta_segments: 2,
+            stale_indexes: 1,
+            staleness_age: 3,
+            log_since_checkpoint: 5,
+            hot_blocks: vec![("data/p.dtpq".into(), 0, 4096, 12)],
+            elapsed_ms: 0.2,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("version").and_then(Json::as_u64), Some(7));
+        assert_eq!(j.get("space_amp").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(j.get("delta_segments").and_then(Json::as_u64), Some(2));
+        assert_eq!(j.get("log_since_checkpoint").and_then(Json::as_u64), Some(5));
+        let hot = j.get("hot_blocks").and_then(Json::as_arr).unwrap();
+        assert_eq!(hot.len(), 1);
+        assert_eq!(hot[0].get("hits").and_then(Json::as_u64), Some(12));
+        let text = r.render();
+        assert!(text.contains("amp 1.500") && text.contains("heatmap"), "{text}");
+    }
+}

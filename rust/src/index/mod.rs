@@ -1488,6 +1488,256 @@ fn default_rerank(k: usize) -> usize {
     ENV.unwrap_or_else(|| (4 * k).max(32))
 }
 
+// ---------------------------------------------------------------------------
+// Health hooks (artifact formats stay private to this tier)
+// ---------------------------------------------------------------------------
+
+/// Tensor ids that own live artifacts under `index/` in this snapshot.
+fn indexed_ids(snap: &Snapshot) -> Vec<String> {
+    let mut ids: Vec<String> = snap
+        .files()
+        .filter_map(|f| f.path.strip_prefix("index/"))
+        .filter_map(|rest| rest.split('/').next())
+        .map(str::to_string)
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids
+}
+
+/// Audit every index artifact in `snap` for the table doctor, pushing
+/// findings with [`crate::health::Severity`] and byte locations. Returns
+/// `(objects read, bytes vouched for, checks run)`. Read-only; the
+/// object-existence/size layer is the doctor's job, so unreadable objects
+/// are skipped here (already reported) rather than double-counted.
+pub(crate) fn doctor_audit(
+    table: &DeltaTable,
+    snap: &Snapshot,
+    findings: &mut Vec<crate::health::Finding>,
+) -> Result<(u64, u64, u64)> {
+    use crate::health::{Finding, Severity};
+    let store = table.store();
+    let (mut objects, mut bytes, mut checks) = (0u64, 0u64, 0u64);
+    let corrupt = |check: &str, path: &str, location: Option<(u64, u64)>, detail: String| Finding {
+        severity: Severity::Corrupt,
+        check: check.into(),
+        path: path.into(),
+        location,
+        detail,
+    };
+    for id in indexed_ids(snap) {
+        checks += 1;
+        let Some((cadd, meta)) = find_centroid_add(snap, &id) else {
+            // Delta segments (or debris) with no centroid artifact: search
+            // cannot open this index at all.
+            if !find_delta_adds(snap, &id).is_empty() {
+                findings.push(corrupt(
+                    "index.meta",
+                    &artifact_prefix(&id),
+                    None,
+                    format!("tensor {id:?} has live delta segments but no centroid artifact"),
+                ));
+            }
+            continue;
+        };
+        let ckey = table.data_key(&cadd.path);
+        if store.head(&ckey)?.is_none() {
+            continue; // object.missing already reported by the doctor
+        }
+        let cbytes = store.get(&ckey)?;
+        objects += 1;
+        checks += 1;
+        let art = match decode_centroid_artifact(&cbytes) {
+            Ok(a) => a,
+            Err(e) => {
+                findings.push(corrupt(
+                    "index.centroid",
+                    &cadd.path,
+                    Some((0, (HEADER_BYTES as u64).min(cbytes.len() as u64))),
+                    format!("artifact undecodable: {e:#}"),
+                ));
+                continue;
+            }
+        };
+        bytes += cbytes.len() as u64;
+        let k = art.offsets.len().saturating_sub(1);
+
+        // v2 ⇔ pinned PQ codebook, and the codebook must still be live.
+        checks += 1;
+        match (&meta.pq, art.version) {
+            (Some(p), ARTIFACT_VERSION_PQ) => {
+                if !snap.files.contains_key(&p.codebook_path) {
+                    findings.push(corrupt(
+                        "index.codebook",
+                        &p.codebook_path,
+                        None,
+                        format!(
+                            "v2 artifact pins codebook {:?} but it is not live",
+                            p.codebook_path
+                        ),
+                    ));
+                }
+            }
+            (None, ARTIFACT_VERSION) => {}
+            (pq, v) => findings.push(corrupt(
+                "index.codebook",
+                &cadd.path,
+                Some((4, 4)),
+                format!("artifact version {v} vs meta pq={}", pq.is_some()),
+            )),
+        }
+
+        // Postings: live, offsets monotonic, last offset == file size.
+        checks += 1;
+        match snap.files.get(&meta.postings_path) {
+            None => findings.push(corrupt(
+                "index.postings",
+                &meta.postings_path,
+                None,
+                format!("centroid meta pins postings {:?} but it is not live", meta.postings_path),
+            )),
+            Some(padd) => {
+                if art.offsets.windows(2).any(|w| w[0] > w[1]) {
+                    findings.push(corrupt(
+                        "index.postings",
+                        &cadd.path,
+                        Some(((HEADER_BYTES + k * art.dim * 4) as u64, ((k + 1) * 8) as u64)),
+                        "posting offset table is not monotonic".into(),
+                    ));
+                } else if art.offsets.last().copied().unwrap_or(0) != padd.size {
+                    let end = art.offsets.last().copied().unwrap_or(0);
+                    let lo = end.min(padd.size);
+                    findings.push(corrupt(
+                        "index.postings",
+                        &meta.postings_path,
+                        Some((lo, end.max(padd.size) - lo)),
+                        format!(
+                            "offset table ends at {end} B, postings file holds {} B",
+                            padd.size
+                        ),
+                    ));
+                } else {
+                    bytes += 8;
+                }
+            }
+        }
+
+        // Delta segments: header geometry vs the pinned artifact, payload
+        // extent vs object size, and journaled row counts that add up.
+        let mut delta_rows = 0u64;
+        for (dadd, drows) in find_delta_adds(snap, &id) {
+            checks += 1;
+            // Journaled row count comes from the Add action's meta, not the
+            // object — count it up front so the row-continuity check below
+            // stays a pure metadata check and a damaged segment is reported
+            // once, not twice.
+            delta_rows += drows;
+            let dkey = table.data_key(&dadd.path);
+            if store.head(&dkey)?.is_none() {
+                continue; // object.missing already reported
+            }
+            let hl = delta_header_len(k);
+            if dadd.size < hl {
+                findings.push(corrupt(
+                    "index.delta",
+                    &dadd.path,
+                    Some((0, dadd.size)),
+                    format!("segment is {} B, header alone needs {hl} B", dadd.size),
+                ));
+                continue;
+            }
+            let head = store.get_range(&dkey, 0, hl)?;
+            objects += 1;
+            let h = match decode_delta_header(&head, k) {
+                Ok(h) => h,
+                Err(e) => {
+                    let detail = format!("{e:#}");
+                    findings.push(corrupt("index.delta", &dadd.path, Some((0, hl)), detail));
+                    continue;
+                }
+            };
+            bytes += hl;
+            if h.version != art.version || h.dim != art.dim {
+                findings.push(corrupt(
+                    "index.delta",
+                    &dadd.path,
+                    Some((4, 12)),
+                    format!(
+                        "segment geometry v{}/dim {} vs index v{}/dim {}",
+                        h.version, h.dim, art.version, art.dim
+                    ),
+                ));
+                continue;
+            }
+            if h.rows != drows {
+                findings.push(corrupt(
+                    "index.delta",
+                    &dadd.path,
+                    Some((16, 8)),
+                    format!("header claims {} rows, Add meta journals {drows}", h.rows),
+                ));
+            }
+            let end = hl + h.offsets.last().copied().unwrap_or(0);
+            if end != dadd.size {
+                let lo = end.min(dadd.size);
+                findings.push(corrupt(
+                    "index.delta",
+                    &dadd.path,
+                    Some((lo, end.max(dadd.size) - lo)),
+                    format!("payload ends at {end} B, object holds {} B", dadd.size),
+                ));
+            }
+        }
+
+        // Row continuity: the meta's running total must equal the build's
+        // rows plus every delta segment's.
+        if let Some(rows) = meta.rows {
+            checks += 1;
+            if rows != art.rows + delta_rows {
+                findings.push(corrupt(
+                    "index.rows",
+                    &cadd.path,
+                    None,
+                    format!("meta totals {rows} rows, artifact {} + deltas {delta_rows}", art.rows),
+                ));
+            }
+        }
+
+        // Staleness is drift, not damage.
+        checks += 1;
+        if let IndexStatus::Stale { covers } = staleness(snap, &id, &meta) {
+            findings.push(Finding {
+                severity: crate::health::Severity::Warn,
+                check: "index.stale".into(),
+                path: cadd.path.clone(),
+                location: None,
+                detail: format!(
+                    "fingerprint no longer matches live data (covers v{covers}, table at v{})",
+                    snap.version
+                ),
+            });
+        }
+    }
+    Ok((objects, bytes, checks))
+}
+
+/// Cheap per-snapshot index gauges for `health::probe` — zero data reads:
+/// `(delta segment count, stale index count, max staleness age in
+/// versions)`.
+pub(crate) fn health_gauges(snap: &Snapshot) -> (u64, u64, u64) {
+    let (mut segs, mut stale, mut age) = (0u64, 0u64, 0u64);
+    for id in indexed_ids(snap) {
+        segs += find_delta_adds(snap, &id).len() as u64;
+        if let Some((_, meta)) = find_centroid_add(snap, &id) {
+            if let IndexStatus::Stale { covers } = staleness(snap, &id, &meta) {
+                stale += 1;
+                age = age.max(snap.version.saturating_sub(covers));
+            }
+        }
+    }
+    (segs, stale, age)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

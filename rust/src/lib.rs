@@ -48,6 +48,12 @@
 //!   shuffled batch streaming from stored tensors (seeded resumable
 //!   shuffle, chunk-coalescing read plans, double-buffered prefetch under
 //!   a `DT_PREFETCH_MB` byte budget with blocking backpressure).
+//! * [`health`] — storage-health observability: the read-only table
+//!   doctor (log-vs-store consistency audit with per-check severity and
+//!   byte locations), the ring-buffered structured event journal of
+//!   commit-shaped operations, and the cheap per-table health probe
+//!   (space amplification, index staleness, log-replay debt, cache
+//!   heatmap) sampled in-loop by the harnesses.
 //! * [`workload`] — synthetic FFHQ-like, Uber-pickups-like and
 //!   embedding-like generators, plus the closed-loop serving, ingest,
 //!   vector-search, maintenance and training-loader load harnesses
@@ -70,6 +76,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod telemetry;
 pub mod loader;
+pub mod health;
 pub mod workload;
 pub mod testing;
 pub mod benchkit;

@@ -318,7 +318,14 @@ impl EpochIter<'_> {
         // The consumer-side wait is the `yield` phase: a stall here means
         // the prefetcher could not stay ahead of the training loop.
         let trace = Trace::start("loader_yield");
+        let waited = std::time::Instant::now();
         let (res, was_ready) = self.shared.wait_take(idx);
+        if !was_ready {
+            // Attribute the stall to the yield span so the slow-op log can
+            // say "slow because the prefetcher fell behind", not just
+            // "slow".
+            trace.root().stall(waited.elapsed());
+        }
         let _ = trace.finish();
         let m = self.loader.coord.metrics();
         m.counter(if was_ready { "loader.prefetch_hits" } else { "loader.stalls" }).add(1);

@@ -41,6 +41,9 @@ pub struct BlockKey {
 struct CacheEntry {
     data: Block,
     seq: u64,
+    /// Times this block was served while resident (resets on re-admission
+    /// after eviction — the heatmap shows *current* heat, not history).
+    hits: u64,
 }
 
 #[derive(Default)]
@@ -103,6 +106,7 @@ impl BlockCache {
                 let fresh = self.seq.fetch_add(1, Ordering::Relaxed);
                 let stale = e.seq;
                 e.seq = fresh;
+                e.hits += 1;
                 let data = e.data.clone();
                 shard.order.remove(&stale);
                 shard.order.insert(fresh, key.clone());
@@ -139,7 +143,7 @@ impl BlockCache {
             std::collections::hash_map::Entry::Occupied(_) => return,
             std::collections::hash_map::Entry::Vacant(v) => {
                 let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-                v.insert(CacheEntry { data, seq });
+                v.insert(CacheEntry { data, seq, hits: 0 });
                 shard.order.insert(seq, key);
             }
         }
@@ -215,6 +219,28 @@ impl BlockCache {
     /// Bytes served from cache so far.
     pub fn hit_bytes(&self) -> u64 {
         self.hit_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The `k` hottest resident blocks of one store instance — the cache
+    /// heatmap: `(path, offset, len, hits while resident)`, hottest first
+    /// (ties broken by path/offset for a stable rendering). Walks every
+    /// shard under its lock; cheap at cache scale (thousands of entries),
+    /// but meant for probes and `stats`, not per-request paths.
+    pub fn hottest(&self, instance: u64, k: usize) -> Vec<(String, u64, u64, u64)> {
+        let mut all: Vec<(String, u64, u64, u64)> = Vec::new();
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            all.extend(
+                guard
+                    .map
+                    .iter()
+                    .filter(|(key, _)| key.instance == instance)
+                    .map(|(key, e)| (key.path.clone(), key.off, key.len, e.hits)),
+            );
+        }
+        all.sort_by(|a, b| b.3.cmp(&a.3).then_with(|| (&a.0, a.1).cmp(&(&b.0, b.1))));
+        all.truncate(k);
+        all
     }
 }
 
@@ -311,6 +337,28 @@ mod tests {
         assert_eq!(c.inserts(), 0);
         assert_eq!(c.bytes(), 0);
         assert!(c.get(&key("big", 0)).is_none());
+    }
+
+    #[test]
+    fn hottest_ranks_by_hits_and_scopes_to_instance() {
+        let c = BlockCache::new(1024, 4);
+        c.insert(key("warm", 0), block(10));
+        c.insert(key("hot", 0), block(10));
+        let mut other = key("elsewhere", 0);
+        other.instance = 9;
+        c.insert(other.clone(), block(10));
+        for _ in 0..3 {
+            c.get(&key("hot", 0));
+        }
+        c.get(&key("warm", 0));
+        c.get(&other);
+        let top = c.hottest(1, 8);
+        assert_eq!(top.len(), 2, "other instance excluded");
+        assert_eq!(top[0].0, "hot");
+        assert_eq!(top[0].3, 3);
+        assert_eq!(top[1].0, "warm");
+        let capped = c.hottest(1, 1);
+        assert_eq!(capped.len(), 1);
     }
 
     #[test]

@@ -214,14 +214,20 @@ pub struct TraceCheckSummary {
     pub instants: usize,
     /// GET instant events checked for fetch-span nesting.
     pub gets_under_fetch: usize,
+    /// Traces rooted in the loader vocabulary
+    /// (`loader_epoch`/`loader_batch`/`loader_yield`).
+    pub loader_traces: usize,
 }
 
 /// Structurally validate a Chrome trace document produced by
 /// [`chrome_trace_json`]: spans are well-formed (numeric `ts`, `dur >= 0`,
 /// unique ids, children nested inside parents), instant events reference
 /// a live span and sit inside its interval, and — the cache invariant
-/// made checkable — every GET event in a `read`/`read_slice` trace hangs
-/// off a span whose ancestry includes a `fetch` (or `plan`) span.
+/// made checkable — every GET event in a `read`/`read_slice` trace, or in
+/// a loader trace (`loader_batch`/`loader_epoch`), hangs off a span whose
+/// ancestry includes a `fetch` (or `plan`) span. The loader vocabulary
+/// (`loader_epoch`/`loader_batch`/`loader_yield`) is known: its traces
+/// validate and are counted instead of falling through as unknown roots.
 pub fn validate_chrome_trace(doc: &Json) -> Result<TraceCheckSummary> {
     let events = doc
         .get("traceEvents")
@@ -255,6 +261,10 @@ pub fn validate_chrome_trace(doc: &Json) -> Result<TraceCheckSummary> {
         summary.spans += 1;
     }
     summary.traces = roots.len();
+    summary.loader_traces = roots
+        .values()
+        .filter(|n| matches!(n.as_str(), "loader_epoch" | "loader_batch" | "loader_yield"))
+        .count();
     // Parent linkage + nesting.
     for (&(trace, id), &(ref name, parent, start, end)) in &spans {
         if parent == 0 {
@@ -309,7 +319,11 @@ pub fn validate_chrome_trace(doc: &Json) -> Result<TraceCheckSummary> {
         }
         summary.instants += 1;
         let root = roots.get(&trace).map(String::as_str);
-        let root_is_read = matches!(root, Some("read" | "read_slice"));
+        // Loader batches fetch through the same engine path, so their GETs
+        // obey the same fetch-nesting invariant as reads. `loader_yield`
+        // (the consumer wait) issues no I/O and is exempt.
+        let root_is_read =
+            matches!(root, Some("read" | "read_slice" | "loader_batch" | "loader_epoch"));
         if name == "GET" && root_is_read {
             if !under_fetch(trace, id) {
                 bail!("GET event in trace {trace} (span {id}) does not nest under a fetch span");
@@ -446,6 +460,39 @@ mod tests {
         assert_eq!(sum.spans, 6);
         assert!(sum.instants >= 4);
         assert_eq!(sum.gets_under_fetch, 2);
+    }
+
+    #[test]
+    fn loader_traces_validate_and_are_counted() {
+        let traces = vec![
+            sample_trace("loader_batch"), // GETs under a fetch child: valid
+            {
+                let t = Trace::start_forced("loader_epoch");
+                let shuffle = t.root().child("shuffle");
+                shuffle.end();
+                let plan = t.root().child("plan");
+                plan.io_event(EventKind::Get, 1, 256, Duration::from_micros(10));
+                plan.end();
+                t.finish().unwrap()
+            },
+            {
+                let t = Trace::start_forced("loader_yield");
+                t.finish().unwrap()
+            },
+        ];
+        let doc = chrome_trace_json(&traces);
+        let sum = validate_chrome_trace(&doc).unwrap();
+        assert_eq!(sum.traces, 3);
+        assert_eq!(sum.loader_traces, 3);
+        assert_eq!(sum.gets_under_fetch, 2, "batch fetch GET + epoch plan GET");
+        // A GET outside fetch/plan ancestry in a loader batch is rejected.
+        let t = Trace::start_forced("loader_batch");
+        let decode = t.root().child("decode");
+        decode.io_event(EventKind::Get, 1, 10, Duration::ZERO);
+        decode.end();
+        let bad = chrome_trace_json(&[t.finish().unwrap()]);
+        let err = validate_chrome_trace(&bad).unwrap_err().to_string();
+        assert!(err.contains("does not nest under a fetch span"), "{err}");
     }
 
     #[test]

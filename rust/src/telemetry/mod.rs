@@ -72,6 +72,9 @@ pub enum EventKind {
     CacheMiss,
     /// A lost `put_if_absent` commit race (optimistic-concurrency retry).
     Retry,
+    /// A consumer blocked on work that was not ready (a loader batch whose
+    /// prefetch had not delivered yet).
+    Stall,
 }
 
 impl EventKind {
@@ -83,6 +86,7 @@ impl EventKind {
             EventKind::CacheHit => "CACHE_HIT",
             EventKind::CacheMiss => "CACHE_MISS",
             EventKind::Retry => "RETRY",
+            EventKind::Stall => "STALL",
         }
     }
 }
@@ -274,6 +278,12 @@ impl Span {
     pub fn retry(&self) {
         self.io_event(EventKind::Retry, 1, 0, Duration::ZERO);
     }
+
+    /// Record one consumer stall of `dur` (a batch that was not prefetched
+    /// in time).
+    pub fn stall(&self, dur: Duration) {
+        self.io_event(EventKind::Stall, 1, 0, dur);
+    }
 }
 
 /// One traced operation. Create with [`Trace::start`] (honors the runtime
@@ -441,8 +451,10 @@ impl TraceSink {
             if inner.slow.len() >= SLOW_LOG_CAP {
                 inner.slow.pop_front();
             }
+            let stalls = t.event_count(EventKind::Stall);
+            let stall_note = if stalls > 0 { format!(", {stalls} stalls") } else { String::new() };
             inner.slow.push_back(format!(
-                "SLOW {} {:.3}ms: {} spans, {} GETs / {} bytes",
+                "SLOW {} {:.3}ms: {} spans, {} GETs / {} bytes{stall_note}",
                 t.name,
                 t.dur_ns as f64 / 1e6,
                 t.spans.len(),
@@ -624,6 +636,36 @@ mod tests {
         assert_eq!(sink.slow_op_count(), 1);
         sink.clear();
         assert!(sink.recent().is_empty() && sink.slow_log().is_empty());
+    }
+
+    #[test]
+    fn slow_log_includes_stall_counts() {
+        let sink = TraceSink::new(8, 1); // 1 ms
+        let stall = |dur_ns: u64| Event {
+            kind: EventKind::Stall,
+            at_ns: 0,
+            dur_ns,
+            count: 1,
+            bytes: 0,
+        };
+        sink.record(Arc::new(FinishedTrace {
+            name: "loader_batch".into(),
+            start_unix_us: 0,
+            dur_ns: 5_000_000,
+            spans: vec![SpanRecord {
+                id: 1,
+                parent: 0,
+                name: "loader_batch".into(),
+                start_ns: 0,
+                end_ns: 5_000_000,
+                tid: 0,
+                events: vec![stall(200_000), stall(100_000)],
+            }],
+        }));
+        let log = sink.slow_log();
+        assert_eq!(log.len(), 1, "{log:?}");
+        assert!(log[0].contains("2 stalls"), "{log:?}");
+        assert_eq!(EventKind::Stall.label(), "STALL");
     }
 
     #[test]

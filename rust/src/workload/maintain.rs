@@ -205,6 +205,10 @@ pub struct MaintainReport {
     /// Posting-list bytes the measured phase requested through the serving
     /// tier (process-global delta).
     pub postings_bytes_fetched: u64,
+    /// Health-gauge trajectory: one [`crate::health::probe()`] sample per
+    /// round, taken after the round's append/search/optimize — BENCH
+    /// artifacts show how space amplification and delta fan-out evolve.
+    pub probes: Vec<crate::health::ProbeReport>,
 }
 
 impl MaintainReport {
@@ -237,6 +241,8 @@ impl MaintainReport {
             ("log_commits", Json::Int(self.log_commits as i64)),
             ("pq", Json::Bool(self.pq)),
             ("postings_bytes_fetched", Json::Int(self.postings_bytes_fetched as i64)),
+            ("probes", Json::Int(self.probes.len() as i64)),
+            ("health", Json::Arr(self.probes.iter().map(|p| p.to_json()).collect())),
         ])
         .dump()
     }
@@ -244,12 +250,24 @@ impl MaintainReport {
     /// Human-readable one-run summary.
     pub fn summary(&self) -> String {
         let ms = |s: f64| format!("{:.3}ms", s * 1e3);
+        let health = match (self.probes.first(), self.probes.last()) {
+            (Some(first), Some(last)) => format!(
+                "\n  health: {} probes, space amp {:.3} -> {:.3}, {} delta segment(s), \
+                 {} commits since checkpoint",
+                self.probes.len(),
+                first.space_amp,
+                last.space_amp,
+                last.delta_segments,
+                last.log_since_checkpoint,
+            ),
+            _ => String::new(),
+        };
         format!(
             "maintain ({}): {} rounds x {} rows appended, {} searches, {} optimizes in {:.3}s\n  \
              append mean {} p50 {} p95 {} p99 {} ({} delta commits, {} full rebuilds)\n  \
              search {:.0} q/s p50 {} p95 {} p99 {}; optimize total {}\n  \
              recall@{}: {:.4} maintained vs {:.4} full rebuild; full-nprobe exact: {}\n  \
-             store: {} GETs, {} bytes ({} posting bytes, {}); log: {} commits",
+             store: {} GETs, {} bytes ({} posting bytes, {}); log: {} commits{health}",
             if self.incremental { "incremental" } else { "rebuild control" },
             self.rounds,
             self.appended_rows / self.rounds.max(1),
@@ -352,6 +370,7 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
     let mut optimizes = 0u64;
     let mut full_rebuilds = 0u64;
     let mut maintained = 0u64;
+    let mut probes = Vec::with_capacity(p.rounds);
     let mut last_nprobe = p.nprobe.max(1);
     for round in 0..p.rounds {
         let data: TensorData = super::embedding_like(
@@ -402,6 +421,11 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
             optimize_secs += sw.secs();
             optimizes += 1;
         }
+
+        // One health sample per round: the trajectory shows delta-segment
+        // fan-out growing between OPTIMIZE passes and space amplification
+        // paid down by compaction.
+        probes.push(crate::health::probe(table)?);
     }
     let wall = sw_total.secs();
     let (get1, _, _, bytes1, _) = store.stats().snapshot();
@@ -467,6 +491,7 @@ pub fn run_maintain(table: &DeltaTable, id: &str, p: &MaintainParams) -> Result<
         log_commits,
         pq: p.pq,
         postings_bytes_fetched: postings1 - postings0,
+        probes,
     })
 }
 
@@ -511,6 +536,12 @@ mod tests {
         assert!(r.search_qps > 0.0 && r.wall_secs > 0.0);
         assert!(r.append_p50_secs <= r.append_p99_secs);
         assert!(r.log_commits >= 2, "at least one commit per append round");
+        assert_eq!(r.probes.len(), 2, "one health sample per round");
+        for probe in &r.probes {
+            assert!(probe.space_amp >= 1.0, "live objects all exist physically");
+            assert!(probe.live_files > 0);
+        }
+        assert!(r.summary().contains("health: 2 probes"), "{}", r.summary());
         // JSON report round-trips through the crate's own parser.
         let j = crate::jsonx::parse(&r.to_json()).unwrap();
         assert_eq!(j.get("rounds").and_then(|v| v.as_i64()), Some(2));

@@ -57,6 +57,12 @@ pub struct ServeParams {
     /// sampling is also skipped entirely while tracing is runtime-off,
     /// so the telemetry-off control run stays pure.
     pub trace_every: usize,
+    /// Sample the table's health gauges ([`crate::health::probe()`]) every
+    /// this many iterations of client 0's loop; the trajectory lands in
+    /// the report (and its JSON) so bench artifacts show how space
+    /// amplification and index staleness evolve under load. `0` disables
+    /// probing.
+    pub probe_every: usize,
 }
 
 impl ServeParams {
@@ -73,6 +79,7 @@ impl ServeParams {
             seed: 7,
             layout: "COO".into(),
             trace_every: 8,
+            probe_every: 0,
         }
     }
 
@@ -89,6 +96,7 @@ impl ServeParams {
             seed: 7,
             layout: "COO".into(),
             trace_every: 8,
+            probe_every: 0,
         }
     }
 
@@ -105,6 +113,7 @@ impl ServeParams {
             seed: 7,
             layout: "COO".into(),
             trace_every: 16,
+            probe_every: 0,
         }
     }
 }
@@ -150,6 +159,9 @@ pub struct ServeReport {
     /// ([`crate::coordinator::Metrics::delta_since`]) — warmup activity
     /// excluded, deterministic line order.
     pub metrics_delta: String,
+    /// Health-gauge trajectory sampled during the measured phase (see
+    /// [`ServeParams::probe_every`]); empty when probing was off.
+    pub probes: Vec<crate::health::ProbeReport>,
 }
 
 impl ServeReport {
@@ -171,6 +183,8 @@ impl ServeReport {
             ("cache_misses", Json::Int(self.cache_misses as i64)),
             ("traces_sampled", Json::Int(self.traces_sampled as i64)),
             ("worst_trace_secs", Json::from(self.worst_trace_secs)),
+            ("probes", Json::Int(self.probes.len() as i64)),
+            ("health", Json::Arr(self.probes.iter().map(|p| p.to_json()).collect())),
         ])
         .dump()
     }
@@ -199,6 +213,18 @@ impl ServeReport {
             self.cache_hits,
             self.cache_misses,
         );
+        if let (Some(first), Some(last)) = (self.probes.first(), self.probes.last()) {
+            out.push_str(&format!(
+                "\n  health: {} probes, space amp {:.3} -> {:.3}, \
+                 index age {} -> {} versions, {} delta segment(s)",
+                self.probes.len(),
+                first.space_amp,
+                last.space_amp,
+                first.staleness_age,
+                last.staleness_age,
+                last.delta_segments,
+            ));
+        }
         if !self.metrics_delta.is_empty() {
             out.push_str("\n  measured-phase metrics delta:");
             for line in self.metrics_delta.lines() {
@@ -276,12 +302,19 @@ pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<Ser
     let pick_slice = Zipf::new(p.dim0, p.zipf_s);
     let worst = driver::WorstTrace::new();
     let sampled = AtomicU64::new(0);
+    let probes = std::sync::Mutex::new(Vec::new());
     let (latencies, wall) = driver::run_closed_loop(
         p.clients,
         p.requests_per_client,
         p.seed,
         0x5EB5_E001,
         |client, iter, rng| {
+            // Health-gauge sampling rides client 0's loop so the probe
+            // cost is bounded and the trajectory is chronologically
+            // ordered.
+            if p.probe_every > 0 && client == 0 && iter % p.probe_every == 0 {
+                probes.lock().unwrap().push(crate::health::probe(c.table())?);
+            }
             let id = &ids[pick_tensor.sample(rng)];
             let d = pick_slice.sample(rng);
             let req = Stopwatch::start();
@@ -333,6 +366,7 @@ pub fn run_serve(c: &Coordinator, ids: &[String], p: &ServeParams) -> Result<Ser
         worst_trace_secs,
         worst_trace,
         metrics_delta,
+        probes: probes.into_inner().unwrap(),
     })
 }
 
@@ -394,6 +428,32 @@ mod tests {
         assert_eq!(j.get("cache_enabled").and_then(|v| v.as_bool()), Some(true));
         assert!(j.get("traces_sampled").and_then(|v| v.as_i64()).is_some());
         assert!(r.summary().contains("req/s"));
+    }
+
+    #[test]
+    fn run_serve_samples_health_probes() {
+        let c = coordinator();
+        let p = ServeParams {
+            clients: 2,
+            requests_per_client: 10,
+            tensors: 2,
+            dim0: 5,
+            probe_every: 4,
+            ..ServeParams::tiny()
+        };
+        let ids = populate_serve_table(&c, &p).unwrap();
+        let r = run_serve(&c, &ids, &p).unwrap();
+        // Client 0 probes at iterations 0, 4 and 8.
+        assert_eq!(r.probes.len(), 3, "probe trajectory rides client 0's loop");
+        for probe in &r.probes {
+            assert_eq!(probe.table, "serve-t");
+            assert!(probe.live_files > 0 && probe.live_bytes > 0);
+            assert!(probe.space_amp >= 1.0);
+        }
+        assert!(r.summary().contains("health: 3 probes"), "{}", r.summary());
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("probes").and_then(|v| v.as_i64()), Some(3));
+        assert_eq!(j.get("health").and_then(|v| v.as_arr()).map(|a| a.len()), Some(3));
     }
 
     #[test]

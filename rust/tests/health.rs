@@ -1,0 +1,172 @@
+//! Corruption-injection acceptance tests for the health tier.
+//!
+//! A clean table — FTSF data, an IVF index, a live delta posting segment —
+//! must audit with zero findings on every backend. Then each injected
+//! fault (truncated part, flipped footer byte, flipped payload byte,
+//! orphaned index artifact, dropped delta segment) must surface as exactly
+//! the right check, severity and byte location.
+
+use delta_tensor::delta::DeltaTable;
+use delta_tensor::formats::{FtsfFormat, TensorData, TensorStore};
+use delta_tensor::health::{doctor, DoctorOptions, Finding, Severity};
+use delta_tensor::index::{self, maintain::Upkeep, BuildParams};
+use delta_tensor::objectstore::{CostModel, ObjectStore, ObjectStoreHandle};
+use delta_tensor::workload;
+
+/// Build the standard fixture on `store`: a 2-D f32 corpus stored as FTSF
+/// row chunks across several part files, a fresh IVF index over it, and
+/// one incremental append so a delta posting segment is live.
+fn build_table(store: ObjectStoreHandle, root: &str) -> DeltaTable {
+    let table = DeltaTable::create(store, root).unwrap();
+    let data: TensorData = workload::embedding_like(11, 300, 8, 4, 0.05).into();
+    let fmt = FtsfFormat { rows_per_group: 32, rows_per_file: 128, ..FtsfFormat::new(1) };
+    fmt.write(&table, "vecs", &data).unwrap();
+    index::build(&table, "vecs", &BuildParams { seed: 5, ..Default::default() }).unwrap();
+    let more: TensorData = workload::embedding_like(12, 40, 8, 4, 0.05).into();
+    let out = index::maintain::append_rows(&table, "vecs", &more, Upkeep::Incremental).unwrap();
+    assert!(out.index_maintained, "fixture must carry a live delta segment");
+    table
+}
+
+/// The findings of one doctor run over `table`.
+fn audit(table: &DeltaTable, deep: bool) -> Vec<Finding> {
+    doctor(table, &DoctorOptions { deep }).unwrap().findings
+}
+
+/// The single finding matching `check`, asserting there is exactly one.
+fn only(findings: &[Finding], check: &str) -> Finding {
+    let hits: Vec<&Finding> = findings.iter().filter(|f| f.check == check).collect();
+    assert_eq!(hits.len(), 1, "expected exactly one {check} finding, got {findings:?}");
+    hits[0].clone()
+}
+
+#[test]
+fn clean_table_audits_clean_on_every_backend() {
+    let dir = std::env::temp_dir().join(format!("dt-health-clean-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let stores = [
+        ("mem", ObjectStoreHandle::mem()),
+        ("sim", ObjectStoreHandle::sim_mem(CostModel::free())),
+        ("fs", ObjectStoreHandle::fs(dir.clone()).unwrap()),
+    ];
+    for (name, store) in stores {
+        let table = build_table(store, "health-clean");
+        for deep in [false, true] {
+            let report = doctor(&table, &DoctorOptions { deep }).unwrap();
+            assert!(
+                report.is_healthy(),
+                "{name} backend, deep={deep}: expected zero findings, got {:?}",
+                report.findings
+            );
+            assert!(report.objects > 0 && report.checks > 0 && report.version > 0);
+            // Deep mode vouches for the chunk payloads it crc-verified.
+            if deep {
+                assert!(report.bytes > report.objects * 8, "deep audit vouches payload bytes");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_part_is_corrupt_object_size() {
+    let table = build_table(ObjectStoreHandle::mem(), "health-trunc");
+    let snap = table.snapshot().unwrap();
+    let add = snap.files().find(|f| f.path.ends_with(".dtpq")).unwrap().clone();
+    let key = table.data_key(&add.path);
+    let store = table.store();
+    let full = store.get(&key).unwrap();
+    store.put(&key, &full[..full.len() - 4]).unwrap();
+
+    let f = only(&audit(&table, false), "object.size");
+    assert_eq!(f.severity, Severity::Corrupt);
+    assert_eq!(f.path, add.path);
+    // Location pins the disputed byte range: [truncated size, logged size).
+    assert_eq!(f.location, Some((add.size - 4, 4)));
+}
+
+#[test]
+fn flipped_footer_byte_is_corrupt_part_footer() {
+    let table = build_table(ObjectStoreHandle::mem(), "health-magic");
+    let snap = table.snapshot().unwrap();
+    let add = snap.files().find(|f| f.path.ends_with(".dtpq")).unwrap().clone();
+    let key = table.data_key(&add.path);
+    let store = table.store();
+    let mut body = store.get(&key).unwrap();
+    // Same length, broken trailing magic: only the footer parse can tell.
+    let last = body.len() - 1;
+    body[last] ^= 0xFF;
+    store.put(&key, &body).unwrap();
+
+    let f = only(&audit(&table, false), "part.footer");
+    assert_eq!(f.severity, Severity::Corrupt);
+    assert_eq!(f.path, add.path);
+    // The footer machinery lives in the last 10 bytes of the file.
+    assert_eq!(f.location, Some((add.size - 10, 10)));
+}
+
+#[test]
+fn flipped_payload_byte_is_corrupt_chunk_crc_in_deep_mode() {
+    let table = build_table(ObjectStoreHandle::mem(), "health-crc");
+    let snap = table.snapshot().unwrap();
+    let add = snap.files().find(|f| f.path.ends_with(".dtpq")).unwrap().clone();
+    let key = table.data_key(&add.path);
+    let store = table.store();
+    let mut body = store.get(&key).unwrap();
+    // Flip one byte inside the first column chunk (the payload region
+    // starts after the 6-byte file magic), leaving the footer intact.
+    body[8] ^= 0x01;
+    store.put(&key, &body).unwrap();
+
+    // The shallow audit cannot see it: size, footer and bounds all hold.
+    assert!(
+        audit(&table, false).iter().all(|f| f.path != add.path),
+        "shallow audit must not flag an in-bounds payload flip"
+    );
+    let findings = audit(&table, true);
+    let hits: Vec<&Finding> =
+        findings.iter().filter(|f| f.check == "part.chunk_crc").collect();
+    assert!(!hits.is_empty(), "deep audit must catch the crc mismatch: {findings:?}");
+    for f in hits {
+        assert_eq!(f.severity, Severity::Corrupt);
+        assert_eq!(f.path, add.path);
+        let (off, len) = f.location.unwrap();
+        assert!(off >= 6 && off + len <= add.size, "location inside the payload region");
+    }
+}
+
+#[test]
+fn orphaned_index_artifact_is_a_warn() {
+    let table = build_table(ObjectStoreHandle::mem(), "health-orphan");
+    let store = table.store();
+    let orphan_rel = "index/vecs/ivf-00000000deadbeef-centroids.idx";
+    store.put(&table.data_key(orphan_rel), &[0u8; 64]).unwrap();
+
+    let f = only(&audit(&table, false), "orphan.index");
+    assert_eq!(f.severity, Severity::Warn);
+    assert_eq!(f.path, orphan_rel);
+    assert_eq!(f.location, Some((0, 64)));
+    // A warn alone still counts as unhealthy, but not corrupt.
+    let report = doctor(&table, &DoctorOptions { deep: false }).unwrap();
+    assert_eq!(report.corrupts(), 0);
+    assert_eq!(report.warns(), 1);
+}
+
+#[test]
+fn dropped_delta_segment_is_corrupt_object_missing() {
+    let table = build_table(ObjectStoreHandle::mem(), "health-delta");
+    let snap = table.snapshot().unwrap();
+    let add = snap.files().find(|f| f.path.ends_with("-delta.idx")).unwrap().clone();
+    table.store().delete(&table.data_key(&add.path)).unwrap();
+
+    let findings = audit(&table, false);
+    let f = only(&findings, "object.missing");
+    assert_eq!(f.severity, Severity::Corrupt);
+    assert_eq!(f.path, add.path);
+    assert_eq!(f.location, None, "a vanished object has no byte range to pin");
+    // The index audit must not double-report the same vanished object.
+    assert!(
+        findings.iter().all(|x| x.check != "index.delta"),
+        "index audit double-reported: {findings:?}"
+    );
+}

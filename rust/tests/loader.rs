@@ -186,4 +186,14 @@ fn documented_defaults_match_code() {
             "DT_CACHE_MB default (README table)"
         );
     }
+    assert_eq!(
+        delta_tensor::health::journal::DEFAULT_JOURNAL_KEEP,
+        256,
+        "DT_JOURNAL_KEEP default (README table)"
+    );
+    assert_eq!(
+        delta_tensor::health::probe::DEFAULT_PROBE_TOPK,
+        8,
+        "DT_PROBE_TOPK default (README table)"
+    );
 }

@@ -46,6 +46,7 @@ fn zipf_hot_workload_cache_beats_no_cache() {
             seed: 11,
             layout: "COO".into(),
             trace_every: 8,
+            probe_every: 0,
         };
         let ids = populate_serve_table(&c, &params).unwrap();
         reports.push(run_serve(&c, &ids, &params).unwrap());
