@@ -1,0 +1,78 @@
+//! Commit-pipeline contention bench: the closed-loop multi-writer workload
+//! of `workload::contend`, run twice over fresh simulated cloud stores —
+//! once with the full bursty fleet sharing tables (the contended regime the
+//! arbitration layer exists for), once with one writer per table (the
+//! uncontended control) — and compared on commit throughput, rebase rate
+//! and commit-path latency. The contended run's `success_rate` is the
+//! correctness bar: writers own disjoint tensors, so every race must be
+//! absorbed by rebase, never surfaced to the client.
+//!
+//! Knobs: `DT_SCALE` (tiny|small|paper), `DT_NET` (free|fast|paper|vpc),
+//! `DT_BENCH_OUT` (JSON report path, default `BENCH_contend.json`). CI runs
+//! the tiny scale, uploads the JSON, and gates on it via
+//! `cargo run --bin benchgate` against `bench_baselines/contend.json`.
+
+use delta_tensor::benchkit::{self, fmt_secs, print_table, Row, Scale};
+use delta_tensor::prelude::*;
+use delta_tensor::workload::contend::{
+    populate_contend, run_contend, ContendParams, ContendReport,
+};
+
+fn run_once(solo: bool, base: &ContendParams) -> ContendReport {
+    let mut params = base.clone();
+    if solo {
+        // Same op count per writer, but every writer gets a private table
+        // and the bursts are disabled: no shared log, no contention.
+        params.tables = params.writers;
+        params.burst_every = 0;
+    }
+    let store = ObjectStoreHandle::sim_mem(benchkit::net());
+    let tables = populate_contend(&store, &params).expect("populate contend tables");
+    run_contend(&tables, &params).expect("contend run")
+}
+
+fn main() {
+    let params = match benchkit::scale() {
+        Scale::Tiny => ContendParams::tiny(),
+        Scale::Small => ContendParams::small(),
+        Scale::Paper => ContendParams::paper(),
+    };
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for solo in [false, true] {
+        let r = run_once(solo, &params);
+        rows.push(Row {
+            label: if solo { "solo" } else { "contended" }.to_string(),
+            cells: vec![
+                format!("{:.1}", r.ops_per_sec),
+                format!("{:.4}", r.success_rate),
+                r.rebases.to_string(),
+                r.retries.to_string(),
+                fmt_secs(r.p50_secs),
+                fmt_secs(r.p99_secs),
+                r.log_commits.to_string(),
+            ],
+        });
+        reports.push(r);
+    }
+    print_table(
+        "contend: bursty multi-writer fleets on shared tables vs one table per writer",
+        &["mode", "commits/s", "success", "rebases", "lost races", "p50", "p99", "commits"],
+        &rows,
+    );
+    let slowdown = reports[1].ops_per_sec / reports[0].ops_per_sec.max(1e-9);
+    println!("\ncontention cost: {slowdown:.2}x solo-vs-contended commit throughput");
+    println!(
+        "arbitration work: {} rebases, {} lost races, {} queue waits across {} commits",
+        reports[0].rebases, reports[0].retries, reports[0].queue_waits, reports[0].commits
+    );
+
+    let out = std::env::var("DT_BENCH_OUT").unwrap_or_else(|_| "BENCH_contend.json".to_string());
+    let json = format!(
+        "{{\"bench\":\"contend\",\"contended\":{},\"solo\":{},\"slowdown\":{slowdown:.4}}}",
+        reports[0].to_json(),
+        reports[1].to_json()
+    );
+    std::fs::write(&out, json).expect("write bench report");
+    println!("wrote {out}");
+}

@@ -228,6 +228,12 @@ COMMANDS
             prefetching DataLoader vs a naive per-sample sequential reader
             [--samples N] [--dim N] [--batch N] [--epochs N] [--depth N]
             [--gap N] [--seed N] [--json PATH]
+  bench contend                  bursty multi-writer commit-contention
+            harness: writer fleets spread across tables mixing appends,
+            index rebuilds and folds; reports commit success rate, rebase
+            rate, retries-per-commit and commit-path latency quantiles
+            [--writers N] [--tables N] [--iters N] [--burst N] [--rows N]
+            [--append N] [--dim N] [--clusters N] [--seed N] [--json PATH]
   trace read|slice|search|append  run ONE operation force-traced (ignores
             DT_TRACE) and print its span tree with per-span I/O attribution
             (GET/PUT batches, bytes, cache hits, commit retries); flags
@@ -259,6 +265,12 @@ TRACING (runtime-gated, compiled always-on)
 HEALTH (see `doctor` and `history --journal`)
   DT_JOURNAL_KEEP=N              event-journal ring capacity (default 256)
   DT_PROBE_TOPK=N                cache-heatmap entries per probe (default 8)
+COMMIT ARBITRATION (see `bench contend`)
+  DT_COMMIT_QUEUE=N              per-table in-process commit queue: max
+                                 writers waiting behind the active one
+                                 (default 64; 0 disables local serialization)
+  DT_REBASE_MAX=N                conflict-free rebase rounds one commit may
+                                 absorb before giving up (default 32)
 
 Benches for the paper's figures: `cargo bench` (see EXPERIMENTS.md).
 "#;
@@ -484,10 +496,12 @@ fn cmd_bench(args: &Args) -> Result<String> {
         "search" => cmd_bench_search(args),
         "maintain" => cmd_bench_maintain(args),
         "loader" => cmd_bench_loader(args),
+        "contend" => cmd_bench_contend(args),
         other => {
             bail!(
                 "unknown bench {other:?} (try `bench serve`, `bench ingest`, `bench search`, \
-                 `bench maintain` or `bench loader`; figure benches run via `cargo bench`)"
+                 `bench maintain`, `bench loader` or `bench contend`; figure benches run via \
+                 `cargo bench`)"
             )
         }
     }
@@ -763,6 +777,28 @@ fn cmd_bench_ingest(args: &Args) -> Result<String> {
     if let Some(path) = args.flags.get("json") {
         std::fs::write(path, report.to_json())
             .with_context(|| format!("writing ingest report to {path}"))?;
+    }
+    Ok(format!("{}\n{}", report.summary(), crate::ingest::report()))
+}
+
+fn cmd_bench_contend(args: &Args) -> Result<String> {
+    let store = store_from_args(args)?;
+    let params = workload::contend::ContendParams {
+        writers: args.opt_usize("writers", 4)?,
+        tables: args.opt_usize("tables", 2)?,
+        iters_per_writer: args.opt_usize("iters", 4)?,
+        burst_every: args.opt_usize("burst", 2)?,
+        rows: args.opt_usize("rows", 256)?,
+        append_rows: args.opt_usize("append", 16)?,
+        dim: args.opt_usize("dim", 8)?,
+        clusters: args.opt_usize("clusters", 4)?,
+        seed: args.opt_usize("seed", 7)? as u64,
+    };
+    let tables = workload::contend::populate_contend(&store, &params)?;
+    let report = workload::contend::run_contend(&tables, &params)?;
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, report.to_json())
+            .with_context(|| format!("writing contend report to {path}"))?;
     }
     Ok(format!("{}\n{}", report.summary(), crate::ingest::report()))
 }
@@ -1164,6 +1200,18 @@ mod tests {
         .unwrap();
         assert!(out.contains("tensors/s"), "{out}");
         assert!(out.contains("ingest.put_batches"), "{out}");
+    }
+
+    #[test]
+    fn bench_contend_smoke() {
+        let out = run(&args(&[
+            "bench", "contend", "--store", "mem", "--writers", "2", "--tables", "2", "--iters",
+            "2", "--rows", "96", "--append", "8", "--dim", "8", "--clusters", "3",
+        ]))
+        .unwrap();
+        assert!(out.contains("commits/s"), "{out}");
+        assert!(out.contains("success rate 1.0000"), "{out}");
+        assert!(out.contains("ingest.commit_rebases"), "{out}");
     }
 
     #[test]

@@ -559,6 +559,8 @@ mod tests {
         assert!(full.contains("ingest.parts_encoded"), "{full}");
         assert!(full.contains("ingest.put_batches"), "{full}");
         assert!(full.contains("ingest.commit_retries"), "{full}");
+        assert!(full.contains("ingest.commit_rebases"), "{full}");
+        assert!(full.contains("ingest.commit_queue_waits"), "{full}");
         assert!(full.contains("index.builds"), "{full}");
         assert!(full.contains("index.searches"), "{full}");
     }

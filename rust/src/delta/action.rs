@@ -70,6 +70,17 @@ pub enum Action {
         /// Timestamp (ms since epoch).
         timestamp: i64,
     },
+    /// Application transaction marker (the protocol's `txn` action): records
+    /// that application `app_id` has applied its work for data version
+    /// `version`. Index builds/folds and append upkeep stamp one of these so
+    /// a racing or stale writer for the same `app_id` is detected by the
+    /// commit arbitration instead of silently overwriting fresher artifacts.
+    Txn {
+        /// Application id (e.g. `index/<tensor>`).
+        app_id: String,
+        /// Highest data version this application has covered.
+        version: u64,
+    },
 }
 
 impl Action {
@@ -123,6 +134,13 @@ impl Action {
                     ("timestamp", Json::Int(*timestamp)),
                 ]),
             )]),
+            Action::Txn { app_id, version } => Json::obj([(
+                "txn",
+                Json::obj([
+                    ("appId", Json::from(app_id.as_str())),
+                    ("version", Json::from(*version)),
+                ]),
+            )]),
         }
     }
 
@@ -164,6 +182,12 @@ impl Action {
             return Ok(Action::CommitInfo {
                 operation: c.get("operation").and_then(Json::as_str).unwrap_or("").to_string(),
                 timestamp: c.get("timestamp").and_then(Json::as_i64).unwrap_or(0),
+            });
+        }
+        if let Some(t) = j.get("txn") {
+            return Ok(Action::Txn {
+                app_id: t.get("appId").and_then(Json::as_str).context("txn.appId")?.to_string(),
+                version: t.get("version").and_then(Json::as_u64).unwrap_or(0),
             });
         }
         bail!("unrecognized action: {}", j.dump())
@@ -213,6 +237,7 @@ mod tests {
             }),
             Action::Remove { path: "data/old.dtpq".into(), timestamp: 1700000000002 },
             Action::CommitInfo { operation: "WRITE".into(), timestamp: 1700000000003 },
+            Action::Txn { app_id: "index/6e368".into(), version: 4 },
         ]
     }
 
@@ -250,8 +275,17 @@ mod tests {
 
     #[test]
     fn unknown_action_rejected() {
-        let j = crate::jsonx::parse(r#"{"txn":{"appId":"x"}}"#).unwrap();
+        let j = crate::jsonx::parse(r#"{"cdc":{"path":"x"}}"#).unwrap();
         assert!(Action::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn txn_missing_version_defaults_to_zero() {
+        let j = crate::jsonx::parse(r#"{"txn":{"appId":"x"}}"#).unwrap();
+        assert_eq!(
+            Action::from_json(&j).unwrap(),
+            Action::Txn { app_id: "x".into(), version: 0 }
+        );
     }
 
     #[test]

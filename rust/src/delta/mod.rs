@@ -12,10 +12,15 @@
 //! ```
 //!
 //! Commits are atomic via the object store's put-if-absent primitive:
-//! whoever creates `N.json` first wins version N; losers re-read the log
-//! and retry (optimistic concurrency, as in Delta Lake on S3 with a
-//! coordinating commit service). Snapshots replay the log (from the latest
-//! checkpoint) to a version, giving time travel for free.
+//! whoever creates `N.json` first wins version N; losers replay the winner
+//! commits since their read snapshot and **arbitrate** — disjoint file
+//! sets rebase onto the new version and re-commit, overlapping writes or a
+//! newer `txn` for the same app-id surface a typed [`CommitConflict`]
+//! (optimistic concurrency, as in Delta Lake on S3 with a coordinating
+//! commit service). Co-located writers additionally serialize on a
+//! per-table in-process queue before touching the store. Snapshots replay
+//! the log (from the latest checkpoint) to a version, giving time travel
+//! for free.
 
 mod action;
 
@@ -24,24 +29,134 @@ pub use action::{commit_from_ndjson, commit_to_ndjson, Action, AddFile, Metadata
 use crate::jsonx::{self, Json};
 use crate::objectstore::{ObjectStore, ObjectStoreHandle};
 use crate::Result;
-use anyhow::{bail, ensure, Context};
-use std::collections::BTreeMap;
+use anyhow::{ensure, Context};
+use std::collections::{BTreeMap, HashSet};
 use std::sync::Arc;
 
 /// Write a checkpoint every this many commits.
 const CHECKPOINT_INTERVAL: u64 = 10;
 /// Give up after this many optimistic-concurrency retries.
 const MAX_COMMIT_RETRIES: usize = 32;
+/// Default cap on conflict-aware rebase rounds per commit
+/// (`DT_REBASE_MAX`; 0 disables rebasing — any lost race is a conflict).
+pub const DEFAULT_REBASE_MAX: u64 = 32;
+/// Default per-table in-process commit-queue depth: the number of
+/// co-located writers allowed to wait for the table's local commit slot
+/// before further commits are refused (`DT_COMMIT_QUEUE`; 0 disables the
+/// queue entirely and writers race the object store directly).
+pub const DEFAULT_COMMIT_QUEUE: u64 = 64;
 
 /// Process-wide count of `put_if_absent` races lost during commits (each
 /// loss is followed by a retry against the refreshed log position).
 /// Exported through the write engine's metrics (`ingest.commit_retries`).
 static COMMIT_RETRIES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// Process-wide count of commits that were rebased onto a newer log
+/// position after classifying every intervening winner as disjoint.
+static COMMIT_REBASES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// Process-wide count of commits that waited behind another in-process
+/// writer in a per-table commit queue before touching the object store.
+static COMMIT_QUEUE_WAITS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 /// Total commit conflicts retried so far, process-wide.
 pub fn commit_retry_count() -> u64 {
     COMMIT_RETRIES.load(std::sync::atomic::Ordering::Relaxed)
 }
+
+/// Total commits rebased onto a newer version so far, process-wide.
+pub fn commit_rebase_count() -> u64 {
+    COMMIT_REBASES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Total commits that queued behind a co-located writer so far.
+pub fn commit_queue_wait_count() -> u64 {
+    COMMIT_QUEUE_WAITS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+fn rebase_max() -> u64 {
+    crate::util::env_u64("DT_REBASE_MAX", DEFAULT_REBASE_MAX)
+}
+
+fn commit_queue_depth() -> u64 {
+    crate::util::env_u64("DT_COMMIT_QUEUE", DEFAULT_COMMIT_QUEUE)
+}
+
+/// Typed commit-arbitration failure: the commit lost its optimistic race
+/// and the winner(s) could **not** be classified as disjoint — rebasing
+/// would overwrite their work (or the local commit queue refused entry).
+/// Callers must re-plan against a fresh snapshot; downcast through
+/// `anyhow` with `err.downcast_ref::<CommitConflict>()`.
+#[derive(Debug, Clone)]
+pub struct CommitConflict {
+    /// Table root the commit targeted.
+    pub table: String,
+    /// Version of the conflicting winner commit, when one was identified.
+    pub version: Option<u64>,
+    /// Human-readable classification of why the commit cannot be rebased.
+    pub reason: String,
+}
+
+impl std::fmt::Display for CommitConflict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "commit conflict on {}", self.table)?;
+        if let Some(v) = self.version {
+            write!(f, " at version {v}")?;
+        }
+        write!(f, ": {}", self.reason)
+    }
+}
+
+impl std::error::Error for CommitConflict {}
+
+/// One table's in-process commit slot: a mutex-and-condvar pair with a
+/// bounded waiter count, so co-located writers serialize locally instead
+/// of burning object-store round-trips racing each other.
+struct TableQueue {
+    busy: std::sync::Mutex<bool>,
+    cv: std::sync::Condvar,
+    waiters: std::sync::atomic::AtomicU64,
+}
+
+/// Releases the table's commit slot on drop.
+struct QueueGuard {
+    q: Arc<TableQueue>,
+}
+
+impl Drop for QueueGuard {
+    fn drop(&mut self) {
+        *self.q.busy.lock().unwrap() = false;
+        self.q.cv.notify_one();
+    }
+}
+
+impl TableQueue {
+    fn acquire(self: &Arc<Self>, table: &str, max_waiters: u64) -> Result<QueueGuard> {
+        use std::sync::atomic::Ordering;
+        let mut busy = self.busy.lock().unwrap();
+        if *busy {
+            if self.waiters.fetch_add(1, Ordering::SeqCst) >= max_waiters {
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+                return Err(anyhow::Error::new(CommitConflict {
+                    table: table.to_string(),
+                    version: None,
+                    reason: format!("local commit queue full ({max_waiters} waiters)"),
+                }));
+            }
+            COMMIT_QUEUE_WAITS.fetch_add(1, Ordering::Relaxed);
+            while *busy {
+                busy = self.cv.wait(busy).unwrap();
+            }
+            self.waiters.fetch_sub(1, Ordering::SeqCst);
+        }
+        *busy = true;
+        Ok(QueueGuard { q: Arc::clone(self) })
+    }
+}
+
+/// Per-table commit queues, keyed like the snapshot cache by
+/// `(store instance, table root)` so distinct stores never share a slot.
+static COMMIT_QUEUES: once_cell::sync::Lazy<
+    std::sync::Mutex<std::collections::HashMap<(u64, String), Arc<TableQueue>>>,
+> = once_cell::sync::Lazy::new(|| std::sync::Mutex::new(std::collections::HashMap::new()));
 
 /// Milliseconds since the Unix epoch, **strictly monotonic within the
 /// process**: two calls never return the same value even inside one
@@ -70,9 +185,17 @@ pub struct Snapshot {
     pub metadata: Metadata,
     /// Live data files by path.
     pub files: BTreeMap<String, AddFile>,
+    /// Application transactions: highest `txn` version recorded per
+    /// `app_id` at or before `version` (the protocol's idempotence table).
+    pub txns: BTreeMap<String, u64>,
 }
 
 impl Snapshot {
+    /// Highest `txn` version recorded for `app_id`, if any.
+    pub fn txn_version(&self, app_id: &str) -> Option<u64> {
+        self.txns.get(app_id).copied()
+    }
+
     /// Live files, sorted by path.
     pub fn files(&self) -> impl Iterator<Item = &AddFile> {
         self.files.values()
@@ -217,16 +340,34 @@ impl DeltaTable {
 
     /// Commit `actions` with optimistic concurrency. Returns the version.
     ///
-    /// Append-only commits (adds + commitInfo) rebase automatically on
-    /// conflict: when `put_if_absent` loses the race, the writer refreshes
-    /// the log position (`latest_version`) and retries **past every commit
-    /// that landed meanwhile**, instead of stepping one version at a time —
-    /// a burst of concurrent winners would otherwise exhaust the retry
-    /// budget and error out. Commits containing `remove` actions
-    /// re-validate against the refreshed snapshot that their removed files
-    /// are still live and fail otherwise (the caller must re-plan, as
-    /// Delta does for conflicting OPTIMIZE).
+    /// Equivalent to [`DeltaTable::commit_from`] with the read snapshot
+    /// taken at entry — the right call when the actions were planned
+    /// against the table's current state (plain writes). Callers that
+    /// planned against an older snapshot (index builds, folds, upkeep)
+    /// must pass that snapshot's version to `commit_from` so arbitration
+    /// replays everything that landed since the plan was made.
     pub fn commit(&self, actions: Vec<Action>) -> Result<u64> {
+        let read_version = self.latest_version()?;
+        self.commit_from(actions, read_version)
+    }
+
+    /// Commit `actions` planned against snapshot `read_version`, with
+    /// conflict-aware arbitration. Returns the landed version.
+    ///
+    /// Pipeline: (1) co-located writers serialize on a per-table
+    /// in-process queue (`DT_COMMIT_QUEUE` waiters max) so only one local
+    /// writer races the object store at a time; (2) every winner commit
+    /// since `read_version` is replayed and classified **before** each
+    /// `put_if_absent` attempt — disjoint file sets rebase our actions
+    /// onto the new version (counted, capped by `DT_REBASE_MAX`), while an
+    /// overlapping add/remove path or a `txn` action for one of our
+    /// app-ids at a version `>=` ours surfaces a typed [`CommitConflict`]
+    /// (the caller's plan is stale and must be re-made, as Delta does for
+    /// conflicting OPTIMIZE); (3) a lost `put_if_absent` race refreshes
+    /// the log position and jumps **past every commit that landed
+    /// meanwhile**, instead of stepping one version at a time — a burst of
+    /// concurrent winners would otherwise exhaust the retry budget.
+    pub fn commit_from(&self, actions: Vec<Action>, read_version: u64) -> Result<u64> {
         let started = std::time::Instant::now();
         let op = actions
             .iter()
@@ -244,7 +385,6 @@ impl DeltaTable {
                 _ => None,
             })
             .sum();
-        let mut retries = 0u64;
         // One journal entry per outcome path, so failed commits are as
         // visible post-hoc as landed ones.
         let journal = |version: Option<u64>, retries: u64, outcome: &str| {
@@ -266,45 +406,132 @@ impl DeltaTable {
                 _ => None,
             })
             .collect();
+        // The write set arbitration defends: everything this commit adds
+        // or tombstones, plus the app transactions it stamps.
+        let write_set: HashSet<&str> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Add(f) => Some(f.path.as_str()),
+                Action::Remove { path, .. } => Some(path.as_str()),
+                _ => None,
+            })
+            .collect();
+        let our_txns: Vec<(&str, u64)> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Txn { app_id, version } => Some((app_id.as_str(), *version)),
+                _ => None,
+            })
+            .collect();
+        // Serialize with co-located writers before spending any
+        // object-store round-trips; a full queue is a typed conflict.
+        let _slot = match self.queue_slot() {
+            Ok(slot) => slot,
+            Err(e) => {
+                journal(None, 0, "conflict");
+                return Err(e);
+            }
+        };
         // Validate removes against the current snapshot up front: removing a
         // file that is not live means the caller planned against a stale view.
         if !removes.is_empty() {
             let snap = self.snapshot()?;
             for r in &removes {
-                ensure!(snap.files.contains_key(r), "cannot remove {r}: not live in snapshot");
+                if !snap.files.contains_key(r) {
+                    journal(None, 0, "conflict");
+                    return Err(anyhow::Error::new(CommitConflict {
+                        table: self.root.clone(),
+                        version: Some(snap.version),
+                        reason: format!("cannot remove {r}: not live in snapshot"),
+                    }));
+                }
             }
         }
         let body = commit_to_ndjson(&actions);
-        let mut version = self.latest_version()? + 1;
-        for _ in 0..MAX_COMMIT_RETRIES {
+        let mut retries = 0u64;
+        let mut rebases = 0u64;
+        let mut replayed = read_version;
+        let mut version = read_version + 1;
+        loop {
+            // Arbitrate everything that landed since the read snapshot (or
+            // the last replay) — BEFORE the put, so a plan gone stale while
+            // waiting in the local queue is classified without burning a
+            // round-trip on a doomed `put_if_absent`.
+            let latest = self.latest_version()?;
+            if latest > replayed {
+                for v in replayed + 1..=latest {
+                    let text = String::from_utf8(self.store.get(&self.commit_key(v))?)
+                        .context("commit not utf8")?;
+                    if let Err(e) =
+                        classify_winner(&self.root, v, &commit_from_ndjson(&text)?, &write_set, &our_txns)
+                    {
+                        journal(None, retries, "conflict");
+                        return Err(e);
+                    }
+                }
+                replayed = latest;
+                // Every winner is disjoint from us: rebase onto the new
+                // log position and re-commit the same body.
+                rebases += 1;
+                COMMIT_REBASES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if rebases > rebase_max() {
+                    journal(None, retries, "conflict");
+                    return Err(anyhow::Error::new(CommitConflict {
+                        table: self.root.clone(),
+                        version: Some(latest),
+                        reason: format!("rebase budget exhausted after {} rounds", rebases - 1),
+                    }));
+                }
+                version = (latest + 1).max(version);
+            }
             if self.store.put_if_absent(&self.commit_key(version), body.as_bytes())? {
                 if version % CHECKPOINT_INTERVAL == 0 {
-                    // Best-effort checkpoint; failure must not fail the commit.
-                    let _ = self.write_checkpoint(version);
+                    // Best-effort checkpoint; failure must not fail the
+                    // commit, but it must not be invisible either — the
+                    // doctor/probe surface checkpoint lag from the journal.
+                    if self.write_checkpoint(version).is_err() {
+                        self.journal("CHECKPOINT", Some(version), 0, 0, 0, 0, 0.0, "error");
+                    }
                 }
-                journal(Some(version), retries, "ok");
+                journal(Some(version), retries, if rebases > 0 { "rebased" } else { "ok" });
                 return Ok(version);
             }
-            // Conflict: someone won this version. Refresh instead of
-            // erroring — re-read the log position so the retry lands past
-            // every commit that won meanwhile, and re-validate removes
-            // against the refreshed snapshot.
+            // Lost the race for `version`: count it and loop — the replay
+            // above will classify the winner(s) and move us past them.
             COMMIT_RETRIES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             retries += 1;
             self.store.io_span().retry();
-            if !removes.is_empty() {
-                let snap = self.snapshot()?;
-                for r in &removes {
-                    if !snap.files.contains_key(r) {
-                        journal(None, retries, "conflict");
-                        bail!("commit conflict: {r} was removed concurrently");
-                    }
-                }
+            if retries as usize >= MAX_COMMIT_RETRIES {
+                journal(None, retries, "conflict");
+                return Err(anyhow::Error::new(CommitConflict {
+                    table: self.root.clone(),
+                    version: None,
+                    reason: format!("giving up after {MAX_COMMIT_RETRIES} lost races"),
+                }));
             }
-            version = (self.latest_version()? + 1).max(version + 1);
+            version += 1;
         }
-        journal(None, retries, "conflict");
-        bail!("giving up after {MAX_COMMIT_RETRIES} commit conflicts")
+    }
+
+    /// Acquire this table's in-process commit slot (None when the queue is
+    /// disabled via `DT_COMMIT_QUEUE=0`).
+    fn queue_slot(&self) -> Result<Option<QueueGuard>> {
+        let depth = commit_queue_depth();
+        if depth == 0 {
+            return Ok(None);
+        }
+        let key = (self.store.instance_id(), self.root.clone());
+        let q = {
+            let mut map = COMMIT_QUEUES.lock().unwrap();
+            Arc::clone(map.entry(key).or_insert_with(|| {
+                Arc::new(TableQueue {
+                    busy: std::sync::Mutex::new(false),
+                    cv: std::sync::Condvar::new(),
+                    waiters: std::sync::atomic::AtomicU64::new(0),
+                })
+            }))
+        };
+        q.acquire(&self.root, depth).map(Some)
     }
 
     /// Record one [`crate::health::journal`] event for an operation against
@@ -352,23 +579,26 @@ impl DeltaTable {
         // Find the newest checkpoint at or before `version`.
         let mut start = 0u64;
         let mut files: BTreeMap<String, AddFile> = BTreeMap::new();
+        let mut txns: BTreeMap<String, u64> = BTreeMap::new();
         let mut metadata: Option<Metadata> = None;
-        if let Some((cv, snap_files, snap_meta)) = self.read_checkpoint_before(version)? {
+        if let Some((cv, snap_files, snap_txns, snap_meta)) = self.read_checkpoint_before(version)? {
             start = cv + 1;
             files = snap_files;
+            txns = snap_txns;
             metadata = Some(snap_meta);
         }
         for v in start..=version {
             let body = self.store.get(&self.commit_key(v))?;
             let text = String::from_utf8(body).context("commit not utf8")?;
             for action in commit_from_ndjson(&text)? {
-                apply_action(&mut files, &mut metadata, action);
+                apply_action(&mut files, &mut txns, &mut metadata, action);
             }
         }
         Ok(Snapshot {
             version,
             metadata: metadata.context("no metaData action found in log")?,
             files,
+            txns,
         })
     }
 
@@ -401,10 +631,18 @@ impl DeltaTable {
             .values()
             .map(|f| Action::Add(f.clone()).to_json())
             .collect();
+        let txns: Vec<Json> = snap
+            .txns
+            .iter()
+            .map(|(app_id, v)| {
+                Action::Txn { app_id: app_id.clone(), version: *v }.to_json()
+            })
+            .collect();
         let j = Json::obj([
             ("version", Json::from(version)),
             ("metaData", Action::Metadata(snap.metadata.clone()).to_json()),
             ("files", Json::Arr(files)),
+            ("txns", Json::Arr(txns)),
         ]);
         self.store.put(&self.checkpoint_key(version), j.dump().as_bytes())?;
         let hint = Json::obj([("version", Json::from(version))]);
@@ -416,7 +654,7 @@ impl DeltaTable {
     fn read_checkpoint_before(
         &self,
         version: u64,
-    ) -> Result<Option<(u64, BTreeMap<String, AddFile>, Metadata)>> {
+    ) -> Result<Option<(u64, BTreeMap<String, AddFile>, BTreeMap<String, u64>, Metadata)>> {
         // Use the _last_checkpoint hint, falling back to a list scan.
         let mut candidate: Option<u64> = None;
         if let Some(len) = self.store.head(&self.last_checkpoint_key())? {
@@ -446,6 +684,7 @@ impl DeltaTable {
         };
         let j = jsonx::parse(std::str::from_utf8(&body).context("checkpoint not utf8")?)?;
         let mut files = BTreeMap::new();
+        let mut txns = BTreeMap::new();
         let mut metadata = None;
         if let Some(m) = j.get("metaData") {
             if let Action::Metadata(md) = Action::from_json(m)? {
@@ -457,8 +696,14 @@ impl DeltaTable {
                 files.insert(a.path.clone(), a);
             }
         }
+        // Older checkpoints (pre-txn) simply have no `txns` array.
+        for t in j.get("txns").and_then(Json::as_arr).unwrap_or(&[]) {
+            if let Action::Txn { app_id, version } = Action::from_json(t)? {
+                txns.insert(app_id, version);
+            }
+        }
         let metadata = metadata.context("checkpoint missing metaData")?;
-        Ok(Some((cv, files, metadata)))
+        Ok(Some((cv, files, txns, metadata)))
     }
 
     /// Delete objects no longer referenced by the snapshot ("VACUUM"):
@@ -551,18 +796,20 @@ impl SnapshotCache {
                 // Incremental refresh: replay only the new commits.
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 let mut files = snap.files.clone();
+                let mut txns = snap.txns.clone();
                 let mut metadata = Some(snap.metadata.clone());
                 for v in snap.version + 1..=latest {
                     let body = table.store().get(&table.commit_key(v))?;
                     let text = String::from_utf8(body).context("commit not utf8")?;
                     for action in commit_from_ndjson(&text)? {
-                        apply_action(&mut files, &mut metadata, action);
+                        apply_action(&mut files, &mut txns, &mut metadata, action);
                     }
                 }
                 let fresh = Arc::new(Snapshot {
                     version: latest,
                     metadata: metadata.context("no metaData action found in log")?,
                     files,
+                    txns,
                 });
                 self.insert(key, fresh.clone());
                 return Ok(fresh);
@@ -597,6 +844,7 @@ impl SnapshotCache {
 
 fn apply_action(
     files: &mut BTreeMap<String, AddFile>,
+    txns: &mut BTreeMap<String, u64>,
     metadata: &mut Option<Metadata>,
     action: Action,
 ) {
@@ -607,9 +855,55 @@ fn apply_action(
         Action::Remove { path, .. } => {
             files.remove(&path);
         }
+        Action::Txn { app_id, version } => {
+            let v = txns.entry(app_id).or_insert(version);
+            *v = (*v).max(version);
+        }
         Action::Metadata(m) => *metadata = Some(m),
         Action::Protocol { .. } | Action::CommitInfo { .. } => {}
     }
+}
+
+/// Classify one winner commit against our write set and app transactions:
+/// `Ok(())` means provably disjoint (safe to rebase past), `Err` carries a
+/// typed [`CommitConflict`] naming the first overlap found.
+fn classify_winner(
+    table: &str,
+    winner_version: u64,
+    winners: &[Action],
+    write_set: &HashSet<&str>,
+    our_txns: &[(&str, u64)],
+) -> Result<()> {
+    let conflict = |reason: String| {
+        Err(anyhow::Error::new(CommitConflict {
+            table: table.to_string(),
+            version: Some(winner_version),
+            reason,
+        }))
+    };
+    for a in winners {
+        match a {
+            Action::Add(f) if write_set.contains(f.path.as_str()) => {
+                return conflict(format!("winner also wrote {}", f.path));
+            }
+            Action::Remove { path, .. } if write_set.contains(path.as_str()) => {
+                return conflict(format!("winner removed {path}"));
+            }
+            Action::Txn { app_id, version } => {
+                if let Some((_, ours)) =
+                    our_txns.iter().find(|(id, _)| id == app_id)
+                {
+                    if version >= ours {
+                        return conflict(format!(
+                            "winner applied txn {app_id}@{version} (ours covers {ours})"
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
 }
 
 fn parse_commit_version(key: &str) -> Option<u64> {
@@ -811,6 +1105,168 @@ mod tests {
         assert!(commit_retry_count() > retries_before, "the lost race must be counted");
         let snap = t.snapshot().unwrap();
         assert!(snap.files.contains_key("data/a"));
+    }
+
+    /// A store whose first conditional PUT of a commit at version >=
+    /// `trigger` is preceded by a rival landing `rival_body` at exactly
+    /// that version — a deterministic single-commit race.
+    struct InjectRival {
+        inner: crate::objectstore::MemStore,
+        trigger: u64,
+        rival_body: Vec<u8>,
+        fired: std::sync::atomic::AtomicBool,
+    }
+
+    impl ObjectStore for InjectRival {
+        fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+            self.inner.put(key, data)
+        }
+        fn put_if_absent(&self, key: &str, data: &[u8]) -> Result<bool> {
+            if let Some(v) = parse_commit_version(key) {
+                if v >= self.trigger
+                    && !self.fired.swap(true, std::sync::atomic::Ordering::SeqCst)
+                {
+                    self.inner.put_if_absent(key, &self.rival_body)?;
+                }
+            }
+            self.inner.put_if_absent(key, data)
+        }
+        fn get(&self, key: &str) -> Result<Vec<u8>> {
+            self.inner.get(key)
+        }
+        fn get_range(&self, key: &str, off: u64, len: u64) -> Result<Vec<u8>> {
+            self.inner.get_range(key, off, len)
+        }
+        fn head(&self, key: &str) -> Result<Option<u64>> {
+            self.inner.head(key)
+        }
+        fn list(&self, prefix: &str) -> Result<Vec<String>> {
+            self.inner.list(prefix)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            self.inner.delete(key)
+        }
+    }
+
+    fn inject_rival(trigger: u64, rival: &[Action]) -> ObjectStoreHandle {
+        ObjectStoreHandle::new(Arc::new(InjectRival {
+            inner: crate::objectstore::MemStore::new(),
+            trigger,
+            rival_body: commit_to_ndjson(rival).into_bytes(),
+            fired: std::sync::atomic::AtomicBool::new(false),
+        }))
+    }
+
+    #[test]
+    fn txn_lands_in_snapshot_and_survives_checkpoint() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        t.commit(vec![
+            Action::Txn { app_id: "index/v".into(), version: 0 },
+            info("BUILD INDEX"),
+        ])
+        .unwrap();
+        assert_eq!(t.snapshot().unwrap().txn_version("index/v"), Some(0));
+        // A later txn for the same app raises the recorded version; an
+        // out-of-order replay of an older one must not lower it.
+        t.commit(vec![Action::Txn { app_id: "index/v".into(), version: 7 }]).unwrap();
+        t.commit(vec![Action::Txn { app_id: "index/v".into(), version: 3 }]).unwrap();
+        assert_eq!(t.snapshot().unwrap().txn_version("index/v"), Some(7));
+        // Push past a checkpoint boundary: the txn table must ride the
+        // checkpoint, not only the replayed tail.
+        for i in 0..10 {
+            t.commit(vec![add(&format!("data/f{i}"), "t1", i, i), info("WRITE")]).unwrap();
+        }
+        let v = t.latest_version().unwrap();
+        assert!(t.store.head(&t.checkpoint_key(10)).unwrap().is_some());
+        let snap = t.snapshot_at(v).unwrap();
+        assert_eq!(snap.txn_version("index/v"), Some(7));
+        assert_eq!(snap.txn_version("index/other"), None);
+    }
+
+    #[test]
+    fn disjoint_race_rebases_without_client_visible_failure() {
+        let store = inject_rival(1, &[add("data/rival", "t2", 0, 9), info("WRITE")]);
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        let rebases_before = commit_rebase_count();
+        let v = t.commit(vec![add("data/mine", "t1", 0, 9), info("WRITE")]).unwrap();
+        assert_eq!(v, 2, "loser must land right after the disjoint winner");
+        assert!(commit_rebase_count() > rebases_before, "the rebase must be counted");
+        let snap = t.snapshot().unwrap();
+        assert!(snap.files.contains_key("data/mine"));
+        assert!(snap.files.contains_key("data/rival"), "winner's work must survive");
+        let ev = crate::health::journal::events(Some(t.store.instance_id()), Some("tbl"));
+        assert!(
+            ev.iter().any(|e| e.outcome == "rebased" && e.version == Some(2)),
+            "journal must record the rebased outcome: {ev:?}"
+        );
+    }
+
+    #[test]
+    fn overlapping_race_surfaces_typed_conflict() {
+        // The rival adds the very path we want to add: not rebasable.
+        let store = inject_rival(1, &[add("data/same", "t1", 0, 9), info("WRITE")]);
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        let err = t
+            .commit(vec![add("data/same", "t1", 0, 9), info("WRITE")])
+            .expect_err("overlapping write must not silently land");
+        let conflict = err
+            .downcast_ref::<CommitConflict>()
+            .expect("error must downcast to CommitConflict");
+        assert_eq!(conflict.table, "tbl");
+        assert_eq!(conflict.version, Some(1));
+        assert!(conflict.reason.contains("data/same"), "{conflict}");
+    }
+
+    #[test]
+    fn racing_txn_for_same_app_surfaces_typed_conflict() {
+        // The rival stamps the same app transaction at the same covered
+        // version — our plan is redundant and must be refused, not
+        // last-write-wins.
+        let store = inject_rival(
+            1,
+            &[
+                add("index/v/rival.idx", "", 0, 0),
+                Action::Txn { app_id: "index/v".into(), version: 0 },
+                info("BUILD INDEX"),
+            ],
+        );
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        let err = t
+            .commit(vec![
+                add("index/v/mine.idx", "", 0, 0),
+                Action::Txn { app_id: "index/v".into(), version: 0 },
+                info("BUILD INDEX"),
+            ])
+            .expect_err("racing same-app txn must conflict");
+        let conflict = err.downcast_ref::<CommitConflict>().unwrap();
+        assert!(conflict.reason.contains("index/v"), "{conflict}");
+        // The winner's artifact set is intact; ours never landed.
+        let snap = t.snapshot().unwrap();
+        assert!(snap.files.contains_key("index/v/rival.idx"));
+        assert!(!snap.files.contains_key("index/v/mine.idx"));
+    }
+
+    #[test]
+    fn stale_plan_against_newer_txn_refused_before_any_put() {
+        let store = ObjectStoreHandle::mem();
+        let t = DeltaTable::create(store, "tbl").unwrap();
+        let read_version = t.latest_version().unwrap();
+        // A fresher writer applies the app txn for data version 3.
+        t.commit(vec![Action::Txn { app_id: "index/v".into(), version: 3 }]).unwrap();
+        // Our plan (made at `read_version`, covering only version 1) is
+        // stale: arbitration must refuse it during replay, without
+        // attempting a single put.
+        let err = t
+            .commit_from(
+                vec![Action::Txn { app_id: "index/v".into(), version: 1 }, info("FOLD INDEX")],
+                read_version,
+            )
+            .expect_err("stale txn plan must be refused");
+        let conflict = err.downcast_ref::<CommitConflict>().unwrap();
+        assert!(conflict.reason.contains("index/v@3"), "{conflict}");
+        let retries_key = t.commit_key(t.latest_version().unwrap() + 1);
+        assert!(t.store.head(&retries_key).unwrap().is_none(), "no put may have landed");
     }
 
     #[test]

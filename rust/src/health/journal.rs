@@ -49,8 +49,11 @@ pub struct JournalEvent {
     pub retries: u64,
     /// Wall milliseconds from first attempt to outcome.
     pub duration_ms: f64,
-    /// `ok`, `conflict` (remove raced away / retry budget exhausted) or
-    /// `error`.
+    /// `ok`, `rebased` (landed after at least one conflict-free rebase
+    /// round), `conflict` (overlapping winner / stale txn / remove raced
+    /// away / retry or rebase budget exhausted) or `error` (e.g. a
+    /// `CHECKPOINT` event whose checkpoint write failed after the commit
+    /// itself landed).
     pub outcome: String,
 }
 

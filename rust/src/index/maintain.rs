@@ -217,9 +217,16 @@ pub fn append_rows(
     let maintained = upkeep_state.is_some();
     let delta_bytes = upkeep_state.as_ref().map_or(0, |s| s.bytes.len() as u64);
     let meta_update = ap.meta_update;
+    let read_version = snap.version;
     let mut w = TensorWriter::new(table);
     w.stage(ap.plan);
-    let version = w.commit_with(move |adds| {
+    // The whole plan — part numbering, grown shape, upkeep — was made
+    // against `snap`: committing *from* that version makes arbitration
+    // replay every winner that landed meanwhile, so a concurrent append to
+    // the same tensor (overlapping part paths / metadata re-Add) or a
+    // concurrent rebuild (newer `txn` for the index app) is refused as a
+    // typed conflict instead of silently landing a stale plan.
+    let version = w.commit_with_at(Some(read_version), move |adds| {
         // The grown-shape metadata re-Add rides every append.
         let mut extra = vec![Action::Add(meta_update)];
         if let Some(st) = upkeep_state {
@@ -260,6 +267,14 @@ pub fn append_rows(
                 st.pq.as_ref(),
             ));
             extra.push(Action::Add(cent));
+            // Stamp the index app's transaction at the planning snapshot:
+            // a racing build/fold/append for the same index carries a txn
+            // at the same (or newer) version and arbitration refuses the
+            // loser instead of letting the last fingerprint win.
+            extra.push(Action::Txn {
+                app_id: super::txn_app_id(id),
+                version: read_version,
+            });
         }
         Ok(extra)
     })?;
@@ -469,8 +484,13 @@ pub fn fold(table: &DeltaTable, id: &str) -> Result<FoldSummary> {
             .dump(),
         ),
     }));
+    actions.push(Action::Txn { app_id: super::txn_app_id(id), version: snap.version });
     actions.push(Action::CommitInfo { operation: "FOLD INDEX".into(), timestamp: ts });
-    let version = table.commit(actions)?;
+    // Commit *from* the planning snapshot: a build/fold/append for the same
+    // index that landed since `snap` carries a `txn` at version >=
+    // `snap.version`, so this (now stale) fold is refused with a typed
+    // CommitConflict instead of resurrecting superseded artifacts.
+    let version = table.commit_from(actions, snap.version)?;
     fold_span.end();
 
     STATS.folds.fetch_add(1, Ordering::Relaxed);

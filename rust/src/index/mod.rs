@@ -488,6 +488,14 @@ fn artifact_prefix(id: &str) -> String {
     format!("index/{id}/")
 }
 
+/// App-transaction id the index tier stamps on every commit that creates
+/// or refreshes tensor `id`'s artifacts (build, fold, append upkeep). The
+/// `txn` version is the planning snapshot's data version, so commit
+/// arbitration can refuse a racing or stale plan for the same index.
+pub fn txn_app_id(id: &str) -> String {
+    format!("index/{id}")
+}
+
 /// PQ codebook reference carried by a v2 centroid artifact's meta.
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct PqRef {
@@ -968,6 +976,8 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
     );
 
     // Upload every artifact in one batched PUT, then commit atomically.
+    // `now_ms` is strictly monotonic in-process, so racing builders of the
+    // same tensor can never alias each other's artifact keys.
     let nonce = crate::delta::now_ms();
     let rel_cent = format!("{}ivf-{nonce:016x}-centroids.idx", artifact_prefix(id));
     let rel_post = format!("{}ivf-{nonce:016x}-postings.idx", artifact_prefix(id));
@@ -1050,12 +1060,18 @@ pub fn build(table: &DeltaTable, id: &str, p: &BuildParams) -> Result<BuildSumma
             ),
         }));
     }
+    actions.push(Action::Txn { app_id: txn_app_id(id), version: covers_version });
     actions.push(Action::CommitInfo { operation: "BUILD INDEX".into(), timestamp: ts });
+    // Commit *from* the snapshot the build trained on: arbitration replays
+    // every commit that landed since, and a rival build/fold/append of the
+    // same index (its `txn` is at version >= `covers_version`) refuses this
+    // one with a typed CommitConflict — exactly one artifact set wins a
+    // race, never last-fingerprint-wins.
     let commit_span = op_span.child("commit");
     let version = if commit_span.is_enabled() {
-        table.with_span(&commit_span).commit(actions)?
+        table.with_span(&commit_span).commit_from(actions, snap.version)?
     } else {
-        table.commit(actions)?
+        table.commit_from(actions, snap.version)?
     };
     commit_span.end();
 

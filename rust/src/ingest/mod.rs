@@ -141,7 +141,8 @@ pub fn report() -> String {
     format!(
         "ingest.parts_encoded {}\ningest.parallel_encodes {}\ningest.put_batches {}\n\
          ingest.put_parts {}\ningest.bytes_staged {}\ningest.batch_commits {}\n\
-         ingest.tensors_committed {}\ningest.commit_retries {}\n",
+         ingest.tensors_committed {}\ningest.commit_retries {}\n\
+         ingest.commit_rebases {}\ningest.commit_queue_waits {}\n",
         STATS.parts_encoded.load(Ordering::Relaxed),
         STATS.parallel_encodes.load(Ordering::Relaxed),
         STATS.put_batches.load(Ordering::Relaxed),
@@ -150,6 +151,8 @@ pub fn report() -> String {
         STATS.batch_commits.load(Ordering::Relaxed),
         STATS.tensors_committed.load(Ordering::Relaxed),
         crate::delta::commit_retry_count(),
+        crate::delta::commit_rebase_count(),
+        crate::delta::commit_queue_wait_count(),
     )
 }
 
@@ -336,6 +339,21 @@ impl<'a> TensorWriter<'a> {
     /// the commit; already-uploaded part objects are unreferenced and
     /// reclaimed by VACUUM.
     pub fn commit_with<F>(self, finalize: F) -> Result<u64>
+    where
+        F: FnOnce(&[AddFile]) -> Result<Vec<Action>>,
+    {
+        self.commit_with_at(None, finalize)
+    }
+
+    /// Like [`TensorWriter::commit_with`], but the extra actions were
+    /// planned against snapshot `read_version`: the commit arbitrates via
+    /// [`DeltaTable::commit_from`], so every winner that landed since the
+    /// plan was made is replayed and classified — a stale upkeep plan
+    /// (e.g. an index rebuilt concurrently) surfaces a typed
+    /// [`crate::delta::CommitConflict`] instead of silently overwriting
+    /// fresher derived state. `None` reads the log position at commit time
+    /// (plain data writes, planned against nothing older).
+    pub fn commit_with_at<F>(self, read_version: Option<u64>, finalize: F) -> Result<u64>
     where
         F: FnOnce(&[AddFile]) -> Result<Vec<Action>>,
     {
@@ -567,10 +585,16 @@ impl<'a> TensorWriter<'a> {
         // Scoping the table to a "commit" span attributes the log PUT —
         // and any Retry events from lost put_if_absent races — to it.
         let commit_span = op_span.child("commit");
-        let version = if commit_span.is_enabled() {
-            table.with_span(&commit_span).commit(actions)?
+        let scoped_table;
+        let commit_table = if commit_span.is_enabled() {
+            scoped_table = table.with_span(&commit_span);
+            &scoped_table
         } else {
-            table.commit(actions)?
+            table
+        };
+        let version = match read_version {
+            Some(rv) => commit_table.commit_from(actions, rv)?,
+            None => commit_table.commit(actions)?,
         };
         commit_span.end();
         STATS.batch_commits.fetch_add(1, Ordering::Relaxed);
@@ -797,6 +821,8 @@ mod tests {
             "ingest.bytes_staged",
             "ingest.batch_commits",
             "ingest.commit_retries",
+            "ingest.commit_rebases",
+            "ingest.commit_queue_waits",
         ] {
             assert!(r.contains(key), "{r}");
         }

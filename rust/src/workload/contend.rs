@@ -1,0 +1,435 @@
+//! Closed-loop multi-writer contention harness.
+//!
+//! Drives the commit pipeline the way a fleet of co-located writers would:
+//! `writers` closed-loop threads spread across `tables` tables (writer `w`
+//! commits to table `w % tables`), each owning its own tensor and issuing
+//! a mixed stream of appends (with incremental index upkeep), full index
+//! rebuilds and delta-segment folds. Every `burst_every` iterations the
+//! writers rendezvous on a barrier so commits arrive in bursts — the worst
+//! case for log contention. Because each writer owns its tensor, every
+//! same-table race is disjoint at the file level: the arbitration layer
+//! must absorb it by **rebasing** (never by surfacing a conflict), so the
+//! report's `success_rate` is the harness's correctness bar (1.0 or the
+//! pipeline dropped a commit) while `rebase_rate` and `retries_per_commit`
+//! show how much contention the run actually generated.
+//!
+//! Used three ways: the `bench contend` CLI subcommand, `benches/contend.rs`
+//! (contended vs solo-writer comparison, `BENCH_contend.json` for CI's perf
+//! gate), and `tests/contend.rs` (the acceptance assertions: disjoint
+//! fleets see zero client-visible conflicts, same-table racing builds
+//! resolve to one winner, rebased commits are effect-identical).
+
+use super::driver;
+use crate::delta::{CommitConflict, DeltaTable};
+use crate::formats::{FtsfFormat, TensorData, TensorStore};
+use crate::index::{self, maintain::Upkeep, BuildParams};
+use crate::jsonx::Json;
+use crate::objectstore::ObjectStoreHandle;
+use crate::util::Stopwatch;
+use crate::Result;
+use anyhow::ensure;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// Knobs for one contention run.
+#[derive(Debug, Clone)]
+pub struct ContendParams {
+    /// Concurrent closed-loop writer threads.
+    pub writers: usize,
+    /// Tables the writers are spread across (writer `w` commits to table
+    /// `w % tables`; `tables >= writers` means no two writers share a log).
+    pub tables: usize,
+    /// Operations each writer issues in the measured phase.
+    pub iters_per_writer: usize,
+    /// Rendezvous all writers on a barrier every this many iterations so
+    /// commits arrive in bursts (0 = free-running).
+    pub burst_every: usize,
+    /// Initial corpus rows per writer-owned tensor.
+    pub rows: usize,
+    /// Rows landed per append operation.
+    pub append_rows: usize,
+    /// Vector dimensionality of the writer-owned tensors.
+    pub dim: usize,
+    /// Gaussian-mixture components of the generated corpora.
+    pub clusters: usize,
+    /// Workload seed (corpora, appended rows and the op mix derive from it).
+    pub seed: u64,
+}
+
+impl ContendParams {
+    /// CI-smoke scale (sub-second on the fast sim model).
+    pub fn tiny() -> Self {
+        Self {
+            writers: 4,
+            tables: 2,
+            iters_per_writer: 4,
+            burst_every: 2,
+            rows: 256,
+            append_rows: 16,
+            dim: 8,
+            clusters: 4,
+            seed: 7,
+        }
+    }
+
+    /// Default bench scale (seconds to a minute on the fast sim model).
+    pub fn small() -> Self {
+        Self {
+            writers: 8,
+            tables: 2,
+            iters_per_writer: 8,
+            burst_every: 2,
+            rows: 2000,
+            append_rows: 64,
+            dim: 32,
+            clusters: 16,
+            seed: 7,
+        }
+    }
+
+    /// Paper-regime scale (minutes on the 1 Gbps model).
+    pub fn paper() -> Self {
+        Self {
+            writers: 16,
+            tables: 4,
+            iters_per_writer: 12,
+            burst_every: 3,
+            rows: 10_000,
+            append_rows: 256,
+            dim: 64,
+            clusters: 32,
+            seed: 7,
+        }
+    }
+
+    /// Total operations a run attempts.
+    pub fn total_ops(&self) -> usize {
+        self.writers * self.iters_per_writer
+    }
+}
+
+/// The tensor id writer `w` owns.
+pub fn writer_tensor(w: usize) -> String {
+    format!("w{w}")
+}
+
+/// Result of one contention run: the commit-pipeline outcome counters and
+/// per-operation latency quantiles.
+#[derive(Debug, Clone)]
+pub struct ContendReport {
+    /// Concurrent writers.
+    pub writers: usize,
+    /// Tables the writers were spread across.
+    pub tables: usize,
+    /// Operations attempted.
+    pub attempts: u64,
+    /// Operations whose commit landed.
+    pub commits: u64,
+    /// Operations refused with a typed [`CommitConflict`].
+    pub conflicts: u64,
+    /// `commits / attempts` — the correctness bar (disjoint writers must
+    /// score 1.0: every race rebases, none surfaces to the client).
+    pub success_rate: f64,
+    /// Append operations among the commits.
+    pub appends: u64,
+    /// Full index rebuilds among the commits.
+    pub builds: u64,
+    /// Delta-segment folds among the commits.
+    pub folds: u64,
+    /// Conflict-free rebase rounds the run's commits absorbed
+    /// (process-global delta).
+    pub rebases: u64,
+    /// `rebases / commits` — how contended the run actually was.
+    pub rebase_rate: f64,
+    /// `put_if_absent` races lost during the run (process-global delta).
+    pub retries: u64,
+    /// `retries / commits`.
+    pub retries_per_commit: f64,
+    /// Commits that waited behind the per-table in-process queue
+    /// (process-global delta).
+    pub queue_waits: u64,
+    /// Measured-phase wall time.
+    pub wall_secs: f64,
+    /// Committed operations per second.
+    pub ops_per_sec: f64,
+    /// Mean per-operation commit-path latency.
+    pub mean_secs: f64,
+    /// Median per-operation commit-path latency.
+    pub p50_secs: f64,
+    /// 95th-percentile per-operation commit-path latency.
+    pub p95_secs: f64,
+    /// 99th-percentile per-operation commit-path latency.
+    pub p99_secs: f64,
+    /// New log versions the run created across all tables.
+    pub log_commits: u64,
+}
+
+impl ContendReport {
+    /// Compact JSON object (for `BENCH_contend.json` / CI artifacts).
+    pub fn to_json(&self) -> String {
+        Json::obj([
+            ("writers", Json::Int(self.writers as i64)),
+            ("tables", Json::Int(self.tables as i64)),
+            ("attempts", Json::Int(self.attempts as i64)),
+            ("commits", Json::Int(self.commits as i64)),
+            ("conflicts", Json::Int(self.conflicts as i64)),
+            ("success_rate", Json::from(self.success_rate)),
+            ("appends", Json::Int(self.appends as i64)),
+            ("builds", Json::Int(self.builds as i64)),
+            ("folds", Json::Int(self.folds as i64)),
+            ("rebases", Json::Int(self.rebases as i64)),
+            ("rebase_rate", Json::from(self.rebase_rate)),
+            ("retries", Json::Int(self.retries as i64)),
+            ("retries_per_commit", Json::from(self.retries_per_commit)),
+            ("queue_waits", Json::Int(self.queue_waits as i64)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("ops_per_sec", Json::from(self.ops_per_sec)),
+            ("mean_secs", Json::from(self.mean_secs)),
+            ("p50_secs", Json::from(self.p50_secs)),
+            ("p95_secs", Json::from(self.p95_secs)),
+            ("p99_secs", Json::from(self.p99_secs)),
+            ("log_commits", Json::Int(self.log_commits as i64)),
+        ])
+        .dump()
+    }
+
+    /// Human-readable one-run summary.
+    pub fn summary(&self) -> String {
+        let ms = |s: f64| format!("{:.3}ms", s * 1e3);
+        format!(
+            "contend: {} writers x {} tables, {} ops ({} append / {} build / {} fold) \
+             in {:.3}s -> {:.1} commits/s\n  \
+             success rate {:.4} ({} conflicts); {} rebases ({:.3}/commit), \
+             {} lost races ({:.3}/commit), {} queue waits\n  \
+             commit path mean {} p50 {} p95 {} p99 {}; log: {} commits",
+            self.writers,
+            self.tables,
+            self.attempts,
+            self.appends,
+            self.builds,
+            self.folds,
+            self.wall_secs,
+            self.ops_per_sec,
+            self.success_rate,
+            self.conflicts,
+            self.rebases,
+            self.rebase_rate,
+            self.retries,
+            self.retries_per_commit,
+            self.queue_waits,
+            ms(self.mean_secs),
+            ms(self.p50_secs),
+            ms(self.p95_secs),
+            ms(self.p99_secs),
+            self.log_commits,
+        )
+    }
+}
+
+/// The build knobs a contend run's (re)builds share.
+fn build_params(p: &ContendParams) -> BuildParams {
+    BuildParams { seed: p.seed, ..Default::default() }
+}
+
+/// Create (or open) the run's tables on one shared store and land each
+/// writer's private corpus + index. Create-if-absent: an existing corpus
+/// is reused as-is, so reruns against a durable store continue from
+/// wherever the last run left it.
+pub fn populate_contend(store: &ObjectStoreHandle, p: &ContendParams) -> Result<Vec<DeltaTable>> {
+    ensure!(p.writers > 0 && p.tables > 0, "contend needs writers and tables");
+    ensure!(p.rows > 0 && p.dim > 0, "contend needs a non-empty corpus");
+    let mut tables = Vec::with_capacity(p.tables);
+    for m in 0..p.tables {
+        tables.push(DeltaTable::create_or_open(store.clone(), &format!("contend-{m}"))?);
+    }
+    for w in 0..p.writers {
+        let table = &tables[w % p.tables];
+        let id = writer_tensor(w);
+        let exists = !crate::query::engine::snapshot(table)?.files_for_tensor(&id).is_empty();
+        if !exists {
+            let data =
+                super::embedding_like(p.seed ^ (w as u64), p.rows, p.dim, p.clusters, 0.05);
+            let fmt = FtsfFormat { rows_per_group: 64, rows_per_file: 1024, ..FtsfFormat::new(1) };
+            fmt.write(table, &id, &data.into())?;
+        }
+        if !index::status(table, &id)?.is_fresh() {
+            index::build(table, &id, &build_params(p))?;
+        }
+    }
+    Ok(tables)
+}
+
+/// Run the closed contention loop and report. The tables must already hold
+/// each writer's corpus and index (see [`populate_contend`]). Each writer
+/// iteration draws one operation — append (incremental upkeep), full index
+/// rebuild, or delta fold — against the writer's own tensor, so every
+/// same-table race is file-disjoint and must be absorbed by the commit
+/// arbitration. A [`CommitConflict`] is counted (never propagated); any
+/// other error aborts the run after the loop drains, so the burst barrier
+/// stays aligned across writers.
+pub fn run_contend(tables: &[DeltaTable], p: &ContendParams) -> Result<ContendReport> {
+    ensure!(p.writers > 0 && p.iters_per_writer > 0, "empty contention run");
+    ensure!(tables.len() == p.tables, "table count does not match params");
+    ensure!(p.append_rows > 0, "appends need rows");
+
+    let v0: u64 = tables.iter().map(|t| t.latest_version().unwrap_or(0)).sum();
+    let rebases0 = crate::delta::commit_rebase_count();
+    let retries0 = crate::delta::commit_retry_count();
+    let waits0 = crate::delta::commit_queue_wait_count();
+
+    let conflicts = AtomicU64::new(0);
+    let appends = AtomicU64::new(0);
+    let builds = AtomicU64::new(0);
+    let folds = AtomicU64::new(0);
+    // First non-conflict error, surfaced after every writer drains — erroring
+    // out of the closed loop early would strand the others on the barrier.
+    let fatal: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let barrier = Barrier::new(p.writers);
+    let bp = build_params(p);
+
+    let (latencies, wall) = driver::run_closed_loop(
+        p.writers,
+        p.iters_per_writer,
+        p.seed,
+        0x5EB5_E006,
+        |writer, iter, rng| {
+            if p.burst_every > 0 && iter % p.burst_every == 0 {
+                barrier.wait();
+            }
+            let table = &tables[writer % p.tables];
+            let id = writer_tensor(writer);
+            // Mostly appends, with rebuilds and folds mixed in: the three
+            // commit shapes the arbitration must rebase (data adds, artifact
+            // swap + txn, segment retirement + txn).
+            let roll = rng.below(8);
+            let data: Option<TensorData> = if roll < 6 {
+                let seed = p.seed ^ ((writer as u64) << 32) ^ (iter as u64);
+                Some(super::embedding_like(seed, p.append_rows, p.dim, p.clusters, 0.05).into())
+            } else {
+                None
+            };
+            let sw = Stopwatch::start();
+            let res: Result<&AtomicU64> = match &data {
+                Some(d) => index::maintain::append_rows(table, &id, d, Upkeep::Incremental)
+                    .map(|_| &appends),
+                None if roll == 6 => index::build(table, &id, &bp).map(|_| &builds),
+                None => index::maintain::fold(table, &id).map(|_| &folds),
+            };
+            let secs = sw.secs();
+            match res {
+                Ok(counter) => {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.downcast_ref::<CommitConflict>().is_some() => {
+                    conflicts.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    let mut slot = fatal.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                }
+            }
+            Ok(secs)
+        },
+    )?;
+    if let Some(e) = fatal.lock().unwrap().take() {
+        return Err(e);
+    }
+
+    let q = driver::quantiles(&latencies);
+    let attempts = (p.writers * p.iters_per_writer) as u64;
+    let conflicts = conflicts.load(Ordering::Relaxed);
+    let commits = attempts - conflicts;
+    let v1: u64 = tables.iter().map(|t| t.latest_version().unwrap_or(0)).sum();
+    Ok(ContendReport {
+        writers: p.writers,
+        tables: p.tables,
+        attempts,
+        commits,
+        conflicts,
+        success_rate: commits as f64 / attempts.max(1) as f64,
+        appends: appends.load(Ordering::Relaxed),
+        builds: builds.load(Ordering::Relaxed),
+        folds: folds.load(Ordering::Relaxed),
+        rebases: crate::delta::commit_rebase_count() - rebases0,
+        rebase_rate: (crate::delta::commit_rebase_count() - rebases0) as f64
+            / commits.max(1) as f64,
+        retries: crate::delta::commit_retry_count() - retries0,
+        retries_per_commit: (crate::delta::commit_retry_count() - retries0) as f64
+            / commits.max(1) as f64,
+        queue_waits: crate::delta::commit_queue_wait_count() - waits0,
+        wall_secs: wall,
+        ops_per_sec: commits as f64 / wall.max(1e-9),
+        mean_secs: q.mean,
+        p50_secs: q.p50,
+        p95_secs: q.p95,
+        p99_secs: q.p99,
+        log_commits: v1 - v0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> ContendParams {
+        ContendParams {
+            writers: 3,
+            tables: 2,
+            iters_per_writer: 3,
+            rows: 120,
+            append_rows: 8,
+            dim: 8,
+            clusters: 4,
+            ..ContendParams::tiny()
+        }
+    }
+
+    #[test]
+    fn contended_run_reports_consistent_numbers() {
+        let store = ObjectStoreHandle::mem();
+        let p = tiny_params();
+        let tables = populate_contend(&store, &p).unwrap();
+        assert_eq!(tables.len(), 2);
+        let r = run_contend(&tables, &p).unwrap();
+        assert_eq!(r.attempts, 9);
+        assert_eq!(r.conflicts, 0, "disjoint writers never see a conflict");
+        assert_eq!(r.commits, 9);
+        assert_eq!(r.success_rate, 1.0);
+        assert_eq!(r.appends + r.builds + r.folds, 9);
+        assert_eq!(r.log_commits, 9, "one log version per committed op");
+        assert!(r.wall_secs > 0.0 && r.ops_per_sec > 0.0);
+        assert!(r.p50_secs <= r.p95_secs && r.p95_secs <= r.p99_secs);
+        // JSON report round-trips through the crate's own parser.
+        let j = crate::jsonx::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("attempts").and_then(|v| v.as_i64()), Some(9));
+        assert_eq!(j.get("success_rate").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(r.summary().contains("success rate 1.0000"), "{}", r.summary());
+    }
+
+    #[test]
+    fn solo_writers_never_rebase() {
+        let store = ObjectStoreHandle::mem();
+        // One writer per table: no shared log, so the run must finish with
+        // zero conflicts regardless of scheduling.
+        let p = ContendParams { writers: 2, tables: 2, ..tiny_params() };
+        let tables = populate_contend(&store, &p).unwrap();
+        let r = run_contend(&tables, &p).unwrap();
+        assert_eq!(r.conflicts, 0);
+        assert_eq!(r.success_rate, 1.0);
+    }
+
+    #[test]
+    fn empty_runs_are_rejected() {
+        let store = ObjectStoreHandle::mem();
+        let p = tiny_params();
+        let tables = populate_contend(&store, &p).unwrap();
+        assert!(run_contend(&tables, &ContendParams { writers: 0, ..p.clone() }).is_err());
+        assert!(
+            run_contend(&tables, &ContendParams { iters_per_writer: 0, ..p.clone() }).is_err()
+        );
+        assert!(run_contend(&tables[..1], &p).is_err(), "table count must match");
+        assert!(populate_contend(&store, &ContendParams { tables: 0, ..p }).is_err());
+    }
+}

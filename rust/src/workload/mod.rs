@@ -26,11 +26,16 @@
 //! submodule drives the training-loader tier: epoch streaming over an
 //! [`embedding_like`] corpus, reporting samples/s, time-to-first-batch and
 //! stall fraction against a naive per-sample sequential reader across
-//! cold/warm cache. All five are built on one skeleton — [`driver`]:
+//! cold/warm cache. The [`contend`] submodule stresses the commit pipeline
+//! itself: bursty multi-writer fleets spread across tables, each op stream
+//! mixing appends, index rebuilds and folds, reporting commit success
+//! rate, rebase rate and retries-per-commit. All six are built on one
+//! skeleton — [`driver`]:
 //! closed-loop clients, per-client seeded RNG streams, latency quantiles
 //! and the scoped cache-mode guard — extracted once so future tiers get a
 //! harness for free.
 
+pub mod contend;
 pub mod driver;
 pub mod ingest;
 pub mod loader;

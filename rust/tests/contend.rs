@@ -1,0 +1,368 @@
+//! Multi-writer commit pipeline acceptance: txn arbitration, conflict-aware
+//! rebase, and the contention harness.
+//!
+//! The four acceptance properties of the arbitration layer:
+//! (a) disjoint-tensor writer fleets commit with ZERO client-visible
+//!     conflicts — every race is absorbed by rebase;
+//! (b) two same-table racing index builds resolve to exactly one winning
+//!     artifact set, the loser refused with a typed `CommitConflict`
+//!     (never last-write-wins);
+//! (c) a rebased commit is byte-identical in effect to an uncontended one;
+//! (d) a tiny harness run passes the committed `bench_baselines/contend.json`
+//!     gates CI enforces on `BENCH_contend.json`.
+//! Plus the journal/history coverage: racing writers leave `rebased` /
+//! `conflict` events with the right retry counts, and a stale fold plan
+//! against a newer application txn is refused before touching the log.
+
+use delta_tensor::delta::{
+    commit_to_ndjson, now_ms, Action, AddFile, CommitConflict, DeltaTable,
+};
+use delta_tensor::health::journal;
+use delta_tensor::index::{self, BuildParams};
+use delta_tensor::jsonx::{self, Json};
+use delta_tensor::objectstore::ObjectStore;
+use delta_tensor::prelude::*;
+use delta_tensor::workload::{
+    self,
+    contend::{populate_contend, run_contend, ContendParams},
+};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+fn add(path: &str, tensor: &str) -> Action {
+    Action::Add(AddFile {
+        path: path.to_string(),
+        size: 3,
+        rows: 1,
+        tensor_id: tensor.to_string(),
+        min_key: None,
+        max_key: None,
+        timestamp: now_ms(),
+        meta: None,
+    })
+}
+
+fn info(op: &str) -> Action {
+    Action::CommitInfo { operation: op.to_string(), timestamp: now_ms() }
+}
+
+fn tiny_fleet() -> ContendParams {
+    ContendParams {
+        writers: 4,
+        tables: 2,
+        iters_per_writer: 3,
+        burst_every: 1,
+        rows: 160,
+        append_rows: 8,
+        dim: 8,
+        clusters: 4,
+        seed: 7,
+    }
+}
+
+/// (a) Two writer fleets share two tables, every writer owning its own
+/// tensor: the arbitration must absorb every race (rebase), so no op may
+/// surface a conflict, and the journal must show only landed outcomes.
+#[test]
+fn disjoint_fleets_commit_with_zero_client_visible_conflicts() {
+    let store = ObjectStoreHandle::mem();
+    let p = tiny_fleet();
+    let tables = populate_contend(&store, &p).unwrap();
+    let seq0 = journal::events(Some(store.instance_id()), None)
+        .iter()
+        .map(|e| e.seq)
+        .max()
+        .map_or(0, |s| s + 1);
+
+    let r = run_contend(&tables, &p).unwrap();
+    assert_eq!(r.attempts, 12);
+    assert_eq!(r.conflicts, 0, "disjoint writers must never see a conflict");
+    assert_eq!(r.commits, 12);
+    assert_eq!(r.success_rate, 1.0);
+    assert_eq!(r.log_commits, 12, "every op lands exactly one version");
+
+    // Journal: every commit-shaped event of the measured phase landed —
+    // outcome `ok` or `rebased`, never `conflict` — with sane retry counts.
+    let evs: Vec<journal::JournalEvent> = journal::events(Some(store.instance_id()), None)
+        .into_iter()
+        .filter(|e| e.seq >= seq0)
+        .collect();
+    assert_eq!(evs.len(), 12, "one journal event per committed op");
+    for e in &evs {
+        assert!(e.version.is_some(), "{}: landed events carry their version", e.op);
+        assert!(e.outcome == "ok" || e.outcome == "rebased", "{}: {}", e.op, e.outcome);
+        assert!(e.retries <= 32, "{}: absurd retry count {}", e.op, e.retries);
+    }
+}
+
+/// Rendezvous store for (b): once armed, any commit (`put_if_absent` on a
+/// log key) blocks until TWO distinct threads have uploaded index
+/// artifacts. A build plans its snapshot before it uploads, so when the
+/// gate opens both builds hold plans against the SAME version — a true
+/// race, scheduled deterministically.
+struct Rendezvous {
+    inner: ObjectStoreHandle,
+    armed: AtomicBool,
+    putters: Mutex<HashSet<thread::ThreadId>>,
+    cv: Condvar,
+}
+
+impl Rendezvous {
+    fn new() -> Self {
+        Self {
+            inner: ObjectStoreHandle::mem(),
+            armed: AtomicBool::new(false),
+            putters: Mutex::new(HashSet::new()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn note(&self, key: &str) {
+        if self.armed.load(Ordering::SeqCst) && key.contains("/index/") {
+            self.putters.lock().unwrap().insert(thread::current().id());
+            self.cv.notify_all();
+        }
+    }
+}
+
+impl ObjectStore for Rendezvous {
+    fn put(&self, key: &str, data: &[u8]) -> delta_tensor::Result<()> {
+        self.note(key);
+        self.inner.put(key, data)
+    }
+
+    fn put_if_absent(&self, key: &str, data: &[u8]) -> delta_tensor::Result<bool> {
+        if self.armed.load(Ordering::SeqCst) && key.contains("_delta_log/") {
+            let mut g = self.putters.lock().unwrap();
+            while g.len() < 2 {
+                let (ng, timeout) = self.cv.wait_timeout(g, Duration::from_secs(30)).unwrap();
+                g = ng;
+                assert!(!timeout.timed_out(), "rendezvous timed out: only {} uploader(s)", g.len());
+            }
+        }
+        self.inner.put_if_absent(key, data)
+    }
+
+    fn get(&self, key: &str) -> delta_tensor::Result<Vec<u8>> {
+        self.inner.get(key)
+    }
+
+    fn get_range(&self, key: &str, off: u64, len: u64) -> delta_tensor::Result<Vec<u8>> {
+        self.inner.get_range(key, off, len)
+    }
+
+    fn head(&self, key: &str) -> delta_tensor::Result<Option<u64>> {
+        self.inner.head(key)
+    }
+
+    fn list(&self, prefix: &str) -> delta_tensor::Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+
+    fn delete(&self, key: &str) -> delta_tensor::Result<()> {
+        self.inner.delete(key)
+    }
+}
+
+/// (b) Two racing builds of the SAME tensor: both plan at one snapshot
+/// version, exactly one commit wins, and the loser is refused with a typed
+/// `CommitConflict` — the application-txn rule forbids last-write-wins.
+#[test]
+fn racing_index_builds_resolve_to_one_winning_artifact_set() {
+    let corpus = workload::embedding_like(7, 200, 8, 4, 0.05);
+    let fmt = FtsfFormat { rows_per_group: 64, rows_per_file: 1024, ..FtsfFormat::new(1) };
+
+    // Control: one clean build on an uncontended table fixes the artifact
+    // count a single winning build must leave live.
+    let ctrl = DeltaTable::create(ObjectStoreHandle::mem(), "ctrl").unwrap();
+    fmt.write(&ctrl, "v", &corpus.clone().into()).unwrap();
+    index::build(&ctrl, "v", &BuildParams::default()).unwrap();
+    let artifact_count = |t: &DeltaTable| -> usize {
+        t.snapshot().unwrap().files.keys().filter(|p| p.starts_with("index/v/")).count()
+    };
+    let expected_artifacts = artifact_count(&ctrl);
+    assert!(expected_artifacts > 0);
+
+    let rv = Arc::new(Rendezvous::new());
+    let store = ObjectStoreHandle::new(rv.clone());
+    let table = DeltaTable::create(store.clone(), "race").unwrap();
+    fmt.write(&table, "v", &corpus.into()).unwrap();
+
+    rv.armed.store(true, Ordering::SeqCst);
+    let results: Vec<delta_tensor::Result<_>> = thread::scope(|s| {
+        let a = s.spawn(|| index::build(&table, "v", &BuildParams { seed: 1, ..Default::default() }));
+        let b = s.spawn(|| index::build(&table, "v", &BuildParams { seed: 2, ..Default::default() }));
+        vec![a.join().unwrap(), b.join().unwrap()]
+    });
+    rv.armed.store(false, Ordering::SeqCst);
+
+    let wins = results.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(wins, 1, "exactly one racing build must win: {results:?}");
+    let err = results.into_iter().find(Result::is_err).unwrap().unwrap_err();
+    let conflict = err
+        .downcast_ref::<CommitConflict>()
+        .unwrap_or_else(|| panic!("loser must surface a typed CommitConflict, got: {err:?}"));
+    assert_eq!(conflict.table, "race");
+
+    // Exactly one winning artifact set is live, and it is a working index.
+    assert_eq!(artifact_count(&table), expected_artifacts, "loser artifacts must not be live");
+    assert!(index::status(&table, "v").unwrap().is_fresh());
+    IvfIndex::open(&table, "v").unwrap().search(&[0.0; 8], 5, 4).unwrap();
+
+    // The loser's refusal left a `conflict` journal event with no version.
+    let evs = journal::events(Some(store.instance_id()), Some("race"));
+    let lost = evs.iter().rev().find(|e| e.outcome == "conflict").expect("conflict journaled");
+    assert_eq!(lost.version, None);
+}
+
+/// (c) A rebased commit lands the exact NDJSON body an uncontended commit
+/// would have written, and the journal records the `rebased` outcome with
+/// a correct (zero, in-process) retry count.
+#[test]
+fn rebased_commit_is_byte_identical_to_uncontended() {
+    let store = ObjectStoreHandle::mem();
+    let t = DeltaTable::create(store.clone(), "rb").unwrap();
+    let ours = vec![add("data/mine.dtpq", "m"), info("WRITE")];
+    let expected = commit_to_ndjson(&ours);
+
+    // A rival lands between our snapshot and our commit.
+    let read_version = t.latest_version().unwrap();
+    t.commit(vec![add("data/rival.dtpq", "r"), info("WRITE")]).unwrap();
+    let rebases0 = delta_tensor::delta::commit_rebase_count();
+    let v = t.commit_from(ours, read_version).unwrap();
+    assert_eq!(v, read_version + 2, "rebase lands after the winner");
+    assert!(delta_tensor::delta::commit_rebase_count() > rebases0);
+
+    // Byte identity: the landed commit file IS the uncontended body.
+    let raw = store.get(&format!("rb/_delta_log/{v:020}.json")).unwrap();
+    assert_eq!(raw, expected.as_bytes(), "rebase must re-commit the identical action body");
+
+    // Effect identity: both writers' files are live.
+    let snap = t.snapshot().unwrap();
+    assert!(snap.files.contains_key("data/mine.dtpq"));
+    assert!(snap.files.contains_key("data/rival.dtpq"));
+
+    // History and journal agree on the outcome.
+    let hist = t.history().unwrap();
+    assert!(hist.iter().any(|(hv, op, _)| *hv == v && op == "WRITE"));
+    let evs = journal::events(Some(store.instance_id()), Some("rb"));
+    let ev = evs.iter().rev().find(|e| e.version == Some(v)).expect("rebased commit journaled");
+    assert_eq!(ev.outcome, "rebased");
+    assert_eq!(ev.retries, 0, "pre-put replay rebases without losing a put race");
+}
+
+/// Overlapping writers (same file in both write sets) must surface the
+/// typed conflict — with the winning version named — and journal it.
+#[test]
+fn overlapping_writers_surface_typed_conflict() {
+    let store = ObjectStoreHandle::mem();
+    let t = DeltaTable::create(store.clone(), "ov").unwrap();
+    let read_version = t.latest_version().unwrap();
+    t.commit(vec![add("data/dup.dtpq", "d"), info("WRITE")]).unwrap();
+    let err = t.commit_from(vec![add("data/dup.dtpq", "d"), info("WRITE")], read_version)
+        .unwrap_err();
+    let conflict = err.downcast_ref::<CommitConflict>().expect("typed conflict");
+    assert_eq!(conflict.table, "ov");
+    assert_eq!(conflict.version, Some(read_version + 1), "conflict names the winning version");
+    assert!(conflict.reason.contains("data/dup.dtpq"), "{}", conflict.reason);
+    let evs = journal::events(Some(store.instance_id()), Some("ov"));
+    assert_eq!(evs.last().unwrap().outcome, "conflict");
+}
+
+/// A stale fold plan — covering an older data version than an application
+/// txn already in the log — is refused before any log write; a freshly
+/// planned fold still succeeds.
+#[test]
+fn stale_fold_against_newer_app_txn_is_refused() {
+    let store = ObjectStoreHandle::mem();
+    let t = DeltaTable::create(store.clone(), "sf").unwrap();
+    let corpus = workload::embedding_like(5, 160, 8, 4, 0.05);
+    let fmt = FtsfFormat { rows_per_group: 64, rows_per_file: 1024, ..FtsfFormat::new(1) };
+    fmt.write(&t, "vecs", &corpus.into()).unwrap();
+    index::build(&t, "vecs", &BuildParams::default()).unwrap();
+    let app = index::txn_app_id("vecs");
+    let planned = t.latest_version().unwrap();
+
+    // A newer txn for the same application lands (a concurrent rebuild).
+    t.commit(vec![
+        Action::Txn { app_id: app.clone(), version: planned },
+        info("BUILD INDEX"),
+    ])
+    .unwrap();
+    let log_len = store.list("sf/_delta_log/").unwrap().len();
+
+    // The stale fold plan (made at `planned`, covering `planned`) must be
+    // refused by replay classification, without writing anything.
+    let err = t
+        .commit_from(
+            vec![Action::Txn { app_id: app.clone(), version: planned }, info("FOLD INDEX")],
+            planned,
+        )
+        .unwrap_err();
+    let conflict = err.downcast_ref::<CommitConflict>().expect("typed conflict");
+    assert!(conflict.reason.contains(&app), "{}", conflict.reason);
+    assert_eq!(store.list("sf/_delta_log/").unwrap().len(), log_len, "nothing was written");
+
+    // A fold planned against the current snapshot goes through.
+    index::maintain::fold(&t, "vecs").unwrap();
+}
+
+/// (d) The committed baseline gates CI enforces on `BENCH_contend.json`
+/// parse, cover the success-rate floor at exactly 1.0, and pass against a
+/// tiny harness run shaped like the bench binary's report.
+#[test]
+fn bench_baseline_gates_pass_on_a_tiny_run() {
+    let spec_text = std::fs::read_to_string("../bench_baselines/contend.json")
+        .expect("bench_baselines/contend.json must exist");
+    let spec = jsonx::parse(&spec_text).unwrap();
+    assert_eq!(spec.get("bench").and_then(Json::as_str), Some("contend"));
+    let gates = spec.get("gates").and_then(Json::as_arr).expect("gates array");
+    assert!(!gates.is_empty());
+    assert!(
+        gates.iter().any(|g| {
+            g.get("metric").and_then(Json::as_str) == Some("contended.success_rate")
+                && g.get("floor").and_then(Json::as_f64) == Some(1.0)
+        }),
+        "the success-rate floor must gate at exactly 1.0"
+    );
+
+    // A tiny run in the bench binary's report shape.
+    let p = ContendParams { writers: 3, iters_per_writer: 2, ..tiny_fleet() };
+    let store = ObjectStoreHandle::mem();
+    let tables = populate_contend(&store, &p).unwrap();
+    let contended = run_contend(&tables, &p).unwrap();
+    let solo_p = ContendParams { tables: p.writers, burst_every: 0, ..p };
+    let solo_store = ObjectStoreHandle::mem();
+    let solo_tables = populate_contend(&solo_store, &solo_p).unwrap();
+    let solo = run_contend(&solo_tables, &solo_p).unwrap();
+    let report = jsonx::parse(&format!(
+        "{{\"bench\":\"contend\",\"contended\":{},\"solo\":{}}}",
+        contended.to_json(),
+        solo.to_json()
+    ))
+    .unwrap();
+
+    for gate in gates {
+        let metric = gate.get("metric").and_then(Json::as_str).expect("gate metric");
+        let mut cur = &report;
+        for seg in metric.split('.') {
+            cur = cur.get(seg).unwrap_or_else(|| panic!("metric {metric} missing from report"));
+        }
+        let measured = cur.as_f64().unwrap_or_else(|| panic!("metric {metric} not numeric"));
+        if let Some(floor) = gate.get("floor").and_then(Json::as_f64) {
+            assert!(measured >= floor, "{metric}: {measured} below floor {floor}");
+        }
+        if let Some(ceiling) = gate.get("ceiling").and_then(Json::as_f64) {
+            assert!(measured <= ceiling, "{metric}: {measured} above ceiling {ceiling}");
+        }
+        assert!(
+            gate.get("floor").is_some()
+                || gate.get("ceiling").is_some()
+                || gate.get("value").is_some(),
+            "{metric}: gate has no bound"
+        );
+    }
+}

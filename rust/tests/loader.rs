@@ -196,4 +196,14 @@ fn documented_defaults_match_code() {
         8,
         "DT_PROBE_TOPK default (README table)"
     );
+    assert_eq!(
+        delta_tensor::delta::DEFAULT_COMMIT_QUEUE,
+        64,
+        "DT_COMMIT_QUEUE default (README table)"
+    );
+    assert_eq!(
+        delta_tensor::delta::DEFAULT_REBASE_MAX,
+        32,
+        "DT_REBASE_MAX default (README table)"
+    );
 }
